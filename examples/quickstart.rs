@@ -1,0 +1,81 @@
+//! Quickstart: run one binary-weight convolution block on the
+//! cycle-accurate YodaNN simulator, check it bit-for-bit against the
+//! AOT-compiled JAX/Pallas golden model (if `make artifacts` has run),
+//! and report the paper's metrics at both operating corners.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use yodann::coordinator::{check_block, metrics::sim_metrics};
+use yodann::hw::{BlockJob, Chip, ChipConfig};
+use yodann::power::ArchId;
+use yodann::runtime::Runtime;
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, BinaryKernels, ScaleBias};
+
+fn main() -> anyhow::Result<()> {
+    // A 3×3 layer block: 32 input channels → 64 output channels (the
+    // dual-filter mode), 16×16 pixels, zero-padded.
+    let mut g = Gen::new(1);
+    let image = random_image(&mut g, 32, 16, 16, 0.02);
+    let kernels = BinaryKernels::random(&mut g, 64, 32, 3);
+    let sb = ScaleBias::random(&mut g, 64);
+
+    println!("== YodaNN quickstart ==");
+    println!(
+        "weights: {} binary weights = {} bytes on the wire (12-bit would be {} bytes)\n",
+        kernels.bits.len(),
+        kernels.storage_bits() / 8,
+        kernels.storage_bits() * 12 / 8
+    );
+
+    // 1. Cycle-accurate simulation.
+    let cfg = ChipConfig::yodann();
+    let job = BlockJob {
+        k: 3,
+        zero_pad: true,
+        image: image.clone(),
+        kernels: kernels.clone(),
+        scale_bias: sb.clone(),
+    };
+    let res = Chip::new(cfg).run_block(&job);
+    let s = &res.stats;
+    println!("simulated {} cycles:", s.cycles.total());
+    println!(
+        "  filter load {} | preload {} | compute {} | idle {} | flush {}",
+        s.cycles.filter_load, s.cycles.preload, s.cycles.compute, s.cycles.idle, s.cycles.flush
+    );
+    println!(
+        "  SCM {} reads / {} writes (max {} banks active per cycle — paper: ≤7)",
+        s.scm_reads, s.scm_writes, s.scm_max_banks_per_cycle
+    );
+
+    // 2. Golden check against the JAX/Pallas model through PJRT.
+    match Runtime::open_default() {
+        Ok(mut rt) => {
+            let report = check_block(&mut rt, &cfg, &image, &kernels, &sb, true)?;
+            println!(
+                "\ngolden check vs JAX/Pallas ({} samples): {}",
+                report.samples,
+                if report.ok() { "BIT-EXACT" } else { "MISMATCH!" }
+            );
+            assert!(report.ok());
+        }
+        Err(e) => println!("\n(golden check skipped: {e})"),
+    }
+
+    // 3. The paper's metrics at both corners.
+    println!();
+    for (label, v) in [("energy-optimal", 0.6), ("throughput-optimal", 1.2)] {
+        let m = sim_metrics(s, ArchId::Bin32Multi, v, true);
+        println!(
+            "{label:>18} @{v:.1} V: {:>7.2} GOp/s  {:>6.1} TOp/s/W  {:>8.3} ms  {:>7.2} uJ",
+            m.theta / 1e9,
+            m.en_eff / 1e12,
+            m.time * 1e3,
+            m.core_energy * 1e6
+        );
+    }
+    Ok(())
+}

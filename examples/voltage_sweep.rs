@@ -1,0 +1,59 @@
+//! Voltage sweep (Figs. 11 & 13): throughput, core energy efficiency and
+//! area efficiency of YodaNN vs the fixed-point baseline across the
+//! 0.6–1.2 V operating range, with the state-of-the-art pareto points.
+//!
+//! ```bash
+//! cargo run --release --example voltage_sweep
+//! ```
+
+use yodann::power::{metric_area_mge, ArchId};
+use yodann::report::figures;
+
+fn main() {
+    println!("== Fig. 11: throughput & core energy efficiency vs supply ==\n");
+    for arch in [ArchId::Q29Fixed8, ArchId::Bin8, ArchId::Bin32Multi] {
+        println!("{}:", arch.name());
+        println!("  {:>5} {:>10} {:>12} {:>12} {:>14}", "V", "f (MHz)", "GOp/s", "TOp/s/W", "GOp/s/MGE");
+        for p in figures::fig11_sweep(arch, 13) {
+            println!(
+                "  {:>5.2} {:>10.1} {:>12.1} {:>12.2} {:>14.1}",
+                p.v,
+                p.f_mhz,
+                p.theta_gops,
+                p.en_eff_tops_w,
+                p.theta_gops / metric_area_mge(arch)
+            );
+        }
+        println!();
+    }
+
+    println!("key comparisons (paper §IV-C):");
+    let q29 = figures::fig11_sweep(ArchId::Q29Fixed8, 2);
+    let bin8 = figures::fig11_sweep(ArchId::Bin8, 13);
+    let q12 = q29.last().unwrap();
+    let b12 = bin8.last().unwrap();
+    let b06 = bin8.first().unwrap();
+    println!(
+        "  binary vs Q2.9 @1.2 V : {:.1}x core energy efficiency (paper: 5.1x), {:.2}x throughput (paper: 1.3x)",
+        b12.en_eff_tops_w / q12.en_eff_tops_w,
+        b12.theta_gops / q12.theta_gops
+    );
+    let q08 = &q29[0];
+    println!(
+        "  binary @0.6 V vs Q2.9 @0.8 V: {:.1}x energy efficiency (paper: 11.6x)",
+        b06.en_eff_tops_w / q08.en_eff_tops_w
+    );
+
+    println!("\n== Fig. 13: pareto front vs state of the art ==\n");
+    println!("{:<18} {:>12} {:>16}", "point", "TOp/s/W", "GOp/s/MGE");
+    for p in figures::fig13(13) {
+        println!(
+            "{:<18} {:>12.2} {:>16.1}{}",
+            p.name,
+            p.en_eff,
+            p.area_eff,
+            if p.ours { "  *" } else { "" }
+        );
+    }
+    println!("\n(* = YodaNN voltage-sweep points; every literature point is dominated)");
+}

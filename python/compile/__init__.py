@@ -1,0 +1,5 @@
+"""Build-time python: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Never imported at runtime - `make artifacts` runs `compile.aot` once and
+the Rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,126 @@
+"""AOT lowering: jax -> HLO **text** -> artifacts/*.hlo.txt.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the `xla` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (consumed by `rust/src/runtime/`):
+
+* ``block_k{K}_c{NIN}x{NOUT}_{H}x{W}.hlo.txt`` - golden chip blocks for
+  k in {1,3,5,7}, used by the coordinator's golden checks.
+* ``smallnet.hlo.txt`` - 3-layer scene-labeling-style CNN for the
+  end-to-end example.
+* ``manifest.txt`` - ``name k nin nout h w zero_pad`` per line (plain
+  text; the Rust side has no JSON dependency).
+
+Run once via ``make artifacts``; Python is never on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import block_example_args, make_block_fn, make_smallnet_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Golden block configurations: one per native slot mode + the 1x1 edge
+# case. Shapes chosen small enough for fast CI but large enough to
+# exercise channel blocking (n_in = n_ch = 32, dual-mode n_out = 64).
+BLOCKS = [
+    # (k, n_in, n_out, h, w, zero_pad)
+    (1, 32, 64, 16, 16, True),
+    (3, 32, 64, 16, 16, True),
+    (5, 32, 64, 12, 12, True),
+    (7, 32, 32, 12, 12, True),
+    (7, 32, 32, 12, 12, False),
+]
+
+# The end-to-end small network (scene-labeling shape: 3 RGB -> 8 classes).
+SMALLNET_LAYERS = [
+    dict(k=7, zero_pad=True, pool=True, n_out=16),
+    dict(k=7, zero_pad=True, pool=True, n_out=32),
+    dict(k=3, zero_pad=True, pool=False, n_out=8),
+]
+SMALLNET_IN = (3, 24, 32)  # c, h, w
+
+
+def block_name(k, n_in, n_out, h, w, zero_pad):
+    pad = "" if zero_pad else "_valid"
+    return f"block_k{k}_c{n_in}x{n_out}_{h}x{w}{pad}"
+
+
+def lower_blocks(outdir):
+    entries = []
+    for k, n_in, n_out, h, w, zero_pad in BLOCKS:
+        fn = make_block_fn(k=k, zero_pad=zero_pad)
+        lowered = jax.jit(fn).lower(*block_example_args(n_in, n_out, k, h, w))
+        name = block_name(k, n_in, n_out, h, w, zero_pad)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append((name, k, n_in, n_out, h, w, int(zero_pad)))
+        print(f"wrote {path}")
+    return entries
+
+
+def lower_smallnet(outdir):
+    import jax.numpy as jnp
+
+    fn = make_smallnet_fn(SMALLNET_LAYERS)
+    c, h, w = SMALLNET_IN
+    args = [jax.ShapeDtypeStruct((c, h, w), jnp.int32)]
+    n_in = c
+    hh, ww = h, w
+    for spec in SMALLNET_LAYERS:
+        n_out, k = spec["n_out"], spec["k"]
+        args.append(jax.ShapeDtypeStruct((n_out, n_in, k, k), jnp.int32))
+        args.append(jax.ShapeDtypeStruct((n_out,), jnp.int32))
+        args.append(jax.ShapeDtypeStruct((n_out,), jnp.int32))
+        n_in = n_out
+        if spec["pool"]:
+            hh, ww = hh // 2, ww // 2
+    lowered = jax.jit(fn).lower(*args)
+    path = os.path.join(outdir, "smallnet.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path} (output {SMALLNET_LAYERS[-1]['n_out']}x{hh}x{ww})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="primary artifact path (its directory receives all artifacts)")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    entries = lower_blocks(outdir)
+    lower_smallnet(outdir)
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        for name, k, n_in, n_out, h, w, zp in entries:
+            f.write(f"{name} {k} {n_in} {n_out} {h} {w} {zp}\n")
+
+    # The Makefile's primary target: alias of the k7 block.
+    import shutil
+
+    k7 = block_name(7, 32, 32, 12, 12, True)
+    shutil.copyfile(os.path.join(outdir, f"{k7}.hlo.txt"), os.path.abspath(args.out))
+    print(f"wrote {args.out} (alias of {k7})")
+
+
+if __name__ == "__main__":
+    main()

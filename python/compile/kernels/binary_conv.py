@@ -1,0 +1,122 @@
+"""Layer 1 - the Pallas kernel for YodaNN's compute hot-spot: binary-weight
+convolution with fused per-channel scale/bias, bit-true to the ASIC.
+
+Hardware adaptation (DESIGN.md SHardware-Adaptation): the ASIC's SoP array
+(49-50 complement-and-mux operators + adder tree per output channel)
+becomes an **im2col matmul against +-1 weights** - the MXU-friendly
+formulation: the k*k shifted views of the input block form a [k*k, h*w]
+operand, the binary filters a [n_out, k*k] operand, and the reduction over
+input channels runs as a `fori_loop` with **Q7.9 saturating accumulation
+in exactly the chip's input-channel order** (saturation is
+order-dependent, so the order is part of bit-exactness).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute real Mosaic custom-calls; on a real TPU the same BlockSpec
+structure tiles the halo'd input into VMEM (see `vmem_footprint_bytes`).
+
+All tensors are **raw-integer** fixed point (int32): f32 would round the
+29-bit Q10.18 scale product.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quantize import Q29_MAX, Q29_MIN, Q79_MAX, Q79_MIN, Q1018_MAX, Q1018_MIN
+
+
+def _conv_kernel(x_ref, w_ref, alpha_ref, beta_ref, o_ref, *, k, zero_pad):
+    """Pallas kernel body.
+
+    x_ref:     int32 [n_in, h, w]        raw Q2.9 activations
+    w_ref:     int32 [n_out, n_in, k, k] weights in {-1, +1}
+    alpha_ref: int32 [n_out]             raw Q2.9 per-channel scales
+    beta_ref:  int32 [n_out]             raw Q2.9 per-channel biases
+    o_ref:     int32 [n_out, out_h, out_w] raw Q2.9 outputs
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    n_in, h, width = x.shape
+    n_out = w.shape[0]
+    if zero_pad:
+        out_h, out_w = h, width
+        off = (k - 1) // 2
+        x = jnp.pad(x, ((0, 0), (off, k - 1 - off), (off, k - 1 - off)))
+    else:
+        out_h, out_w = h - k + 1, width - k + 1
+
+    w_flat = w.reshape(n_out, n_in, k * k)
+
+    def per_channel(i, acc):
+        xi = jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False)
+        # im2col: the k*k shifted views of channel i (static slices).
+        views = jnp.stack(
+            [
+                jax.lax.slice(xi, (dy, dx), (dy + out_h, dx + out_w)).reshape(-1)
+                for dy in range(k)
+                for dx in range(k)
+            ]
+        )  # [k*k, out_h*out_w]
+        wi = jax.lax.dynamic_index_in_dim(w_flat, i, axis=1, keepdims=False)
+        # The MXU-shaped contraction: +-1 weights x Q2.9 pixels.
+        contrib = jax.lax.dot(wi, views, preferred_element_type=jnp.int32)
+        # ChannelSummer: Q7.9 saturation after EVERY channel (chip order).
+        return jnp.clip(acc + contrib, Q79_MIN, Q79_MAX)
+
+    acc0 = jnp.zeros((n_out, out_h * out_w), dtype=jnp.int32)
+    acc = jax.lax.fori_loop(0, n_in, per_channel, acc0)
+
+    # Scale-Bias unit: Q7.9 x Q2.9 -> Q10.18, + beta, truncate+saturate.
+    alpha = alpha_ref[...].astype(jnp.int32)[:, None]
+    beta = beta_ref[...].astype(jnp.int32)[:, None]
+    prod = jnp.clip(acc * alpha + (beta << 9), Q1018_MIN, Q1018_MAX)
+    out = jnp.clip(prod >> 9, Q29_MIN, Q29_MAX)
+    o_ref[...] = out.reshape(n_out, out_h, out_w)
+
+
+def binary_conv_block(x, w, alpha, beta, *, k=None, zero_pad=True, interpret=True):
+    """One YodaNN chip block: binary-weight conv + scale/bias.
+
+    Args mirror `_conv_kernel`; `k` defaults to the kernel size of `w`.
+    Returns int32 [n_out, out_h, out_w] raw Q2.9.
+    """
+    if k is None:
+        k = w.shape[-1]
+    n_out = w.shape[0]
+    n_in, h, width = x.shape
+    if zero_pad:
+        out_h, out_w = h, width
+    else:
+        out_h, out_w = h - k + 1, width - k + 1
+    kern = functools.partial(_conv_kernel, k=k, zero_pad=zero_pad)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n_out, out_h, out_w), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32), alpha.astype(jnp.int32), beta.astype(jnp.int32))
+
+
+def vmem_footprint_bytes(n_in, n_out, k, h, w, zero_pad=True):
+    """Estimated VMEM bytes a real-TPU lowering of this block needs: the
+    halo'd input tile, the expanded +-1 weights (bf16 on the MXU path),
+    the int32 accumulators and the output tile. Used by the L1 perf notes
+    in EXPERIMENTS.md SPerf; must stay well under ~16 MiB/core."""
+    halo = k - 1 if not zero_pad else (k - 1)
+    x_bytes = n_in * (h + halo) * (w + halo) * 4
+    w_bytes = n_out * n_in * k * k * 2  # +-1 expanded to bf16
+    acc_bytes = n_out * h * w * 4
+    out_bytes = n_out * h * w * 4
+    return x_bytes + w_bytes + acc_bytes + out_bytes
+
+
+def mxu_utilization_estimate(n_in, n_out, k):
+    """Fraction of a 128x128 MXU tile the per-channel contraction fills:
+    the [n_out, k*k] x [k*k, hw] matmul has a k*k-deep reduction, so the
+    systolic array's depth utilization is k*k/128 per pass and its width
+    utilization min(n_out,128)/128."""
+    depth = min(k * k, 128) / 128.0
+    width = min(n_out, 128) / 128.0
+    del n_in
+    return depth * width

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the Pallas kernel - the CORE correctness signal.
+
+Two references:
+
+* `binary_conv_ref` - exact integer semantics (Q7.9 saturating channel
+  accumulation, Q10.18 scale product, truncation) written with plain
+  numpy ops and explicit loops: slow, obviously-correct, bit-true.
+* `binary_conv_float` - float convolution via `lax.conv_general_dilated`
+  used as a sanity cross-check in the non-saturating regime (where the
+  integer pipeline is exact linear algebra).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..quantize import Q29_MAX, Q29_MIN, Q79_MAX, Q79_MIN, Q1018_MAX, Q1018_MIN
+
+
+def binary_conv_ref(x, w, alpha, beta, *, zero_pad=True):
+    """Bit-true reference. Shapes as in `binary_conv_block`; numpy int64
+    internally (no overflow anywhere)."""
+    x = np.asarray(x, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    alpha = np.asarray(alpha, dtype=np.int64)
+    beta = np.asarray(beta, dtype=np.int64)
+    n_in, h, width = x.shape
+    n_out, _, k, _ = w.shape
+    if zero_pad:
+        out_h, out_w = h, width
+        off = (k - 1) // 2
+        xp = np.zeros((n_in, h + k - 1, width + k - 1), dtype=np.int64)
+        xp[:, off : off + h, off : off + width] = x
+    else:
+        out_h, out_w = h - k + 1, width - k + 1
+        xp = x
+    out = np.zeros((n_out, out_h, out_w), dtype=np.int64)
+    for o in range(n_out):
+        for y in range(out_h):
+            for xx in range(out_w):
+                acc = 0
+                for i in range(n_in):  # chip channel order
+                    sop = int((w[o, i] * xp[i, y : y + k, xx : xx + k]).sum())
+                    acc = min(max(acc + sop, Q79_MIN), Q79_MAX)
+                v = acc * int(alpha[o]) + (int(beta[o]) << 9)
+                v = min(max(v, Q1018_MIN), Q1018_MAX)
+                v >>= 9  # arithmetic shift: python ints floor-shift
+                out[o, y, xx] = min(max(v, Q29_MIN), Q29_MAX)
+    return out.astype(np.int32)
+
+
+def binary_conv_float(x, w, alpha, beta, *, zero_pad=True):
+    """Float reference (no saturation/truncation): valid when magnitudes
+    stay inside Q7.9 and the scale product has no fractional truncation
+    error beyond 1 LSB. Returns float values in Q2.9 *raw* units."""
+    xf = jnp.asarray(x, dtype=jnp.float32)[None]  # NCHW
+    wf = jnp.asarray(w, dtype=jnp.float32)  # OIHW
+    pad = "SAME" if zero_pad else "VALID"
+    conv = lax.conv_general_dilated(
+        xf,
+        wf,
+        window_strides=(1, 1),
+        padding=pad,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    alpha_f = jnp.asarray(alpha, dtype=jnp.float32)[:, None, None] / 2.0**9
+    beta_f = jnp.asarray(beta, dtype=jnp.float32)[:, None, None]
+    return conv * alpha_f + beta_f

@@ -1,0 +1,73 @@
+"""Layer 2 - the JAX compute graph: YodaNN chip blocks composed into
+binary-weight CNN forward passes, built on the L1 Pallas kernel.
+
+Two exports matter to the AOT path (`aot.py`):
+
+* `make_block_fn` - the *exact* computation one YodaNN chip block performs
+  (binary conv + per-channel scale/bias on raw Q2.9 integers). The Rust
+  coordinator loads its lowered HLO as the golden model and checks the
+  cycle simulator's streamed outputs against it.
+* `make_smallnet_fn` - a small scene-labeling-style CNN (3 conv blocks
+  with quantized ReLU + 2x2 max-pool) used by the end-to-end example.
+
+Python never runs at serving time: these functions exist to be lowered
+once by `aot.py` into `artifacts/*.hlo.txt`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.binary_conv import binary_conv_block
+from .quantize import relu_q29
+
+
+def make_block_fn(*, k, zero_pad=True):
+    """The chip-block function with static kernel size; shapes are fixed
+    at lowering time by the example arguments."""
+
+    def block(x, w, alpha, beta):
+        return (binary_conv_block(x, w, alpha, beta, k=k, zero_pad=zero_pad),)
+
+    return block
+
+
+def maxpool2x2_q(x):
+    """2x2 max-pool on raw Q2.9 int32 [c, h, w] (h, w even)."""
+    c, h, w = x.shape
+    x = x.reshape(c, h // 2, 2, w // 2, 2)
+    return jnp.max(jnp.max(x, axis=4), axis=2)
+
+
+def make_smallnet_fn(layers):
+    """A forward pass over `layers`, each a dict with keys
+    ``k, zero_pad, pool`` - weights/scales/biases are passed as a flat
+    argument list (w0, a0, b0, w1, a1, b1, ...) so the lowered HLO has a
+    stable signature.
+
+    ReLU runs after every block except the last; `pool` applies a 2x2
+    max-pool. All arithmetic stays in raw Q2.9 int32.
+    """
+
+    def net(x, *params):
+        assert len(params) == 3 * len(layers)
+        for li, spec in enumerate(layers):
+            w, alpha, beta = params[3 * li : 3 * li + 3]
+            x = binary_conv_block(x, w, alpha, beta, k=spec["k"], zero_pad=spec["zero_pad"])
+            if li + 1 < len(layers):
+                x = relu_q29(x)
+            if spec.get("pool"):
+                x = maxpool2x2_q(x)
+        return (x,)
+
+    return net
+
+
+def block_example_args(n_in, n_out, k, h, w):
+    """ShapeDtypeStructs for lowering a block function."""
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((n_in, h, w), i32),
+        jax.ShapeDtypeStruct((n_out, n_in, k, k), i32),
+        jax.ShapeDtypeStruct((n_out,), i32),
+        jax.ShapeDtypeStruct((n_out,), i32),
+    )

@@ -1,0 +1,74 @@
+"""Fixed-point helpers mirroring the Rust `fixedpoint` module bit-for-bit.
+
+All values are carried as **raw two's-complement integers** (int32/int64
+jnp arrays); a raw value ``r`` in Qi.f represents ``r / 2**f``. The YodaNN
+formats (paper SIII-E):
+
+* Q2.9  - 12-bit activations / scales / biases,
+* Q7.9  - 17-bit ChannelSummer accumulators (saturating),
+* Q10.18 - 29-bit scale product, truncated+saturated back to Q2.9.
+
+Truncation = arithmetic shift right (floor); saturation = clamp to the
+representable range - exactly the hardware semantics, so results compare
+``==`` against the Rust simulator.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Q2.9
+Q29_FRAC = 9
+Q29_MAX = 2**11 - 1  # 2047
+Q29_MIN = -(2**11)  # -2048
+# Q7.9
+Q79_MAX = 2**16 - 1  # 65535
+Q79_MIN = -(2**16)  # -65536
+# Q10.18
+Q1018_MAX = 2**28 - 1
+Q1018_MIN = -(2**28)
+
+
+def q29_from_float(x):
+    """Round-to-nearest-even quantization of real values to raw Q2.9."""
+    scaled = np.asarray(x, dtype=np.float64) * 2.0**Q29_FRAC
+    # numpy rounds half-to-even, matching the Rust `round_ties_even`.
+    return np.clip(np.rint(scaled), Q29_MIN, Q29_MAX).astype(np.int32)
+
+
+def q29_to_float(raw):
+    """Real value of raw Q2.9."""
+    return np.asarray(raw, dtype=np.float64) / 2.0**Q29_FRAC
+
+
+def sat_q79(x):
+    """Saturate raw values to the Q7.9 accumulator range (jnp)."""
+    return jnp.clip(x, Q79_MIN, Q79_MAX)
+
+
+def scale_bias_q(acc_q79, alpha_q29, beta_q29):
+    """The Scale-Bias datapath: Q7.9 x Q2.9 -> Q10.18, + beta, truncate &
+    saturate to Q2.9. `alpha`/`beta` broadcast over the trailing axes of
+    `acc` (jnp int32 arithmetic; products stay under 2**28)."""
+    prod = acc_q79.astype(jnp.int32) * alpha_q29.astype(jnp.int32)  # Q10.18
+    summed = jnp.clip(prod + (beta_q29.astype(jnp.int32) << 9), Q1018_MIN, Q1018_MAX)
+    # Arithmetic shift right truncates toward -inf (two's complement).
+    out = summed >> 9  # Q10.18 -> Q1.. align to 9 fractional bits
+    return jnp.clip(out, Q29_MIN, Q29_MAX)
+
+
+def binarize_det(w_fp):
+    """Deterministic BinaryConnect binarization: sign(w) in {-1,+1},
+    with w >= 0 -> +1 (paper SII-A; the printed case split is a typo)."""
+    return jnp.where(jnp.asarray(w_fp) >= 0, 1, -1).astype(jnp.int32)
+
+
+def binarize_sto(w_fp, u):
+    """Stochastic binarization with the hard sigmoid
+    sigma(x) = clip((x+1)/2, 0, 1); `u` uniform in [0,1)."""
+    sigma = jnp.clip((jnp.asarray(w_fp) + 1.0) / 2.0, 0.0, 1.0)
+    return jnp.where(jnp.asarray(u) < sigma, 1, -1).astype(jnp.int32)
+
+
+def relu_q29(x_q29):
+    """Quantized ReLU on raw Q2.9 (max with 0 is exact in raw space)."""
+    return jnp.maximum(x_q29, 0)

@@ -1,0 +1,139 @@
+"""BinaryConnect training (paper SII-A / [22]) - the algorithm that
+produces YodaNN's weights.
+
+Full-precision *shadow* weights are kept for SGD; the forward (and
+backward) pass sees binarized {-1,+1} weights, with the straight-through
+estimator passing gradients to the shadow copy, which is clipped to
+[-1, 1] after every update (the clipping is what makes the hard-sigmoid
+stochastic binarization meaningful).
+
+This module trains a small conv classifier on a synthetic two-class
+"blob vs stripes" dataset, then exports chip-ready tensors:
+binary weight planes (Eq. 5 bit encoding), per-channel scales
+(batch-norm folding, SII-A: scaling by the mean absolute weight as in
+the BWN approach [23]) and raw-Q2.9 biases - exactly the operands the
+Rust coordinator feeds the simulated chip.
+
+Run: ``python -m compile.train`` (from python/), or via the pytest in
+tests/test_train.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import binarize_det, q29_from_float
+
+
+def synthetic_dataset(key, n, hw=12):
+    """Two classes: Gaussian blob (0) vs diagonal stripes (1), 1 channel."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    half = n // 2
+    yy, xx = jnp.mgrid[0:hw, 0:hw]
+    # Blobs at random centres.
+    cy = jax.random.uniform(k1, (half, 1, 1), minval=3, maxval=hw - 3)
+    cx = jax.random.uniform(k2, (half, 1, 1), minval=3, maxval=hw - 3)
+    blobs = jnp.exp(-((yy - cy) ** 2 + (xx - cx) ** 2) / 8.0)
+    # Stripes at random phase.
+    phase = jax.random.uniform(k3, (half, 1, 1), minval=0, maxval=6)
+    stripes = 0.5 + 0.5 * jnp.sin((yy + xx) / 2.0 + phase)
+    x = jnp.concatenate([blobs, stripes])[:, None]  # [n, 1, hw, hw]
+    y = jnp.concatenate([jnp.zeros(half, jnp.int32), jnp.ones(half, jnp.int32)])
+    noise = jax.random.normal(jax.random.fold_in(key, 7), x.shape) * 0.05
+    return x + noise, y
+
+
+def init_params(key, c_hidden=8, k=3, n_classes=2):
+    k1, k2 = jax.random.split(key)
+    scale = 0.3
+    return {
+        "w1": jax.random.uniform(k1, (c_hidden, 1, k, k), minval=-scale, maxval=scale),
+        "b1": jnp.zeros((c_hidden,)),
+        "w2": jax.random.uniform(k2, (n_classes, c_hidden, k, k), minval=-scale, maxval=scale),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def _binarize_ste(w):
+    """Deterministic binarization with the straight-through estimator:
+    forward sees sign(w), gradient flows as identity."""
+    wb = jnp.where(w >= 0, 1.0, -1.0)
+    return w + jax.lax.stop_gradient(wb - w)
+
+
+def forward(params, x):
+    """BinaryConnect forward: conv(sign(w)) with BWN per-channel scaling
+    alpha = mean|w| [23], ReLU, global-avg-pool classifier head."""
+
+    def conv(x, w, b):
+        wb = _binarize_ste(w)
+        alpha = jnp.mean(jnp.abs(w), axis=(1, 2, 3))  # BWN channel scale
+        out = jax.lax.conv_general_dilated(
+            x, wb, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )
+        return out * alpha[None, :, None, None] + b[None, :, None, None]
+
+    h = jax.nn.relu(conv(x, params["w1"], params["b1"]))
+    h = conv(h, params["w2"], params["b2"])
+    return jnp.mean(h, axis=(2, 3))  # [n, classes]
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@jax.jit
+def train_step(params, x, y, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = {}
+    for name, p in params.items():
+        g = grads[name]
+        p = p - lr * g
+        if name.startswith("w"):
+            # BinaryConnect: clip the full-precision shadow weights.
+            p = jnp.clip(p, -1.0, 1.0)
+        new[name] = p
+    return new, loss
+
+
+def train(seed=0, steps=300, n=128, lr=0.2):
+    """Train; returns (params, losses, accuracy)."""
+    key = jax.random.PRNGKey(seed)
+    x, y = synthetic_dataset(key, n)
+    params = init_params(jax.random.fold_in(key, 1))
+    losses = []
+    for _ in range(steps):
+        params, loss = train_step(params, x, y, lr)
+        losses.append(float(loss))
+    acc = float(jnp.mean(jnp.argmax(forward(params, x), axis=1) == y))
+    return params, losses, acc
+
+
+def export_chip_operands(params):
+    """Convert trained parameters to chip operands: Eq. 5 weight bits,
+    raw-Q2.9 alpha (BWN scale) and beta per layer."""
+    out = []
+    for wi, bi in (("w1", "b1"), ("w2", "b2")):
+        w = np.asarray(params[wi])
+        bits = np.asarray(binarize_det(w)) > 0  # Eq. 5: +1 -> bit 1
+        alpha = q29_from_float(np.abs(w).mean(axis=(1, 2, 3)))
+        beta = q29_from_float(np.asarray(params[bi]))
+        out.append({"bits": bits, "alpha": alpha, "beta": beta})
+    return out
+
+
+def main():
+    params, losses, acc = train()
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, train accuracy {acc:.2%}")
+    ops = export_chip_operands(params)
+    for i, layer in enumerate(ops):
+        print(
+            f"layer {i+1}: {layer['bits'].size} binary weights "
+            f"({layer['bits'].size // 8} bytes), alpha[0]={layer['alpha'][0]} (raw Q2.9)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Pallas kernel vs pure reference - the core L1 correctness signal.
+
+Hypothesis sweeps shapes, kernel sizes and value regimes (including the
+Q7.9 saturating regime, where accumulation order matters) and asserts
+bit-exact equality against the integer oracle, plus closeness to the
+float reference in the non-saturating regime.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.binary_conv import (
+    binary_conv_block,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import binary_conv_float, binary_conv_ref
+
+
+def rand_case(rng, k, n_in, n_out, h, w, amp):
+    x = rng.integers(-amp, amp + 1, size=(n_in, h, w), dtype=np.int32)
+    wts = rng.choice(np.array([-1, 1], dtype=np.int32), size=(n_out, n_in, k, k))
+    alpha = rng.integers(-512, 513, size=(n_out,), dtype=np.int32)
+    beta = rng.integers(-256, 257, size=(n_out,), dtype=np.int32)
+    return x, wts, alpha, beta
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([1, 2, 3, 4, 5, 6, 7]),
+    n_in=st.integers(1, 6),
+    n_out=st.integers(1, 6),
+    h=st.integers(7, 12),
+    w=st.integers(7, 12),
+    zero_pad=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_integer_oracle(k, n_in, n_out, h, w, zero_pad, seed):
+    rng = np.random.default_rng(seed)
+    x, wts, alpha, beta = rand_case(rng, k, n_in, n_out, h, w, amp=60)
+    got = np.asarray(binary_conv_block(x, wts, alpha, beta, k=k, zero_pad=zero_pad))
+    want = binary_conv_ref(x, wts, alpha, beta, zero_pad=zero_pad)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_oracle_in_saturating_regime(seed):
+    # Large activations over many channels force Q7.9 saturation: the
+    # kernel must saturate in the same channel order as the chip.
+    rng = np.random.default_rng(seed)
+    x, wts, alpha, beta = rand_case(rng, 3, 8, 3, 8, 8, amp=2000)
+    got = np.asarray(binary_conv_block(x, wts, alpha, beta, k=3))
+    want = binary_conv_ref(x, wts, alpha, beta)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.sampled_from([1, 3, 5, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_close_to_float_reference_when_linear(k, seed):
+    # Small magnitudes: no saturation; the only nonlinearity is the final
+    # >>9 truncation, bounded by 1 LSB.
+    rng = np.random.default_rng(seed)
+    x, wts, alpha, beta = rand_case(rng, k, 3, 4, 9, 9, amp=20)
+    got = np.asarray(binary_conv_block(x, wts, alpha, beta, k=k), dtype=np.float64)
+    want = np.asarray(binary_conv_float(x, wts, alpha, beta), dtype=np.float64)
+    assert np.max(np.abs(got - want)) <= 1.0 + 1e-6
+
+
+def test_identity_block():
+    # +1 weights on a single pixel with alpha=1: window sum passthrough.
+    x = np.zeros((1, 5, 5), dtype=np.int32)
+    x[0, 2, 2] = 700
+    w = np.ones((1, 1, 3, 3), dtype=np.int32)
+    alpha = np.array([512], dtype=np.int32)
+    beta = np.array([0], dtype=np.int32)
+    out = np.asarray(binary_conv_block(x, w, alpha, beta, k=3))
+    # Every window containing the pixel sums to 700.
+    assert out[0, 2, 2] == 700
+    assert out[0, 0, 0] == 0
+    assert out[0, 1, 1] == 700
+
+
+def test_bias_only():
+    x = np.zeros((2, 4, 4), dtype=np.int32)
+    w = np.ones((3, 2, 1, 1), dtype=np.int32)
+    alpha = np.zeros((3,), dtype=np.int32)
+    beta = np.array([-100, 0, 100], dtype=np.int32)
+    out = np.asarray(binary_conv_block(x, w, alpha, beta, k=1))
+    assert (out[0] == -100).all() and (out[1] == 0).all() and (out[2] == 100).all()
+
+
+def test_truncation_floors_negative():
+    # acc = -3 raw (tiny negative), alpha = 1.0: -3*512 >> 9 ... exact;
+    # alpha = 0.5 (256): -3*256 = -768 >> 9 = -2 (floor of -1.5).
+    x = np.full((1, 1, 1), -3, dtype=np.int32)
+    w = np.ones((1, 1, 1, 1), dtype=np.int32)
+    out = np.asarray(
+        binary_conv_block(x, w, np.array([256], np.int32), np.array([0], np.int32), k=1)
+    )
+    assert out[0, 0, 0] == -2
+
+
+def test_vmem_footprint_is_small_for_chip_blocks():
+    # The largest golden block must sit far below a TPU core's ~16 MiB.
+    assert vmem_footprint_bytes(32, 64, 3, 16, 16) < 2 * 2**20
+    assert 0.0 < mxu_utilization_estimate(32, 64, 3) <= 1.0
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4, 5, 6, 7])
+def test_all_kernel_sizes_smoke(k):
+    rng = np.random.default_rng(k)
+    x, wts, alpha, beta = rand_case(rng, k, 2, 2, 8, 8, amp=50)
+    got = np.asarray(binary_conv_block(x, wts, alpha, beta, k=k))
+    want = binary_conv_ref(x, wts, alpha, beta)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,63 @@
+"""L2 model: block/network shapes and semantics."""
+
+import numpy as np
+
+from compile.model import (
+    block_example_args,
+    make_block_fn,
+    make_smallnet_fn,
+    maxpool2x2_q,
+)
+
+
+def test_block_fn_shapes():
+    import jax
+
+    fn = make_block_fn(k=3)
+    args = block_example_args(4, 6, 3, 8, 8)
+    out = jax.eval_shape(fn, *args)
+    assert out[0].shape == (6, 8, 8)
+    assert str(out[0].dtype) == "int32"
+
+
+def test_block_fn_valid_padding_shrinks():
+    import jax
+
+    fn = make_block_fn(k=5, zero_pad=False)
+    args = block_example_args(2, 3, 5, 10, 9)
+    out = jax.eval_shape(fn, *args)
+    assert out[0].shape == (3, 6, 5)
+
+
+def test_maxpool():
+    x = np.arange(16, dtype=np.int32).reshape(1, 4, 4)
+    out = np.asarray(maxpool2x2_q(x))
+    np.testing.assert_array_equal(out[0], [[5, 7], [13, 15]])
+
+
+def test_smallnet_forward_shapes_and_relu():
+    layers = [
+        dict(k=3, zero_pad=True, pool=True, n_out=4),
+        dict(k=3, zero_pad=True, pool=False, n_out=2),
+    ]
+    net = make_smallnet_fn(layers)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-50, 50, size=(3, 8, 8), dtype=np.int32)
+    params = []
+    n_in = 3
+    for spec in layers:
+        params.append(
+            rng.choice(np.array([-1, 1], np.int32), size=(spec["n_out"], n_in, 3, 3))
+        )
+        params.append(np.full((spec["n_out"],), 512, np.int32))
+        params.append(np.zeros((spec["n_out"],), np.int32))
+        n_in = spec["n_out"]
+    (out,) = net(x, *params)
+    assert out.shape == (2, 4, 4)
+    # Intermediate ReLU means layer-2 inputs were non-negative; run layer 1
+    # alone to confirm the clamp happened (spot property).
+    from compile.kernels.binary_conv import binary_conv_block
+    from compile.quantize import relu_q29
+
+    l1 = relu_q29(binary_conv_block(x, params[0], params[1], params[2], k=3))
+    assert int(np.asarray(l1).min()) >= 0

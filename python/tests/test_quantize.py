@@ -1,0 +1,68 @@
+"""Quantization helpers vs the Rust fixedpoint semantics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as qz
+
+
+def test_q29_range():
+    assert qz.q29_from_float(100.0) == 2047
+    assert qz.q29_from_float(-100.0) == -2048
+    assert qz.q29_from_float(1.0) == 512
+    assert qz.q29_from_float(-1.0) == -512
+
+
+def test_round_ties_even():
+    # 1.5 LSB and 2.5 LSB both round to 2 (ties-to-even), matching Rust.
+    assert qz.q29_from_float(1.5 / 512.0) == 2
+    assert qz.q29_from_float(2.5 / 512.0) == 2
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-4.2, 4.2, allow_nan=False))
+def test_roundtrip_error_half_lsb(x):
+    raw = qz.q29_from_float(x)
+    back = qz.q29_to_float(raw)
+    if -4.0 <= x <= 2047 / 512:
+        assert abs(back - x) <= 0.5 / 512 + 1e-12
+
+
+def test_scale_bias_identity():
+    import jax.numpy as jnp
+
+    acc = jnp.array([700, -1024, 0, 2047], dtype=jnp.int32)
+    out = qz.scale_bias_q(acc, jnp.int32(512), jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(out), [700, -1024, 0, 2047])
+
+
+def test_scale_bias_saturates():
+    import jax.numpy as jnp
+
+    out = qz.scale_bias_q(jnp.int32(40000), jnp.int32(512), jnp.int32(0))
+    assert int(out) == 2047
+    out = qz.scale_bias_q(jnp.int32(-40000), jnp.int32(512), jnp.int32(0))
+    assert int(out) == -2048
+
+
+def test_binarize_det_sign_convention():
+    import numpy as np
+
+    w = np.array([-0.5, -1e-9, 0.0, 0.7])
+    out = np.asarray(qz.binarize_det(w))
+    np.testing.assert_array_equal(out, [-1, -1, 1, 1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-1, 1), st.floats(0, 0.999))
+def test_binarize_sto_hard_sigmoid(w, u):
+    out = int(qz.binarize_sto(w, u))
+    sigma = min(max((w + 1) / 2, 0.0), 1.0)
+    assert out == (1 if u < sigma else -1)
+
+
+def test_relu_q29():
+    import jax.numpy as jnp
+
+    x = jnp.array([-5, 0, 7], dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(qz.relu_q29(x)), [0, 0, 7])

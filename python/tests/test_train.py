@@ -1,0 +1,69 @@
+"""BinaryConnect training: loss decreases, weights stay clipped, and the
+exported operands are chip-ready (bit-planes + raw Q2.9 scales) and
+consistent with the bit-true kernel."""
+
+import numpy as np
+
+from compile.kernels.binary_conv import binary_conv_block
+from compile.train import export_chip_operands, forward, synthetic_dataset, train
+
+
+def test_training_learns():
+    params, losses, acc = train(seed=0, steps=300, n=96)
+    assert losses[-1] < 0.3 * losses[0], f"{losses[0]} -> {losses[-1]}"
+    assert acc > 0.85, f"accuracy {acc}"
+    # Shadow weights stay in the BinaryConnect clip range.
+    for name in ("w1", "w2"):
+        w = np.asarray(params[name])
+        assert np.all(w >= -1.0) and np.all(w <= 1.0)
+
+
+def test_export_is_chip_ready():
+    params, _, _ = train(seed=1, steps=60, n=64)
+    ops = export_chip_operands(params)
+    assert len(ops) == 2
+    for layer in ops:
+        assert layer["bits"].dtype == np.bool_
+        assert layer["alpha"].dtype == np.int32
+        assert np.all(np.abs(layer["alpha"]) <= 2047)
+        assert np.all(np.abs(layer["beta"]) <= 2048)
+    # Exported alpha follows the BWN rule: mean |w| per output channel.
+    w1 = np.asarray(params["w1"])
+    expect = np.clip(np.rint(np.abs(w1).mean(axis=(1, 2, 3)) * 512), -2048, 2047)
+    np.testing.assert_array_equal(ops[0]["alpha"], expect.astype(np.int32))
+
+
+def test_exported_weights_run_on_the_quantized_kernel():
+    # The float training forward and the chip's integer pipeline must
+    # agree on layer-1 activations up to quantization error.
+    import jax.numpy as jnp
+
+    params, _, _ = train(seed=2, steps=60, n=64)
+    ops = export_chip_operands(params)
+    x, _ = synthetic_dataset(__import__("jax").random.PRNGKey(3), 4, hw=10)
+    x0 = np.asarray(x[0])  # [1, 10, 10]
+
+    from compile.quantize import q29_from_float, q29_to_float
+
+    xq = q29_from_float(x0)
+    w = np.where(ops[0]["bits"], 1, -1).astype(np.int32)
+    out_q = np.asarray(
+        binary_conv_block(xq, w, ops[0]["alpha"], ops[0]["beta"], k=3)
+    )
+    # Float reference of the same computation.
+    got = q29_to_float(out_q)
+    wf = np.asarray(params["w1"])
+    alpha = np.abs(wf).mean(axis=(1, 2, 3))
+    import jax
+
+    conv = jax.lax.conv_general_dilated(
+        jnp.asarray(x0)[None],
+        jnp.where(jnp.asarray(wf) >= 0, 1.0, -1.0),
+        (1, 1),
+        "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    want = np.asarray(conv) * alpha[:, None, None] + np.asarray(params["b1"])[:, None, None]
+    # Quantization of inputs/scales/outputs: allow a few LSB.
+    err = np.max(np.abs(got - np.clip(want, -4, 2047 / 512)))
+    assert err < 0.05, f"max err {err}"

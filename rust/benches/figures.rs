@@ -1,0 +1,90 @@
+//! Bench + regeneration of **Figures 2, 6, 11, 12 and 13** as printed
+//! data series.
+
+use yodann::bench::{black_box, Bencher};
+use yodann::power::{metric_area_mge, ArchId};
+use yodann::report::figures;
+
+fn main() {
+    // Fig. 2
+    let f2 = figures::fig2();
+    println!("Fig. 2 — conv vs other layers (scene-labeling CNN [13]):");
+    println!(
+        "  conv {:.2} GOp vs other {:.2} MOp per frame (op share {:.4});",
+        f2.conv_ops as f64 / 1e9,
+        f2.other_ops as f64 / 1e6,
+        f2.conv_op_share
+    );
+    println!(
+        "  measured time shares: CPU {:.0}% / GPU {:.0}% conv -> non-conv layers are {:.0}x/{:.0}x less efficient per op\n",
+        f2.cpu_conv_time_share * 100.0,
+        f2.gpu_conv_time_share * 100.0,
+        f2.cpu_other_slowdown,
+        f2.gpu_other_slowdown
+    );
+
+    // Fig. 6
+    println!("Fig. 6 — area breakdown (kGE):");
+    for (arch, a) in figures::fig6() {
+        println!(
+            "  {:<24} mem {:>6.1} | filter {:>6.1} | SoP {:>6.1} | imgbank {:>6.1} | other {:>6.1} | total {:>7.1}",
+            arch.name(), a.memory, a.filter_bank, a.sop, a.image_bank,
+            a.scale_bias + a.other, a.total_kge()
+        );
+    }
+    println!();
+
+    // Fig. 11
+    println!("Fig. 11 — V sweep (baseline vs YodaNN):");
+    for arch in [ArchId::Q29Fixed8, ArchId::Bin32Multi] {
+        println!("  {}:", arch.name());
+        for p in figures::fig11_sweep(arch, 7) {
+            println!(
+                "    {:.2} V  {:>8.1} MHz  {:>9.1} GOp/s  {:>7.2} TOp/s/W",
+                p.v, p.f_mhz, p.theta_gops, p.en_eff_tops_w
+            );
+        }
+    }
+    println!();
+
+    // Fig. 12
+    println!("Fig. 12 — core power breakdown @400 MHz, 1.2 V (mW):");
+    for (arch, b) in figures::fig12_at_400mhz() {
+        println!(
+            "  {:<24} mem {:>5.1} | SoP {:>5.1} | filter {:>5.1} | sb {:>4.2} | other {:>4.1} | total {:>6.1}",
+            arch.name(),
+            b.memory * 1e3,
+            b.sop * 1e3,
+            b.filter_bank * 1e3,
+            b.scale_bias * 1e3,
+            b.other * 1e3,
+            b.total() * 1e3
+        );
+    }
+    println!();
+
+    // Fig. 13
+    println!("Fig. 13 — pareto (TOp/s/W, GOp/s/MGE):");
+    for p in figures::fig13(7) {
+        println!(
+            "  {:<18} {:>8.2} {:>10.1}{}",
+            p.name,
+            p.en_eff,
+            p.area_eff,
+            if p.ours { "  <- ours" } else { "" }
+        );
+    }
+    let _ = metric_area_mge(ArchId::Bin32Multi);
+    println!();
+
+    let mut b = Bencher::from_env();
+    b.bench("fig11_sweep_13pts", || {
+        black_box(figures::fig11_sweep(ArchId::Bin32Multi, 13));
+    });
+    b.bench("fig13_pareto", || {
+        black_box(figures::fig13(13));
+    });
+    b.bench("fig2_op_model", || {
+        black_box(figures::fig2());
+    });
+}

@@ -1,0 +1,64 @@
+//! Hot-path benchmark of the cycle-accurate simulator itself — the
+//! subject of the §Perf optimization pass (EXPERIMENTS.md). Reports
+//! simulated Mcycles/s for the configurations that dominate real
+//! workloads, plus the end-to-end layer path through the coordinator.
+
+use yodann::bench::{black_box, Bencher};
+use yodann::coordinator::{run_layer, ExecOptions, LayerWorkload};
+use yodann::hw::{BlockJob, Chip, ChipConfig};
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, BinaryKernels, ScaleBias};
+
+fn block(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> BlockJob {
+    let mut g = Gen::new(seed);
+    BlockJob {
+        k,
+        zero_pad: true,
+        image: random_image(&mut g, n_in, h, w, 0.02),
+        kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+        scale_bias: ScaleBias::random(&mut g, n_out),
+    }
+}
+
+fn main() {
+    let cfg = ChipConfig::yodann();
+    let mut b = Bencher::from_env();
+
+    for (label, job) in [
+        ("k3_32to64_16x16 (dual mode)", block(3, 32, 64, 16, 16, 1)),
+        ("k7_32to32_16x16 (native)", block(7, 32, 32, 16, 16, 2)),
+        ("k5_32to64_12x12 (dual mode)", block(5, 32, 64, 12, 12, 3)),
+    ] {
+        let mut chip = Chip::new(cfg);
+        let cycles = chip.run_block(&job).stats.cycles.total();
+        let stats = b.bench(label, || {
+            black_box(chip.run_block(&job));
+        });
+        println!(
+            "  -> {:.2} Mcycles/s simulated ({} cycles/block), {:.1} Mop/s datapath",
+            stats.per_second(cycles as f64) / 1e6,
+            cycles,
+            stats.per_second(chip.run_block(&job).stats.useful_ops as f64) / 1e6
+        );
+    }
+
+    // End-to-end layer through the coordinator (block decomposition +
+    // worker pool + reduction): a BC-Cifar-10 L2-shaped layer.
+    let mut g = Gen::new(9);
+    let wl = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: random_image(&mut g, 128, 32, 32, 0.02),
+        kernels: BinaryKernels::random(&mut g, 128, 128, 3),
+        scale_bias: ScaleBias::random(&mut g, 128),
+    };
+    let cycles = run_layer(&wl, &cfg, ExecOptions::default()).stats.cycles.total();
+    let s = b.bench("layer_bc_cifar10_L2 (128->128, 32x32)", || {
+        black_box(run_layer(&wl, &cfg, ExecOptions::default()));
+    });
+    println!(
+        "  -> {:.2} Mcycles/s through coordinator ({} simulated cycles)",
+        s.per_second(cycles as f64) / 1e6,
+        cycles
+    );
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration of **Table I** (fixed-point Q2.9 vs binary 8×8):
+//! prints the reproduced table with paper deltas and times both the
+//! analytic generation and the cycle simulator running the two
+//! architectures' functional models on the same workload.
+
+use yodann::bench::{black_box, Bencher};
+use yodann::hw::baseline::{q29_conv, Q29Kernels};
+use yodann::hw::{BlockJob, Chip, ChipConfig};
+use yodann::report::tables;
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, ScaleBias};
+
+fn main() {
+    println!("{}", tables::table1().render());
+
+    let mut b = Bencher::from_env();
+    b.bench("table1_generation", || {
+        black_box(tables::table1());
+    });
+
+    // Functional cost of the two datapaths on identical work: binary
+    // complement-mux vs 12×12-bit multiply (the architectural argument).
+    let mut g = Gen::new(3);
+    let image = random_image(&mut g, 8, 16, 16, 0.02);
+    let q29 = Q29Kernels::random(&mut g, 8, 8, 7);
+    let bin = q29.signs();
+    let sb = ScaleBias::random(&mut g, 8);
+
+    let cfg = ChipConfig::bin8();
+    let job = BlockJob {
+        k: 7,
+        zero_pad: true,
+        image: image.clone(),
+        kernels: bin,
+        scale_bias: sb.clone(),
+    };
+    let mut chip = Chip::new(cfg);
+    let s = b.bench("bin8_block_sim (cycle-accurate)", || {
+        black_box(chip.run_block(&job));
+    });
+    let cycles = chip.run_block(&job).stats.cycles.total();
+    println!(
+        "  -> simulation speed: {:.2} Mcycles/s",
+        s.per_second(cycles as f64) / 1e6
+    );
+
+    b.bench("q29_block_functional (12-bit MACs)", || {
+        black_box(q29_conv(&image, &q29, &sb, true));
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench + regeneration of **Table II** (device energy efficiency by
+//! filter size × architecture at 400 MHz), plus the dual-filter-mode
+//! ablation: what the 3×3/5×5 modes buy over zero-padding into 7×7.
+
+use yodann::bench::{black_box, Bencher};
+use yodann::power::ArchId;
+use yodann::report::tables;
+
+fn main() {
+    println!("{}", tables::table2().render());
+
+    // Ablation (DESIGN.md design-choice): dual-filter modes vs zero-pad
+    // into the 7×7 slot on the final chip.
+    println!("ablation — dual-filter modes vs zero-padding into 7x7 (32x32 chip, GOp/s/W):");
+    for k in [3usize, 5] {
+        let multi = tables::table2_cell(ArchId::Bin32Multi, k);
+        // Fixed-kernel variant zero-pads into 7×7.
+        let padded = tables::table2_cell(ArchId::Bin32Fixed, k);
+        println!(
+            "  {k}x{k}: dual mode {multi:.0} vs zero-padded {padded:.0}  ({:.2}x)",
+            multi / padded
+        );
+    }
+    println!();
+
+    let mut b = Bencher::from_env();
+    b.bench("table2_generation", || {
+        black_box(tables::table2());
+    });
+    b.bench("table2_single_cell", || {
+        black_box(tables::table2_cell(ArchId::Bin32Multi, 3));
+    });
+}

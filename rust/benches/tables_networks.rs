@@ -1,0 +1,32 @@
+//! Bench + regeneration of **Tables III, IV and V**: the per-layer and
+//! per-network evaluations of every CNN in the paper, at both operating
+//! corners, with paper deltas.
+
+use yodann::bench::{black_box, Bencher};
+use yodann::model::{evaluate_network, networks, Corner};
+use yodann::report::tables;
+
+fn main() {
+    // Table III for every network at the energy-optimal corner (the
+    // paper prints the 0.6 V variant).
+    for net in networks::all_networks() {
+        println!("{}", tables::table3(net.id, Corner::energy_optimal()).render());
+    }
+    println!("{}", tables::table45(Corner::energy_optimal()).render());
+    println!("{}", tables::table45(Corner::throughput_optimal()).render());
+
+    let mut b = Bencher::from_env();
+    b.bench("table3_all_networks", || {
+        for net in networks::all_networks() {
+            black_box(tables::table3(net.id, Corner::energy_optimal()));
+        }
+    });
+    b.bench("table4_and_5", || {
+        black_box(tables::table45(Corner::energy_optimal()));
+        black_box(tables::table45(Corner::throughput_optimal()));
+    });
+    let vgg = networks::vgg19();
+    b.bench("evaluate_network(vgg19)", || {
+        black_box(evaluate_network(&vgg, Corner::energy_optimal()));
+    });
+}

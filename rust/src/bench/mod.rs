@@ -1,0 +1,158 @@
+//! Minimal benchmarking harness (stand-in for `criterion`, unavailable in
+//! this image's offline registry).
+//!
+//! Each `rust/benches/*.rs` target (built with `harness = false`) uses
+//! [`Bencher`] to time closures with warm-up, fixed sample counts and
+//! mean/median/σ reporting, and uses [`black_box`] to defeat
+//! constant-folding. The bench binaries also *print the reproduced paper
+//! tables/figures* — timing the generation and regenerating the artifact in
+//! one target, as DESIGN.md §4 specifies.
+
+use std::time::{Duration, Instant};
+
+/// Re-export of the compiler fence that prevents the optimizer from
+/// deleting benchmarked work.
+pub use std::hint::black_box;
+
+/// Result statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Standard deviation across samples (per-iteration).
+    pub stddev: Duration,
+    /// Min / max per-iteration times.
+    pub min: Duration,
+    /// Max per-iteration time.
+    pub max: Duration,
+}
+
+impl Stats {
+    /// Throughput in "units per second" given the number of logical units
+    /// (e.g. simulated cycles) performed per iteration.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} mean {:>12?}  median {:>12?}  σ {:>10?}  (n={}, {} it/sample)",
+            self.name, self.mean, self.median, self.stddev, self.samples, self.iters_per_sample
+        )
+    }
+}
+
+/// Benchmark runner with warm-up and automatic iteration calibration.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warm-up time before sampling.
+    pub warmup_time: Duration,
+    /// Number of samples to split the measurement into.
+    pub samples: usize,
+    collected: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_secs(1),
+            warmup_time: Duration::from_millis(300),
+            samples: 20,
+            collected: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// A bencher honouring `YODANN_BENCH_FAST=1` (used by `make test` to
+    /// smoke the bench targets quickly).
+    pub fn from_env() -> Self {
+        let mut b = Bencher::default();
+        if std::env::var("YODANN_BENCH_FAST").is_ok_and(|v| v == "1") {
+            b.measure_time = Duration::from_millis(100);
+            b.warmup_time = Duration::from_millis(20);
+            b.samples = 5;
+        }
+        b
+    }
+
+    /// Time `f`, returning per-iteration statistics and recording them.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warm-up and calibration: find iters such that one sample takes
+        // roughly measure_time / samples.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let sample_budget = self.measure_time.as_secs_f64() / self.samples as f64;
+        let iters = ((sample_budget / per_iter).ceil() as u64).max(1);
+
+        let mut sample_means: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_means.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sample_means.iter().sum::<f64>() / sample_means.len() as f64;
+        let median = sample_means[sample_means.len() / 2];
+        let var = sample_means.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / sample_means.len() as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            samples: self.samples,
+            iters_per_sample: iters,
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(median),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(sample_means[0]),
+            max: Duration::from_secs_f64(*sample_means.last().unwrap()),
+        };
+        println!("{stats}");
+        self.collected.push(stats.clone());
+        stats
+    }
+
+    /// All statistics collected so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.collected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(2),
+            samples: 4,
+            collected: Vec::new(),
+        };
+        let s = b.bench("noop-ish", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(s.mean > Duration::ZERO);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+}

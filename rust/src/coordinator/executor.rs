@@ -1,0 +1,230 @@
+//! The layer executor: runs decomposed block jobs on simulated chips,
+//! reduces input-channel partial sums off-chip, applies the final
+//! scale/bias, and aggregates the activity ledger.
+//!
+//! Concurrency model: blocks are independent up to the per-output-block
+//! reduction, so a `std::thread` worker pool simulates them in parallel
+//! (the offline registry has no tokio). Parallelism accelerates the
+//! *simulation*; the chip-time ledger still sums every block's cycles,
+//! because the real device executes blocks sequentially.
+//!
+//! Numerical semantics of the off-chip reduction (Algorithm 1 line 37):
+//! each input-channel block leaves the chip as Q2.9 (identity scale —
+//! saturating/truncating, exactly what the silicon streams); the host
+//! accumulates the partials in wide precision, clamps to the Q7.9
+//! accumulator range and applies the layer's α/β through the same
+//! Scale-Bias datapath. A monolithic (unblocked) convolution can differ
+//! by LSBs when partials saturate — an inherent property of the paper's
+//! scheme, quantified in `rust/tests/integration_network.rs`.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::blocks::{decompose, tile_row_skip, LayerWorkload, PlacedJob};
+use crate::fixedpoint::{scale_bias, Q7_9};
+use crate::hw::{Chip, ChipConfig, ChipStats};
+use crate::workload::Image;
+
+/// Execution options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Simulation worker threads (≥1).
+    pub workers: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4) }
+    }
+}
+
+/// Result of one simulated layer.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    /// Output feature map (`n_out × out_h × out_w`, raw Q2.9).
+    pub output: Image,
+    /// Merged activity statistics over all blocks.
+    pub stats: ChipStats,
+    /// Number of chip blocks executed.
+    pub blocks: usize,
+    /// Off-chip partial-sum additions performed (the
+    /// `⌈n_in/n_ch⌉ − 1` ops/pixel the paper mentions in §III).
+    pub offchip_adds: u64,
+}
+
+/// Run one convolution layer on the simulated chip.
+pub fn run_layer(wl: &LayerWorkload, cfg: &ChipConfig, opts: ExecOptions) -> LayerRun {
+    let jobs = decompose(wl, cfg);
+    let n_jobs = jobs.len();
+    let n_out = wl.kernels.n_out;
+    let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
+    let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
+
+    // Run the blocks (worker pool over a shared queue).
+    let results: Vec<(PlacedJob, crate::hw::BlockResult)> = run_jobs(jobs, cfg, opts);
+
+    // Reduce: wide-precision accumulation of per-input-block partials.
+    let mut acc = vec![0i64; n_out * out_h * out_w];
+    let mut stats = ChipStats::default();
+    let mut offchip_adds = 0u64;
+    for (placed, result) in &results {
+        stats.merge(&result.stats);
+        let skip = tile_row_skip(wl.zero_pad, wl.k, placed.row_base);
+        for o in 0..result.output.c {
+            let oo = placed.out_base + o;
+            for r in 0..placed.rows_valid {
+                let ty = skip + r; // row inside the tile's output
+                let ly = placed.row_base + r; // row in the layer output
+                for x in 0..out_w {
+                    let idx = (oo * out_h + ly) * out_w + x;
+                    acc[idx] += result.output.at(o, ty, x);
+                    if placed.in_block > 0 {
+                        offchip_adds += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // Final scale/bias. Single-input-block layers already applied the
+    // real α/β on-chip (straight from the Q7.9 accumulators); the host
+    // only rescales when partials from several input blocks were reduced.
+    let single_in_block = results.iter().all(|(p, _)| p.in_blocks == 1);
+    let mut output = Image::zeros(n_out, out_h, out_w);
+    for o in 0..n_out {
+        for y in 0..out_h {
+            for x in 0..out_w {
+                let raw = acc[(o * out_h + y) * out_w + x];
+                *output.at_mut(o, y, x) = if single_in_block {
+                    raw
+                } else {
+                    scale_bias(Q7_9.saturate(raw), wl.scale_bias.alpha[o], wl.scale_bias.beta[o])
+                };
+            }
+        }
+    }
+
+    LayerRun { output, stats, blocks: n_jobs, offchip_adds }
+}
+
+/// Execute jobs on a pool of simulated chips.
+fn run_jobs(
+    jobs: Vec<PlacedJob>,
+    cfg: &ChipConfig,
+    opts: ExecOptions,
+) -> Vec<(PlacedJob, crate::hw::BlockResult)> {
+    let workers = opts.workers.max(1).min(jobs.len().max(1));
+    if workers <= 1 {
+        let mut chip = Chip::new(*cfg);
+        return jobs
+            .into_iter()
+            .map(|p| {
+                let r = chip.run_block(&p.job);
+                (p, r)
+            })
+            .collect();
+    }
+    let queue = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let cfg = *cfg;
+            s.spawn(move || {
+                let mut chip = Chip::new(cfg);
+                loop {
+                    let item = queue.lock().unwrap().pop();
+                    match item {
+                        Some((idx, placed)) => {
+                            let result = chip.run_block(&placed.job);
+                            tx.send((idx, placed, result)).unwrap();
+                        }
+                        None => break,
+                    }
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut collected: Vec<(usize, PlacedJob, crate::hw::BlockResult)> = rx.into_iter().collect();
+    collected.sort_by_key(|(i, _, _)| *i);
+    collected.into_iter().map(|(_, p, r)| (p, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, reference_conv, BinaryKernels, ScaleBias};
+
+    fn wl(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> LayerWorkload {
+        let mut g = Gen::new(seed);
+        LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(&mut g, n_in, h, w, 0.02),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(&mut g, n_out),
+        }
+    }
+
+    #[test]
+    fn single_block_layer_matches_reference() {
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(3, 4, 8, 10, 9, 11);
+        let run = run_layer(&w, &cfg, ExecOptions { workers: 1 });
+        let want = reference_conv(&w.input, &w.kernels, &w.scale_bias, true);
+        assert_eq!(run.output, want);
+        assert_eq!(run.blocks, 1);
+        assert_eq!(run.offchip_adds, 0);
+    }
+
+    #[test]
+    fn channel_blocked_layer_matches_blocked_reference() {
+        // n_in = 8 on a 4-channel chip: two input blocks, host reduction.
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(3, 8, 4, 8, 8, 22);
+        let run = run_layer(&w, &cfg, ExecOptions { workers: 2 });
+        // Blocked semantics: partials are Q2.9-saturated per block. With
+        // tiny amplitudes nothing saturates, so the monolithic reference
+        // matches exactly.
+        let want = reference_conv(&w.input, &w.kernels, &w.scale_bias, true);
+        assert_eq!(run.output, want);
+        assert!(run.offchip_adds > 0);
+    }
+
+    #[test]
+    fn vertically_tiled_layer_matches_reference() {
+        // h = 40 on a chip with h_max = 16: three tiles.
+        let cfg = ChipConfig::tiny(4); // image_mem_rows = 256 → h_max 64
+        let mut cfg = cfg;
+        cfg.image_mem_rows = 16 * 4; // h_max = 16
+        let w = wl(5, 3, 4, 40, 8, 33);
+        let run = run_layer(&w, &cfg, ExecOptions { workers: 3 });
+        let want = reference_conv(&w.input, &w.kernels, &w.scale_bias, true);
+        assert_eq!(run.output, want);
+        assert!(run.blocks >= 3, "{}", run.blocks);
+    }
+
+    #[test]
+    fn non_padded_tiled_layer_matches_reference() {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 16 * 4;
+        let mut w = wl(3, 2, 3, 30, 9, 44);
+        w.zero_pad = false;
+        let run = run_layer(&w, &cfg, ExecOptions::default());
+        let want = reference_conv(&w.input, &w.kernels, &w.scale_bias, false);
+        assert_eq!(run.output, want);
+    }
+
+    #[test]
+    fn parallel_and_serial_agree() {
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(3, 8, 8, 12, 12, 55);
+        let a = run_layer(&w, &cfg, ExecOptions { workers: 1 });
+        let b = run_layer(&w, &cfg, ExecOptions { workers: 4 });
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.stats.cycles.total(), b.stats.cycles.total());
+    }
+}

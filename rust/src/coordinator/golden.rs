@@ -1,0 +1,114 @@
+//! Golden checking: the cycle simulator's streamed outputs vs the
+//! AOT-compiled JAX/Pallas golden model executed through PJRT — the
+//! reproduction of the paper's testbench-vs-Torch-golden-model check
+//! (§IV-B), with the golden model produced by a completely independent
+//! implementation (Pallas kernel, XLA compilation, different language and
+//! arithmetic stack).
+
+use crate::hw::{BlockJob, Chip, ChipConfig};
+use crate::runtime::Runtime;
+use crate::workload::{BinaryKernels, Image, ScaleBias};
+use crate::Result;
+
+/// Outcome of one golden comparison.
+#[derive(Debug, Clone)]
+pub struct GoldenReport {
+    /// Artifact checked.
+    pub artifact: String,
+    /// Total output samples compared.
+    pub samples: usize,
+    /// Mismatching samples (must be 0).
+    pub mismatches: usize,
+    /// First mismatch, if any: (channel, y, x, simulated, golden).
+    pub first_mismatch: Option<(usize, usize, usize, i64, i64)>,
+}
+
+impl GoldenReport {
+    /// True when simulator and golden model agree bit-for-bit.
+    pub fn ok(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+fn compare(artifact: &str, sim: &Image, golden: &Image) -> GoldenReport {
+    assert_eq!((sim.c, sim.h, sim.w), (golden.c, golden.h, golden.w));
+    let mut mismatches = 0;
+    let mut first = None;
+    for c in 0..sim.c {
+        for y in 0..sim.h {
+            for x in 0..sim.w {
+                let (a, b) = (sim.at(c, y, x), golden.at(c, y, x));
+                if a != b {
+                    mismatches += 1;
+                    if first.is_none() {
+                        first = Some((c, y, x, a, b));
+                    }
+                }
+            }
+        }
+    }
+    GoldenReport {
+        artifact: artifact.to_string(),
+        samples: sim.data.len(),
+        mismatches,
+        first_mismatch: first,
+    }
+}
+
+/// Run one block on the simulator and on the golden model, and compare.
+/// The block geometry must match one of the AOT artifacts
+/// (`runtime.find(...)`).
+pub fn check_block(
+    runtime: &mut Runtime,
+    cfg: &ChipConfig,
+    image: &Image,
+    kernels: &BinaryKernels,
+    sb: &ScaleBias,
+    zero_pad: bool,
+) -> Result<GoldenReport> {
+    let meta = runtime
+        .find(kernels.k, image.c, kernels.n_out, image.h, image.w, zero_pad)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for k={} {}x{} {}x{} pad={} — extend python/compile/aot.py BLOCKS",
+                kernels.k,
+                image.c,
+                kernels.n_out,
+                image.h,
+                image.w,
+                zero_pad
+            )
+        })?
+        .name
+        .clone();
+
+    let job = BlockJob {
+        k: kernels.k,
+        zero_pad,
+        image: image.clone(),
+        kernels: kernels.clone(),
+        scale_bias: sb.clone(),
+    };
+    let mut chip = Chip::new(*cfg);
+    let sim = chip.run_block(&job);
+
+    let golden = runtime.golden(&meta)?.run(image, kernels, sb)?;
+    Ok(compare(&meta, &sim.output, &golden))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_reports_first_mismatch() {
+        let mut a = Image::zeros(1, 2, 2);
+        let b = a.clone();
+        let r = compare("x", &a, &b);
+        assert!(r.ok());
+        *a.at_mut(0, 1, 0) = 5;
+        let r = compare("x", &a, &b);
+        assert_eq!(r.mismatches, 1);
+        assert_eq!(r.first_mismatch, Some((0, 1, 0, 5, 0)));
+    }
+}

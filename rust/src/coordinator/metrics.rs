@@ -1,0 +1,121 @@
+//! Roll simulated activity into the paper's metrics, for direct
+//! comparison with the analytic model (Tables III–V) — the simulator and
+//! the analytic formulas are independent derivations of the same chip,
+//! so agreement here validates both.
+
+use crate::hw::ChipStats;
+use crate::hw::EnergyModel;
+use crate::power::{ArchId, CorePowerModel, IoPowerModel};
+
+/// Metrics of a simulated run at an operating corner.
+#[derive(Debug, Clone, Copy)]
+pub struct SimMetrics {
+    /// Supply voltage.
+    pub v: f64,
+    /// Clock frequency (Hz).
+    pub f: f64,
+    /// Total cycles.
+    pub cycles: u64,
+    /// Wall-clock chip time (s).
+    pub time: f64,
+    /// Useful operations (Eq. 7 accounting).
+    pub ops: u64,
+    /// Actual throughput Θ_real (Op/s).
+    pub theta: f64,
+    /// Core energy (J).
+    pub core_energy: f64,
+    /// Core energy efficiency (Op/J).
+    pub en_eff: f64,
+    /// Device power including pads (W), averaged over the run.
+    pub device_power: f64,
+}
+
+/// Compute corner metrics from merged simulator statistics.
+pub fn sim_metrics(stats: &ChipStats, arch: ArchId, v: f64, dual_stream: bool) -> SimMetrics {
+    let core = CorePowerModel::new(arch);
+    let f = core.freq(v);
+    let em = EnergyModel::new(arch, v);
+    let cycles = stats.cycles.total();
+    let time = cycles as f64 / f;
+    let core_energy = em.energy(stats);
+    let io = if arch.binary_weights() { IoPowerModel::binary() } else { IoPowerModel::q29() };
+    let mode =
+        if dual_stream { crate::model::KernelMode::Slot3 } else { crate::model::KernelMode::Slot7 };
+    let io_power = io.power(f, mode);
+    SimMetrics {
+        v,
+        f,
+        cycles,
+        time,
+        ops: stats.useful_ops,
+        theta: stats.useful_ops as f64 / time,
+        core_energy,
+        en_eff: stats.useful_ops as f64 / core_energy,
+        device_power: core_energy / time + io_power,
+    }
+}
+
+impl SimMetrics {
+    /// Merge metrics of consecutive runs (same corner).
+    pub fn merge(&self, other: &SimMetrics) -> SimMetrics {
+        assert!((self.v - other.v).abs() < 1e-12, "corner mismatch");
+        let cycles = self.cycles + other.cycles;
+        let time = self.time + other.time;
+        let ops = self.ops + other.ops;
+        let core_energy = self.core_energy + other.core_energy;
+        SimMetrics {
+            v: self.v,
+            f: self.f,
+            cycles,
+            time,
+            ops,
+            theta: ops as f64 / time,
+            core_energy,
+            en_eff: ops as f64 / core_energy,
+            device_power: (self.device_power * self.time + other.device_power * other.time)
+                / time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::CycleBreakdown;
+
+    fn full_stats(cycles: u64, n_ch: u64) -> ChipStats {
+        ChipStats {
+            cycles: CycleBreakdown { compute: cycles, ..Default::default() },
+            sop_active_ops: cycles * n_ch * 49,
+            scm_reads: cycles * 6,
+            scm_writes: cycles,
+            sb_ops: cycles,
+            useful_ops: cycles * 2 * 49 * n_ch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fully_utilized_sim_matches_headline_efficiency() {
+        // A fully-active 7×7 run at 0.6 V must land on the paper's
+        // 61.2 TOp/s/W within the energy model's calibration error.
+        let s = full_stats(1_000_000, 32);
+        let m = sim_metrics(&s, ArchId::Bin32Multi, 0.6, false);
+        assert!((m.theta / 1e9 - 55.0).abs() < 1.0, "{}", m.theta / 1e9);
+        assert!(
+            (m.en_eff / 1e12 - 61.2).abs() / 61.2 < 0.05,
+            "{} TOp/s/W",
+            m.en_eff / 1e12
+        );
+    }
+
+    #[test]
+    fn merge_preserves_totals() {
+        let a = sim_metrics(&full_stats(1000, 32), ArchId::Bin32Multi, 0.6, false);
+        let b = sim_metrics(&full_stats(3000, 32), ArchId::Bin32Multi, 0.6, false);
+        let m = a.merge(&b);
+        assert_eq!(m.cycles, 4000);
+        assert_eq!(m.ops, a.ops + b.ops);
+        assert!((m.theta - a.theta).abs() / a.theta < 1e-9);
+    }
+}

@@ -1,0 +1,305 @@
+//! Signed fixed-point arithmetic exactly as implemented by the YodaNN
+//! datapath.
+//!
+//! The paper's number formats (§III-E):
+//!
+//! * **Q2.9** — 12-bit activations, weights-scale (α) and bias (β):
+//!   1 sign + 2 integer + 9 fractional bits.
+//! * **Q7.9** — 17-bit ChannelSummer accumulators: 1 + 7 + 9.
+//! * **Q10.18** — 29-bit scale product (Q7.9 × Q2.9): 1 + 10 + 18, which is
+//!   finally "resized with saturation and truncation to the initial Q2.9
+//!   format".
+//!
+//! All values are carried as **raw two's-complement integers** (`i64`) next
+//! to a [`QFormat`] descriptor; a raw value `r` in format Qi.f represents
+//! the real number `r / 2^f`. Truncation is an arithmetic right shift
+//! (floor), saturation clamps to the representable range — both exactly as
+//! synthesized hardware behaves. This module is the single source of truth
+//! for rounding/saturation semantics; the cycle simulator, the analytic
+//! model and the JAX golden model (python/compile/kernels) all follow it.
+
+/// A signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits (excluding the sign bit).
+    pub int_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+/// 12-bit activation / scale / bias format (Q2.9).
+pub const Q2_9: QFormat = QFormat { int_bits: 2, frac_bits: 9 };
+/// 17-bit ChannelSummer accumulator format (Q7.9).
+pub const Q7_9: QFormat = QFormat { int_bits: 7, frac_bits: 9 };
+/// 29-bit scale-product format (Q10.18).
+pub const Q10_18: QFormat = QFormat { int_bits: 10, frac_bits: 18 };
+
+impl QFormat {
+    /// Total storage width in bits, including the sign bit.
+    pub const fn total_bits(self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable raw value: `2^(int+frac) − 1`.
+    pub const fn max_raw(self) -> i64 {
+        (1i64 << (self.int_bits + self.frac_bits)) - 1
+    }
+
+    /// Smallest representable raw value: `−2^(int+frac)`.
+    pub const fn min_raw(self) -> i64 {
+        -(1i64 << (self.int_bits + self.frac_bits))
+    }
+
+    /// Value of one LSB.
+    pub fn lsb(self) -> f64 {
+        (self.frac_bits as f64).exp2().recip()
+    }
+
+    /// Clamp a raw value into this format's representable range.
+    pub const fn saturate(self, raw: i64) -> i64 {
+        let hi = self.max_raw();
+        let lo = self.min_raw();
+        if raw > hi {
+            hi
+        } else if raw < lo {
+            lo
+        } else {
+            raw
+        }
+    }
+
+    /// True if `raw` is representable without saturation.
+    pub const fn contains(self, raw: i64) -> bool {
+        raw >= self.min_raw() && raw <= self.max_raw()
+    }
+
+    /// Convert a real number to the nearest representable raw value
+    /// (round-to-nearest, saturating). Used when *quantizing inputs*,
+    /// e.g. images entering the accelerator.
+    pub fn from_f64(self, x: f64) -> i64 {
+        let scaled = x * (self.frac_bits as f64).exp2();
+        self.saturate(scaled.round_ties_even() as i64)
+    }
+
+    /// Real value represented by `raw`.
+    pub fn to_f64(self, raw: i64) -> f64 {
+        raw as f64 / (self.frac_bits as f64).exp2()
+    }
+
+    /// Quantize a real number onto this format's grid (through
+    /// [`Self::from_f64`] and back).
+    pub fn quantize(self, x: f64) -> f64 {
+        self.to_f64(self.from_f64(x))
+    }
+}
+
+/// Saturating addition in format `fmt` (hardware accumulator register).
+pub const fn sat_add(fmt: QFormat, a: i64, b: i64) -> i64 {
+    fmt.saturate(a + b)
+}
+
+/// Exact product of two raw values. The result format is
+/// `Q(ia+ib+1).(fa+fb)`: multiplying two two's-complement numbers of widths
+/// `wa`, `wb` needs `wa+wb−1` bits except for `min×min`, hence the `+1`
+/// guard integer bit — identical to the paper's Q7.9 × Q2.9 → Q10.18.
+pub const fn mul(a_fmt: QFormat, a: i64, b_fmt: QFormat, b: i64) -> (QFormat, i64) {
+    let fmt = QFormat {
+        int_bits: a_fmt.int_bits + b_fmt.int_bits + 1,
+        frac_bits: a_fmt.frac_bits + b_fmt.frac_bits,
+    };
+    (fmt, a * b)
+}
+
+/// Re-align a raw value from `from` to `to` fractional bits with hardware
+/// semantics: left shifts are exact, right shifts **truncate** (arithmetic
+/// shift, i.e. round toward −∞), and the result **saturates** to `to`.
+///
+/// This is the paper's "resized with saturation and truncation" step
+/// (Q10.18 → Q2.9).
+pub const fn resize(from: QFormat, raw: i64, to: QFormat) -> i64 {
+    let aligned = if to.frac_bits >= from.frac_bits {
+        raw << (to.frac_bits - from.frac_bits)
+    } else {
+        raw >> (from.frac_bits - to.frac_bits)
+    };
+    to.saturate(aligned)
+}
+
+/// The exact Scale-Bias datapath of §III-E:
+/// `out = resize_Q2.9( acc_Q7.9 × α_Q2.9  +  β_Q2.9 aligned to .18 )`.
+///
+/// * `acc` — ChannelSummer output, raw Q7.9;
+/// * `alpha` — per-channel scale, raw Q2.9;
+/// * `beta` — per-channel bias, raw Q2.9.
+///
+/// Returns the streamed-out raw Q2.9 pixel.
+pub const fn scale_bias(acc_q79: i64, alpha_q29: i64, beta_q29: i64) -> i64 {
+    // Q7.9 × Q2.9 → Q10.18 (exact, 29 bits).
+    let (prod_fmt, prod) = mul(Q7_9, acc_q79, Q2_9, alpha_q29);
+    // Align the Q2.9 bias to 18 fractional bits and add. The sum still fits
+    // the Q10.18 accumulator comfortably (|prod| < 2^28, |bias<<9| < 2^20),
+    // but we saturate defensively, like the RTL adder would wrap-protect.
+    let sum = Q10_18.saturate(prod + (beta_q29 << 9));
+    debug_assert!(prod_fmt.frac_bits == 18);
+    // Truncate + saturate to Q2.9.
+    resize(Q10_18, sum, Q2_9)
+}
+
+/// A binary weight, the paper's w ∈ {−1, +1} remapped to one bit
+/// (Eq. 5: −1 ↦ 0, +1 ↦ 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinWeight {
+    /// w = −1 (stored as bit 0).
+    Minus,
+    /// w = +1 (stored as bit 1).
+    Plus,
+}
+
+impl BinWeight {
+    /// Decode from the stored bit.
+    pub const fn from_bit(bit: bool) -> Self {
+        if bit {
+            BinWeight::Plus
+        } else {
+            BinWeight::Minus
+        }
+    }
+
+    /// The stored bit (Eq. 5).
+    pub const fn bit(self) -> bool {
+        matches!(self, BinWeight::Plus)
+    }
+
+    /// The weight value as an integer (−1 or +1).
+    pub const fn value(self) -> i64 {
+        match self {
+            BinWeight::Minus => -1,
+            BinWeight::Plus => 1,
+        }
+    }
+
+    /// The SoP "multiplier": a two's-complement-and-multiplex unit —
+    /// passes `x` for +1, negates it for −1. No multiplier involved,
+    /// which is the core trick of the paper.
+    pub const fn apply(self, x: i64) -> i64 {
+        match self {
+            BinWeight::Minus => -x,
+            BinWeight::Plus => x,
+        }
+    }
+}
+
+/// Deterministic BinaryConnect binarization (paper §II-A):
+/// `w_b = +1 if w_fp ≥ 0 else −1`.
+///
+/// (The paper's printed formula has the cases swapped — an obvious typo;
+/// BinaryConnect [22] defines sign binarization as implemented here.)
+pub fn binarize_det(w_fp: f64) -> BinWeight {
+    if w_fp >= 0.0 {
+        BinWeight::Plus
+    } else {
+        BinWeight::Minus
+    }
+}
+
+/// Stochastic BinaryConnect binarization: P(w=+1) = σ(w_fp) with the "hard
+/// sigmoid" σ(x) = clip((x+1)/2, 0, 1). `u` must be uniform in [0, 1).
+pub fn binarize_sto(w_fp: f64, u: f64) -> BinWeight {
+    let sigma = ((w_fp + 1.0) / 2.0).clamp(0.0, 1.0);
+    if u < sigma {
+        BinWeight::Plus
+    } else {
+        BinWeight::Minus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q29_range() {
+        assert_eq!(Q2_9.total_bits(), 12);
+        assert_eq!(Q2_9.max_raw(), 2047);
+        assert_eq!(Q2_9.min_raw(), -2048);
+        assert!((Q2_9.to_f64(Q2_9.max_raw()) - 3.998_046_875).abs() < 1e-12);
+        assert_eq!(Q2_9.to_f64(Q2_9.min_raw()), -4.0);
+    }
+
+    #[test]
+    fn q79_and_q1018_widths() {
+        assert_eq!(Q7_9.total_bits(), 17);
+        assert_eq!(Q10_18.total_bits(), 29);
+        // Q7.9 × Q2.9 must produce exactly Q10.18 per the paper.
+        let (fmt, _) = mul(Q7_9, 1, Q2_9, 1);
+        assert_eq!(fmt, Q10_18);
+    }
+
+    #[test]
+    fn saturation_clamps_both_sides() {
+        assert_eq!(Q2_9.saturate(5000), 2047);
+        assert_eq!(Q2_9.saturate(-5000), -2048);
+        assert_eq!(Q2_9.saturate(123), 123);
+    }
+
+    #[test]
+    fn from_f64_rounds_and_saturates() {
+        assert_eq!(Q2_9.from_f64(1.0), 512);
+        assert_eq!(Q2_9.from_f64(-1.0), -512);
+        assert_eq!(Q2_9.from_f64(100.0), 2047);
+        assert_eq!(Q2_9.from_f64(-100.0), -2048);
+        // round-to-nearest-even at the 0.5 LSB boundary
+        assert_eq!(Q2_9.from_f64(1.5 / 512.0), 2);
+        assert_eq!(Q2_9.from_f64(2.5 / 512.0), 2);
+    }
+
+    #[test]
+    fn resize_truncates_toward_neg_inf() {
+        // +2.75 LSB(Q2.9) expressed in Q10.18 → truncates to +2 LSB
+        let raw_1018 = (2 << 9) + 384; // 2.75 * 2^9 ulp at .18
+        assert_eq!(resize(Q10_18, raw_1018, Q2_9), 2);
+        // −2.75 → −3 (arithmetic shift floors)
+        assert_eq!(resize(Q10_18, -raw_1018, Q2_9), -3);
+    }
+
+    #[test]
+    fn scale_bias_identity() {
+        // α = 1.0 (raw 512), β = 0: acc Q7.9 value should pass through
+        // unchanged when in Q2.9 range.
+        for acc in [-1024i64, -3, 0, 5, 700, 2047] {
+            assert_eq!(scale_bias(acc, 512, 0), acc);
+        }
+        // Out-of-range accumulator saturates to Q2.9.
+        assert_eq!(scale_bias(40_000, 512, 0), 2047);
+        assert_eq!(scale_bias(-40_000, 512, 0), -2048);
+    }
+
+    #[test]
+    fn scale_bias_matches_reference_math() {
+        // acc = 1.5 (raw 768), α = 0.5 (raw 256), β = −0.25 (raw −128)
+        // → 1.5·0.5 − 0.25 = 0.5 → raw 256.
+        assert_eq!(scale_bias(768, 256, -128), 256);
+    }
+
+    #[test]
+    fn binweight_mapping() {
+        assert_eq!(BinWeight::from_bit(true).value(), 1);
+        assert_eq!(BinWeight::from_bit(false).value(), -1);
+        assert_eq!(BinWeight::Plus.apply(-7), -7);
+        assert_eq!(BinWeight::Minus.apply(-7), 7);
+        assert!(binarize_det(0.0).bit());
+        assert!(!binarize_det(-1e-9).bit());
+    }
+
+    #[test]
+    fn stochastic_binarization_is_hard_sigmoid() {
+        // w = 1 → σ = 1 → always +1; w = −1 → σ = 0 → always −1.
+        for u in [0.0, 0.3, 0.999] {
+            assert!(binarize_sto(1.0, u).bit());
+            assert!(!binarize_sto(-1.0, u).bit());
+        }
+        // w = 0 → σ = 0.5.
+        assert!(binarize_sto(0.0, 0.49).bit());
+        assert!(!binarize_sto(0.0, 0.51).bit());
+    }
+}

@@ -1,0 +1,165 @@
+//! The fixed-point Q2.9 baseline architecture of Table I: identical
+//! dataflow, but 12-bit weights, 12×12-bit multipliers in the SoP units
+//! and an SRAM image memory (which floors the supply at 0.8 V).
+//!
+//! The baseline shares the binary chip's schedule, so its cycle counts
+//! differ only in the filter-load phase (12× the weight bits). Its
+//! datapath semantics: Q2.9 × Q2.9 products (Q5.18, 24-bit) are summed in
+//! a full-precision adder tree, truncated to Q7.9 at the tree root, then
+//! accumulated in the saturating ChannelSummers and scale-biased exactly
+//! like the binary design.
+
+use crate::fixedpoint::{resize, sat_add, scale_bias, QFormat, Q7_9};
+use crate::workload::{Image, ScaleBias};
+
+/// Q5.18 adder-tree root format (Q2.9 × Q2.9 products, 24 bit).
+pub const Q5_18: QFormat = QFormat { int_bits: 5, frac_bits: 18 };
+
+/// A fixed-point kernel set: 12-bit Q2.9 weights.
+#[derive(Debug, Clone)]
+pub struct Q29Kernels {
+    /// Output channels.
+    pub n_out: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Kernel size.
+    pub k: usize,
+    /// Raw Q2.9 weights, layout `[(o·n_in + i)·k² + dy·k + dx]`.
+    pub weights: Vec<i64>,
+}
+
+impl Q29Kernels {
+    /// Random kernel set with weights in (−1, 1).
+    pub fn random(gen: &mut crate::testkit::Gen, n_out: usize, n_in: usize, k: usize) -> Self {
+        let weights =
+            (0..n_out * n_in * k * k).map(|_| gen.range_i64(-511, 511)).collect();
+        Q29Kernels { n_out, n_in, k, weights }
+    }
+
+    /// Binarize to ±1 (raw ±512 is NOT used — binarization maps to exact
+    /// ±1 weights in the binary datapath; this helper returns the sign
+    /// pattern for baseline-vs-binary experiments).
+    pub fn signs(&self) -> crate::workload::BinaryKernels {
+        crate::workload::BinaryKernels {
+            n_out: self.n_out,
+            n_in: self.n_in,
+            k: self.k,
+            bits: self.weights.iter().map(|&w| w >= 0).collect(),
+        }
+    }
+
+    /// Raw weight accessor.
+    #[inline]
+    pub fn weight(&self, o: usize, i: usize, dy: usize, dx: usize) -> i64 {
+        self.weights[((o * self.n_in + i) * self.k + dy) * self.k + dx]
+    }
+
+    /// Storage bits: 12 per weight — the paper's 12× filter-bank cost.
+    pub fn storage_bits(&self) -> usize {
+        self.weights.len() * 12
+    }
+}
+
+/// Bit-true functional model of the baseline's convolution (zero-padded or
+/// valid), mirroring `workload::reference_conv` with multipliers.
+pub fn q29_conv(img: &Image, kernels: &Q29Kernels, sb: &ScaleBias, zero_pad: bool) -> Image {
+    assert_eq!(img.c, kernels.n_in);
+    let k = kernels.k;
+    let (out_h, out_w) = if zero_pad { (img.h, img.w) } else { (img.h - k + 1, img.w - k + 1) };
+    let half = (k - 1) / 2;
+    let mut out = Image::zeros(kernels.n_out, out_h, out_w);
+    for o in 0..kernels.n_out {
+        for y in 0..out_h {
+            for x in 0..out_w {
+                let mut acc: i64 = 0;
+                for i in 0..img.c {
+                    // Adder tree over Q5.18 products, truncated to Q7.9.
+                    let mut tree: i64 = 0;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let (yy, xx) = if zero_pad {
+                                (
+                                    y as isize + dy as isize - half as isize,
+                                    x as isize + dx as isize - half as isize,
+                                )
+                            } else {
+                                ((y + dy) as isize, (x + dx) as isize)
+                            };
+                            let px = img.at_padded(i, yy, xx);
+                            tree += px * kernels.weight(o, i, dy, dx); // Q5.18
+                        }
+                    }
+                    acc = sat_add(Q7_9, acc, resize(Q5_18, tree, Q7_9));
+                }
+                *out.at_mut(o, y, x) = scale_bias(acc, sb.alpha[o], sb.beta[o]);
+            }
+        }
+    }
+    out
+}
+
+/// Cycle model of the baseline: identical to the binary schedule except
+/// the filter load streams 12-bit weights (one per cycle on the 12-bit
+/// bus).
+pub fn q29_filter_load_cycles(n_out: usize, n_in: usize, k: usize) -> u64 {
+    (n_out * n_in * k * k) as u64 // 12 bits each over a 12-bit bus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::random_image;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // A 1×1 kernel with weight 1.0 (raw 512): Q5.18 product resized to
+        // Q7.9 reproduces the pixel; identity scale passes it out.
+        let mut img = Image::zeros(1, 2, 2);
+        *img.at_mut(0, 0, 0) = 700;
+        *img.at_mut(0, 1, 1) = -301;
+        let kernels = Q29Kernels { n_out: 1, n_in: 1, k: 1, weights: vec![512] };
+        let out = q29_conv(&img, &kernels, &ScaleBias::identity(1), true);
+        assert_eq!(out.at(0, 0, 0), 700);
+        assert_eq!(out.at(0, 1, 1), -301);
+    }
+
+    #[test]
+    fn truncation_is_applied_at_tree_root() {
+        // Weight 0.5 (raw 256) on pixel raw 3: product 768 in Q5.18 =
+        // 1.5 LSB(Q7.9) → truncates to 1.
+        let mut img = Image::zeros(1, 1, 1);
+        *img.at_mut(0, 0, 0) = 3;
+        let kernels = Q29Kernels { n_out: 1, n_in: 1, k: 1, weights: vec![256] };
+        let out = q29_conv(&img, &kernels, &ScaleBias::identity(1), true);
+        assert_eq!(out.at(0, 0, 0), 1);
+    }
+
+    #[test]
+    fn binarized_baseline_matches_binary_reference() {
+        // Binarizing the Q2.9 weights and running the binary reference
+        // must equal the baseline run with weights forced to ±1.0.
+        let mut g = Gen::new(42);
+        let img = random_image(&mut g, 2, 6, 6, 0.02);
+        let q = Q29Kernels::random(&mut g, 3, 2, 3);
+        let bin = q.signs();
+        let pm1 = Q29Kernels {
+            n_out: q.n_out,
+            n_in: q.n_in,
+            k: q.k,
+            weights: q.weights.iter().map(|&w| if w >= 0 { 512 } else { -512 }).collect(),
+        };
+        let sb = ScaleBias::identity(3);
+        let a = q29_conv(&img, &pm1, &sb, true);
+        let b = crate::workload::reference_conv(&img, &bin, &sb, true);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weight_storage_is_12x_binary() {
+        let mut g = Gen::new(1);
+        let q = Q29Kernels::random(&mut g, 8, 8, 7);
+        assert_eq!(q.storage_bits(), 12 * q.signs().storage_bits());
+        assert_eq!(q29_filter_load_cycles(8, 8, 7), 8 * 8 * 49);
+    }
+}

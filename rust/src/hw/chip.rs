@@ -1,0 +1,193 @@
+//! The top-level chip: wires the units of Fig. 3 and runs block jobs.
+
+use super::config::{BlockJob, ChipConfig};
+use super::controller;
+use super::filter_bank::FilterBank;
+use super::image_bank::ImageBank;
+use super::image_memory::ImageMemory;
+use super::io::OutputSink;
+use super::sop::SopArray;
+use super::stats::ChipStats;
+use crate::workload::Image;
+
+/// Result of one block execution.
+#[derive(Debug, Clone)]
+pub struct BlockResult {
+    /// Output tile (`n_out × out_h × out_w`, raw Q2.9).
+    pub output: Image,
+    /// Streamed output events in hardware order.
+    pub sink: OutputSink,
+    /// Activity statistics of the block.
+    pub stats: ChipStats,
+}
+
+/// A simulated YodaNN chip instance.
+pub struct Chip {
+    /// Static configuration.
+    pub cfg: ChipConfig,
+    /// Binary-weight filter bank.
+    pub filter_bank: FilterBank,
+    /// Multi-banked SCM image memory.
+    pub memory: ImageMemory,
+    /// Sliding-window image bank.
+    pub image_bank: ImageBank,
+    /// SoP array activity.
+    pub sop: SopArray,
+}
+
+impl Chip {
+    /// Build a chip from a configuration.
+    pub fn new(cfg: ChipConfig) -> Chip {
+        Chip {
+            cfg,
+            filter_bank: FilterBank::new(),
+            memory: ImageMemory::new(cfg.mem_columns, cfg.image_mem_rows, cfg.scm_bank_rows),
+            image_bank: ImageBank::new(cfg.n_ch, 7),
+            sop: SopArray::new(),
+        }
+    }
+
+    /// The taped-out 32×32 multi-kernel configuration.
+    pub fn yodann() -> Chip {
+        Chip::new(ChipConfig::yodann())
+    }
+
+    /// Execute one block job (Algorithm 1's "YodaNN chip block").
+    pub fn run_block(&mut self, job: &BlockJob) -> BlockResult {
+        let (output, sink, stats) = controller::execute(self, job);
+        BlockResult { output, sink, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::config::ChipConfig;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, reference_conv, BinaryKernels, ScaleBias};
+
+    fn run(
+        cfg: ChipConfig,
+        k: usize,
+        n_in: usize,
+        n_out: usize,
+        h: usize,
+        w: usize,
+        zero_pad: bool,
+        seed: u64,
+    ) -> (BlockResult, Image) {
+        let mut g = Gen::new(seed);
+        let image = random_image(&mut g, n_in, h, w, 0.03);
+        let kernels = BinaryKernels::random(&mut g, n_out, n_in, k);
+        let sb = ScaleBias::random(&mut g, n_out);
+        let job = BlockJob { k, zero_pad, image: image.clone(), kernels: kernels.clone(), scale_bias: sb.clone() };
+        let expect = reference_conv(&image, &kernels, &sb, zero_pad);
+        let mut chip = Chip::new(cfg);
+        (chip.run_block(&job), expect)
+    }
+
+    #[test]
+    fn matches_reference_7x7_zero_padded() {
+        let (res, expect) = run(ChipConfig::tiny(4), 7, 3, 4, 12, 11, true, 100);
+        assert_eq!(res.output, expect);
+    }
+
+    #[test]
+    fn matches_reference_7x7_non_padded() {
+        let (res, expect) = run(ChipConfig::tiny(4), 7, 2, 3, 13, 12, false, 101);
+        assert_eq!(res.output, expect);
+    }
+
+    #[test]
+    fn matches_reference_all_kernel_sizes() {
+        for k in 1..=7 {
+            let (res, expect) = run(ChipConfig::tiny(4), k, 3, 4, 10, 9, true, 200 + k as u64);
+            assert_eq!(res.output, expect, "k={k} zero-padded");
+            if k > 1 {
+                let (res, expect) =
+                    run(ChipConfig::tiny(4), k, 2, 2, 10, 9, false, 300 + k as u64);
+                assert_eq!(res.output, expect, "k={k} non-padded");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_mode_doubles_output_channels() {
+        // 3×3 dual mode: n_out up to 2·n_ch.
+        let (res, expect) = run(ChipConfig::tiny(4), 3, 4, 8, 8, 8, true, 400);
+        assert_eq!(res.output, expect);
+    }
+
+    #[test]
+    fn full_chip_small_block_matches_reference() {
+        let (res, expect) = run(ChipConfig::yodann(), 3, 32, 64, 16, 8, true, 500);
+        assert_eq!(res.output, expect);
+        // Gating invariant: ≤ 7 banks active per cycle (§III-C).
+        assert!(res.stats.scm_max_banks_per_cycle <= 7);
+    }
+
+    #[test]
+    fn cycle_counts_match_analytic_model() {
+        // Fully-utilized 7×7 block: compute cycles = out_pixels · n_in,
+        // no idle.
+        let cfg = ChipConfig::tiny(4);
+        let (res, _) = run(cfg, 7, 4, 4, 12, 10, true, 600);
+        let s = &res.stats;
+        assert_eq!(s.cycles.compute, (12 * 10 * 4) as u64);
+        assert_eq!(s.cycles.idle, 0);
+        // Filter load: n_out·n_in·k² bits / 12 per cycle.
+        assert_eq!(s.cycles.filter_load, ((4 * 4 * 49) as u64).div_ceil(12));
+        // Preload: m columns × h × n_in + m live pixels × n_in.
+        let m = 3;
+        assert_eq!(s.cycles.preload, (m * 12 * 4 + m * 4) as u64);
+    }
+
+    #[test]
+    fn channel_idling_cycles_match_eq10() {
+        // n_in = 1, n_out = 4, single stream (7×7): each pixel takes
+        // max(1, 4) cycles ⇒ 3 idle cycles per pixel.
+        let (res, expect) = run(ChipConfig::tiny(4), 7, 1, 4, 9, 9, true, 700);
+        assert_eq!(res.output, expect);
+        let s = &res.stats;
+        assert_eq!(s.cycles.idle, (9 * 9 * 3) as u64);
+        // η_chIdle = useful compute fraction = 1/4.
+        let eta = s.cycles.compute as f64 / (s.cycles.compute + s.cycles.idle) as f64;
+        assert!((eta - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn input_stream_is_one_pixel_per_cycle() {
+        // Aggregate input rate never exceeds one word per cycle: words ≤
+        // filter-load + preload + compute cycles.
+        let (res, _) = run(ChipConfig::tiny(4), 5, 3, 4, 14, 13, true, 800);
+        let s = &res.stats;
+        assert!(
+            s.input_words <= s.cycles.filter_load + s.cycles.preload + s.cycles.compute,
+            "{} vs {}",
+            s.input_words,
+            s.cycles.filter_load + s.cycles.preload + s.cycles.compute
+        );
+    }
+
+    #[test]
+    fn every_pixel_written_once() {
+        // The sliding-window schedule writes each image pixel to SCM
+        // exactly once (Fig. 5): writes = n_in·h·w when all columns fit.
+        let (res, _) = run(ChipConfig::tiny(4), 7, 2, 2, 10, 10, true, 900);
+        assert_eq!(res.stats.scm_writes, (2 * 10 * 10) as u64);
+    }
+
+    #[test]
+    fn streamed_order_is_interleaved_by_channel() {
+        let (res, _) = run(ChipConfig::tiny(2), 3, 2, 4, 4, 4, true, 1000);
+        // For each (x, y), channels stream in order before the next pixel.
+        let px = &res.sink.pixels;
+        for chunk in px.chunks(4) {
+            assert_eq!(chunk.len(), 4);
+            for (o, p) in chunk.iter().enumerate() {
+                assert_eq!(p.channel, o);
+                assert_eq!((p.y, p.x), (chunk[0].y, chunk[0].x));
+            }
+        }
+    }
+}

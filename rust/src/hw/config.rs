@@ -1,0 +1,244 @@
+//! Chip configuration and per-block job descriptors.
+
+use crate::model::KernelMode;
+use crate::workload::{BinaryKernels, Image, ScaleBias};
+
+/// Static configuration of a simulated chip instance.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipConfig {
+    /// Channel parallelism: the chip computes `n_ch × n_ch` channels
+    /// (×2 output channels in dual-filter modes).
+    pub n_ch: usize,
+    /// Whether the dual 5×5 / 3×3 modes are implemented (§III-E).
+    pub multi_kernel: bool,
+    /// Total image-memory rows (1024 for the taped-out chip): stores
+    /// `image_mem_rows / n_ch` image rows per input channel.
+    pub image_mem_rows: usize,
+    /// Column slots in the image memory. The stripe is `b_k = 7` columns
+    /// wide (§III): per cycle 6 column slots are *read* and the live
+    /// streaming column's slot is *written* (Fig. 7) — so 7 slots must be
+    /// resident. (The paper itself is off by one column between §III's
+    /// "10.8 kB" stripe and the floorplan's "9.2 KiB" 6×8 bank matrix; we
+    /// model the 7 slots residency requires and note the discrepancy in
+    /// EXPERIMENTS.md.)
+    pub mem_columns: usize,
+    /// SCM bank rows (128 ⇒ 8 row-groups × 6 columns = 48 banks).
+    pub scm_bank_rows: usize,
+}
+
+impl ChipConfig {
+    /// The taped-out YodaNN configuration (32×32 channels, multi-kernel).
+    pub fn yodann() -> ChipConfig {
+        ChipConfig {
+            n_ch: 32,
+            multi_kernel: true,
+            image_mem_rows: 1024,
+            mem_columns: 7,
+            scm_bank_rows: 128,
+        }
+    }
+
+    /// The 8×8-channel fixed-7×7 variant of Table I.
+    pub fn bin8() -> ChipConfig {
+        ChipConfig {
+            n_ch: 8,
+            multi_kernel: false,
+            image_mem_rows: 1024,
+            mem_columns: 7,
+            scm_bank_rows: 128,
+        }
+    }
+
+    /// A scaled-down configuration for fast exhaustive tests (identical
+    /// control logic, smaller arrays).
+    pub fn tiny(n_ch: usize) -> ChipConfig {
+        ChipConfig {
+            n_ch,
+            multi_kernel: true,
+            image_mem_rows: 64 * n_ch.max(1),
+            mem_columns: 7,
+            scm_bank_rows: 16,
+        }
+    }
+
+    /// Maximum image-tile height per input channel (the `h_max` of Eq. 9).
+    pub fn h_max(&self) -> usize {
+        self.image_mem_rows / self.n_ch
+    }
+
+    /// Number of SCM banks (columns × row-groups).
+    pub fn scm_banks(&self) -> usize {
+        self.mem_columns * self.image_mem_rows.div_ceil(self.scm_bank_rows)
+    }
+}
+
+/// One unit of chip work: a convolution of up to `n_ch` input channels
+/// into up to `n_ch` (or `2·n_ch` in dual modes) output channels over one
+/// image tile. Produced by the coordinator's block decomposition.
+#[derive(Debug, Clone)]
+pub struct BlockJob {
+    /// Kernel size (1..=7).
+    pub k: usize,
+    /// Zero-pad the borders (halo synthesized on-chip).
+    pub zero_pad: bool,
+    /// Input image tile (c = n_in ≤ n_ch, h ≤ h_max).
+    pub image: Image,
+    /// Binary kernels: `n_out × n_in`.
+    pub kernels: BinaryKernels,
+    /// Per-output-channel scale/bias.
+    pub scale_bias: ScaleBias,
+}
+
+impl BlockJob {
+    /// Hardware slot mode for this job on `cfg`.
+    pub fn mode(&self, cfg: &ChipConfig) -> KernelMode {
+        if cfg.multi_kernel {
+            KernelMode::for_kernel(self.k)
+        } else {
+            KernelMode::Slot7
+        }
+    }
+
+    /// Output streams used (1 or 2).
+    pub fn streams(&self, cfg: &ChipConfig) -> usize {
+        if cfg.multi_kernel {
+            self.mode(cfg).filters_per_sop()
+        } else {
+            1
+        }
+    }
+
+    /// Output height of the tile.
+    pub fn out_h(&self) -> usize {
+        if self.zero_pad {
+            self.image.h
+        } else {
+            self.image.h - self.k + 1
+        }
+    }
+
+    /// Output width of the tile.
+    pub fn out_w(&self) -> usize {
+        if self.zero_pad {
+            self.image.w
+        } else {
+            self.image.w - self.k + 1
+        }
+    }
+
+    /// Window offset: how far the window extends left/above the output
+    /// pixel (the zero-padding halo). Asymmetric for even kernels.
+    pub fn offset(&self) -> usize {
+        if self.zero_pad {
+            (self.k - 1) / 2
+        } else {
+            0
+        }
+    }
+
+    /// Columns preloaded before the first valid output — the paper's `m`
+    /// (Algorithm 1 line 6): `⌊(h_k−1)/2⌋` zero-padded, `h_k − 1` not.
+    /// Generalized as `k − 1 − offset` so even kernels (asymmetric halo)
+    /// preload the correct count too.
+    pub fn preload_m(&self) -> usize {
+        self.k - 1 - self.offset()
+    }
+
+    /// Validate the job against a chip configuration; returns a
+    /// description of the violation if any.
+    pub fn validate(&self, cfg: &ChipConfig) -> Result<(), String> {
+        if self.k == 0 || self.k > 7 {
+            return Err(format!("kernel size {} unsupported (1..=7)", self.k));
+        }
+        if self.kernels.k != self.k {
+            return Err("kernel descriptor size mismatch".into());
+        }
+        if self.image.c != self.kernels.n_in {
+            return Err(format!(
+                "image channels {} != kernel n_in {}",
+                self.image.c, self.kernels.n_in
+            ));
+        }
+        if self.image.c > cfg.n_ch {
+            return Err(format!("n_in {} exceeds n_ch {}", self.image.c, cfg.n_ch));
+        }
+        let max_out = cfg.n_ch * self.streams(cfg);
+        if self.kernels.n_out > max_out {
+            return Err(format!("n_out {} exceeds {} for this mode", self.kernels.n_out, max_out));
+        }
+        if self.scale_bias.alpha.len() != self.kernels.n_out
+            || self.scale_bias.beta.len() != self.kernels.n_out
+        {
+            return Err("scale/bias arity mismatch".into());
+        }
+        if self.image.h > cfg.h_max() {
+            return Err(format!("tile height {} exceeds h_max {}", self.image.h, cfg.h_max()));
+        }
+        if !self.zero_pad && (self.image.h < self.k || self.image.w < self.k) {
+            return Err("image smaller than kernel without zero-padding".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, BinaryKernels, ScaleBias};
+
+    fn job(k: usize, c: usize, n_out: usize, h: usize, w: usize) -> BlockJob {
+        let mut g = Gen::new(1);
+        BlockJob {
+            k,
+            zero_pad: true,
+            image: random_image(&mut g, c, h, w, 0.02),
+            kernels: BinaryKernels::random(&mut g, n_out, c, k),
+            scale_bias: ScaleBias::identity(n_out),
+        }
+    }
+
+    #[test]
+    fn yodann_geometry() {
+        let cfg = ChipConfig::yodann();
+        assert_eq!(cfg.h_max(), 32);
+        assert_eq!(cfg.scm_banks(), 56); // 7 slots x 8 row-groups (6 read + 1 written per cycle)
+    }
+
+    #[test]
+    fn validation_catches_violations() {
+        let cfg = ChipConfig::yodann();
+        assert!(job(3, 32, 64, 32, 16).validate(&cfg).is_ok());
+        assert!(job(7, 32, 32, 32, 16).validate(&cfg).is_ok());
+        // 7×7 mode only streams 32 output channels.
+        assert!(job(7, 32, 64, 32, 16).validate(&cfg).is_err());
+        // Too many input channels.
+        assert!(job(3, 33, 32, 32, 16).validate(&cfg).is_err());
+        // Tile too tall.
+        assert!(job(3, 32, 32, 33, 16).validate(&cfg).is_err());
+        // Non-multi chip cannot use dual mode.
+        let cfg8 = ChipConfig::bin8();
+        assert!(job(3, 8, 16, 128, 16).validate(&cfg8).is_err());
+        assert!(job(3, 8, 8, 128, 16).validate(&cfg8).is_ok());
+    }
+
+    #[test]
+    fn preload_m_matches_algorithm1() {
+        let mut j = job(7, 4, 4, 16, 16);
+        assert_eq!(j.preload_m(), 3); // zero-padded: ⌊(h_k−1)/2⌋
+        j.zero_pad = false;
+        assert_eq!(j.preload_m(), 6); // not padded: h_k−1
+        let j1 = job(1, 4, 4, 16, 16);
+        assert_eq!(j1.preload_m(), 0); // 1×1 needs no preload
+    }
+
+    #[test]
+    fn streams_follow_mode() {
+        let cfg = ChipConfig::yodann();
+        assert_eq!(job(7, 4, 4, 16, 16).streams(&cfg), 1);
+        assert_eq!(job(5, 4, 4, 16, 16).streams(&cfg), 2);
+        assert_eq!(job(3, 4, 4, 16, 16).streams(&cfg), 2);
+        let cfg8 = ChipConfig::bin8();
+        assert_eq!(job(3, 4, 4, 16, 16).streams(&cfg8), 1);
+    }
+}

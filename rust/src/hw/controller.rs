@@ -1,0 +1,217 @@
+//! The controller FSM — the paper's Algorithm 1 "YodaNN chip block"
+//! (lines 4–33): filter load, column preload, then the column-major main
+//! loop with per-cycle input-channel interleaving, weight rotation on
+//! column switches, and interleaved scale-bias streaming.
+//!
+//! Schedule recap (derivation in `hw::mod` docs and DESIGN.md):
+//!
+//! * window slot `p` at output column `x` holds logical image column
+//!   `x − half + ((p − x) mod k)` (zero-padded layers; non-padded layers
+//!   drop the `−half`), and the filter bank's rotation compensates;
+//! * the live (streamed) column is the window's logical rightmost; its
+//!   pixel for the current fetch row arrives just-in-time and is written
+//!   to the slot the oldest column vacated (Fig. 5). Each column's pixels
+//!   are therefore written exactly once;
+//! * per-column window refills (the first k−1 rows) overlap the previous
+//!   column's output drain, so they count bank events but no cycles —
+//!   except for the very first column, whose live-pixel deliveries are
+//!   the paper's "load m pixels of the (m+1)th column" preload cycles;
+//! * each output pixel takes `max(n_in, ⌈n_out/streams⌉)` cycles: `n_in`
+//!   compute cycles (one channel each) plus output-drain idle cycles when
+//!   the block computes more output channels than it can stream — this is
+//!   exactly what Eq. 10's η_chIdle measures.
+
+use super::chip::Chip;
+use super::config::BlockJob;
+use super::io::OutputSink;
+use super::scale_bias::ScaleBiasUnit;
+use super::sop::SopArray;
+use super::stats::ChipStats;
+use super::summer::ChannelSummers;
+use crate::workload::Image;
+
+/// Geometry helper shared by the fetch logic.
+struct Geometry {
+    k: usize,
+    /// Column/row offset of the window (half for zero-padded layers).
+    offset: isize,
+    w: usize,
+    h: usize,
+}
+
+impl Geometry {
+    /// Logical image column held by physical window slot `p` at output
+    /// column `x`, and whether that slot is the live streaming column.
+    fn slot_column(&self, x: usize, p: usize) -> (isize, bool) {
+        let k = self.k;
+        let j = (p + k - (x % k)) % k; // logical window offset 0..k−1
+        let lcol = x as isize - self.offset + j as isize;
+        (lcol, j == k - 1)
+    }
+}
+
+/// Execute one block job on `chip`, returning the output tile, the output
+/// sink (streamed order) and the block's activity statistics.
+pub fn execute(chip: &mut Chip, job: &BlockJob) -> (Image, OutputSink, ChipStats) {
+    job.validate(&chip.cfg).expect("invalid block job");
+    let k = job.k;
+    let n_in = job.image.c;
+    let n_out = job.kernels.n_out;
+    let h = job.image.h;
+    let (out_h, out_w) = (job.out_h(), job.out_w());
+    let streams = job.streams(&chip.cfg);
+    let drain_cycles = n_out.div_ceil(streams) as u64;
+    let geo = Geometry { k, offset: job.offset() as isize, w: job.image.w, h };
+    let n_sop_slots = chip.cfg.n_ch * super::sop::OPS_PER_SOP;
+
+    // Per-block unit state: fresh windows, fresh counters. (Cross-block
+    // aggregation is the coordinator's job via ChipStats::merge.)
+    chip.sop = SopArray::new();
+    chip.image_bank = super::image_bank::ImageBank::new(chip.cfg.n_ch, k);
+    chip.memory.reset();
+
+    let mut stats = ChipStats::default();
+    let mut summers = ChannelSummers::new(n_out);
+    let mut sb = ScaleBiasUnit::new(job.scale_bias.clone());
+    let mut sink = OutputSink::new();
+    let mut out = Image::zeros(n_out, out_h, out_w);
+    let mut contributions = vec![0i64; n_out];
+
+    // ---- Phase 1: filter load (Algorithm 1 line 5) -----------------------
+    let fb_rot0 = chip.filter_bank.rotate_events;
+    let fb_bits0 = chip.filter_bank.bits_loaded;
+    stats.cycles.filter_load = chip.filter_bank.load(job.kernels.clone());
+    stats.input_words += stats.cycles.filter_load;
+
+    // ---- Phase 2: preload m columns (lines 6–7) --------------------------
+    let m = job.preload_m();
+    for col in 0..m {
+        for y in 0..h {
+            for c in 0..n_in {
+                chip.memory.write(col, c * h + y, job.image.at(c, y, col));
+                chip.memory.end_cycle();
+                stats.cycles.preload += 1;
+                stats.input_words += 1;
+            }
+        }
+    }
+
+    // ---- Main loop (lines 9–33) ------------------------------------------
+    for x in 0..out_w {
+        // Column switch: rotate the filter-bank columns instead of moving
+        // image data (Fig. 5 / Eq. 4); reset the vertical window.
+        if x > 0 {
+            chip.filter_bank.rotate();
+        }
+        debug_assert_eq!(chip.filter_bank.shift(), x % k);
+        chip.image_bank.reset();
+
+        // Column refill: fetch the window's first k−1 rows. Column 0's
+        // real-row fetches are counted preload cycles; later columns
+        // overlap the previous column's drain (η_border = 1 when
+        // zero-padded), so only the bank events are counted.
+        for wrow in 0..(k - 1) {
+            let img_row = wrow as isize - geo.offset;
+            for c in 0..n_in {
+                fetch_row(chip, &geo, job, &mut stats, x, img_row, c);
+                if x == 0 && img_row >= 0 {
+                    stats.cycles.preload += 1;
+                }
+            }
+        }
+
+        for y in 0..out_h {
+            // Steady-state: fetch the window's bottom row, one channel per
+            // cycle, and accumulate that channel's contribution.
+            let img_row = y as isize + (k - 1) as isize - geo.offset;
+            summers.clear();
+            for i in 0..n_in {
+                fetch_row(chip, &geo, job, &mut stats, x, img_row, i);
+                chip.sop.accumulate(
+                    &chip.image_bank,
+                    &chip.filter_bank,
+                    i,
+                    n_out,
+                    n_sop_slots,
+                    &mut contributions,
+                );
+                for (o, &contrib) in contributions.iter().enumerate() {
+                    summers.add(o, contrib);
+                }
+                stats.cycles.compute += 1;
+            }
+            // Output-drain idling (Eq. 10): the Scale-Bias unit streams
+            // ⌈n_out/streams⌉ pixels while the SoPs sit silenced.
+            let idle = drain_cycles.saturating_sub(n_in as u64);
+            stats.cycles.idle += idle;
+            // Interleaved scale-bias + stream-out (lines 27–33).
+            for o in 0..n_out {
+                let v = sb.apply(o, summers.value(o));
+                sink.emit(o, y, x, v);
+                *out.at_mut(o, y, x) = v;
+            }
+        }
+    }
+    // Tail flush: the last pixel's outputs stream with no overlapping
+    // compute.
+    stats.cycles.flush = drain_cycles;
+
+    // ---- Gather unit counters --------------------------------------------
+    stats.scm_reads = chip.memory.total_reads();
+    stats.scm_writes = chip.memory.total_writes();
+    stats.scm_max_banks_per_cycle = chip.memory.max_banks_per_cycle;
+    stats.sop_active_ops = chip.sop.active_ops;
+    stats.sop_silenced_ops = chip.sop.silenced_ops;
+    stats.fb_rotations = chip.filter_bank.rotate_events - fb_rot0;
+    stats.fb_bits_loaded = chip.filter_bank.bits_loaded - fb_bits0;
+    stats.bank_row_fetches = chip.image_bank.row_fetches;
+    stats.summer_adds = summers.adds;
+    stats.summer_saturations = summers.saturations;
+    stats.sb_ops = sb.ops;
+    stats.output_words = sink.words;
+    stats.useful_ops = 2 * (k * k) as u64 * (n_in * n_out) as u64 * (out_h * out_w) as u64;
+    (out, sink, stats)
+}
+
+/// Fetch one window row for channel `c` at output column `x` — one memory
+/// cycle: up to k−1 pixels from the stored SCM columns plus the live
+/// column's pixel delivered just-in-time from the input stream (the one
+/// bank write of Fig. 7). Rows/columns outside the image read the
+/// zero-padding halo muxes.
+fn fetch_row(
+    chip: &mut Chip,
+    geo: &Geometry,
+    job: &BlockJob,
+    stats: &mut ChipStats,
+    x: usize,
+    img_row: isize,
+    c: usize,
+) {
+    let k = geo.k;
+    let h = geo.h;
+    // Stack buffer: this runs once per simulated cycle — no allocation
+    // on the hot path (§Perf iteration 3).
+    let mut bottom = [0i64; 7];
+    let bottom = &mut bottom[..k];
+    for (p, slot) in bottom.iter_mut().enumerate() {
+        let (lcol, is_live) = geo.slot_column(x, p);
+        if lcol < 0 || lcol >= geo.w as isize || img_row < 0 || img_row >= h as isize {
+            *slot = 0; // zero-padding mux (§III-E)
+            continue;
+        }
+        let (col, row) = (lcol as usize, img_row as usize);
+        let px = job.image.at(c, row, col);
+        if is_live {
+            // Just-in-time delivery: write to the retired column's slot,
+            // forward combinationally to the image bank.
+            chip.memory.write(col, c * h + row, px);
+            stats.input_words += 1;
+            *slot = px;
+        } else {
+            *slot = chip.memory.read(col, c * h + row);
+            debug_assert_eq!(*slot, px, "SCM content diverged from source image");
+        }
+    }
+    chip.image_bank.push_row(c, bottom);
+    chip.memory.end_cycle();
+}

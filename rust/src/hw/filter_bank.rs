@@ -1,0 +1,210 @@
+//! The Filter Bank (§III): a shift-register array holding
+//! `n_ch × n_ch` (× 2 in dual modes) binary kernels of up to 7×7 bits,
+//! with **column-wise circular shift per kernel** so that the sliding
+//! window never moves image data (Fig. 5, Eqs. 2–4).
+//!
+//! Hardware performs a physical rotate of every kernel's columns; the
+//! simulator keeps a rotation offset and applies it on read — bit-identical
+//! behaviour, and the rotate events are still counted for the energy model.
+
+use crate::workload::BinaryKernels;
+
+/// Simulated filter bank.
+#[derive(Debug, Clone)]
+pub struct FilterBank {
+    /// Loaded kernels (already binary bits).
+    kernels: Option<BinaryKernels>,
+    /// Current circular column shift (0..k).
+    shift: usize,
+    /// Rotation-resolved ±1 weights in window coordinates, contiguous per
+    /// (o, i) kernel — the simulator's hot-path view. All `k` rotation
+    /// planes are precomputed at load time (plane r = the weights as seen
+    /// after r column switches); `rotate()` just selects a plane, so the
+    /// per-column cost is O(1) (§Perf iterations 1 & 5 in EXPERIMENTS.md).
+    resolved: Vec<i32>,
+    /// Elements per rotation plane (`n_out · n_in · k²`).
+    plane: usize,
+    /// Total rotate events (for the energy model).
+    pub rotate_events: u64,
+    /// Bits loaded so far (streaming load is 12 bits/cycle).
+    pub bits_loaded: u64,
+}
+
+impl FilterBank {
+    /// Empty bank.
+    pub fn new() -> FilterBank {
+        FilterBank {
+            kernels: None,
+            shift: 0,
+            resolved: Vec::new(),
+            plane: 0,
+            rotate_events: 0,
+            bits_loaded: 0,
+        }
+    }
+
+    fn rebuild_resolved(&mut self) {
+        let ks = self.kernels.as_ref().expect("rebuild before load");
+        let k = ks.k;
+        self.plane = ks.bits.len();
+        self.resolved.clear();
+        self.resolved.reserve(self.plane * k);
+        for shift in 0..k {
+            for o in 0..ks.n_out {
+                for i in 0..ks.n_in {
+                    for dy in 0..k {
+                        for p in 0..k {
+                            let logical_dx = (p + k - shift) % k;
+                            self
+                                .resolved
+                                .push(if ks.bit(o, i, dy, logical_dx) { 1 } else { -1 });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Load a full kernel set, returning the number of **cycles** the
+    /// 12-bit input stream needs to deliver it (1 bit per binary weight).
+    pub fn load(&mut self, kernels: BinaryKernels) -> u64 {
+        let bits = kernels.storage_bits() as u64;
+        self.bits_loaded += bits;
+        self.kernels = Some(kernels);
+        self.shift = 0;
+        self.rebuild_resolved();
+        bits.div_ceil(12)
+    }
+
+    /// Circular right-shift of all kernel columns (one column switch) —
+    /// O(1): selects the precomputed rotation plane.
+    pub fn rotate(&mut self) {
+        let k = self.kernels.as_ref().expect("rotate before load").k;
+        self.shift = (self.shift + 1) % k;
+        self.rotate_events += 1;
+    }
+
+    /// Reset the rotation (new tile / block).
+    pub fn reset_rotation(&mut self) {
+        self.shift = 0;
+    }
+
+    /// The rotation-resolved ±1 weights of kernel (o, i), length k², in
+    /// window coordinates (hot-path accessor).
+    #[inline]
+    pub fn resolved(&self, o: usize, i: usize) -> &[i32] {
+        let ks = self.kernels.as_ref().expect("resolved before load");
+        let kk = ks.k * ks.k;
+        let base = self.shift * self.plane + (o * ks.n_in + i) * kk;
+        &self.resolved[base..base + kk]
+    }
+
+    /// The current rotation plane plus the per-output stride (`n_in`),
+    /// for the SoP array's batched hot loop.
+    #[inline]
+    pub fn resolved_raw(&self) -> (&[i32], usize) {
+        let ks = self.kernels.as_ref().expect("resolved before load");
+        let base = self.shift * self.plane;
+        (&self.resolved[base..base + self.plane], ks.n_in)
+    }
+
+    /// Current rotation offset (test hook).
+    pub fn shift(&self) -> usize {
+        self.shift
+    }
+
+    /// Weight for output channel `o`, input channel `i` at kernel position
+    /// `(dy, dx)` **in window coordinates**: `dx` indexes the window's
+    /// physical column slot. After `s` column switches the new rightmost
+    /// image column sits in the slot the oldest vacated, so physical slot
+    /// `p` must read logical weight column `(p − s) mod k` — Eq. 3: after
+    /// one switch the slots read `[w13 w11 w12]` for k = 3.
+    #[inline]
+    pub fn weight(&self, o: usize, i: usize, dy: usize, dx: usize) -> i64 {
+        let ks = self.kernels.as_ref().expect("weight read before load");
+        let logical_dx = (dx + ks.k - self.shift) % ks.k;
+        ks.weight(o, i, dy, logical_dx)
+    }
+
+    /// Weight without rotation (logical kernel coordinates — used by the
+    /// functional cross-check).
+    #[inline]
+    pub fn weight_logical(&self, o: usize, i: usize, dy: usize, dx: usize) -> i64 {
+        self.kernels.as_ref().expect("weight read before load").weight(o, i, dy, dx)
+    }
+
+    /// Loaded kernel size.
+    pub fn k(&self) -> usize {
+        self.kernels.as_ref().map(|ks| ks.k).unwrap_or(0)
+    }
+}
+
+impl Default for FilterBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+
+    #[test]
+    fn load_cycle_count_is_bits_over_12() {
+        let mut fb = FilterBank::new();
+        // The taped-out chip: 32×32 kernels × 49 bits = 50176 bits
+        // → 4182 cycles on the 12-bit stream.
+        let cycles = fb.load(BinaryKernels::random(&mut Gen::new(1), 32, 32, 7));
+        assert_eq!(cycles, 50176_u64.div_ceil(12));
+    }
+
+    #[test]
+    fn rotation_wraps_and_counts() {
+        let mut fb = FilterBank::new();
+        fb.load(BinaryKernels::random(&mut Gen::new(2), 2, 2, 3));
+        assert_eq!(fb.shift(), 0);
+        for _ in 0..3 {
+            fb.rotate();
+        }
+        assert_eq!(fb.shift(), 0); // wrapped k=3
+        assert_eq!(fb.rotate_events, 3);
+    }
+
+    #[test]
+    fn rotated_read_matches_eq3_permutation() {
+        // Eq. 3 (k = 3): after one column switch the physical slots apply
+        // weight columns [w_3 w_1 w_2], i.e. slot p reads logical column
+        // (p − 1) mod 3.
+        let mut g = Gen::new(3);
+        let ks = BinaryKernels::random(&mut g, 1, 1, 3);
+        let mut fb = FilterBank::new();
+        fb.load(ks.clone());
+        fb.rotate();
+        for dy in 0..3 {
+            for dx in 0..3 {
+                assert_eq!(fb.weight(0, 0, dy, dx), ks.weight(0, 0, dy, (dx + 2) % 3));
+            }
+        }
+    }
+
+    #[test]
+    fn full_rotation_is_identity() {
+        let mut g = Gen::new(4);
+        let ks = BinaryKernels::random(&mut g, 2, 3, 5);
+        let mut fb = FilterBank::new();
+        fb.load(ks.clone());
+        for _ in 0..5 {
+            fb.rotate();
+        }
+        for o in 0..2 {
+            for i in 0..3 {
+                for dy in 0..5 {
+                    for dx in 0..5 {
+                        assert_eq!(fb.weight(o, i, dy, dx), ks.weight(o, i, dy, dx));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! The Image Bank (§III): a 7×7-pixel window cache per input channel
+//! (2.4 kB for 32 channels), fed one row per cycle. When processing moves
+//! one row down, the upper rows shift up and only the new bottom row is
+//! fetched (6 pixels from the SCM image memory + 1 from the live stream).
+//!
+//! Window columns are **physical slots**: a new image column replaces the
+//! retired one in place (Fig. 5), and the weight columns rotate to match
+//! (see [`super::filter_bank`]).
+
+/// Simulated image bank: `n_ch` windows of `k × k` raw Q2.9 pixels.
+#[derive(Debug, Clone)]
+pub struct ImageBank {
+    /// Kernel/window size.
+    k: usize,
+    /// Channels.
+    n_ch: usize,
+    /// Window storage `[c][dy][p]` flattened. Stored as i32 — pixels are
+    /// 12-bit Q2.9, so the SoP dot stays in 32-bit SIMD lanes (§Perf
+    /// iteration 4; an i16/pmaddwd variant measured slower and was
+    /// reverted, §Perf iteration 6).
+    window: Vec<i32>,
+    /// Rows fetched (energy model: one fetch = one row of ≤7 pixel moves).
+    pub row_fetches: u64,
+}
+
+impl ImageBank {
+    /// New bank for `n_ch` channels and window size `k`.
+    pub fn new(n_ch: usize, k: usize) -> ImageBank {
+        ImageBank { k, n_ch, window: vec![0; n_ch * k * k], row_fetches: 0 }
+    }
+
+    /// Reset all windows to zero (column switch / new block).
+    pub fn reset(&mut self) {
+        self.window.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Shift channel `c`'s window one row up and install `bottom` as the
+    /// new last row (`bottom[p]` per physical column slot).
+    pub fn push_row(&mut self, c: usize, bottom: &[i64]) {
+        assert_eq!(bottom.len(), self.k);
+        let base = c * self.k * self.k;
+        let w = &mut self.window[base..base + self.k * self.k];
+        w.copy_within(self.k.., 0);
+        for (dst, &src) in w[self.k * (self.k - 1)..].iter_mut().zip(bottom) {
+            debug_assert!(i32::try_from(src).is_ok());
+            *dst = src as i32;
+        }
+        self.row_fetches += 1;
+    }
+
+    /// Pixel at window row `dy`, physical column slot `p` of channel `c`.
+    #[inline]
+    pub fn at(&self, c: usize, dy: usize, p: usize) -> i64 {
+        self.window[(c * self.k + dy) * self.k + p] as i64
+    }
+
+    /// The full window of channel `c` (row-major `[dy][p]`, raw Q2.9
+    /// in i32 lanes).
+    #[inline]
+    pub fn window(&self, c: usize) -> &[i32] {
+        &self.window[c * self.k * self.k..(c + 1) * self.k * self.k]
+    }
+
+    /// Window size.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Channel count.
+    pub fn n_ch(&self) -> usize {
+        self.n_ch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_row_shifts_up() {
+        let mut b = ImageBank::new(1, 3);
+        b.push_row(0, &[1, 2, 3]);
+        b.push_row(0, &[4, 5, 6]);
+        b.push_row(0, &[7, 8, 9]);
+        // Window rows: [1 2 3], [4 5 6], [7 8 9].
+        assert_eq!(b.at(0, 0, 0), 1);
+        assert_eq!(b.at(0, 2, 2), 9);
+        b.push_row(0, &[10, 11, 12]);
+        // Top row dropped.
+        assert_eq!(b.at(0, 0, 0), 4);
+        assert_eq!(b.at(0, 2, 1), 11);
+        assert_eq!(b.row_fetches, 4);
+    }
+
+    #[test]
+    fn channels_are_independent() {
+        let mut b = ImageBank::new(2, 2);
+        b.push_row(0, &[1, 1]);
+        b.push_row(1, &[2, 2]);
+        assert_eq!(b.at(0, 1, 0), 1);
+        assert_eq!(b.at(1, 1, 0), 2);
+        assert_eq!(b.at(0, 0, 0), 0); // untouched rows stay zero
+    }
+
+    #[test]
+    fn storage_matches_paper() {
+        // 32 channels × 7×7 × 12 bit = 2.35 kB ≈ the paper's 2.4 kB.
+        let b = ImageBank::new(32, 7);
+        let bits = b.window.len() * 12;
+        assert_eq!(bits, 32 * 49 * 12);
+        assert!((bits as f64 / 8.0 / 1024.0 - 2.3) < 0.1);
+    }
+}

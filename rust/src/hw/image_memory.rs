@@ -1,0 +1,211 @@
+//! The latch-based SCM image memory (§III-C, Figs. 5 and 7).
+//!
+//! Physically: a 6×8 matrix of 12-bit × 128-row latch arrays (48 banks,
+//! 6144 words for the taped-out chip). Logically: **6 stored window
+//! columns** of `h · n_in` pixels each; the 7th window column is the live
+//! streaming column, which is simultaneously **written** into the slot of
+//! the retired (oldest) column — the Fig. 5 replacement policy that makes
+//! the filter bank rotate instead of moving image data.
+//!
+//! Pre-decoding activates exactly one bank per read/write; the simulator
+//! counts per-bank accesses so the clock-gating claim ("only up to 7 over
+//! 48 banks consume dynamic power in every cycle") is checkable.
+
+/// Simulated multi-banked SCM image memory.
+#[derive(Debug, Clone)]
+pub struct ImageMemory {
+    /// Stored words, `slots × rows` (slot-major). A word is a raw Q2.9 px.
+    data: Vec<i64>,
+    /// Logical column index stored in each physical slot (None = empty).
+    col_of_slot: Vec<Option<usize>>,
+    /// Column slots (6).
+    slots: usize,
+    /// Rows per slot (`h · n_in` in use; capacity `image_mem_rows`).
+    rows_capacity: usize,
+    /// Rows per SCM bank (128).
+    bank_rows: usize,
+    /// Per-bank read counts (energy model / gating check).
+    pub bank_reads: Vec<u64>,
+    /// Per-bank write counts.
+    pub bank_writes: Vec<u64>,
+    /// Banks touched in the current cycle (gating invariant check).
+    touched_this_cycle: Vec<usize>,
+    /// Maximum banks active in any single cycle seen so far.
+    pub max_banks_per_cycle: usize,
+}
+
+impl ImageMemory {
+    /// New memory with `slots` column slots of `rows_capacity` words.
+    pub fn new(slots: usize, rows_capacity: usize, bank_rows: usize) -> ImageMemory {
+        let banks = slots * rows_capacity.div_ceil(bank_rows);
+        ImageMemory {
+            data: vec![0; slots * rows_capacity],
+            col_of_slot: vec![None; slots],
+            slots,
+            rows_capacity,
+            bank_rows,
+            bank_reads: vec![0; banks],
+            bank_writes: vec![0; banks],
+            touched_this_cycle: Vec::with_capacity(8),
+            max_banks_per_cycle: 0,
+        }
+    }
+
+    /// Clear contents, slot map and per-block counters (new block — the
+    /// coordinator aggregates per-block stats itself).
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|w| *w = 0);
+        self.col_of_slot.iter_mut().for_each(|s| *s = None);
+        self.touched_this_cycle.clear();
+        self.bank_reads.iter_mut().for_each(|c| *c = 0);
+        self.bank_writes.iter_mut().for_each(|c| *c = 0);
+        self.max_banks_per_cycle = 0;
+    }
+
+    fn bank_of(&self, slot: usize, row: usize) -> usize {
+        slot * self.rows_capacity.div_ceil(self.bank_rows) + row / self.bank_rows
+    }
+
+    fn touch(&mut self, bank: usize) {
+        if !self.touched_this_cycle.contains(&bank) {
+            self.touched_this_cycle.push(bank);
+        }
+    }
+
+    /// Advance to the next cycle: record and check the gating invariant
+    /// (≤ stored-columns reads + 1 write = ≤ 7 banks active).
+    pub fn end_cycle(&mut self) {
+        let n = self.touched_this_cycle.len();
+        self.max_banks_per_cycle = self.max_banks_per_cycle.max(n);
+        debug_assert!(
+            n <= self.slots + 1,
+            "SCM gating violated: {n} banks active in one cycle"
+        );
+        self.touched_this_cycle.clear();
+    }
+
+    /// The physical slot currently holding logical column `col`, if stored.
+    pub fn slot_of(&self, col: usize) -> Option<usize> {
+        self.col_of_slot.iter().position(|c| *c == Some(col))
+    }
+
+    /// Allocate a slot for a new live column: reuse the slot of the oldest
+    /// stored column (Fig. 5), or the first empty slot during preload.
+    pub fn allocate(&mut self, col: usize) -> usize {
+        if let Some(s) = self.slot_of(col) {
+            return s; // already allocated (continuing a live column)
+        }
+        let slot = if let Some(empty) = self.col_of_slot.iter().position(|c| c.is_none()) {
+            empty
+        } else {
+            // Evict the oldest logical column.
+            let (oldest_slot, _) = self
+                .col_of_slot
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.unwrap())
+                .expect("non-empty");
+            oldest_slot
+        };
+        self.col_of_slot[slot] = Some(col);
+        slot
+    }
+
+    /// Write one pixel of logical column `col` at row `row` (the one bank
+    /// write per cycle of Fig. 7).
+    pub fn write(&mut self, col: usize, row: usize, word: i64) {
+        assert!(row < self.rows_capacity, "image memory row {row} overflow");
+        let slot = self.allocate(col);
+        let bank = self.bank_of(slot, row);
+        self.bank_writes[bank] += 1;
+        self.touch(bank);
+        self.data[slot * self.rows_capacity + row] = word;
+    }
+
+    /// Read one pixel of logical column `col` at row `row`. Panics if the
+    /// column is not resident — the controller schedule must guarantee
+    /// read-before-evict (this is the invariant the sliding-window design
+    /// exists to maintain).
+    pub fn read(&mut self, col: usize, row: usize) -> i64 {
+        let slot = self
+            .slot_of(col)
+            .unwrap_or_else(|| panic!("read of non-resident column {col} (schedule bug)"));
+        let bank = self.bank_of(slot, row);
+        self.bank_reads[bank] += 1;
+        self.touch(bank);
+        self.data[slot * self.rows_capacity + row]
+    }
+
+    /// Total reads across banks.
+    pub fn total_reads(&self) -> u64 {
+        self.bank_reads.iter().sum()
+    }
+
+    /// Total writes across banks.
+    pub fn total_writes(&self) -> u64 {
+        self.bank_writes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut m = ImageMemory::new(6, 64, 16);
+        m.write(0, 5, 123);
+        assert_eq!(m.read(0, 5), 123);
+        assert_eq!(m.total_writes(), 1);
+        assert_eq!(m.total_reads(), 1);
+    }
+
+    #[test]
+    fn bank_geometry_matches_paper() {
+        // 6 slots × 1024 rows / 128 per bank = 48 banks.
+        let m = ImageMemory::new(6, 1024, 128);
+        assert_eq!(m.bank_reads.len(), 48);
+    }
+
+    #[test]
+    fn eviction_replaces_oldest() {
+        let mut m = ImageMemory::new(3, 8, 4);
+        for col in 0..3 {
+            m.write(col, 0, col as i64);
+        }
+        // All slots full; column 3 must evict column 0.
+        m.write(3, 0, 33);
+        assert!(m.slot_of(0).is_none());
+        assert_eq!(m.slot_of(3), Some(0)); // reused slot 0
+        assert_eq!(m.read(3, 0), 33);
+        assert_eq!(m.read(1, 0), 1); // others untouched
+    }
+
+    #[test]
+    #[should_panic(expected = "non-resident")]
+    fn reading_evicted_column_panics() {
+        let mut m = ImageMemory::new(2, 4, 4);
+        m.write(0, 0, 1);
+        m.write(1, 0, 2);
+        m.write(2, 0, 3); // evicts 0
+        m.read(0, 0);
+    }
+
+    #[test]
+    fn gating_invariant_tracks_max_banks() {
+        // Real geometry: 7 column slots. A steady-state cycle reads the 6
+        // stored columns and writes the live one — 7 banks active, the
+        // paper's "only up to 7 over 48 banks consume dynamic power".
+        let mut m = ImageMemory::new(7, 64, 16);
+        for col in 0..7 {
+            m.write(col, 0, col as i64);
+            m.end_cycle();
+        }
+        for col in 0..6 {
+            m.read(col, 0);
+        }
+        m.write(6, 1, 7);
+        m.end_cycle();
+        assert_eq!(m.max_banks_per_cycle, 7);
+    }
+}

@@ -1,0 +1,116 @@
+//! The I/O interface (§III): a 12-bit input stream and two 12-bit output
+//! streams with a blocking ready/valid handshake.
+//!
+//! In the simulator the producer (coordinator) and consumer never starve
+//! the chip on purpose, but the handshake is modelled so back-pressure
+//! scenarios are testable: a stream with no data stalls the consumer and
+//! the stall is counted (visible in the cycle breakdown).
+
+use std::collections::VecDeque;
+
+/// One direction of a 12-bit ready/valid stream.
+#[derive(Debug, Clone, Default)]
+pub struct Stream {
+    fifo: VecDeque<i64>,
+    /// Total words transferred.
+    pub words: u64,
+    /// Cycles the consumer stalled on an empty stream (or the producer on
+    /// a full one, for bounded streams).
+    pub stalls: u64,
+}
+
+impl Stream {
+    /// New empty stream.
+    pub fn new() -> Stream {
+        Stream::default()
+    }
+
+    /// Producer side: offer one word (valid).
+    pub fn push(&mut self, word: i64) {
+        self.fifo.push_back(word);
+    }
+
+    /// Consumer side: take one word if valid, else record a stall.
+    pub fn pop(&mut self) -> Option<i64> {
+        match self.fifo.pop_front() {
+            Some(w) => {
+                self.words += 1;
+                Some(w)
+            }
+            None => {
+                self.stalls += 1;
+                None
+            }
+        }
+    }
+
+    /// Words currently queued.
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// True if no words are queued.
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+}
+
+/// An output event on one of the chip's output streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutputPixel {
+    /// Output channel.
+    pub channel: usize,
+    /// Output row.
+    pub y: usize,
+    /// Output column.
+    pub x: usize,
+    /// Raw Q2.9 value.
+    pub value: i64,
+}
+
+/// Collects the chip's streamed output pixels (per stream).
+#[derive(Debug, Clone, Default)]
+pub struct OutputSink {
+    /// Ordered output events.
+    pub pixels: Vec<OutputPixel>,
+    /// 12-bit words emitted.
+    pub words: u64,
+}
+
+impl OutputSink {
+    /// New empty sink.
+    pub fn new() -> OutputSink {
+        OutputSink::default()
+    }
+
+    /// Record one streamed pixel.
+    pub fn emit(&mut self, channel: usize, y: usize, x: usize, value: i64) {
+        self.pixels.push(OutputPixel { channel, y, x, value });
+        self.words += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_counts() {
+        let mut s = Stream::new();
+        s.push(1);
+        s.push(2);
+        assert_eq!(s.pop(), Some(1));
+        assert_eq!(s.pop(), Some(2));
+        assert_eq!(s.pop(), None);
+        assert_eq!(s.words, 2);
+        assert_eq!(s.stalls, 1);
+    }
+
+    #[test]
+    fn sink_records_events() {
+        let mut sink = OutputSink::new();
+        sink.emit(3, 1, 2, -77);
+        assert_eq!(sink.words, 1);
+        assert_eq!(sink.pixels[0], OutputPixel { channel: 3, y: 1, x: 2, value: -77 });
+    }
+}

@@ -1,0 +1,42 @@
+//! Cycle-accurate, bit-true simulator of the YodaNN accelerator (§III).
+//!
+//! The simulator models every unit of Fig. 3 at the paper's per-cycle
+//! granularity:
+//!
+//! * one 12-bit word enters per cycle (weights during filter load, pixels
+//!   afterwards);
+//! * each main-loop cycle processes **one input channel**: all `n_ch` SoP
+//!   units add that channel's k×k contribution to their ChannelSummers,
+//!   and that channel's next window row is fetched — 6 SCM bank reads plus
+//!   one bank write, exactly the access pattern of Fig. 5/7;
+//! * output pixels stream out interleaved through the Scale-Bias unit (one
+//!   or two 12-bit streams);
+//! * on a column switch the filter-bank columns circular-shift instead of
+//!   moving image data (Eqs. 2–4).
+//!
+//! Cycle counts, bank-access counts and unit-activity counters are exact
+//! with respect to this schedule; arithmetic is bit-true Q2.9/Q7.9/Q10.18
+//! (see [`crate::fixedpoint`]). Energy is derived from the activity
+//! counters via the calibrated per-event energies of
+//! [`stats::EnergyModel`], giving a simulation-based estimate that
+//! cross-checks the analytic model (`rust/tests/efficiency_vs_sim.rs`).
+//!
+//! [`baseline`] models the fixed-point Q2.9 comparison architecture of
+//! Table I (12×12-bit MACs, 12-bit weights, SRAM).
+
+pub mod baseline;
+pub mod chip;
+pub mod config;
+pub mod controller;
+pub mod filter_bank;
+pub mod image_bank;
+pub mod image_memory;
+pub mod io;
+pub mod scale_bias;
+pub mod sop;
+pub mod stats;
+pub mod summer;
+
+pub use chip::{BlockResult, Chip};
+pub use config::{BlockJob, ChipConfig};
+pub use stats::{ChipStats, CycleBreakdown, EnergyModel};

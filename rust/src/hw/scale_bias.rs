@@ -1,0 +1,51 @@
+//! The Scale-Bias unit (§III-E): once all input-channel contributions are
+//! summed, each output channel is scaled and biased in an interleaved
+//! manner and streamed out:
+//! `Q7.9 acc × Q2.9 α → Q10.18, + β, → saturate/truncate → Q2.9`.
+
+use crate::fixedpoint;
+use crate::workload::ScaleBias;
+
+/// Simulated Scale-Bias unit with activity counters.
+#[derive(Debug, Clone)]
+pub struct ScaleBiasUnit {
+    params: ScaleBias,
+    /// Scale-bias operations performed (one per streamed output pixel).
+    pub ops: u64,
+}
+
+impl ScaleBiasUnit {
+    /// New unit with per-channel parameters.
+    pub fn new(params: ScaleBias) -> ScaleBiasUnit {
+        ScaleBiasUnit { params, ops: 0 }
+    }
+
+    /// Process one output-channel value (raw Q7.9 → raw Q2.9).
+    pub fn apply(&mut self, o: usize, acc_q79: i64) -> i64 {
+        self.ops += 1;
+        fixedpoint::scale_bias(acc_q79, self.params.alpha[o], self.params.beta[o])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_passthrough() {
+        let mut u = ScaleBiasUnit::new(ScaleBias::identity(2));
+        assert_eq!(u.apply(0, 700), 700);
+        assert_eq!(u.apply(1, -1024), -1024);
+        assert_eq!(u.ops, 2);
+    }
+
+    #[test]
+    fn per_channel_parameters() {
+        let sb = ScaleBias { alpha: vec![256, 512], beta: vec![0, 512] };
+        let mut u = ScaleBiasUnit::new(sb);
+        // Channel 0: ×0.5 → 1.5·0.5 = 0.75 (raw 384).
+        assert_eq!(u.apply(0, 768), 384);
+        // Channel 1: ×1 + 1.0 → 1.5 + 1.0 = 2.5 (raw 1280).
+        assert_eq!(u.apply(1, 768), 1280);
+    }
+}

@@ -1,0 +1,165 @@
+//! The Sum-of-Product units (§III-B/E, Fig. 9).
+//!
+//! Each of the `n_ch` SoP units holds 50 binary "multipliers" — a two's
+//! complement stage and a multiplexer each, no actual multiplier — plus an
+//! adder tree. Per cycle a SoP adds one input channel's k×k window,
+//! weighted ±1, producing:
+//!
+//! * 7×7 mode: one partial sum (49 of 50 operators used) for one output
+//!   channel, or
+//! * dual mode: **two** partial sums for two output channels from two 5×5
+//!   (or 3×3) filters packed into the 2×25 operator halves.
+//!
+//! Unused operators and adder-tree branches are silenced/clock-gated; the
+//! simulator counts active vs silenced operator-cycles for the energy
+//! model.
+
+use super::filter_bank::FilterBank;
+use super::image_bank::ImageBank;
+
+/// Operators per SoP unit (49 for one 7×7, 50 for two 5×5).
+pub const OPS_PER_SOP: usize = 50;
+
+/// The SoP array activity counters.
+#[derive(Debug, Clone, Default)]
+pub struct SopArray {
+    /// Active binary-operator evaluations (switching energy).
+    pub active_ops: u64,
+    /// Silenced operator-cycles (clock-gated, ~zero dynamic power).
+    pub silenced_ops: u64,
+}
+
+impl SopArray {
+    /// New array.
+    pub fn new() -> SopArray {
+        SopArray::default()
+    }
+
+    /// One cycle of the array: add input channel `i`'s window contribution
+    /// for every output channel into `acc` (the raw, pre-saturation adder
+    /// outputs; the ChannelSummers apply Q7.9 saturation).
+    ///
+    /// `n_sop_slots` is the total operator budget of the chip
+    /// (`n_ch × OPS_PER_SOP`), used to account silenced operators.
+    pub fn accumulate(
+        &mut self,
+        bank: &ImageBank,
+        fb: &FilterBank,
+        i: usize,
+        n_out: usize,
+        n_sop_slots: usize,
+        acc: &mut [i64],
+    ) {
+        debug_assert_eq!(acc.len(), n_out);
+        let k = bank.k();
+        let win = bank.window(i);
+        // Hot path (§Perf): branch-free dots of the window against the
+        // filter bank's rotation-resolved ±1 view. Dispatching on the
+        // compile-time window size gives LLVM fixed trip counts to unroll
+        // and vectorize.
+        let (weights, stride) = fb.resolved_raw();
+        match k * k {
+            49 => dot_all::<49>(win, weights, stride, i, acc),
+            36 => dot_all::<36>(win, weights, stride, i, acc),
+            25 => dot_all::<25>(win, weights, stride, i, acc),
+            16 => dot_all::<16>(win, weights, stride, i, acc),
+            9 => dot_all::<9>(win, weights, stride, i, acc),
+            4 => dot_all::<4>(win, weights, stride, i, acc),
+            1 => dot_all::<1>(win, weights, stride, i, acc),
+            other => panic!("unsupported window size {other}"),
+        }
+        let used = (n_out * k * k) as u64;
+        self.active_ops += used;
+        self.silenced_ops += (n_sop_slots as u64).saturating_sub(used);
+    }
+}
+
+/// Fixed-size dot of one window against every output channel's resolved
+/// ±1 kernel (layout `[(o·stride + i)·KK ..]`). i32 lanes: |Σ ±px| ≤
+/// 49·2048 ≪ 2^31, so the whole dot vectorizes in 32-bit lanes (needs
+/// SSE4.1+ `pmulld`; `.cargo/config.toml` sets target-cpu=native).
+#[inline]
+fn dot_all<const KK: usize>(
+    win: &[i32],
+    weights: &[i32],
+    stride: usize,
+    i: usize,
+    acc: &mut [i64],
+) {
+    let w: &[i32; KK] = win[..KK].try_into().unwrap();
+    for (o, a) in acc.iter_mut().enumerate() {
+        let base = (o * stride + i) * KK;
+        let f: &[i32; KK] = weights[base..base + KK].try_into().unwrap();
+        let mut sum = 0i32;
+        for j in 0..KK {
+            sum += w[j] * f[j];
+        }
+        *a = sum as i64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::BinaryKernels;
+
+    fn setup(k: usize, n_out: usize, n_in: usize) -> (ImageBank, FilterBank) {
+        let mut fb = FilterBank::new();
+        fb.load(BinaryKernels::random(&mut Gen::new(7), n_out, n_in, k));
+        (ImageBank::new(n_in, k), fb)
+    }
+
+    #[test]
+    fn all_plus_weights_sum_window() {
+        let mut fb = FilterBank::new();
+        fb.load(BinaryKernels::all_plus(1, 1, 3));
+        let mut bank = ImageBank::new(1, 3);
+        bank.push_row(0, &[1, 2, 3]);
+        bank.push_row(0, &[4, 5, 6]);
+        bank.push_row(0, &[7, 8, 9]);
+        let mut sop = SopArray::new();
+        let mut acc = vec![0i64];
+        sop.accumulate(&bank, &fb, 0, 1, 32 * OPS_PER_SOP, &mut acc);
+        assert_eq!(acc[0], 45);
+        assert_eq!(sop.active_ops, 9);
+        assert_eq!(sop.silenced_ops, (32 * OPS_PER_SOP - 9) as u64);
+    }
+
+    #[test]
+    fn sign_flip_negates() {
+        let mut g = Gen::new(8);
+        let ks = BinaryKernels::random(&mut g, 1, 1, 3);
+        let mut inv = ks.clone();
+        for b in inv.bits.iter_mut() {
+            *b = !*b;
+        }
+        let (mut bank, _) = setup(3, 1, 1);
+        bank.push_row(0, &[5, -3, 2]);
+        bank.push_row(0, &[0, 7, -1]);
+        bank.push_row(0, &[4, 4, 4]);
+        let mut fb1 = FilterBank::new();
+        fb1.load(ks);
+        let mut fb2 = FilterBank::new();
+        fb2.load(inv);
+        let (mut s1, mut s2) = (SopArray::new(), SopArray::new());
+        let (mut a1, mut a2) = (vec![0i64], vec![0i64]);
+        s1.accumulate(&bank, &fb1, 0, 1, 100, &mut a1);
+        s2.accumulate(&bank, &fb2, 0, 1, 100, &mut a2);
+        assert_eq!(a1[0], -a2[0]);
+    }
+
+    #[test]
+    fn multiple_outputs_per_cycle() {
+        let (mut bank, fb) = setup(3, 4, 2);
+        bank.push_row(1, &[1, 1, 1]);
+        let mut sop = SopArray::new();
+        let mut acc = vec![0i64; 4];
+        sop.accumulate(&bank, &fb, 1, 4, 100, &mut acc);
+        // Contributions are bounded by the window magnitude: |Σ ±x| ≤ 3.
+        for a in acc {
+            assert!(a.abs() <= 3);
+        }
+        assert_eq!(sop.active_ops, 4 * 9);
+    }
+}

@@ -1,0 +1,95 @@
+//! The ChannelSummers (§III): one Q7.9 saturating accumulator per output
+//! channel, adding one SoP contribution per cycle until all input
+//! channels of the block have been seen.
+
+use crate::fixedpoint::{sat_add, Q7_9};
+
+/// The bank of ChannelSummer accumulators.
+#[derive(Debug, Clone)]
+pub struct ChannelSummers {
+    acc: Vec<i64>,
+    /// Saturation events observed (diagnostics: saturating sums indicate
+    /// the network needs smaller activations or per-layer scaling).
+    pub saturations: u64,
+    /// Accumulate operations performed.
+    pub adds: u64,
+}
+
+impl ChannelSummers {
+    /// New bank of `n` accumulators.
+    pub fn new(n: usize) -> ChannelSummers {
+        ChannelSummers { acc: vec![0; n], saturations: 0, adds: 0 }
+    }
+
+    /// Clear all accumulators (new output pixel).
+    pub fn clear(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = 0);
+    }
+
+    /// Add `contribution` to accumulator `o` with Q7.9 saturation — the
+    /// hardware register is 17 bits wide, so saturation applies after
+    /// every add (order-dependent, which is why the golden model must
+    /// accumulate in the same input-channel order).
+    pub fn add(&mut self, o: usize, contribution: i64) {
+        let s = sat_add(Q7_9, self.acc[o], contribution);
+        if s != self.acc[o] + contribution {
+            self.saturations += 1;
+        }
+        self.acc[o] = s;
+        self.adds += 1;
+    }
+
+    /// Current accumulator value (raw Q7.9).
+    pub fn value(&self, o: usize) -> i64 {
+        self.acc[o]
+    }
+
+    /// Number of accumulators.
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// True if the bank is empty.
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_clears() {
+        let mut s = ChannelSummers::new(2);
+        s.add(0, 100);
+        s.add(0, -30);
+        s.add(1, 7);
+        assert_eq!(s.value(0), 70);
+        assert_eq!(s.value(1), 7);
+        s.clear();
+        assert_eq!(s.value(0), 0);
+        assert_eq!(s.adds, 3);
+    }
+
+    #[test]
+    fn saturates_at_q79() {
+        let mut s = ChannelSummers::new(1);
+        s.add(0, 60_000);
+        s.add(0, 60_000);
+        assert_eq!(s.value(0), Q7_9.max_raw()); // 65535
+        assert_eq!(s.saturations, 1);
+        // Saturation is sticky only while contributions keep pushing out;
+        // subtracting recovers (per real two's-complement+clamp register).
+        s.add(0, -70_000);
+        assert_eq!(s.value(0), 65535 - 70_000);
+    }
+
+    #[test]
+    fn negative_saturation() {
+        let mut s = ChannelSummers::new(1);
+        s.add(0, -70_000);
+        assert_eq!(s.value(0), Q7_9.min_raw()); // −65536
+        assert_eq!(s.saturations, 1);
+    }
+}

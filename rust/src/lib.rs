@@ -1,0 +1,45 @@
+//! # YodaNN — reproduction of *"YodaNN: An Architecture for Ultra-Low Power
+//! Binary-Weight CNN Acceleration"* (Andri, Cavigelli, Rossi, Benini — 2016).
+//!
+//! YodaNN is a 65 nm UMC ASIC that accelerates convolution layers of CNNs
+//! with **binary weights** (w ∈ {−1,+1}, BinaryConnect-style) and Q2.9
+//! fixed-point activations. Since silicon cannot be re-fabricated here, this
+//! crate substitutes every physical artifact with an executable model (see
+//! DESIGN.md §1):
+//!
+//! * [`hw`] — a cycle-accurate, bit-true simulator of the chip: filter bank,
+//!   latch-based SCM image memory (6×8 banks), sliding-window image bank,
+//!   SoP units with multi-kernel support, ChannelSummers, Scale-Bias unit,
+//!   ready-valid I/O and the controller FSM of the paper's Algorithm 1.
+//! * [`power`] — analytic voltage/frequency/power/area models calibrated to
+//!   the paper's reported corners (Table I/II, Figs. 6, 11, 12).
+//! * [`model`] — CNN layer/network descriptors (all networks of Table III)
+//!   and the paper's throughput-efficiency analytics (Eqs. 6–11).
+//! * [`coordinator`] — the L3 off-chip orchestration: channel blocking,
+//!   vertical image tiling, streaming, off-chip partial-sum accumulation,
+//!   and metric roll-ups for Tables III–V.
+//! * [`runtime`] — PJRT executor for the JAX/Pallas golden model that
+//!   `make artifacts` AOT-lowers to `artifacts/*.hlo.txt`.
+//! * [`workload`] — deterministic synthetic workload generators (the
+//!   Stanford-backgrounds stand-in, weight generators).
+//! * [`report`] — paper-reported reference values and table/figure renderers
+//!   used by the benches to regenerate every table and figure.
+//!
+//! The image's offline crate registry only carries the `xla` closure, so
+//! [`bench`] (criterion stand-in), [`testkit`] (proptest stand-in) and
+//! [`cli`] (clap stand-in) are small local substitutes.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod fixedpoint;
+pub mod hw;
+pub mod model;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

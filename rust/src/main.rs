@@ -1,0 +1,363 @@
+//! `yodann` — the command-line front end.
+//!
+//! ```text
+//! yodann info                         chip/calibration summary + headlines
+//! yodann table <1|2|4|5>              regenerate a paper table (vs paper)
+//! yodann table 3 --net <id>           per-layer Table III for one network
+//! yodann run --net <id> [--v 0.6]     evaluate a network at a corner
+//! yodann simulate [--k 3 ...]         run one block on the cycle simulator
+//! yodann golden [--seed N]            simulator vs PJRT golden model
+//! yodann figure <2|6|11|12|13>        regenerate a paper figure's series
+//! yodann sweep [--points 13]          voltage sweep (Fig. 11 data)
+//! yodann networks                     list known networks
+//! ```
+
+use yodann::cli::Args;
+use yodann::coordinator::{check_block, metrics::sim_metrics};
+use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
+use yodann::model::{evaluate_network, networks, Corner};
+use yodann::power::{ArchId, CorePowerModel};
+use yodann::report::{figures, paper, table::fmt, tables};
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, BinaryKernels, ScaleBias};
+
+const VALUE_KEYS: &[&str] =
+    &["net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print_help();
+        return;
+    }
+    let cmd = raw[0].clone();
+    let args = match Args::parse(&raw[1..], VALUE_KEYS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "info" => cmd_info(),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "run" => cmd_run(&args),
+        "simulate" => cmd_simulate(&args),
+        "golden" => cmd_golden(&args),
+        "sweep" => cmd_sweep(&args),
+        "networks" => cmd_networks(),
+        other => Err(format!("unknown command '{other}' (try --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "yodann — reproduction of 'YodaNN: Ultra-Low Power Binary-Weight CNN Acceleration'\n\n\
+         USAGE: yodann <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 info                        chip configuration + headline metrics vs paper\n\
+         \x20 table <1|2|4|5>             regenerate a paper table with paper deltas\n\
+         \x20 table 3 --net <id>          per-layer Table III rows for one network\n\
+         \x20 run --net <id> [--v 0.6]    evaluate a network at an operating corner\n\
+         \x20 simulate [--k 3 --n-in 32 --n-out 64 --h 16 --w 16 --v 0.6] [--valid]\n\
+         \x20                             run one block on the cycle-accurate simulator\n\
+         \x20 golden [--seed N]           check simulator vs the PJRT golden model\n\
+         \x20 figure <2|6|11|12|13>       regenerate a paper figure's data series\n\
+         \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
+         \x20 networks                    list the networks of Tables III–V"
+    );
+}
+
+fn corner_of(args: &Args) -> Result<Corner, String> {
+    let v = args.get_f64("v", 0.6)?;
+    Ok(Corner { arch: ArchId::Bin32Multi, v })
+}
+
+fn cmd_info() -> Result<(), String> {
+    let chip = CorePowerModel::new(ArchId::Bin32Multi);
+    println!("YodaNN (binary-weight CNN accelerator, UMC 65 nm) — simulated reproduction\n");
+    println!("architecture : 32x32 channels, kernels 1x1..7x7 (dual 3x3/5x5 modes)");
+    println!("image memory : 7x8 latch-based SCM banks x 128 rows x 12 bit (h_max = 32)");
+    println!("formats      : Q2.9 activations, binary weights, Q7.9 accumulate, Q10.18 scale\n");
+    let rows = [
+        (
+            "peak throughput @1.2V",
+            chip.theta_peak(1.2, 7) / 1e9,
+            paper::headline::PEAK_GOPS_1V2,
+            "GOp/s",
+        ),
+        (
+            "peak throughput @0.6V",
+            chip.theta_peak(0.6, 7) / 1e9,
+            paper::headline::PEAK_GOPS_0V6,
+            "GOp/s",
+        ),
+        ("core power @0.6V", chip.p_core_slot7(0.6) * 1e6, paper::headline::CORE_UW_0V6, "uW"),
+        (
+            "energy efficiency @0.6V",
+            chip.theta_peak(0.6, 7) / chip.p_core_slot7(0.6) / 1e12,
+            paper::headline::PEAK_TOPS_W_0V6,
+            "TOp/s/W",
+        ),
+        (
+            "area efficiency @1.2V",
+            chip.theta_peak(1.2, 7) / 1e9 / yodann::power::metric_area_mge(ArchId::Bin32Multi),
+            paper::headline::AREA_EFF_1V2,
+            "GOp/s/MGE",
+        ),
+        ("f_max @1.2V", chip.freq(1.2) / 1e6, paper::headline::FMAX_1V2_MHZ, "MHz"),
+    ];
+    for (name, measured, paperv, unit) in rows {
+        println!(
+            "{name:<26} {:>9} {unit:<10} (paper {paperv}, {})",
+            fmt(measured, 1),
+            yodann::report::table::delta_pct(measured, paperv)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().ok_or("table number required (1..5)")?;
+    let t = match which.as_str() {
+        "1" => tables::table1(),
+        "2" => tables::table2(),
+        "3" => {
+            let net = args.get("net", "bc-cifar10").to_string();
+            tables::table3(&net, corner_of(args)?)
+        }
+        "4" => tables::table45(Corner::energy_optimal()),
+        "5" => tables::table45(Corner::throughput_optimal()),
+        other => return Err(format!("unknown table {other}")),
+    };
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().ok_or("figure number required (2,6,11,12,13)")?;
+    match which.as_str() {
+        "2" => {
+            let f = figures::fig2();
+            println!("Fig. 2 — conv vs other layers, scene-labeling CNN [13]:");
+            println!("  conv ops            : {:.2} GOp/frame", f.conv_ops as f64 / 1e9);
+            println!("  non-conv ops        : {:.2} MOp/frame", f.other_ops as f64 / 1e6);
+            println!("  conv share of ops   : {:.4}", f.conv_op_share);
+            println!(
+                "  conv share of time  : CPU {:.0}%  GPU {:.0}% (measured, [13])",
+                f.cpu_conv_time_share * 100.0,
+                f.gpu_conv_time_share * 100.0
+            );
+            println!(
+                "  implied non-conv per-op slowdown: CPU {:.0}x  GPU {:.0}x",
+                f.cpu_other_slowdown, f.gpu_other_slowdown
+            );
+        }
+        "6" => {
+            println!("Fig. 6 — area breakdown (kGE):");
+            println!(
+                "{:<24} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+                "arch", "memory", "filter", "SoP", "imgbank", "sc-bias", "total"
+            );
+            for (arch, a) in figures::fig6() {
+                println!(
+                    "{:<24} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+                    arch.name(),
+                    a.memory,
+                    a.filter_bank,
+                    a.sop,
+                    a.image_bank,
+                    a.scale_bias,
+                    a.total_kge()
+                );
+            }
+        }
+        "11" => {
+            println!("Fig. 11 — throughput & core efficiency vs supply:");
+            for arch in [ArchId::Q29Fixed8, ArchId::Bin32Multi] {
+                println!("  {}:", arch.name());
+                println!("    {:>5} {:>9} {:>12} {:>12}", "V", "f (MHz)", "GOp/s", "TOp/s/W");
+                for p in figures::fig11_sweep(arch, 7) {
+                    println!(
+                        "    {:>5.2} {:>9.1} {:>12.1} {:>12.2}",
+                        p.v, p.f_mhz, p.theta_gops, p.en_eff_tops_w
+                    );
+                }
+            }
+        }
+        "12" => {
+            println!("Fig. 12 — core power breakdown @1.2 V, 400 MHz (mW):");
+            println!(
+                "{:<24} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+                "arch", "memory", "SoP", "filter", "sc-bias", "other", "total"
+            );
+            for (arch, b) in figures::fig12_at_400mhz() {
+                println!(
+                    "{:<24} {:>8.1} {:>8.1} {:>8.1} {:>8.2} {:>8.1} {:>8.1}",
+                    arch.name(),
+                    b.memory * 1e3,
+                    b.sop * 1e3,
+                    b.filter_bank * 1e3,
+                    b.scale_bias * 1e3,
+                    b.other * 1e3,
+                    b.total() * 1e3
+                );
+            }
+        }
+        "13" => {
+            println!("Fig. 13 — area efficiency vs energy efficiency (pareto):");
+            println!("{:<18} {:>12} {:>16}", "point", "TOp/s/W", "GOp/s/MGE");
+            for p in figures::fig13(7) {
+                println!(
+                    "{:<18} {:>12.2} {:>16.1}{}",
+                    p.name,
+                    p.en_eff,
+                    p.area_eff,
+                    if p.ours { "  <- YodaNN" } else { "" }
+                );
+            }
+        }
+        other => return Err(format!("unknown figure {other}")),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let id = args.require("net")?;
+    let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
+    let corner = corner_of(args)?;
+    let e = evaluate_network(&net, corner);
+    println!("{} @{:.2} V ({}):", net.name, corner.v, corner.arch.name());
+    println!("  conv ops        : {:.2} GOp/frame", e.total_ops as f64 / 1e9);
+    println!("  avg throughput  : {:.1} GOp/s", e.avg_theta / 1e9);
+    println!("  avg energy eff  : {:.1} TOp/s/W (core)", e.avg_en_eff / 1e12);
+    println!("  frame rate      : {:.2} FPS", e.fps);
+    println!("  energy/frame    : {:.1} uJ (core)", e.frame_energy * 1e6);
+    println!("  avg device power: {:.1} mW (core + pads)", e.avg_device_power * 1e3);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let k = args.get_usize("k", 3)?;
+    let n_in = args.get_usize("n-in", 32)?;
+    let n_out = args.get_usize("n-out", 64)?;
+    let h = args.get_usize("h", 16)?;
+    let w = args.get_usize("w", 16)?;
+    let v = args.get_f64("v", 0.6)?;
+    let seed = args.get_u64("seed", 42)?;
+    let mut g = Gen::new(seed);
+    let job = BlockJob {
+        k,
+        zero_pad: !args.has_flag("valid"),
+        image: random_image(&mut g, n_in, h, w, 0.02),
+        kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+        scale_bias: ScaleBias::random(&mut g, n_out),
+    };
+    let cfg = ChipConfig::yodann();
+    job.validate(&cfg).map_err(|e| format!("invalid job: {e}"))?;
+    let mut chip = Chip::new(cfg);
+    let res = chip.run_block(&job);
+    let s = &res.stats;
+    println!("block k={k} {n_in}->{n_out} {h}x{w} @{v} V:");
+    println!(
+        "  cycles: {} (filter {} | preload {} | compute {} | idle {} | flush {})",
+        s.cycles.total(),
+        s.cycles.filter_load,
+        s.cycles.preload,
+        s.cycles.compute,
+        s.cycles.idle,
+        s.cycles.flush
+    );
+    println!(
+        "  SCM   : {} reads, {} writes, max {} banks/cycle",
+        s.scm_reads, s.scm_writes, s.scm_max_banks_per_cycle
+    );
+    println!(
+        "  SoP   : {} active ops, {} silenced; {} summer saturations",
+        s.sop_active_ops, s.sop_silenced_ops, s.summer_saturations
+    );
+    println!("  I/O   : {} words in, {} words out", s.input_words, s.output_words);
+    let dual = k < 6 && n_out > 32;
+    let m = sim_metrics(s, ArchId::Bin32Multi, v, dual);
+    let em = EnergyModel::new(ArchId::Bin32Multi, v);
+    println!(
+        "  chip time {:.3} ms  |  {:.2} GOp/s  |  {:.1} TOp/s/W  |  {:.2} uJ",
+        m.time * 1e3,
+        m.theta / 1e9,
+        m.en_eff / 1e12,
+        em.energy(s) * 1e6
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 7)?;
+    let mut rt = yodann::runtime::Runtime::open_default().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+    let cases: Vec<(usize, usize, usize, usize, usize, bool)> = rt
+        .manifest()
+        .iter()
+        .map(|m| (m.k, m.n_in, m.n_out, m.h, m.w, m.zero_pad))
+        .collect();
+    for (k, n_in, n_out, h, w, zp) in cases {
+        let mut g = Gen::new(seed ^ ((k as u64) << 8));
+        let image = random_image(&mut g, n_in, h, w, 0.03);
+        let kernels = BinaryKernels::random(&mut g, n_out, n_in, k);
+        let sb = ScaleBias::random(&mut g, n_out);
+        let report = check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, zp)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "  {:<34} {} samples: {}",
+            report.artifact,
+            report.samples,
+            if report.ok() { "OK (bit-exact)" } else { "MISMATCH" }
+        );
+        if !report.ok() {
+            return Err(format!("golden mismatch: {:?}", report.first_mismatch));
+        }
+    }
+    println!("all artifacts bit-exact: simulator == JAX/Pallas golden model");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let points = args.get_usize("points", 13)?;
+    let arch = match args.get("arch", "yodann") {
+        "yodann" => ArchId::Bin32Multi,
+        "q29" => ArchId::Q29Fixed8,
+        "bin8" => ArchId::Bin8,
+        other => return Err(format!("unknown arch {other}")),
+    };
+    println!("{:>5} {:>9} {:>12} {:>12}", "V", "f (MHz)", "GOp/s", "TOp/s/W");
+    for p in figures::fig11_sweep(arch, points) {
+        println!("{:>5.2} {:>9.1} {:>12.1} {:>12.2}", p.v, p.f_mhz, p.theta_gops, p.en_eff_tops_w);
+    }
+    Ok(())
+}
+
+fn cmd_networks() -> Result<(), String> {
+    println!("{:<14} {:<14} {:>10} {:>8}", "id", "name", "img", "GOp");
+    for n in networks::all_networks() {
+        println!(
+            "{:<14} {:<14} {:>10} {:>8.2}",
+            n.id,
+            n.name,
+            format!("{}x{}", n.img.0, n.img.1),
+            n.conv_ops() as f64 / 1e9
+        );
+    }
+    let sl = networks::scene_labeling();
+    println!(
+        "{:<14} {:<14} {:>10} {:>8.2}",
+        sl.id,
+        sl.name,
+        "240x320",
+        sl.conv_ops() as f64 / 1e9
+    );
+    Ok(())
+}

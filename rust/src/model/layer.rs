@@ -1,0 +1,229 @@
+//! Layer descriptors and operation counting (paper Eq. 7).
+
+/// How a kernel size maps onto the SoP hardware (§III-E, Fig. 9).
+///
+/// Each SoP unit has 50 binary operators; it natively computes either one
+/// 7×7 filter (one output channel) or **two** 5×5 / 3×3 filters (two output
+/// channels, doubling output parallelism to `2·n_ch`). All other sizes are
+/// zero-padded into the next-larger native slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Native 7×7 slot, one filter per SoP (used for k ∈ {6, 7}).
+    Slot7,
+    /// Dual 5×5 slot, two filters per SoP (used for k ∈ {4, 5}).
+    Slot5,
+    /// Dual 3×3 slot, two filters per SoP (used for k ∈ {1, 2, 3}).
+    Slot3,
+}
+
+impl KernelMode {
+    /// Native slot size for a filter of size `k` (1..=7).
+    pub fn for_kernel(k: usize) -> KernelMode {
+        match k {
+            1..=3 => KernelMode::Slot3,
+            4 | 5 => KernelMode::Slot5,
+            6 | 7 => KernelMode::Slot7,
+            _ => panic!("unsupported kernel size {k} (YodaNN supports 1..=7)"),
+        }
+    }
+
+    /// Slot edge length (3, 5 or 7).
+    pub fn slot_k(self) -> usize {
+        match self {
+            KernelMode::Slot3 => 3,
+            KernelMode::Slot5 => 5,
+            KernelMode::Slot7 => 7,
+        }
+    }
+
+    /// Output channels computed in parallel per SoP unit (1 or 2).
+    pub fn filters_per_sop(self) -> usize {
+        match self {
+            KernelMode::Slot7 => 1,
+            KernelMode::Slot5 | KernelMode::Slot3 => 2,
+        }
+    }
+}
+
+/// A convolution layer as evaluated by the paper (Table III row).
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    /// Row label, e.g. "2-5" for grouped rows.
+    pub label: &'static str,
+    /// Square kernel size `h_k = b_k` (1..=7 after any decomposition).
+    pub k: usize,
+    /// Input image width in pixels.
+    pub w: usize,
+    /// Input image height in pixels.
+    pub h: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Output channels.
+    pub n_out: usize,
+    /// How many instances of this layer the network contains
+    /// (the table's "×" column).
+    pub repeat: usize,
+    /// Whether the layer zero-pads the image border (keeps H×W constant).
+    pub zero_pad: bool,
+}
+
+impl ConvLayer {
+    /// Output width (Eq. 7's `w_in − h_k + 1` without zero-padding).
+    pub fn out_w(&self) -> usize {
+        if self.zero_pad {
+            self.w
+        } else {
+            self.w - self.k + 1
+        }
+    }
+
+    /// Output height.
+    pub fn out_h(&self) -> usize {
+        if self.zero_pad {
+            self.h
+        } else {
+            self.h - self.k + 1
+        }
+    }
+
+    /// Hardware slot this kernel maps to.
+    pub fn mode(&self) -> KernelMode {
+        KernelMode::for_kernel(self.k)
+    }
+
+    /// Operations (multiply + add counted separately) for **one** instance,
+    /// per the paper's Eq. 7:
+    /// `#Op = 2·n_out·n_in·h_k·w_k·(h_out)·(w_out)`.
+    ///
+    /// The paper counts zero-padded layers over the full H×W output (its
+    /// AlexNet/VGG #MOp values only match under that reading), and does not
+    /// count memory accesses or the off-chip partial-sum additions.
+    pub fn ops(&self) -> u64 {
+        2 * self.n_out as u64
+            * self.n_in as u64
+            * (self.k * self.k) as u64
+            * self.out_h() as u64
+            * self.out_w() as u64
+    }
+
+    /// Total operations over all `repeat` instances.
+    pub fn total_ops(&self) -> u64 {
+        self.ops() * self.repeat as u64
+    }
+}
+
+/// A non-convolution layer, listed for op-count completeness only — YodaNN
+/// accelerates convolutions; FC/SVM layers run on the host (paper §III).
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    /// Row label.
+    pub label: &'static str,
+    /// Input features (n_in · w · h for flattening layers).
+    pub n_in: usize,
+    /// Output features.
+    pub n_out: usize,
+    /// Instance count.
+    pub repeat: usize,
+}
+
+impl DenseLayer {
+    /// 2 ops (mul + add) per weight.
+    pub fn ops(&self) -> u64 {
+        2 * self.n_in as u64 * self.n_out as u64
+    }
+}
+
+/// Any layer of a network description.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Convolution, runs on the accelerator.
+    Conv(ConvLayer),
+    /// Fully-connected (or SVM) layer, runs on the host.
+    Dense(DenseLayer),
+}
+
+impl Layer {
+    /// Convolution view, if applicable.
+    pub fn as_conv(&self) -> Option<&ConvLayer> {
+        match self {
+            Layer::Conv(c) => Some(c),
+            Layer::Dense(_) => None,
+        }
+    }
+}
+
+/// Convenience: Eq. 7 for explicit parameters.
+pub fn ops_per_layer(n_out: usize, n_in: usize, k: usize, out_h: usize, out_w: usize) -> u64 {
+    2 * (n_out as u64) * (n_in as u64) * ((k * k) as u64) * (out_h as u64) * (out_w as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(k: usize, w: usize, h: usize, n_in: usize, n_out: usize, pad: bool) -> ConvLayer {
+        ConvLayer { label: "t", k, w, h, n_in, n_out, repeat: 1, zero_pad: pad }
+    }
+
+    #[test]
+    fn mode_mapping_matches_paper() {
+        assert_eq!(KernelMode::for_kernel(7), KernelMode::Slot7);
+        assert_eq!(KernelMode::for_kernel(6), KernelMode::Slot7);
+        assert_eq!(KernelMode::for_kernel(5), KernelMode::Slot5);
+        assert_eq!(KernelMode::for_kernel(4), KernelMode::Slot5);
+        assert_eq!(KernelMode::for_kernel(3), KernelMode::Slot3);
+        assert_eq!(KernelMode::for_kernel(2), KernelMode::Slot3);
+        assert_eq!(KernelMode::for_kernel(1), KernelMode::Slot3);
+        assert_eq!(KernelMode::Slot5.filters_per_sop(), 2);
+        assert_eq!(KernelMode::Slot7.filters_per_sop(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kernel_larger_than_7_rejected() {
+        KernelMode::for_kernel(9);
+    }
+
+    #[test]
+    fn op_counts_match_table3() {
+        // BC-Cifar-10 L1: 3→128, k3, 32×32, zero-padded → 7 MOp.
+        let l = conv(3, 32, 32, 3, 128, true);
+        assert_eq!(l.ops(), 7_077_888); // ≈ 7 MOp
+        // BC-Cifar-10 L2: 128→128 → 302 MOp.
+        let l = conv(3, 32, 32, 128, 128, true);
+        assert_eq!(l.ops() / 1_000_000, 301);
+        // VGG L1: 3→64, k3, 224×224 → 173 MOp.
+        let l = conv(3, 224, 224, 3, 64, true);
+        assert_eq!(l.ops() / 1_000_000, 173);
+        // ResNet L1: 3→64, k7, 224×224 → 944 MOp.
+        let l = conv(7, 224, 224, 3, 64, true);
+        assert_eq!(l.ops() / 1_000_000, 944);
+        // AlexNet 1ab (6×6 split of 11×11): 3→48 → 520 MOp.
+        let l = conv(6, 224, 224, 3, 48, true);
+        assert_eq!(l.ops() / 1_000_000, 520);
+        // AlexNet 1cd (5×5 split): 3→48 → 361 MOp.
+        let l = conv(5, 224, 224, 3, 48, true);
+        assert_eq!(l.ops() / 1_000_000, 361);
+        // AlexNet L2: 48→128, k5, 55×55 → 929 MOp.
+        let l = conv(5, 55, 55, 48, 128, true);
+        assert_eq!(l.ops() / 1_000_000, 929);
+        // ResNet stage rows: 64→64, k3, 112×112 → 925 MOp.
+        let l = conv(3, 112, 112, 64, 64, true);
+        assert_eq!((l.ops() as f64 / 1e6).round() as u64, 925);
+    }
+
+    #[test]
+    fn non_padded_output_shrinks() {
+        let l = conv(7, 32, 32, 8, 8, false);
+        assert_eq!(l.out_w(), 26);
+        assert_eq!(l.out_h(), 26);
+        assert_eq!(l.ops(), 2 * 8 * 8 * 49 * 26 * 26);
+    }
+
+    #[test]
+    fn repeat_scales_total_ops() {
+        let mut l = conv(3, 14, 14, 512, 512, true);
+        l.repeat = 3;
+        assert_eq!(l.total_ops(), 3 * l.ops());
+    }
+}

@@ -1,0 +1,18 @@
+//! CNN model descriptors and the paper's performance analytics.
+//!
+//! * [`layer`] — convolution / fully-connected layer descriptors and the
+//!   operation-count formula (paper Eq. 7).
+//! * [`networks`] — every network evaluated in the paper's Table III
+//!   (BinaryConnect Cifar-10 / SVHN, AlexNet with the 11×11 kernel split,
+//!   ResNet-18/34, VGG-13/19), encoded from the table.
+//! * [`efficiency`] — the throughput-efficiency model of §IV-A
+//!   (Eqs. 8–11: tiling, channel idling, border effects) and the
+//!   per-layer/per-network evaluation engine behind Tables III–V.
+
+pub mod efficiency;
+pub mod layer;
+pub mod networks;
+
+pub use efficiency::{evaluate_layer, evaluate_network, Corner, LayerEval, NetworkEval};
+pub use layer::{ops_per_layer, ConvLayer, KernelMode, Layer};
+pub use networks::{all_networks, network, Network};

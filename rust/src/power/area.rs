@@ -1,0 +1,117 @@
+//! Area model in gate equivalents (Fig. 6 area breakdown + §IV-B
+//! floorplan: SCM 480 kGE, filter bank 333 kGE, SoP 215 kGE, image bank
+//! 123 kGE, 1261 kGE core total; Table I: 0.72 MGE Q2.9 vs 0.60 MGE
+//! binary at 8×8).
+
+use super::calib::{self, area_kge};
+use super::core::ArchId;
+
+/// Per-unit area in kGE.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    /// Image memory (SRAM macro or latch-based SCM banks).
+    pub memory: f64,
+    /// Filter bank (12-bit or binary weight storage).
+    pub filter_bank: f64,
+    /// SoP units (MAC or complement-mux + adder trees).
+    pub sop: f64,
+    /// Image bank window cache.
+    pub image_bank: f64,
+    /// Scale-Bias unit.
+    pub scale_bias: f64,
+    /// Controller, I/O, interconnect.
+    pub other: f64,
+}
+
+impl AreaBreakdown {
+    /// Total core area in kGE.
+    pub fn total_kge(&self) -> f64 {
+        self.memory + self.filter_bank + self.sop + self.image_bank + self.scale_bias + self.other
+    }
+
+    /// Total core area in MGE.
+    pub fn total_mge(&self) -> f64 {
+        self.total_kge() / 1000.0
+    }
+}
+
+fn from_calib(a: [f64; 6]) -> AreaBreakdown {
+    AreaBreakdown {
+        memory: a[0],
+        filter_bank: a[1],
+        sop: a[2],
+        image_bank: a[3],
+        scale_bias: a[4],
+        other: a[5],
+    }
+}
+
+/// Area breakdown of an architecture variant.
+pub fn area_breakdown(arch: ArchId) -> AreaBreakdown {
+    from_calib(match arch {
+        ArchId::Q29Fixed8 => area_kge::Q29_8,
+        ArchId::Bin8 => area_kge::BIN_8,
+        ArchId::Bin16 => area_kge::BIN_16,
+        ArchId::Bin32Fixed => area_kge::BIN_32_FIXED,
+        ArchId::Bin32Multi => area_kge::BIN_32_MULTI,
+    })
+}
+
+/// Area (MGE) used for the paper's GOp/s/MGE metrics. For the final chip
+/// the paper's headline divides by the abstract's 1.33 MGE (which includes
+/// clock tree and fill the floorplan excludes); other variants use their
+/// Table-I core areas.
+pub fn metric_area_mge(arch: ArchId) -> f64 {
+    match arch {
+        ArchId::Bin32Multi => calib::CHIP_AREA_MGE,
+        _ => area_breakdown(arch).total_mge(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floorplan_totals() {
+        // §IV-B: 1261 kGE core.
+        let a = area_breakdown(ArchId::Bin32Multi);
+        assert!((a.total_kge() - 1261.0).abs() < 1.0, "{}", a.total_kge());
+        assert!((a.memory - 480.0).abs() < 1e-9);
+        assert!((a.filter_bank - 333.0).abs() < 1e-9);
+        assert!((a.sop - 215.0).abs() < 1e-9);
+        assert!((a.image_bank - 123.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_areas() {
+        assert!((area_breakdown(ArchId::Q29Fixed8).total_mge() - 0.72).abs() < 0.01);
+        assert!((area_breakdown(ArchId::Bin8).total_mge() - 0.60).abs() < 0.01);
+    }
+
+    #[test]
+    fn binary_shrinks_sop_and_filter_bank() {
+        // §III-B: SoP ÷5.3, filter bank ÷14.9 moving Q2.9 → binary (8×8).
+        let q = area_breakdown(ArchId::Q29Fixed8);
+        let b = area_breakdown(ArchId::Bin8);
+        assert!((q.sop / b.sop - 5.3).abs() < 0.1, "{}", q.sop / b.sop);
+        assert!((q.filter_bank / b.filter_bank - 14.9).abs() < 1.0);
+        // ...but the SCM image memory is larger than the SRAM (Fig. 6).
+        assert!(b.memory > q.memory);
+    }
+
+    #[test]
+    fn multi_kernel_area_overhead() {
+        // §IV-C: +11.2% core area for multi-kernel support.
+        let fixed = area_breakdown(ArchId::Bin32Fixed).total_kge();
+        let multi = area_breakdown(ArchId::Bin32Multi).total_kge();
+        assert!((multi / fixed - 1.112).abs() < 0.01, "{}", multi / fixed);
+    }
+
+    #[test]
+    fn headline_area_efficiency() {
+        // 1510 GOp/s / 1.33 MGE ⇒ 1135 GOp/s/MGE.
+        let eff = 1510.0 / metric_area_mge(ArchId::Bin32Multi);
+        assert!((eff - 1135.0).abs() < 5.0, "{eff}");
+    }
+}

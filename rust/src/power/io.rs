@@ -1,0 +1,106 @@
+//! I/O pad power model (§III-D / §IV-C).
+//!
+//! The paper does not measure pad power directly; it "approximated [it] by
+//! power measurements on chips of the same technology [15] and scaled to
+//! the actual operating frequency", fixing **328 mW at 400 MHz** for the
+//! 12-bit input stream + one 12-bit output stream at 1.8 V pad supply. We
+//! adopt the identical model and add two fitted terms:
+//!
+//! * the **second output stream** active in dual-filter (3×3/5×5) modes
+//!   (+130 mW @400 MHz, back-solved from Table II's 5×5 column);
+//! * the **weight stream**: 12-bit weights in the Q2.9 baseline vs 1-bit
+//!   binary weights (12× fewer bits — the paper's key I/O saving).
+
+use super::calib;
+use crate::model::KernelMode;
+
+/// Pad power model. All powers in watts.
+#[derive(Debug, Clone, Copy)]
+pub struct IoPowerModel {
+    /// Base stream power at the 400 MHz reference (input + one output).
+    pub base_at_ref: f64,
+    /// Second-output-stream incremental power at the reference frequency.
+    pub second_stream_at_ref: f64,
+    /// Weight-stream power at the reference frequency.
+    pub weights_at_ref: f64,
+}
+
+impl IoPowerModel {
+    /// Model for a binary-weight architecture.
+    pub fn binary() -> IoPowerModel {
+        IoPowerModel {
+            base_at_ref: calib::IO_POWER_AT_400MHZ,
+            second_stream_at_ref: calib::IO_SECOND_STREAM_AT_400MHZ,
+            weights_at_ref: calib::IO_WEIGHTS_BIN_AT_400MHZ,
+        }
+    }
+
+    /// Model for the 12-bit fixed-point baseline (12× weight bits).
+    pub fn q29() -> IoPowerModel {
+        IoPowerModel {
+            base_at_ref: calib::IO_POWER_AT_400MHZ,
+            second_stream_at_ref: calib::IO_SECOND_STREAM_AT_400MHZ,
+            weights_at_ref: calib::IO_WEIGHTS_Q29_AT_400MHZ,
+        }
+    }
+
+    /// Pad power at clock `f` (Hz) for kernel mode `mode` (dual-filter
+    /// modes stream two output channels per cycle).
+    pub fn power(&self, f: f64, mode: KernelMode) -> f64 {
+        let scale = f / calib::IO_REF_FREQ;
+        let dual = if mode.filters_per_sop() == 2 { self.second_stream_at_ref } else { 0.0 };
+        (self.base_at_ref + dual + self.weights_at_ref) * scale
+    }
+
+    /// Pad power for a kernel size `k` on a multi-kernel architecture
+    /// (`multi = false` forces the single-stream 7×7 mapping).
+    pub fn power_for_kernel(&self, f: f64, k: usize, multi: bool) -> f64 {
+        let mode = if multi { KernelMode::for_kernel(k) } else { KernelMode::Slot7 };
+        self.power(f, mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_anchor() {
+        let io = IoPowerModel::binary();
+        let p = io.power(400.0e6, KernelMode::Slot7);
+        // 328 mW + ~2.3 mW binary weight stream.
+        assert!((p - 0.3303).abs() < 1e-3, "{p}");
+    }
+
+    #[test]
+    fn scales_linearly_with_frequency() {
+        let io = IoPowerModel::binary();
+        let p1 = io.power(100.0e6, KernelMode::Slot7);
+        let p4 = io.power(400.0e6, KernelMode::Slot7);
+        assert!((p4 / p1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dual_stream_costs_more() {
+        let io = IoPowerModel::binary();
+        assert!(io.power(400.0e6, KernelMode::Slot5) > io.power(400.0e6, KernelMode::Slot7));
+        let delta = io.power(400.0e6, KernelMode::Slot3) - io.power(400.0e6, KernelMode::Slot7);
+        assert!((delta - 0.130).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q29_weight_stream_is_12x_binary() {
+        let b = IoPowerModel::binary();
+        let q = IoPowerModel::q29();
+        assert!((q.weights_at_ref / b.weights_at_ref - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_device_power_shape() {
+        // Binary 8×8 @0.6 V: core 0.26 mW + pads at 19.1 MHz ≈ 15.9 mW,
+        // paper reports 15.54 mW (≲3% — the paper's own scaling rounds).
+        let io = IoPowerModel::binary();
+        let dev = 0.26e-3 + io.power(19.1e6, KernelMode::Slot7);
+        assert!((dev - 15.54e-3).abs() / 15.54e-3 < 0.05, "{dev}");
+    }
+}

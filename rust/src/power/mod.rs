@@ -1,0 +1,30 @@
+//! Voltage/frequency/power/area models of the accelerator, calibrated to
+//! the paper's reported silicon corners.
+//!
+//! The paper characterizes UMC 65 nm standard cells over 0.6–1.2 V and
+//! reports throughput/power at discrete corners (Table I, Table II at
+//! 400 MHz, §IV-C text). We cannot re-run Synopsys PrimePower without the
+//! PDK, so this module substitutes (see DESIGN.md §1):
+//!
+//! * [`vf`] — an alpha-power-law delay model `f(V) = k·(V−V_t)^α / V`
+//!   fitted to the paper's measured (V, f) corners per architecture.
+//! * [`core`] — core power `P(V) = C_eff(V)·V²·f(V)` with `C_eff`
+//!   interpolated between the paper's measured power anchors, per-kernel
+//!   mode scaling and the silenced-unit idle model.
+//! * [`io`] — the pad power model the paper itself uses (328 mW @ 400 MHz,
+//!   scaled with frequency; extra term for the second output stream and for
+//!   12× weight I/O in the fixed-point baseline).
+//! * [`area`] — per-unit gate-equivalent areas (Fig. 6, floorplan §IV-B).
+//! * [`calib`] — every constant, each annotated with the table/figure it
+//!   anchors to.
+
+pub mod area;
+pub mod calib;
+pub mod core;
+pub mod io;
+pub mod vf;
+
+pub use self::core::{ArchId, CorePowerModel, PowerBreakdown};
+pub use area::{area_breakdown, metric_area_mge, AreaBreakdown};
+pub use io::IoPowerModel;
+pub use vf::VfCurve;

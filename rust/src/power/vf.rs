@@ -1,0 +1,145 @@
+//! Voltage → maximum-frequency model.
+//!
+//! Standard-cell delay over a wide voltage range follows the alpha-power
+//! law: `f(V) = k · (V − V_t)^α / V`. We fit `(V_t, α, k)` to the paper's
+//! measured corners: with three corners (binary 8×8: Table I gives
+//! 19.1 MHz @ 0.6 V, 190 MHz @ 0.8 V, 481 MHz @ 1.2 V via Θ = 2·k²·n_ch·f)
+//! all three parameters are identified; with two corners `α` is carried
+//! over from the three-point fit and `(V_t, k)` are solved exactly.
+
+/// Fitted alpha-power-law frequency curve, valid on `[vmin, vmax]`.
+#[derive(Debug, Clone, Copy)]
+pub struct VfCurve {
+    /// Threshold-like fitting voltage (V).
+    pub vt: f64,
+    /// Velocity-saturation exponent.
+    pub alpha: f64,
+    /// Scale constant (Hz·V).
+    pub k: f64,
+    /// Lowest valid supply voltage (0.6 V for SCM designs, 0.8 V for the
+    /// SRAM baseline, per §III-C).
+    pub vmin: f64,
+    /// Highest valid supply voltage (1.2 V nominal in UMC 65 nm).
+    pub vmax: f64,
+}
+
+fn alpha_from_pair(vt: f64, p0: (f64, f64), p1: (f64, f64)) -> f64 {
+    // f·V = k (V−vt)^α  ⇒  α = ln(f0·V0 / f1·V1) / ln((V0−vt)/(V1−vt))
+    ((p0.1 * p0.0) / (p1.1 * p1.0)).ln() / ((p0.0 - vt) / (p1.0 - vt)).ln()
+}
+
+impl VfCurve {
+    /// Fit all three parameters to exactly three (V, f) corners
+    /// (ascending V). Bisects on `vt` until both corner pairs agree on `α`.
+    pub fn fit3(points: [(f64, f64); 3], vmin: f64, vmax: f64) -> VfCurve {
+        let [p0, p1, p2] = points;
+        assert!(p0.0 < p1.0 && p1.0 < p2.0, "corners must be ascending in V");
+        let g = |vt: f64| alpha_from_pair(vt, p1, p0) - alpha_from_pair(vt, p2, p1);
+        let (mut lo, mut hi) = (1e-3, p0.0 - 1e-3);
+        assert!(
+            g(lo).signum() != g(hi).signum(),
+            "alpha-power law cannot fit these corners: {points:?}"
+        );
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if g(mid).signum() == g(lo).signum() {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let vt = 0.5 * (lo + hi);
+        let alpha = alpha_from_pair(vt, p1, p0);
+        let k = p2.1 * p2.0 / (p2.0 - vt).powf(alpha);
+        VfCurve { vt, alpha, k, vmin, vmax }
+    }
+
+    /// Fit `(vt, k)` to two corners with a given `α` (carried over from the
+    /// three-corner binary-architecture fit).
+    pub fn fit2(points: [(f64, f64); 2], alpha: f64, vmin: f64, vmax: f64) -> VfCurve {
+        let [p0, p1] = points;
+        assert!(p0.0 < p1.0);
+        // Solve ((V1−vt)/(V0−vt))^α = f1·V1/(f0·V0) for vt by bisection.
+        let target = (p1.1 * p1.0) / (p0.1 * p0.0);
+        let g = |vt: f64| ((p1.0 - vt) / (p0.0 - vt)).powf(alpha) - target;
+        let (mut lo, mut hi) = (1e-6, p0.0 - 1e-6);
+        assert!(g(lo) < 0.0 && g(hi) > 0.0, "cannot fit 2-point curve: {points:?}");
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if g(mid) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let vt = 0.5 * (lo + hi);
+        let k = p1.1 * p1.0 / (p1.0 - vt).powf(alpha);
+        VfCurve { vt, alpha, k, vmin, vmax }
+    }
+
+    /// Maximum clock frequency (Hz) at supply `v` (V). Panics outside the
+    /// curve's valid voltage range — the hardware does not operate there
+    /// (SRAM fails below 0.8 V, standard cells below 0.6 V, §III-C).
+    pub fn freq(&self, v: f64) -> f64 {
+        assert!(
+            v >= self.vmin - 1e-9 && v <= self.vmax + 1e-9,
+            "supply {v} V outside operating range [{}, {}] V",
+            self.vmin,
+            self.vmax
+        );
+        self.k * (v - self.vt).powf(self.alpha) / v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BIN8: [(f64, f64); 3] = [(0.6, 19.1e6), (0.8, 190.0e6), (1.2, 481.0e6)];
+
+    #[test]
+    fn fit3_reproduces_anchor_corners() {
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        for (v, f) in BIN8 {
+            let rel = (c.freq(v) - f).abs() / f;
+            assert!(rel < 1e-6, "corner {v} V: {} vs {f}", c.freq(v));
+        }
+        // Physically plausible parameters.
+        assert!(c.vt > 0.3 && c.vt < 0.6, "vt = {}", c.vt);
+        assert!(c.alpha > 1.0 && c.alpha < 2.0, "alpha = {}", c.alpha);
+    }
+
+    #[test]
+    fn fit2_reproduces_anchor_corners() {
+        let alpha = VfCurve::fit3(BIN8, 0.6, 1.2).alpha;
+        let pts = [(0.6, 17.5e6), (1.2, 480.0e6)];
+        let c = VfCurve::fit2(pts, alpha, 0.6, 1.2);
+        for (v, f) in pts {
+            assert!((c.freq(v) - f).abs() / f < 1e-6);
+        }
+        // Interpolated 0.8 V point should be near the sibling binary
+        // architecture's measured 190 MHz.
+        let f08 = c.freq(0.8);
+        assert!((150.0e6..230.0e6).contains(&f08), "f(0.8 V) = {f08}");
+    }
+
+    #[test]
+    fn freq_is_monotonic() {
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        let mut prev = 0.0;
+        let mut v = 0.6;
+        while v <= 1.2 {
+            let f = c.freq(v);
+            assert!(f > prev);
+            prev = f;
+            v += 0.01;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn freq_rejects_out_of_range_voltage() {
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        c.freq(0.5);
+    }
+}

@@ -1,0 +1,226 @@
+//! Data series regenerating the paper's figures (printed as tables /
+//! CSV-like series — this repo has no plotting dependencies).
+
+use super::paper;
+use super::soa;
+use crate::model::networks;
+use crate::power::{area_breakdown, metric_area_mge, ArchId, CorePowerModel, PowerBreakdown};
+
+/// Fig. 2 — execution-time share of convolution layers vs other layers for
+/// the scene-labeling CNN of [13], CPU vs GPU.
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    /// Convolution operations per frame (Eq. 7).
+    pub conv_ops: u64,
+    /// Non-convolution operations (activation, pooling, dense).
+    pub other_ops: u64,
+    /// Convolution share of *operations*.
+    pub conv_op_share: f64,
+    /// Measured convolution share of *time* on CPU ([13], the paper's bar).
+    pub cpu_conv_time_share: f64,
+    /// Measured convolution share of time on GPU.
+    pub gpu_conv_time_share: f64,
+    /// Implied per-op slowdown of non-conv layers on CPU (memory-bound).
+    pub cpu_other_slowdown: f64,
+    /// Implied per-op slowdown on GPU.
+    pub gpu_other_slowdown: f64,
+}
+
+/// Compute Fig. 2 from the scene-labeling network's op counts plus the
+/// measured time shares of [13]. The interesting quantitative content is
+/// that convolutions are >99.9% of operations yet only ~80–90% of time —
+/// i.e. non-conv layers are orders of magnitude less efficient, which is
+/// why an accelerator may focus on convolution (§III).
+pub fn fig2() -> Fig2 {
+    let net = networks::scene_labeling();
+    let conv_ops = net.conv_ops();
+    // Non-conv ops: one ReLU per conv output pixel, 2×2 max-pool (3
+    // compares per output) after each stage, dense classifier.
+    let mut other_ops: u64 = 0;
+    for c in net.conv_layers() {
+        let outputs = (c.n_out * c.out_h() * c.out_w()) as u64;
+        other_ops += outputs; // ReLU
+        other_ops += (outputs / 4) * 3; // 2×2 max-pool compares
+    }
+    for l in &net.layers {
+        if let crate::model::Layer::Dense(d) = l {
+            other_ops += d.ops();
+        }
+    }
+    let conv_op_share = conv_ops as f64 / (conv_ops + other_ops) as f64;
+    let slowdown = |time_share: f64| {
+        // t_conv/t_other = share/(1-share); ops ratio known ⇒ per-op ratio.
+        let time_ratio = (1.0 - time_share) / time_share;
+        time_ratio * conv_ops as f64 / other_ops as f64
+    };
+    Fig2 {
+        conv_ops,
+        other_ops,
+        conv_op_share,
+        cpu_conv_time_share: paper::fig2::CPU_CONV_SHARE,
+        gpu_conv_time_share: paper::fig2::GPU_CONV_SHARE,
+        cpu_other_slowdown: slowdown(paper::fig2::CPU_CONV_SHARE),
+        gpu_other_slowdown: slowdown(paper::fig2::GPU_CONV_SHARE),
+    }
+}
+
+/// Fig. 6 — area breakdown per architecture (kGE).
+pub fn fig6() -> Vec<(ArchId, crate::power::AreaBreakdown)> {
+    ArchId::all().iter().map(|&a| (a, area_breakdown(a))).collect()
+}
+
+/// One Fig. 11 sweep point.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    /// Core supply (V).
+    pub v: f64,
+    /// Clock (MHz).
+    pub f_mhz: f64,
+    /// Peak throughput (GOp/s).
+    pub theta_gops: f64,
+    /// Core energy efficiency (TOp/s/W).
+    pub en_eff_tops_w: f64,
+}
+
+/// Fig. 11 — voltage sweep of throughput and core energy efficiency for
+/// one architecture (the paper sweeps the Q2.9 baseline and YodaNN).
+pub fn fig11_sweep(arch: ArchId, points: usize) -> Vec<SweepPoint> {
+    let core = CorePowerModel::new(arch);
+    let (v0, v1) = (arch.v_min(), 1.2);
+    (0..points)
+        .map(|i| {
+            let v = v0 + (v1 - v0) * i as f64 / (points - 1) as f64;
+            let theta = core.theta_peak(v, 7);
+            let p = core.p_core_slot7(v);
+            SweepPoint {
+                v,
+                f_mhz: core.freq(v) / 1e6,
+                theta_gops: theta / 1e9,
+                en_eff_tops_w: theta / p / 1e12,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 12 — core power breakdown per architecture at 1.2 V (the paper
+/// plots 400 MHz; report both the model point at f(1.2 V) and rescaled).
+pub fn fig12_at_400mhz() -> Vec<(ArchId, PowerBreakdown)> {
+    ArchId::all()
+        .iter()
+        .map(|&a| {
+            let m = CorePowerModel::new(a);
+            let b = m.breakdown(1.2);
+            let s = 400.0e6 / m.freq(1.2);
+            (
+                a,
+                PowerBreakdown {
+                    memory: b.memory * s,
+                    sop: b.sop * s,
+                    filter_bank: b.filter_bank * s,
+                    scale_bias: b.scale_bias * s,
+                    other: b.other * s,
+                },
+            )
+        })
+        .collect()
+}
+
+/// One Fig. 13 point (ours or state of the art).
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// Label.
+    pub name: String,
+    /// Core energy efficiency (TOp/s/W).
+    pub en_eff: f64,
+    /// Core area efficiency (GOp/s/MGE).
+    pub area_eff: f64,
+    /// True for YodaNN sweep points.
+    pub ours: bool,
+}
+
+/// Fig. 13 — YodaNN's voltage sweep against the published SoA points.
+pub fn fig13(points: usize) -> Vec<ParetoPoint> {
+    let mut out: Vec<ParetoPoint> = fig11_sweep(ArchId::Bin32Multi, points)
+        .into_iter()
+        .map(|p| ParetoPoint {
+            name: format!("YodaNN @{:.2}V", p.v),
+            en_eff: p.en_eff_tops_w,
+            area_eff: p.theta_gops / metric_area_mge(ArchId::Bin32Multi),
+            ours: true,
+        })
+        .collect();
+    out.extend(soa::POINTS.iter().map(|p| ParetoPoint {
+        name: p.name.to_string(),
+        en_eff: p.en_eff_tops_w,
+        area_eff: p.area_eff_gops_mge,
+        ours: false,
+    }));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_conv_dominates_ops() {
+        let f = fig2();
+        assert!(f.conv_op_share > 0.999, "{}", f.conv_op_share);
+        // Non-conv layers must be massively less efficient to explain the
+        // measured time shares.
+        assert!(f.cpu_other_slowdown > 50.0);
+        assert!(f.gpu_other_slowdown > 100.0);
+    }
+
+    #[test]
+    fn fig11_yodann_efficiency_rises_toward_low_voltage() {
+        let sweep = fig11_sweep(ArchId::Bin32Multi, 13);
+        assert!((sweep.first().unwrap().v - 0.6).abs() < 1e-9);
+        assert!((sweep.last().unwrap().v - 1.2).abs() < 1e-9);
+        // Energy efficiency is monotonically decreasing in V,
+        // throughput increasing.
+        for w in sweep.windows(2) {
+            assert!(w[1].en_eff_tops_w < w[0].en_eff_tops_w);
+            assert!(w[1].theta_gops > w[0].theta_gops);
+        }
+        // Headline endpoints.
+        assert!((sweep[0].en_eff_tops_w - 61.2).abs() < 1.0);
+        assert!((sweep.last().unwrap().theta_gops - 1505.0).abs() < 20.0);
+    }
+
+    #[test]
+    fn fig11_baseline_stops_at_0v8() {
+        let sweep = fig11_sweep(ArchId::Q29Fixed8, 5);
+        assert!((sweep.first().unwrap().v - 0.8).abs() < 1e-9, "SRAM floor");
+        // YodaNN dominates the baseline at every shared voltage.
+        let yoda = fig11_sweep(ArchId::Bin32Multi, 5);
+        let y12 = yoda.last().unwrap();
+        let q12 = sweep.last().unwrap();
+        assert!(y12.en_eff_tops_w > 4.0 * q12.en_eff_tops_w);
+    }
+
+    #[test]
+    fn fig12_multi_kernel_sop_dominates() {
+        let rows = fig12_at_400mhz();
+        let (_, multi) =
+            rows.iter().find(|(a, _)| *a == ArchId::Bin32Multi).unwrap();
+        assert!(multi.sop > multi.memory && multi.sop > multi.filter_bank);
+        // Totals at 400 MHz match the calibration (§ Table II back-solve).
+        assert!((multi.total() - 127.1e-3).abs() / 127.1e-3 < 0.01);
+    }
+
+    #[test]
+    fn fig13_yodann_forms_pareto_front() {
+        let pts = fig13(13);
+        let ours: Vec<&ParetoPoint> = pts.iter().filter(|p| p.ours).collect();
+        let soa: Vec<&ParetoPoint> = pts.iter().filter(|p| !p.ours).collect();
+        // Every SoA point is dominated by at least one YodaNN sweep point.
+        for s in &soa {
+            assert!(
+                ours.iter().any(|o| o.en_eff >= s.en_eff && o.area_eff >= s.area_eff),
+                "{} not dominated",
+                s.name
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Paper-reported reference values, table renderers and figure series.
+//!
+//! * [`paper`] — every number the paper prints in Tables I–V and the
+//!   headline claims, as constants, so benches/tests can report
+//!   paper-vs-measured deltas.
+//! * [`table`] — plain-text table renderer used by the CLI and benches.
+//! * [`tables`] — generators that assemble each paper table from the
+//!   models (the "measured" side).
+//! * [`figures`] — data series for Figs. 2, 6, 11, 12 and 13.
+//! * [`soa`] — the state-of-the-art accelerator points of Fig. 13.
+
+pub mod figures;
+pub mod paper;
+pub mod soa;
+pub mod table;
+pub mod tables;
+
+pub use table::Table;

@@ -1,0 +1,194 @@
+//! The paper's reported numbers, verbatim, used for paper-vs-measured
+//! reporting in benches, tests and EXPERIMENTS.md.
+
+/// Headline claims (abstract / §V).
+pub mod headline {
+    /// Peak throughput at 1.2 V (GOp/s).
+    pub const PEAK_GOPS_1V2: f64 = 1510.0;
+    /// Peak core energy efficiency at 0.6 V (TOp/s/W).
+    pub const PEAK_TOPS_W_0V6: f64 = 61.2;
+    /// Core power at 0.6 V (µW).
+    pub const CORE_UW_0V6: f64 = 895.0;
+    /// Peak throughput at 0.6 V (GOp/s).
+    pub const PEAK_GOPS_0V6: f64 = 55.0;
+    /// Peak area efficiency at 1.2 V (GOp/s/MGE).
+    pub const AREA_EFF_1V2: f64 = 1135.0;
+    /// Core area (MGE).
+    pub const CORE_AREA_MGE: f64 = 1.33;
+    /// Max clock at 1.2 V (MHz).
+    pub const FMAX_1V2_MHZ: f64 = 480.0;
+    /// Energy-efficiency gain of the binary core vs the 12-bit MAC
+    /// baseline at 1.2 V (§I).
+    pub const CORE_EFF_GAIN_VS_Q29: f64 = 5.1;
+    /// Throughput gain vs the baseline at 1.2 V.
+    pub const THROUGHPUT_GAIN_VS_Q29: f64 = 1.3;
+    /// Efficiency gain at 0.6 V vs the SRAM fixed-point design at 0.8 V.
+    pub const EFF_GAIN_VS_Q29_0V8: f64 = 11.6;
+    /// SCM vs SRAM memory power reduction at 1.2 V.
+    pub const SCM_VS_SRAM: f64 = 3.25;
+}
+
+/// A Table I column: fixed-point Q2.9 vs binary at 8×8 channels.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Col {
+    /// Architecture label.
+    pub arch: &'static str,
+    /// Core supply (V).
+    pub v: f64,
+    /// Peak throughput (GOp/s).
+    pub peak_gops: f64,
+    /// Average core power (mW).
+    pub core_mw: f64,
+    /// Average device power (mW).
+    pub device_mw: f64,
+    /// Core area (MGE).
+    pub area_mge: f64,
+    /// Core energy efficiency (TOp/s/W).
+    pub en_eff_core: f64,
+    /// Device energy efficiency (TOp/s/W).
+    pub en_eff_device: f64,
+    /// Core area efficiency (GOp/s/MGE).
+    pub area_eff_core: f64,
+}
+
+/// Table I as printed.
+pub const TABLE1: [Table1Col; 5] = [
+    Table1Col {
+        arch: "Q2.9",
+        v: 1.2,
+        peak_gops: 348.0,
+        core_mw: 185.0,
+        device_mw: 580.0,
+        area_mge: 0.72,
+        en_eff_core: 1.88,
+        en_eff_device: 0.60,
+        area_eff_core: 487.0,
+    },
+    Table1Col {
+        arch: "Bin",
+        v: 1.2,
+        peak_gops: 377.0,
+        core_mw: 39.0,
+        device_mw: 434.0,
+        area_mge: 0.60,
+        en_eff_core: 9.61,
+        en_eff_device: 0.87,
+        area_eff_core: 631.0,
+    },
+    Table1Col {
+        arch: "Q2.9",
+        v: 0.8,
+        peak_gops: 131.0,
+        core_mw: 31.0,
+        device_mw: 143.0,
+        area_mge: 0.72,
+        en_eff_core: 4.26,
+        en_eff_device: 0.89,
+        area_eff_core: 183.0,
+    },
+    Table1Col {
+        arch: "Bin",
+        v: 0.8,
+        peak_gops: 149.0,
+        core_mw: 5.1,
+        device_mw: 162.0,
+        area_mge: 0.60,
+        en_eff_core: 29.05,
+        en_eff_device: 0.92,
+        area_eff_core: 247.0,
+    },
+    Table1Col {
+        arch: "Bin",
+        v: 0.6,
+        peak_gops: 15.0,
+        core_mw: 0.26,
+        device_mw: 15.54,
+        area_mge: 0.60,
+        en_eff_core: 58.56,
+        en_eff_device: 0.98,
+        area_eff_core: 25.0,
+    },
+];
+
+/// Table II — device energy efficiency (GOp/s/W) at 1.2 V core / 1.8 V
+/// pads, by kernel size × architecture. `None` where the paper leaves the
+/// cell empty.
+pub struct Table2Row {
+    /// Kernel size (7, 5, 3).
+    pub k: usize,
+    /// Q2.9 baseline.
+    pub q29: Option<f64>,
+    /// Binary 8×8.
+    pub b8: f64,
+    /// Binary 16×16.
+    pub b16: f64,
+    /// Binary 32×32 multi-kernel.
+    pub b32: f64,
+    /// Binary 32×32 fixed-7×7.
+    pub b32_fixed: Option<f64>,
+}
+
+/// Table II as printed.
+pub const TABLE2: [Table2Row; 3] = [
+    Table2Row { k: 7, q29: Some(600.0), b8: 856.0, b16: 1611.0, b32: 2756.0, b32_fixed: Some(3001.0) },
+    Table2Row { k: 5, q29: None, b8: 611.0, b16: 1170.0, b32: 2107.0, b32_fixed: None },
+    Table2Row { k: 3, q29: None, b8: 230.0, b16: 452.0, b32: 859.0, b32_fixed: None },
+];
+
+/// A Table IV / V row (per-network aggregate).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkRow {
+    /// Network id (matches `model::networks`).
+    pub id: &'static str,
+    /// Average core energy efficiency (TOp/s/W).
+    pub en_eff: f64,
+    /// Average throughput (GOp/s).
+    pub theta: f64,
+    /// Frames per second.
+    pub fps: f64,
+    /// Energy per frame (the paper prints "mJ"; the rows are only
+    /// self-consistent as µJ — see DESIGN.md §5).
+    pub energy: f64,
+}
+
+/// Table IV — energy-optimal corner, 0.6 V.
+pub const TABLE4: [NetworkRow; 7] = [
+    NetworkRow { id: "bc-cifar10", en_eff: 56.7, theta: 19.1, fps: 15.8, energy: 20.8 },
+    NetworkRow { id: "bc-svhn", en_eff: 50.6, theta: 16.5, fps: 53.2, energy: 5.5 },
+    NetworkRow { id: "alexnet", en_eff: 14.1, theta: 3.3, fps: 0.5, energy: 352.2 },
+    NetworkRow { id: "resnet18", en_eff: 48.1, theta: 16.2, fps: 1.1, energy: 311.0 },
+    NetworkRow { id: "resnet34", en_eff: 52.5, theta: 17.8, fps: 0.6, energy: 548.4 },
+    NetworkRow { id: "vgg13", en_eff: 54.3, theta: 18.2, fps: 0.8, energy: 398.1 },
+    NetworkRow { id: "vgg19", en_eff: 55.9, theta: 18.9, fps: 0.5, energy: 683.7 },
+];
+
+/// Table V — throughput-optimal corner, 1.2 V.
+pub const TABLE5: [NetworkRow; 7] = [
+    NetworkRow { id: "bc-cifar10", en_eff: 8.6, theta: 525.4, fps: 434.8, energy: 136.6 },
+    NetworkRow { id: "bc-svhn", en_eff: 7.7, theta: 454.4, fps: 1428.6, energy: 36.3 },
+    NetworkRow { id: "alexnet", en_eff: 2.2, theta: 89.9, fps: 14.0, energy: 2244.4 },
+    NetworkRow { id: "resnet18", en_eff: 7.3, theta: 446.4, fps: 29.2, energy: 2030.5 },
+    NetworkRow { id: "resnet34", en_eff: 8.0, theta: 489.5, fps: 16.8, energy: 3587.2 },
+    NetworkRow { id: "vgg13", en_eff: 8.3, theta: 501.8, fps: 22.4, energy: 2608.7 },
+    NetworkRow { id: "vgg19", en_eff: 8.5, theta: 519.8, fps: 13.3, energy: 4481.8 },
+];
+
+/// Selected Table III rows used for spot checks: (network id, row label,
+/// η_tile, η_idle, P̃_real, Θ_real GOp/s, EnEff TOp/s/W).
+pub const TABLE3_SPOT: [(&str, &str, f64, f64, f64, f64, f64); 6] = [
+    ("bc-cifar10", "1", 1.00, 0.09, 0.35, 1.9, 16.0),
+    ("bc-cifar10", "2", 1.00, 1.00, 1.00, 20.1, 59.2),
+    ("resnet18", "1", 0.86, 0.09, 0.35, 4.4, 15.1),
+    ("resnet18", "2-5", 0.95, 1.00, 1.00, 19.1, 56.2),
+    ("vgg13", "5", 0.97, 1.00, 1.00, 19.4, 57.2),
+    ("alexnet", "2", 0.93, 0.75, 1.00, 39.1, 45.2),
+];
+
+/// Fig. 2 — share of execution time spent in convolution layers for the
+/// scene-labeling CNN of [13], CPU vs GPU.
+pub mod fig2 {
+    /// Convolution share of total time on CPU (≈89%).
+    pub const CPU_CONV_SHARE: f64 = 0.89;
+    /// Convolution share on GPU (≈79%).
+    pub const GPU_CONV_SHARE: f64 = 0.79;
+}

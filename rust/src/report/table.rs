@@ -1,0 +1,132 @@
+//! Minimal plain-text table renderer (right-aligned numeric columns).
+
+/// A simple text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Append a footnote printed under the table.
+    pub fn note(&mut self, text: &str) -> &mut Self {
+        self.notes.push(text.to_string());
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let sep: String = width
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:>w$} ", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("{sep}\n"));
+        out.push_str(&format!("{}\n", fmt_row(&self.header)));
+        out.push_str(&format!("{sep}\n"));
+        for row in &self.rows {
+            out.push_str(&format!("{}\n", fmt_row(row)));
+        }
+        out.push_str(&format!("{sep}\n"));
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn fmt(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Relative delta "measured vs paper" as a signed percentage string.
+pub fn delta_pct(measured: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return "n/a".into();
+    }
+    format!("{:+.1}%", (measured - paper) / paper * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "123.45".into()]);
+        t.note("hello");
+        let s = t.render();
+        assert!(s.contains("metric"));
+        assert!(s.contains("123.45"));
+        assert!(s.contains("note: hello"));
+        // All data lines have equal width.
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn delta_pct_signs() {
+        assert_eq!(delta_pct(110.0, 100.0), "+10.0%");
+        assert_eq!(delta_pct(95.0, 100.0), "-5.0%");
+        assert_eq!(delta_pct(1.0, 0.0), "n/a");
+    }
+}

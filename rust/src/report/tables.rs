@@ -1,0 +1,308 @@
+//! Generators assembling the paper's tables from the models — the
+//! "measured" side of every paper-vs-measured comparison.
+
+use super::paper;
+use super::table::{delta_pct, fmt, Table};
+use crate::model::{evaluate_network, networks, Corner, KernelMode};
+use crate::power::{area_breakdown, ArchId, CorePowerModel, IoPowerModel};
+
+fn arch_for(label: &str) -> ArchId {
+    match label {
+        "Q2.9" => ArchId::Q29Fixed8,
+        "Bin" => ArchId::Bin8,
+        other => panic!("unknown Table I arch {other}"),
+    }
+}
+
+/// Measured values for one Table I column.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Measured {
+    /// Architecture.
+    pub arch: ArchId,
+    /// Supply voltage (V).
+    pub v: f64,
+    /// Peak throughput (GOp/s).
+    pub peak_gops: f64,
+    /// Core power (mW).
+    pub core_mw: f64,
+    /// Device power (mW).
+    pub device_mw: f64,
+    /// Core area (MGE).
+    pub area_mge: f64,
+    /// Core energy efficiency (TOp/s/W).
+    pub en_eff_core: f64,
+    /// Device energy efficiency (TOp/s/W).
+    pub en_eff_device: f64,
+    /// Core area efficiency (GOp/s/MGE).
+    pub area_eff_core: f64,
+}
+
+/// Compute one Table-I column from the models.
+pub fn table1_column(arch: ArchId, v: f64) -> Table1Measured {
+    let core = CorePowerModel::new(arch);
+    let io = if arch.binary_weights() { IoPowerModel::binary() } else { IoPowerModel::q29() };
+    let f = core.freq(v);
+    let peak = core.theta_peak(v, 7);
+    let p_core = core.p_core_slot7(v);
+    let p_dev = p_core + io.power(f, KernelMode::Slot7);
+    let area = area_breakdown(arch).total_mge();
+    Table1Measured {
+        arch,
+        v,
+        peak_gops: peak / 1e9,
+        core_mw: p_core * 1e3,
+        device_mw: p_dev * 1e3,
+        area_mge: area,
+        en_eff_core: peak / p_core / 1e12,
+        en_eff_device: peak / p_dev / 1e12,
+        area_eff_core: peak / 1e9 / area,
+    }
+}
+
+/// Table I — fixed-point Q2.9 vs binary architecture, 8×8 channels.
+/// Each cell prints `measured (paper Δ)`.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I: Fixed-point Q2.9 vs binary architecture 8x8 — measured (paper, delta)",
+        &["metric", "Q2.9 1.2V", "Bin 1.2V", "Q2.9 0.8V", "Bin 0.8V", "Bin 0.6V"],
+    );
+    let cols: Vec<(Table1Measured, &paper::Table1Col)> = paper::TABLE1
+        .iter()
+        .map(|p| (table1_column(arch_for(p.arch), p.v), p))
+        .collect();
+    let mut push = |name: &str, f: &dyn Fn(&Table1Measured) -> f64, g: &dyn Fn(&paper::Table1Col) -> f64, d: usize| {
+        let mut row = vec![name.to_string()];
+        for (m, p) in &cols {
+            row.push(format!("{} ({}, {})", fmt(f(m), d), fmt(g(p), d), delta_pct(f(m), g(p))));
+        }
+        t.row(row);
+    };
+    push("Peak Throughput (GOp/s)", &|m| m.peak_gops, &|p| p.peak_gops, 0);
+    push("Avg. Power Core (mW)", &|m| m.core_mw, &|p| p.core_mw, 2);
+    push("Avg. Power Device (mW)", &|m| m.device_mw, &|p| p.device_mw, 1);
+    push("Area Core (MGE)", &|m| m.area_mge, &|p| p.area_mge, 2);
+    push("Energy Core (TOp/s/W)", &|m| m.en_eff_core, &|p| p.en_eff_core, 2);
+    push("Energy Device (TOp/s/W)", &|m| m.en_eff_device, &|p| p.en_eff_device, 2);
+    push("Area Core (GOp/s/MGE)", &|m| m.area_eff_core, &|p| p.area_eff_core, 0);
+    t.note("core power/throughput corners are calibration anchors (exact by construction);");
+    t.note("device rows exercise the I/O pad model (fitted, see power::io).");
+    t
+}
+
+/// Device energy efficiency (GOp/s/W) for a kernel size at 400 MHz, the
+/// operating point of the paper's Table II.
+pub fn table2_cell(arch: ArchId, k: usize) -> f64 {
+    let core = CorePowerModel::new(arch);
+    let io = if arch.binary_weights() { IoPowerModel::binary() } else { IoPowerModel::q29() };
+    // Table II evaluates the *flexible* accelerator family: every binary
+    // column except "32² (fixed)" supports the dual 5×5/3×3 modes (its 5×5
+    // and 3×3 rows only make sense with two output streams); Table I's
+    // binary 8×8, by contrast, is the fixed-7×7 variant.
+    let multi = arch.binary_weights() && arch != ArchId::Bin32Fixed;
+    let f400 = 400.0e6;
+    let filters = if multi { KernelMode::for_kernel(k).filters_per_sop() } else { 1 };
+    let theta = 2.0 * (k * k) as f64 * (arch.n_ch() * filters) as f64 * f400;
+    // Core power rescaled linearly from f(1.2 V) to 400 MHz.
+    let p_core = core.p_core_mode(1.2, k, multi) * f400 / core.freq(1.2);
+    let p_io = io.power_for_kernel(f400, k, multi);
+    theta / (p_core + p_io) / 1e9
+}
+
+/// Table II — device energy efficiency by filter size and architecture.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II: Device energy efficiency (GOp/s/W) @1.2V core, 400 MHz — measured (paper, delta)",
+        &["kernel", "Q2.9", "8x8", "16x16", "32x32", "32^2 fixed"],
+    );
+    for row in &paper::TABLE2 {
+        let mut cells = vec![format!("{0}x{0}", row.k)];
+        let cell = |arch: ArchId, p: Option<f64>| match p {
+            Some(pv) => {
+                let m = table2_cell(arch, row.k);
+                format!("{} ({}, {})", fmt(m, 0), fmt(pv, 0), delta_pct(m, pv))
+            }
+            None => {
+                let m = table2_cell(arch, row.k);
+                format!("{} (-)", fmt(m, 0))
+            }
+        };
+        cells.push(cell(ArchId::Q29Fixed8, row.q29));
+        cells.push(cell(ArchId::Bin8, Some(row.b8)));
+        cells.push(cell(ArchId::Bin16, Some(row.b16)));
+        cells.push(cell(ArchId::Bin32Multi, Some(row.b32)));
+        cells.push(cell(ArchId::Bin32Fixed, row.b32_fixed));
+        t.row(cells);
+    }
+    t.note("Q2.9 and fixed-kernel archs zero-pad small kernels into 7x7 (single stream);");
+    t.note("multi-kernel archs run 5x5/3x3 in dual-filter mode (two output streams).");
+    t
+}
+
+/// Table III — per-layer evaluation of one network at a corner.
+pub fn table3(net_id: &str, corner: Corner) -> Table {
+    let net = networks::network(net_id).unwrap_or_else(|| panic!("unknown network {net_id}"));
+    let eval = evaluate_network(&net, corner);
+    let mut t = Table::new(
+        &format!(
+            "Table III ({}): per-layer evaluation @{}V ({})",
+            net.name,
+            corner.v,
+            corner.arch.name()
+        ),
+        &[
+            "L", "hk", "w", "h", "n_in", "n_out", "x", "eta_tile", "eta_idle", "P~real",
+            "Theta (GOp/s)", "EnEff (TOp/s/W)", "#MOp", "t (ms)", "E (uJ)",
+        ],
+    );
+    for (layer, row) in net.conv_layers().zip(eval.rows.iter()) {
+        t.row(vec![
+            row.label.to_string(),
+            layer.k.to_string(),
+            layer.w.to_string(),
+            layer.h.to_string(),
+            layer.n_in.to_string(),
+            layer.n_out.to_string(),
+            row.repeat.to_string(),
+            fmt(row.eta_tile, 2),
+            fmt(row.eta_idle, 2),
+            fmt(row.p_real, 2),
+            fmt(row.theta_real / 1e9, 1),
+            fmt(row.en_eff / 1e12, 1),
+            fmt(row.ops as f64 / 1e6, 0),
+            fmt(row.t * 1e3, 1),
+            fmt(row.energy * 1e6, 1),
+        ]);
+    }
+    t.note("E column in µJ: the paper's 'mJ' header is a unit typo (rows only sum as µJ).");
+    t
+}
+
+/// Tables IV / V — all networks at a corner, with paper deltas.
+pub fn table45(corner: Corner) -> Table {
+    let (which, paper_rows): (&str, &[paper::NetworkRow]) = if corner.v < 1.0 {
+        ("IV (energy-optimal, 0.6V)", &paper::TABLE4)
+    } else {
+        ("V (throughput-optimal, 1.2V)", &paper::TABLE5)
+    };
+    let mut t = Table::new(
+        &format!("Table {which}: network-level results — measured (paper, delta)"),
+        &["Network", "img", "EnEff TOp/s/W", "Theta GOp/s", "FPS", "Energy uJ"],
+    );
+    for p in paper_rows {
+        let net = networks::network(p.id).unwrap();
+        let e = evaluate_network(&net, corner);
+        t.row(vec![
+            net.name.to_string(),
+            format!("{}x{}", e.img.0, e.img.1),
+            format!("{} ({}, {})", fmt(e.avg_en_eff / 1e12, 1), p.en_eff, delta_pct(e.avg_en_eff / 1e12, p.en_eff)),
+            format!("{} ({}, {})", fmt(e.avg_theta / 1e9, 1), p.theta, delta_pct(e.avg_theta / 1e9, p.theta)),
+            format!("{} ({}, {})", fmt(e.fps, 1), p.fps, delta_pct(e.fps, p.fps)),
+            format!("{} ({}, {})", fmt(e.frame_energy * 1e6, 1), p.energy, delta_pct(e.frame_energy * 1e6, p.energy)),
+        ]);
+    }
+    t.note("AlexNet deltas are larger: the paper's AlexNet rows are not self-consistent");
+    t.note("(printed eta x Theta_peak != printed Theta_real; see EXPERIMENTS.md).");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_metrics() {
+        let t = table1();
+        assert_eq!(t.len(), 7);
+        let s = t.render();
+        assert!(s.contains("Peak Throughput"));
+        assert!(s.contains("GOp/s/MGE"));
+    }
+
+    #[test]
+    fn table1_core_anchors_have_zero_delta() {
+        let m = table1_column(ArchId::Bin8, 0.6);
+        assert!((m.peak_gops - 15.0).abs() < 0.2);
+        assert!((m.core_mw - 0.26).abs() < 0.01);
+    }
+
+    #[test]
+    fn table2_shape_holds() {
+        // Who-wins shape: efficiency grows with n_ch and with kernel size.
+        for &k in &[3usize, 5, 7] {
+            let b8 = table2_cell(ArchId::Bin8, k);
+            let b16 = table2_cell(ArchId::Bin16, k);
+            let b32 = table2_cell(ArchId::Bin32Multi, k);
+            assert!(b8 < b16 && b16 < b32, "k={k}: {b8} {b16} {b32}");
+        }
+        let t7 = table2_cell(ArchId::Bin32Multi, 7);
+        let t5 = table2_cell(ArchId::Bin32Multi, 5);
+        let t3 = table2_cell(ArchId::Bin32Multi, 3);
+        assert!(t7 > t5 && t5 > t3);
+        // Binary beats the Q2.9 baseline at 7×7.
+        assert!(table2_cell(ArchId::Bin8, 7) > table2_cell(ArchId::Q29Fixed8, 7));
+    }
+
+    #[test]
+    fn table2_numbers_within_10pct_of_paper() {
+        for row in &paper::TABLE2 {
+            let checks = [
+                (ArchId::Bin8, Some(row.b8)),
+                (ArchId::Bin16, Some(row.b16)),
+                (ArchId::Bin32Multi, Some(row.b32)),
+                (ArchId::Bin32Fixed, row.b32_fixed),
+                (ArchId::Q29Fixed8, row.q29),
+            ];
+            for (arch, p) in checks {
+                if let Some(pv) = p {
+                    let m = table2_cell(arch, row.k);
+                    assert!(
+                        (m - pv).abs() / pv < 0.10,
+                        "k={} {:?}: measured {m:.0} vs paper {pv}",
+                        row.k,
+                        arch
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table3_has_row_per_conv_layer() {
+        let t = table3("resnet18", Corner::energy_optimal());
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    fn table3_spot_rows_match_paper() {
+        // The selected Table III rows the paper prints (excluding the
+        // inconsistent AlexNet first-layer rows) reproduce within a few %.
+        for &(net_id, label, e_tile, e_idle, p_real, theta, en_eff) in &paper::TABLE3_SPOT {
+            let net = networks::network(net_id).unwrap();
+            let eval = crate::model::evaluate_network(&net, Corner::energy_optimal());
+            let row = eval
+                .rows
+                .iter()
+                .find(|r| r.label == label)
+                .unwrap_or_else(|| panic!("{net_id} row {label}"));
+            assert!((row.eta_tile - e_tile).abs() < 0.011, "{net_id}/{label} eta_tile");
+            assert!((row.eta_idle - e_idle).abs() < 0.011, "{net_id}/{label} eta_idle");
+            assert!((row.p_real - p_real).abs() < 0.2, "{net_id}/{label} p_real");
+            assert!(
+                (row.theta_real / 1e9 - theta).abs() / theta < 0.03,
+                "{net_id}/{label} theta {} vs {theta}",
+                row.theta_real / 1e9
+            );
+            assert!(
+                (row.en_eff / 1e12 - en_eff).abs() / en_eff < 0.07,
+                "{net_id}/{label} en_eff {} vs {en_eff}",
+                row.en_eff / 1e12
+            );
+        }
+    }
+
+    #[test]
+    fn table45_renders_both_corners() {
+        assert_eq!(table45(Corner::energy_optimal()).len(), 7);
+        assert_eq!(table45(Corner::throughput_optimal()).len(), 7);
+    }
+}

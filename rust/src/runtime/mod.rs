@@ -1,0 +1,274 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden model
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! it on the XLA CPU client — the reproduction of the paper's Torch
+//! golden-model testbench (§IV-B), with Python never on the request path.
+//!
+//! Artifacts are HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::workload::Image;
+use crate::Result;
+use anyhow::{anyhow, Context};
+
+/// Metadata of one golden-block artifact (a `manifest.txt` line).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Artifact stem (`block_k3_c32x64_16x16`).
+    pub name: String,
+    /// Kernel size.
+    pub k: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Output channels.
+    pub n_out: usize,
+    /// Tile height.
+    pub h: usize,
+    /// Tile width.
+    pub w: usize,
+    /// Zero-padded convolution.
+    pub zero_pad: bool,
+}
+
+impl ArtifactMeta {
+    /// Parse one manifest line: `name k n_in n_out h w zero_pad`.
+    pub fn parse(line: &str) -> Result<ArtifactMeta> {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 7 {
+            return Err(anyhow!("bad manifest line: {line:?}"));
+        }
+        Ok(ArtifactMeta {
+            name: f[0].to_string(),
+            k: f[1].parse()?,
+            n_in: f[2].parse()?,
+            n_out: f[3].parse()?,
+            h: f[4].parse()?,
+            w: f[5].parse()?,
+            zero_pad: f[6] == "1",
+        })
+    }
+}
+
+/// A compiled golden-block executable.
+pub struct GoldenBlock {
+    /// Artifact metadata.
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GoldenBlock {
+    /// Execute the golden block: image `[n_in, h, w]`, weights
+    /// `[n_out, n_in, k, k]` (±1), per-channel raw-Q2.9 scale/bias.
+    /// Returns the raw-Q2.9 output image `[n_out, out_h, out_w]`.
+    pub fn run(
+        &self,
+        image: &Image,
+        weights: &crate::workload::BinaryKernels,
+        sb: &crate::workload::ScaleBias,
+    ) -> Result<Image> {
+        let m = &self.meta;
+        if (image.c, image.h, image.w) != (m.n_in, m.h, m.w) {
+            return Err(anyhow!(
+                "image {}x{}x{} does not match artifact {} ({}x{}x{})",
+                image.c,
+                image.h,
+                image.w,
+                m.name,
+                m.n_in,
+                m.h,
+                m.w
+            ));
+        }
+        if (weights.n_out, weights.n_in, weights.k) != (m.n_out, m.n_in, m.k) {
+            return Err(anyhow!("weights do not match artifact {}", m.name));
+        }
+        let to_i32 = |v: &[i64]| -> Vec<i32> { v.iter().map(|&x| x as i32).collect() };
+        let x = xla::Literal::vec1(&to_i32(&image.data)).reshape(&[
+            m.n_in as i64,
+            m.h as i64,
+            m.w as i64,
+        ])?;
+        let wv: Vec<i32> = weights.bits.iter().map(|&b| if b { 1 } else { -1 }).collect();
+        let w = xla::Literal::vec1(&wv).reshape(&[
+            m.n_out as i64,
+            m.n_in as i64,
+            m.k as i64,
+            m.k as i64,
+        ])?;
+        let alpha = xla::Literal::vec1(&to_i32(&sb.alpha));
+        let beta = xla::Literal::vec1(&to_i32(&sb.beta));
+
+        let result = self.exe.execute::<xla::Literal>(&[x, w, alpha, beta])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<i32>()?;
+        let (out_h, out_w) = if m.zero_pad {
+            (m.h, m.w)
+        } else {
+            (m.h - m.k + 1, m.w - m.k + 1)
+        };
+        if values.len() != m.n_out * out_h * out_w {
+            return Err(anyhow!("unexpected golden output size {}", values.len()));
+        }
+        Ok(Image {
+            c: m.n_out,
+            h: out_h,
+            w: out_w,
+            data: values.into_iter().map(|v| v as i64).collect(),
+        })
+    }
+}
+
+/// The artifact registry + PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    cache: HashMap<String, GoldenBlock>,
+    smallnet: Option<xla::PjRtLoadedExecutable>,
+    smallnet_compiled: bool,
+}
+
+impl Runtime {
+    /// Open the runtime over an artifacts directory (reads
+    /// `manifest.txt`; artifacts themselves compile lazily).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(ArtifactMeta::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+            smallnet: None,
+            smallnet_compiled: false,
+        })
+    }
+
+    /// Open `artifacts/` relative to the repo root (assumes cwd or its
+    /// parents contain it — tests and examples run from the repo).
+    pub fn open_default() -> Result<Runtime> {
+        for base in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(base).join("manifest.txt").exists() {
+                return Runtime::open(base);
+            }
+        }
+        Err(anyhow!("artifacts/manifest.txt not found — run `make artifacts`"))
+    }
+
+    /// All known artifacts.
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    /// Find the artifact for a given block geometry.
+    pub fn find(&self, k: usize, n_in: usize, n_out: usize, h: usize, w: usize, zero_pad: bool) -> Option<&ArtifactMeta> {
+        self.manifest.iter().find(|m| {
+            (m.k, m.n_in, m.n_out, m.h, m.w, m.zero_pad) == (k, n_in, n_out, h, w, zero_pad)
+        })
+    }
+
+    /// Load (and cache) a golden block by artifact name.
+    pub fn golden(&mut self, name: &str) -> Result<&GoldenBlock> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .iter()
+                .find(|m| m.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), GoldenBlock { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile and run the end-to-end `smallnet` artifact (the 3-layer
+    /// CNN of `python/compile/aot.py::SMALLNET_LAYERS`: 7×7 3→16 +pool,
+    /// 7×7 16→32 +pool, 3×3 32→8; quantized ReLU between layers).
+    ///
+    /// `params` holds (weights, scale/bias) triples per layer in order.
+    /// Returns the raw-Q2.9 output `[8, h/4, w/4]`.
+    pub fn run_smallnet(
+        &mut self,
+        image: &Image,
+        params: &[(crate::workload::BinaryKernels, crate::workload::ScaleBias)],
+    ) -> Result<Image> {
+        let path = self.dir.join("smallnet.hlo.txt");
+        if !self.smallnet_compiled {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.smallnet = Some(self.client.compile(&comp)?);
+            self.smallnet_compiled = true;
+        }
+        let exe = self.smallnet.as_ref().unwrap();
+        let to_i32 = |v: &[i64]| -> Vec<i32> { v.iter().map(|&x| x as i32).collect() };
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + 3 * params.len());
+        args.push(xla::Literal::vec1(&to_i32(&image.data)).reshape(&[
+            image.c as i64,
+            image.h as i64,
+            image.w as i64,
+        ])?);
+        for (w, sb) in params {
+            let wv: Vec<i32> = w.bits.iter().map(|&b| if b { 1 } else { -1 }).collect();
+            args.push(xla::Literal::vec1(&wv).reshape(&[
+                w.n_out as i64,
+                w.n_in as i64,
+                w.k as i64,
+                w.k as i64,
+            ])?);
+            args.push(xla::Literal::vec1(&to_i32(&sb.alpha)));
+            args.push(xla::Literal::vec1(&to_i32(&sb.beta)));
+        }
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<i32>()?;
+        let (c, h, w) = (params.last().unwrap().0.n_out, image.h / 4, image.w / 4);
+        if values.len() != c * h * w {
+            return Err(anyhow!("unexpected smallnet output size {}", values.len()));
+        }
+        Ok(Image { c, h, w, data: values.into_iter().map(|v| v as i64).collect() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_roundtrip() {
+        let m = ArtifactMeta::parse("block_k3_c32x64_16x16 3 32 64 16 16 1").unwrap();
+        assert_eq!(m.k, 3);
+        assert_eq!(m.n_out, 64);
+        assert!(m.zero_pad);
+        assert!(ArtifactMeta::parse("too few fields").is_err());
+    }
+}

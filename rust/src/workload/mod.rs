@@ -1,0 +1,321 @@
+//! Deterministic synthetic workload generation.
+//!
+//! The paper's power simulations ran the scene-labeling CNN of [50] on the
+//! Stanford backgrounds data set (715 outdoor images, 320×240 RGB). That
+//! data set is not redistributable here, so [`synthetic_scene`] generates
+//! frames with comparable statistics — smooth large-scale gradients (sky /
+//! ground), piecewise regions (buildings) and high-frequency texture
+//! (foliage) — which is what drives switching activity in the datapath.
+//! All generation is seeded (SplitMix64) and bit-reproducible.
+
+use crate::fixedpoint::{Q2_9, QFormat};
+use crate::testkit::Gen;
+
+/// A multi-channel image holding **raw Q2.9** samples, channel-major
+/// (`data[c][y][x]` flattened as `(c * h + y) * w + x`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Image {
+    /// Width in pixels.
+    pub w: usize,
+    /// Height in pixels.
+    pub h: usize,
+    /// Channels.
+    pub c: usize,
+    /// Raw Q2.9 samples.
+    pub data: Vec<i64>,
+}
+
+impl Image {
+    /// All-zero image.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Image {
+        Image { w, h, c, data: vec![0; c * h * w] }
+    }
+
+    /// Sample accessor (no bounds slack: panics out of range).
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> i64 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Mutable sample accessor.
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut i64 {
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Zero-padded accessor: coordinates outside the image read 0, the
+    /// halo the accelerator synthesizes for zero-padded layers.
+    #[inline]
+    pub fn at_padded(&self, c: usize, y: isize, x: isize) -> i64 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.at(c, y as usize, x as usize)
+        }
+    }
+}
+
+/// Uniform random image over the full Q2.9 range. `amplitude` scales the
+/// range (1.0 = full ±4); keep it ≲0.05 for golden comparisons that must
+/// avoid ChannelSummer saturation on deep channel sums.
+pub fn random_image(gen: &mut Gen, c: usize, h: usize, w: usize, amplitude: f64) -> Image {
+    let hi = ((Q2_9.max_raw() as f64) * amplitude) as i64;
+    let lo = -hi;
+    let mut img = Image::zeros(c, h, w);
+    for v in img.data.iter_mut() {
+        *v = gen.range_i64(lo.min(-1), hi.max(1));
+    }
+    img
+}
+
+/// Synthetic outdoor scene: per-channel mixture of a vertical gradient
+/// (sky→ground), a few rectangular "structures" and low-amplitude texture.
+/// Values span roughly ±1.5 in Q2.9.
+pub fn synthetic_scene(gen: &mut Gen, c: usize, h: usize, w: usize) -> Image {
+    let mut img = Image::zeros(c, h, w);
+    for ch in 0..c {
+        // Sky/ground gradient with per-channel tint.
+        let top = gen.f64_in(-1.0, 1.0);
+        let bottom = gen.f64_in(-1.0, 1.0);
+        for y in 0..h {
+            let t = y as f64 / (h.max(2) - 1) as f64;
+            let base = top + (bottom - top) * t;
+            for x in 0..w {
+                *img.at_mut(ch, y, x) = Q2_9.from_f64(base);
+            }
+        }
+        // Rectangular structures (buildings / foreground objects).
+        for _ in 0..gen.range(2, 5) {
+            let x0 = gen.range(0, w - 1);
+            let y0 = gen.range(0, h - 1);
+            let rw = gen.range(1, (w / 3).max(1));
+            let rh = gen.range(1, (h / 3).max(1));
+            let level = gen.f64_in(-1.2, 1.2);
+            for y in y0..(y0 + rh).min(h) {
+                for x in x0..(x0 + rw).min(w) {
+                    *img.at_mut(ch, y, x) = Q2_9.from_f64(level);
+                }
+            }
+        }
+        // Texture noise.
+        for y in 0..h {
+            for x in 0..w {
+                let v = img.at(ch, y, x) + gen.range_i64(-24, 24);
+                *img.at_mut(ch, y, x) = Q2_9.saturate(v);
+            }
+        }
+    }
+    img
+}
+
+/// A set of binary filters: `n_out × n_in` kernels of `k × k` bits
+/// (Eq. 5 encoding: bit 1 ⇔ w = +1). `bits[(o·n_in + i)·k² + dy·k + dx]`.
+#[derive(Debug, Clone)]
+pub struct BinaryKernels {
+    /// Output channels.
+    pub n_out: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Kernel size.
+    pub k: usize,
+    /// Weight bits.
+    pub bits: Vec<bool>,
+}
+
+impl BinaryKernels {
+    /// Random kernel set.
+    pub fn random(gen: &mut Gen, n_out: usize, n_in: usize, k: usize) -> BinaryKernels {
+        let bits = (0..n_out * n_in * k * k).map(|_| gen.bool()).collect();
+        BinaryKernels { n_out, n_in, k, bits }
+    }
+
+    /// All-(+1) kernels (useful in tests: convolution degenerates to a
+    /// window sum).
+    pub fn all_plus(n_out: usize, n_in: usize, k: usize) -> BinaryKernels {
+        BinaryKernels { n_out, n_in, k, bits: vec![true; n_out * n_in * k * k] }
+    }
+
+    /// Weight bit of kernel (out, in) at (dy, dx).
+    #[inline]
+    pub fn bit(&self, o: usize, i: usize, dy: usize, dx: usize) -> bool {
+        self.bits[((o * self.n_in + i) * self.k + dy) * self.k + dx]
+    }
+
+    /// Weight value (−1 / +1).
+    #[inline]
+    pub fn weight(&self, o: usize, i: usize, dy: usize, dx: usize) -> i64 {
+        if self.bit(o, i, dy, dx) {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Storage size in bits — the paper's 12× I/O reduction argument.
+    pub fn storage_bits(&self) -> usize {
+        self.bits.len()
+    }
+}
+
+/// Per-output-channel scale/bias pairs in raw Q2.9 (batch-norm folding).
+#[derive(Debug, Clone)]
+pub struct ScaleBias {
+    /// Raw Q2.9 scales α_k.
+    pub alpha: Vec<i64>,
+    /// Raw Q2.9 biases β_k.
+    pub beta: Vec<i64>,
+}
+
+impl ScaleBias {
+    /// Identity scaling (α = 1.0, β = 0).
+    pub fn identity(n_out: usize) -> ScaleBias {
+        ScaleBias { alpha: vec![512; n_out], beta: vec![0; n_out] }
+    }
+
+    /// Random scales in (−1, 1) and small biases.
+    pub fn random(gen: &mut Gen, n_out: usize) -> ScaleBias {
+        let fmt: QFormat = Q2_9;
+        ScaleBias {
+            alpha: (0..n_out).map(|_| fmt.from_f64(gen.f64_in(-1.0, 1.0))).collect(),
+            beta: (0..n_out).map(|_| fmt.from_f64(gen.f64_in(-0.5, 0.5))).collect(),
+        }
+    }
+}
+
+/// Reference software convolution with YodaNN semantics, used as the
+/// module-level oracle for the cycle simulator (the cross-chip oracle is
+/// the JAX/Pallas golden model loaded via PJRT).
+///
+/// For each output channel: ChannelSummer accumulation is **saturating at
+/// Q7.9 after each input-channel contribution** (hardware register width),
+/// then scale/bias/truncate to Q2.9.
+pub fn reference_conv(
+    img: &Image,
+    kernels: &BinaryKernels,
+    sb: &ScaleBias,
+    zero_pad: bool,
+) -> Image {
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    assert_eq!(img.c, kernels.n_in);
+    let k = kernels.k;
+    let (out_h, out_w) =
+        if zero_pad { (img.h, img.w) } else { (img.h - k + 1, img.w - k + 1) };
+    let half = (k - 1) / 2;
+    let mut out = Image::zeros(kernels.n_out, out_h, out_w);
+    for o in 0..kernels.n_out {
+        for y in 0..out_h {
+            for x in 0..out_w {
+                let mut acc: i64 = 0;
+                for i in 0..img.c {
+                    // One SoP result: the full k×k window of channel i.
+                    let mut sop: i64 = 0;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let (yy, xx) = if zero_pad {
+                                (y as isize + dy as isize - half as isize,
+                                 x as isize + dx as isize - half as isize)
+                            } else {
+                                ((y + dy) as isize, (x + dx) as isize)
+                            };
+                            let px = img.at_padded(i, yy, xx);
+                            sop += if kernels.bit(o, i, dy, dx) { px } else { -px };
+                        }
+                    }
+                    acc = sat_add(Q7_9, acc, sop);
+                }
+                *out.at_mut(o, y, x) = scale_bias(acc, sb.alpha[o], sb.beta[o]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_indexing_roundtrip() {
+        let mut img = Image::zeros(2, 3, 4);
+        *img.at_mut(1, 2, 3) = 77;
+        assert_eq!(img.at(1, 2, 3), 77);
+        assert_eq!(img.at_padded(1, 2, 3), 77);
+        assert_eq!(img.at_padded(1, -1, 0), 0);
+        assert_eq!(img.at_padded(1, 0, 4), 0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = synthetic_scene(&mut Gen::new(9), 3, 16, 16);
+        let b = synthetic_scene(&mut Gen::new(9), 3, 16, 16);
+        assert_eq!(a, b);
+        let ka = BinaryKernels::random(&mut Gen::new(5), 4, 3, 3);
+        let kb = BinaryKernels::random(&mut Gen::new(5), 4, 3, 3);
+        assert_eq!(ka.bits, kb.bits);
+    }
+
+    #[test]
+    fn scene_values_in_q29_range() {
+        let img = synthetic_scene(&mut Gen::new(1), 3, 24, 24);
+        for &v in &img.data {
+            assert!(crate::fixedpoint::Q2_9.contains(v));
+        }
+    }
+
+    #[test]
+    fn kernel_storage_is_one_bit_per_weight() {
+        let k = BinaryKernels::random(&mut Gen::new(2), 32, 32, 7);
+        // The paper's filter bank: 32²·7²·1 bit = 50176 bit (§III-B).
+        assert_eq!(k.storage_bits(), 50176);
+    }
+
+    #[test]
+    fn reference_conv_all_plus_is_window_sum() {
+        // 1 input channel, all-ones 3×3 kernel, identity scale: each output
+        // equals the padded window sum.
+        let mut img = Image::zeros(1, 3, 3);
+        for (i, v) in img.data.iter_mut().enumerate() {
+            *v = i as i64 + 1; // 1..9
+        }
+        let kernels = BinaryKernels::all_plus(1, 1, 3);
+        let out = reference_conv(&img, &kernels, &ScaleBias::identity(1), true);
+        // Centre pixel: sum(1..9) = 45.
+        assert_eq!(out.at(0, 1, 1), 45);
+        // Corner (0,0): window covers pixels {1,2,4,5} = 12.
+        assert_eq!(out.at(0, 0, 0), 12);
+    }
+
+    #[test]
+    fn reference_conv_non_padded_shape() {
+        let img = random_image(&mut Gen::new(3), 2, 8, 9, 0.02);
+        let kernels = BinaryKernels::random(&mut Gen::new(4), 3, 2, 5);
+        let out = reference_conv(&img, &kernels, &ScaleBias::identity(3), false);
+        assert_eq!((out.c, out.h, out.w), (3, 4, 5));
+    }
+
+    #[test]
+    fn reference_conv_scale_bias_applied() {
+        let mut img = Image::zeros(1, 1, 1);
+        *img.at_mut(0, 0, 0) = 512; // 1.0
+        let kernels = BinaryKernels::all_plus(1, 1, 1);
+        // α = 0.5, β = 0.25 → 1.0·0.5 + 0.25 = 0.75 → raw 384.
+        let sb = ScaleBias { alpha: vec![256], beta: vec![128] };
+        let out = reference_conv(&img, &kernels, &sb, true);
+        assert_eq!(out.at(0, 0, 0), 384);
+    }
+
+    #[test]
+    fn channel_summer_saturates_at_q79() {
+        // 64 input channels of max pixels with all-plus 1×1 kernels drive
+        // the accumulator into Q7.9 saturation (65535), then α=1 truncates
+        // to Q2.9 max.
+        let c = 64;
+        let mut img = Image::zeros(c, 1, 1);
+        for ch in 0..c {
+            *img.at_mut(ch, 0, 0) = 2047;
+        }
+        let kernels = BinaryKernels::all_plus(1, c, 1);
+        let out = reference_conv(&img, &kernels, &ScaleBias::identity(1), true);
+        assert_eq!(out.at(0, 0, 0), 2047); // saturated to Q2.9 max
+    }
+}

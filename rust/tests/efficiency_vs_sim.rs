@@ -1,0 +1,129 @@
+//! Cross-validation: the analytic efficiency model (Eqs. 8–11, which
+//! regenerates the paper's Tables III–V) vs the cycle-accurate simulator.
+//! The two are independent derivations of the same microarchitecture; on
+//! fully-specified workloads they must agree.
+
+use yodann::coordinator::{metrics::sim_metrics, run_layer, ExecOptions, LayerWorkload};
+use yodann::hw::{ChipConfig, EnergyModel};
+use yodann::model::efficiency::{eta_ch_idle, eta_tile};
+use yodann::power::{ArchId, CorePowerModel};
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, BinaryKernels, ScaleBias};
+
+fn workload(k: usize, n_in: usize, n_out: usize, h: usize, w: usize) -> LayerWorkload {
+    let mut g = Gen::new((k * 1000 + n_in * 10 + n_out) as u64);
+    LayerWorkload {
+        k,
+        zero_pad: true,
+        input: random_image(&mut g, n_in, h, w, 0.01),
+        kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+        scale_bias: ScaleBias::identity(n_out),
+    }
+}
+
+/// Simulated steady-state throughput ≈ Θ_peak · η_chIdle (filter-load and
+/// preload amortize out on larger tiles).
+#[test]
+fn simulated_throughput_matches_eq10() {
+    let cfg = ChipConfig::yodann();
+    let core = CorePowerModel::new(ArchId::Bin32Multi);
+    for (n_in, n_out) in [(32usize, 64usize), (16, 64), (8, 64)] {
+        let wl = workload(3, n_in, n_out, 32, 32);
+        let run = run_layer(&wl, &cfg, ExecOptions::default());
+        let m = sim_metrics(&run.stats, ArchId::Bin32Multi, 0.6, true);
+        let analytic = core.theta_peak(0.6, 3) * eta_ch_idle(n_in, 32);
+        let rel = (m.theta - analytic).abs() / analytic;
+        // Within 12%: the residual is the un-amortized filter load +
+        // preload on this small tile.
+        assert!(rel < 0.12, "n_in={n_in}: sim {} vs analytic {analytic}", m.theta);
+    }
+}
+
+/// Simulated energy efficiency at full utilization lands on the paper's
+/// per-mode numbers (Table III rows: 59.2 TOp/s/W for 3×3 at 0.6 V).
+#[test]
+fn simulated_en_eff_matches_table3_mode_rows() {
+    let cfg = ChipConfig::yodann();
+    let wl = workload(3, 32, 64, 32, 32);
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    let em = EnergyModel::new(ArchId::Bin32Multi, 0.6);
+    let en_eff = em.en_eff(&run.stats) / 1e12;
+    // The event-level energy model is calibrated on the 7×7 breakdown;
+    // its 3×3 estimate must land in the right regime (the paper: 59.2).
+    assert!((35.0..75.0).contains(&en_eff), "{en_eff} TOp/s/W");
+}
+
+/// 7×7 full-utilization: simulator vs the 61.2 TOp/s/W headline. A wide
+/// tile amortizes the filter-load and column-preload phases the paper's
+/// *peak* numbers exclude; the residual gap is exactly those phases.
+#[test]
+fn simulated_en_eff_matches_headline_7x7() {
+    let cfg = ChipConfig::yodann();
+    let wl = workload(7, 32, 32, 32, 96);
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    let em = EnergyModel::new(ArchId::Bin32Multi, 0.6);
+    let en_eff = em.en_eff(&run.stats) / 1e12;
+    assert!(
+        (en_eff - 61.2).abs() / 61.2 < 0.06,
+        "simulated {en_eff} vs paper 61.2 TOp/s/W"
+    );
+    let m = sim_metrics(&run.stats, ArchId::Bin32Multi, 0.6, false);
+    assert!((m.theta / 1e9 - 55.0).abs() / 55.0 < 0.10, "{} GOp/s", m.theta / 1e9);
+}
+
+/// Tiling: the simulated re-load overhead of vertical tiling brackets
+/// Eq. 9's η_tile. Interesting reproduction finding (EXPERIMENTS.md):
+/// Eq. 9 counts `⌈h/h_max⌉` tiles, but a tile holding `h_max` *input*
+/// rows only produces `h_max − k + 1` output rows, so the implementable
+/// schedule needs slightly more tiles than the paper's formula — the
+/// simulator measures the real overhead, which must lie between Eq. 9's
+/// optimistic value and the output-row-tiling bound.
+#[test]
+fn simulated_tiling_overhead_matches_eq9() {
+    let mut cfg = ChipConfig::yodann();
+    cfg.image_mem_rows = 16 * 32; // h_max = 16
+    let k = 7;
+    let (h, w, n_in) = (40usize, 8usize, 8usize);
+    // Tiles: output rows 10+10+10+10, input heights 13/16/16/13 = 58 rows.
+    let wl = workload(k, n_in, 8, h, w);
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    // Every tile pixel is written to SCM exactly once.
+    let overhead = run.stats.scm_writes as f64 / (n_in * h * w) as f64;
+    assert_eq!(run.stats.scm_writes, (n_in * 58 * w) as u64);
+    let eq9 = 1.0 / eta_tile(h, 16, k); // 1.30 (optimistic)
+    let real_bound = (h as f64 + 3.0 * (k - 1) as f64) / h as f64; // 1.45
+    assert!(overhead >= eq9 - 1e-9, "{overhead} < Eq.9 {eq9}");
+    assert!(overhead <= real_bound + 1e-9, "{overhead} > bound {real_bound}");
+}
+
+/// The SCM gating bound holds on every workload: ≤ 7 banks/cycle.
+#[test]
+fn scm_gating_bound_universal() {
+    let cfg = ChipConfig::yodann();
+    for k in [1usize, 3, 5, 7] {
+        let wl = workload(k, 32, 32, 16, 12);
+        let run = run_layer(&wl, &cfg, ExecOptions::default());
+        assert!(
+            run.stats.scm_max_banks_per_cycle <= 7,
+            "k={k}: {} banks",
+            run.stats.scm_max_banks_per_cycle
+        );
+    }
+}
+
+/// Input-stream invariant: at most one 12-bit word per cycle.
+#[test]
+fn input_bandwidth_invariant() {
+    let cfg = ChipConfig::yodann();
+    for (k, n_in, n_out) in [(3usize, 8usize, 64usize), (7, 32, 32), (5, 16, 48)] {
+        let wl = workload(k, n_in, n_out, 24, 16);
+        let run = run_layer(&wl, &cfg, ExecOptions::default());
+        let s = &run.stats;
+        assert!(
+            s.input_words <= s.cycles.total(),
+            "k={k}: {} words in {} cycles",
+            s.input_words,
+            s.cycles.total()
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Integration: the cycle simulator's outputs vs the AOT-compiled
+//! JAX/Pallas golden model executed through PJRT (`artifacts/*.hlo.txt`).
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise —
+//! `make test` always builds artifacts first).
+
+use yodann::coordinator::check_block;
+use yodann::hw::ChipConfig;
+use yodann::runtime::Runtime;
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, synthetic_scene, BinaryKernels, ScaleBias};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP golden tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_matches_simulator_k3_dual_mode() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0xA11CE);
+    let image = random_image(&mut g, 32, 16, 16, 0.02);
+    let kernels = BinaryKernels::random(&mut g, 64, 32, 3);
+    let sb = ScaleBias::random(&mut g, 64);
+    let report =
+        check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true).unwrap();
+    assert!(report.ok(), "{:?}", report.first_mismatch);
+    assert_eq!(report.samples, 64 * 16 * 16);
+}
+
+#[test]
+fn golden_matches_simulator_k7() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0xB0B);
+    let image = random_image(&mut g, 32, 12, 12, 0.02);
+    let kernels = BinaryKernels::random(&mut g, 32, 32, 7);
+    let sb = ScaleBias::random(&mut g, 32);
+    let report =
+        check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true).unwrap();
+    assert!(report.ok(), "{:?}", report.first_mismatch);
+}
+
+#[test]
+fn golden_matches_simulator_k7_valid_padding() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0xC0FFEE);
+    let image = random_image(&mut g, 32, 12, 12, 0.02);
+    let kernels = BinaryKernels::random(&mut g, 32, 32, 7);
+    let sb = ScaleBias::random(&mut g, 32);
+    let report =
+        check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, false).unwrap();
+    assert!(report.ok(), "{:?}", report.first_mismatch);
+    assert_eq!(report.samples, 32 * 6 * 6);
+}
+
+#[test]
+fn golden_matches_simulator_k5_and_k1() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0xD0D0);
+    for (k, h, w) in [(5usize, 12, 12), (1, 16, 16)] {
+        let image = random_image(&mut g, 32, h, w, 0.02);
+        let kernels = BinaryKernels::random(&mut g, 64, 32, k);
+        let sb = ScaleBias::random(&mut g, 64);
+        let report =
+            check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true).unwrap();
+        assert!(report.ok(), "k={k}: {:?}", report.first_mismatch);
+    }
+}
+
+#[test]
+fn golden_matches_in_saturating_regime() {
+    // Large-amplitude scene: Q7.9 saturation fires; both sides must
+    // saturate in the same channel order.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0xFEED);
+    let image = synthetic_scene(&mut g, 32, 16, 16);
+    let kernels = BinaryKernels::random(&mut g, 64, 32, 3);
+    let sb = ScaleBias::random(&mut g, 64);
+    let report =
+        check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true).unwrap();
+    assert!(report.ok(), "{:?}", report.first_mismatch);
+}
+
+#[test]
+fn golden_randomized_sweep() {
+    // Many seeds on the k3 artifact: the cheap broad net.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for seed in 0..5u64 {
+        let mut g = Gen::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+        let image = random_image(&mut g, 32, 16, 16, 0.05);
+        let kernels = BinaryKernels::random(&mut g, 64, 32, 3);
+        let sb = ScaleBias::random(&mut g, 64);
+        let report =
+            check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true).unwrap();
+        assert!(report.ok(), "seed {seed}: {:?}", report.first_mismatch);
+    }
+}
+
+#[test]
+fn unknown_geometry_is_a_clear_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(1);
+    let image = random_image(&mut g, 2, 5, 5, 0.02);
+    let kernels = BinaryKernels::random(&mut g, 2, 2, 3);
+    let sb = ScaleBias::identity(2);
+    let err = check_block(&mut rt, &ChipConfig::yodann(), &image, &kernels, &sb, true)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no artifact"), "{err}");
+}
+
+/// Full-stack multi-layer golden: the `smallnet` artifact (3 conv layers
+/// with quantized ReLU + 2×2 max-pool, lowered as ONE fused HLO module)
+/// vs the same network built layer-by-layer from coordinator-simulated
+/// chip blocks plus host ReLU/pool — every layer's chip output feeds the
+/// next, so blocking, scale/bias and the inter-layer quantized plumbing
+/// must all agree bit-for-bit with the JAX model.
+#[test]
+fn golden_smallnet_end_to_end() {
+    use yodann::coordinator::{run_layer, ExecOptions, LayerWorkload};
+    use yodann::workload::Image;
+
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut g = Gen::new(0x5A11);
+    let mut x = random_image(&mut g, 3, 24, 32, 0.05);
+
+    // Matches python/compile/aot.py::SMALLNET_LAYERS.
+    let specs: [(usize, usize, bool, f64); 3] =
+        [(7, 16, true, 0.05), (7, 32, true, 0.02), (3, 8, false, 0.05)];
+    let mut n_in = 3usize;
+    let mut params = Vec::new();
+    for &(k, n_out, _pool, alpha) in &specs {
+        let kernels = BinaryKernels::random(&mut g, n_out, n_in, k);
+        let sb = ScaleBias {
+            alpha: vec![yodann::fixedpoint::Q2_9.from_f64(alpha); n_out],
+            beta: vec![yodann::fixedpoint::Q2_9.from_f64(0.01); n_out],
+        };
+        params.push((kernels, sb));
+        n_in = n_out;
+    }
+
+    // Golden: one fused HLO execution.
+    let golden = rt.run_smallnet(&x, &params).unwrap();
+
+    // Simulator: layer-by-layer chip blocks + host ReLU/max-pool.
+    let cfg = ChipConfig::yodann();
+    for (li, &(k, _n_out, pool, _)) in specs.iter().enumerate() {
+        let (kernels, sb) = &params[li];
+        let wl = LayerWorkload {
+            k,
+            zero_pad: true,
+            input: x.clone(),
+            kernels: kernels.clone(),
+            scale_bias: sb.clone(),
+        };
+        x = run_layer(&wl, &cfg, ExecOptions::default()).output;
+        if li + 1 < specs.len() {
+            x.data.iter_mut().for_each(|v| *v = (*v).max(0)); // quantized ReLU
+        }
+        if pool {
+            let mut p = Image::zeros(x.c, x.h / 2, x.w / 2);
+            for c in 0..x.c {
+                for y in 0..p.h {
+                    for xx in 0..p.w {
+                        *p.at_mut(c, y, xx) = x
+                            .at(c, 2 * y, 2 * xx)
+                            .max(x.at(c, 2 * y, 2 * xx + 1))
+                            .max(x.at(c, 2 * y + 1, 2 * xx))
+                            .max(x.at(c, 2 * y + 1, 2 * xx + 1));
+                    }
+                }
+            }
+            x = p;
+        }
+    }
+    assert_eq!((x.c, x.h, x.w), (golden.c, golden.h, golden.w));
+    assert_eq!(x, golden, "simulated smallnet != JAX smallnet");
+}

@@ -1,0 +1,157 @@
+//! Integration: multi-layer networks on the coordinator + simulator —
+//! channel blocking, vertical tiling, off-chip accumulation and the
+//! quantized inter-layer plumbing (ReLU, max-pool) all composed.
+
+use yodann::coordinator::{run_layer, ExecOptions, LayerWorkload};
+use yodann::fixedpoint;
+use yodann::hw::ChipConfig;
+use yodann::testkit::Gen;
+use yodann::workload::{
+    random_image, reference_conv, synthetic_scene, BinaryKernels, Image, ScaleBias,
+};
+
+fn relu(img: &mut Image) {
+    for v in img.data.iter_mut() {
+        *v = (*v).max(0);
+    }
+}
+
+fn maxpool2(img: &Image) -> Image {
+    let mut out = Image::zeros(img.c, img.h / 2, img.w / 2);
+    for c in 0..img.c {
+        for y in 0..img.h / 2 {
+            for x in 0..img.w / 2 {
+                let m = img
+                    .at(c, 2 * y, 2 * x)
+                    .max(img.at(c, 2 * y, 2 * x + 1))
+                    .max(img.at(c, 2 * y + 1, 2 * x))
+                    .max(img.at(c, 2 * y + 1, 2 * x + 1));
+                *out.at_mut(c, y, x) = m;
+            }
+        }
+    }
+    out
+}
+
+/// A BC-Cifar-10-shaped (scaled-down) network run end to end on the
+/// simulated chip, checked layer-by-layer against the blocked reference.
+#[test]
+fn three_layer_cnn_end_to_end() {
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(2024);
+    let mut x = synthetic_scene(&mut g, 3, 16, 16);
+    // Keep activations small so blocked == monolithic reference.
+    for v in x.data.iter_mut() {
+        *v /= 16;
+    }
+    let widths = [3usize, 48, 64, 8];
+    for li in 0..3 {
+        let (n_in, n_out) = (widths[li], widths[li + 1]);
+        let kernels = BinaryKernels::random(&mut g, n_out, n_in, 3);
+        // Small scales keep the dynamic range contained layer to layer.
+        let sb = ScaleBias {
+            alpha: vec![fixedpoint::Q2_9.from_f64(0.05); n_out],
+            beta: vec![0; n_out],
+        };
+        let wl = LayerWorkload { k: 3, zero_pad: true, input: x.clone(), kernels, scale_bias: sb };
+        let run = run_layer(&wl, &cfg, ExecOptions::default());
+        let want = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+        assert_eq!(run.output, want, "layer {li}");
+        x = run.output;
+        relu(&mut x);
+        if li == 0 {
+            x = maxpool2(&x);
+        }
+    }
+    assert_eq!((x.c, x.h, x.w), (8, 8, 8));
+}
+
+#[test]
+fn blocked_layer_uses_expected_block_count() {
+    // 128→128 3×3 (dual mode): 4 in-blocks × 2 out-blocks = 8 jobs.
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(7);
+    let wl = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: random_image(&mut g, 128, 16, 16, 0.01),
+        kernels: BinaryKernels::random(&mut g, 128, 128, 3),
+        scale_bias: ScaleBias::random(&mut g, 128),
+    };
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    assert_eq!(run.blocks, 8);
+    // Off-chip additions: 3 extra adds per output pixel (4 input blocks).
+    assert_eq!(run.offchip_adds, 3 * 128 * 16 * 16);
+    // The paper's claim: only ⌈n_in/n_ch⌉−1 extra ops per output pixel.
+    let per_pixel = run.offchip_adds as f64 / (128.0 * 16.0 * 16.0);
+    assert_eq!(per_pixel, 3.0);
+}
+
+#[test]
+fn blocked_equals_monolithic_when_not_saturating() {
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(99);
+    let wl = LayerWorkload {
+        k: 5,
+        zero_pad: true,
+        input: random_image(&mut g, 64, 20, 12, 0.01),
+        kernels: BinaryKernels::random(&mut g, 96, 64, 5),
+        scale_bias: ScaleBias::random(&mut g, 96),
+    };
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    let want = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+    assert_eq!(run.output, want);
+}
+
+#[test]
+fn blocked_saturation_divergence_is_bounded() {
+    // In the saturating regime blocked partials clip at Q2.9 per block;
+    // quantify the divergence vs the monolithic reference (an inherent
+    // property of the paper's off-chip accumulation scheme).
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(4242);
+    let wl = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: synthetic_scene(&mut g, 64, 12, 12),
+        kernels: BinaryKernels::random(&mut g, 32, 64, 3),
+        scale_bias: ScaleBias { alpha: vec![64; 32], beta: vec![0; 32] },
+    };
+    let run = run_layer(&wl, &cfg, ExecOptions::default());
+    let mono = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+    let max_dev = run
+        .output
+        .data
+        .iter()
+        .zip(mono.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .max()
+        .unwrap();
+    // Bounded by the per-block clip range times the scale.
+    assert!(max_dev <= 2048, "divergence {max_dev} raw LSBs");
+}
+
+#[test]
+fn simulated_cycles_scale_with_blocks() {
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(314);
+    let small = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: random_image(&mut g, 32, 16, 16, 0.01),
+        kernels: BinaryKernels::random(&mut g, 64, 32, 3),
+        scale_bias: ScaleBias::identity(64),
+    };
+    let big = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: random_image(&mut g, 64, 16, 16, 0.01),
+        kernels: BinaryKernels::random(&mut g, 64, 64, 3),
+        scale_bias: ScaleBias::identity(64),
+    };
+    let a = run_layer(&small, &cfg, ExecOptions::default());
+    let b = run_layer(&big, &cfg, ExecOptions::default());
+    // Twice the input channels → two input blocks → ≈2× compute cycles.
+    let ratio = b.stats.cycles.compute as f64 / a.stats.cycles.compute as f64;
+    assert!((ratio - 2.0).abs() < 0.05, "{ratio}");
+}

@@ -1,0 +1,201 @@
+//! Property-based tests over the simulator, coordinator and fixed-point
+//! substrate (via the in-repo `testkit` harness — the offline registry
+//! has no proptest; see Cargo.toml).
+//!
+//! Each property runs many seeded random cases; failures report the seed
+//! and case index for replay.
+
+use yodann::coordinator::{decompose, run_layer, ExecOptions, LayerWorkload};
+use yodann::fixedpoint::{self, Q10_18, Q2_9, Q7_9};
+use yodann::hw::{BlockJob, Chip, ChipConfig};
+use yodann::testkit::{property, Gen};
+use yodann::workload::{random_image, reference_conv, BinaryKernels, ScaleBias};
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_simulator_matches_reference_conv() {
+    // The central functional property: for ANY random geometry the cycle
+    // simulator equals the bit-true reference.
+    property("sim == reference", 0xEE0, CASES, |g| {
+        let k = g.range(1, 7);
+        let n_ch = g.range(2, 6);
+        let cfg = ChipConfig::tiny(n_ch);
+        let n_in = g.range(1, n_ch);
+        let n_out = g.range(1, 2 * n_ch);
+        let zero_pad = g.bool();
+        let h = g.range(k.max(3), 12);
+        let w = g.range(k.max(3), 12);
+        let image = random_image(g, n_in, h, w, 0.05);
+        let kernels = BinaryKernels::random(g, n_out, n_in, k);
+        let sb = ScaleBias::random(g, n_out);
+        let job = BlockJob {
+            k,
+            zero_pad,
+            image: image.clone(),
+            kernels: kernels.clone(),
+            scale_bias: sb.clone(),
+        };
+        if job.validate(&cfg).is_err() {
+            return; // geometry outside the chip's envelope — skip
+        }
+        let res = Chip::new(cfg).run_block(&job);
+        let want = reference_conv(&image, &kernels, &sb, zero_pad);
+        assert_eq!(res.output, want, "k={k} n_in={n_in} n_out={n_out} pad={zero_pad}");
+    });
+}
+
+#[test]
+fn prop_coordinator_covers_every_output_exactly_once() {
+    // Decomposition invariant: each (out-channel, row) pair is produced
+    // by exactly one (out-block, tile) and rows_valid partitions the
+    // output height.
+    property("blocks partition outputs", 0xB10C, CASES, |g| {
+        let cfg = ChipConfig::tiny(4);
+        let k = *g.choose(&[1usize, 3, 5, 7]);
+        let n_in = g.range(1, 12);
+        let n_out = g.range(1, 20);
+        let h = g.range(k.max(2), 40);
+        let wl = LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(g, n_in, h, 6, 0.02),
+            kernels: BinaryKernels::random(g, n_out, n_in, k),
+            scale_bias: ScaleBias::identity(n_out),
+        };
+        let jobs = decompose(&wl, &cfg);
+        use std::collections::HashMap;
+        let mut cover: HashMap<(usize, usize), usize> = HashMap::new();
+        for j in &jobs {
+            // Only count one input block per (out, tile) group.
+            if j.in_block != 0 {
+                continue;
+            }
+            for o in 0..j.job.kernels.n_out {
+                for r in 0..j.rows_valid {
+                    *cover.entry((j.out_base + o, j.row_base + r)).or_insert(0) += 1;
+                }
+            }
+        }
+        for o in 0..n_out {
+            for y in 0..h {
+                assert_eq!(cover.get(&(o, y)), Some(&1), "({o},{y}) covered wrong");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_blocked_run_equals_reference_small_amplitude() {
+    // Routing/batching/state invariant end-to-end: any blocked execution
+    // (channel blocks × tiles, any worker count) equals the monolithic
+    // reference when amplitudes cannot saturate partials.
+    property("blocked == monolithic", 0xC0DE, 25, |g| {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 4 * g.range(8, 16); // small h_max → tiling
+        let k = *g.choose(&[1usize, 3, 5]);
+        let n_in = g.range(1, 10);
+        let n_out = g.range(1, 12);
+        let h = g.range(k.max(2), 24);
+        let w = g.range(k.max(2), 10);
+        let wl = LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(g, n_in, h, w, 0.01),
+            kernels: BinaryKernels::random(g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(g, n_out),
+        };
+        let workers = g.range(1, 4);
+        let run = run_layer(&wl, &cfg, ExecOptions { workers });
+        let want = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+        assert_eq!(run.output, want);
+    });
+}
+
+#[test]
+fn prop_fixedpoint_resize_bounds() {
+    property("resize saturates and floors", 0xF1, 500, |g| {
+        let raw = g.range_i64(Q10_18.min_raw(), Q10_18.max_raw());
+        let out = fixedpoint::resize(Q10_18, raw, Q2_9);
+        assert!(Q2_9.contains(out));
+        // Truncation error < 1 LSB and non-positive (floor).
+        let exact = raw as f64 / 512.0; // Q10.18 → Q2.9 LSB units
+        if Q2_9.contains(exact.floor() as i64) {
+            assert_eq!(out, exact.floor() as i64);
+        }
+    });
+}
+
+#[test]
+fn prop_scale_bias_monotone_in_acc() {
+    // For α ≥ 0 the scale-bias output is monotone non-decreasing in the
+    // accumulator — no wrap-around anywhere in the datapath.
+    property("scale_bias monotone", 0x5B, 300, |g| {
+        let alpha = g.range_i64(0, Q2_9.max_raw());
+        let beta = g.range_i64(Q2_9.min_raw(), Q2_9.max_raw());
+        let a = g.range_i64(Q7_9.min_raw(), Q7_9.max_raw());
+        let b = g.range_i64(a, Q7_9.max_raw());
+        let fa = fixedpoint::scale_bias(a, alpha, beta);
+        let fb = fixedpoint::scale_bias(b, alpha, beta);
+        assert!(fb >= fa, "a={a} b={b} alpha={alpha} beta={beta}: {fa} > {fb}");
+    });
+}
+
+#[test]
+fn prop_summer_saturation_never_wraps() {
+    property("summer clamps", 0x5A7, 300, |g| {
+        let mut acc = 0i64;
+        for _ in 0..g.range(1, 64) {
+            let c = g.range_i64(-100_000, 100_000);
+            acc = fixedpoint::sat_add(Q7_9, acc, c);
+            assert!(Q7_9.contains(acc));
+        }
+    });
+}
+
+#[test]
+fn prop_binarization_roundtrip() {
+    property("Eq.5 bit mapping", 0xE5, 200, |g| {
+        let w = fixedpoint::BinWeight::from_bit(g.bool());
+        assert_eq!(fixedpoint::BinWeight::from_bit(w.bit()), w);
+        assert_eq!(w.apply(1), w.value());
+        let x = g.range_i64(-2048, 2047);
+        assert_eq!(w.apply(x), x * w.value());
+    });
+}
+
+#[test]
+fn prop_cycle_count_formula() {
+    // Cycles of a zero-padded block follow the closed form:
+    //   filter_load + preload + out_w·out_h·max(n_in, ⌈n_out/streams⌉)
+    //   + idle-in-compute + flush.
+    property("cycle closed form", 0xCC, 30, |g| {
+        let n_ch = 4;
+        let cfg = ChipConfig::tiny(n_ch);
+        let k = *g.choose(&[3usize, 5, 7]);
+        let n_in = g.range(1, n_ch);
+        let streams = if k == 7 { 1 } else { 2 };
+        let n_out = g.range(1, n_ch * streams);
+        let h = g.range(k, 10);
+        let w = g.range(k, 10);
+        let image = random_image(g, n_in, h, w, 0.02);
+        let kernels = BinaryKernels::random(g, n_out, n_in, k);
+        let job = BlockJob {
+            k,
+            zero_pad: true,
+            image,
+            kernels,
+            scale_bias: ScaleBias::identity(n_out),
+        };
+        let res = Chip::new(cfg).run_block(&job);
+        let s = &res.stats;
+        let m = job.preload_m() as u64;
+        let drain = n_out.div_ceil(streams) as u64;
+        let per_pixel = (n_in as u64).max(drain);
+        let expect = ((n_out * n_in * k * k) as u64).div_ceil(12)  // filter load
+            + m * (h as u64) * (n_in as u64) + m * (n_in as u64)   // preload
+            + (h * w) as u64 * per_pixel                           // main loop
+            + drain; // flush
+        assert_eq!(s.cycles.total(), expect, "k={k} n_in={n_in} n_out={n_out} h={h} w={w}");
+    });
+}
