@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify + formatting + fast bench JSON emission.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check (advisory) =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check || echo "WARNING: cargo fmt --check found drift (advisory only)"
+else
+    echo "rustfmt unavailable; skipping"
+fi
+
+echo "== fast engine A/B bench (writes BENCH_engines.json) =="
+YODANN_BENCH_FAST=1 cargo bench --bench engines
+
+echo "ci.sh: all checks done"

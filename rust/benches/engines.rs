@@ -1,0 +1,92 @@
+//! A/B benchmark of the convolution engines: the cycle-accurate chip
+//! simulator vs the functional bit-packed popcount datapath, on the
+//! block hot paths that dominate real workloads and on end-to-end
+//! batched `NetworkSession` traffic. Outputs are asserted bit-identical
+//! before any timing, and the results are written to
+//! `BENCH_engines.json` (name, ns/iter, frames/s) so the perf
+//! trajectory is trackable across PRs.
+
+use yodann::bench::{black_box, emit_json, Bencher, JsonRecord};
+use yodann::coordinator::{NetworkSession, SessionLayerSpec};
+use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
+use yodann::hw::{BlockJob, ChipConfig};
+use yodann::model::networks;
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
+
+fn block(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> BlockJob {
+    let mut g = Gen::new(seed);
+    BlockJob {
+        k,
+        zero_pad: true,
+        image: random_image(&mut g, n_in, h, w, 0.02),
+        kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+        scale_bias: ScaleBias::random(&mut g, n_out),
+    }
+}
+
+fn main() {
+    let cfg = ChipConfig::yodann();
+    let mut b = Bencher::from_env();
+    let mut records: Vec<JsonRecord> = Vec::new();
+
+    println!("== block-level A/B: cycle-accurate vs functional ==");
+    for (label, job) in [
+        // The acceptance hot path: 32x32 channels, native 7x7.
+        ("k7_32to32_16x16", block(7, 32, 32, 16, 16, 2)),
+        ("k3_32to64_16x16", block(3, 32, 64, 16, 16, 1)),
+        ("k5_32to64_12x12", block(5, 32, 64, 12, 12, 3)),
+    ] {
+        let mut cyc = CycleAccurate::new(cfg);
+        let mut fun = Functional::new();
+        assert_eq!(
+            cyc.run_block(&job).output,
+            fun.run_block(&job).output,
+            "engines diverge on {label}"
+        );
+        let sc = b.bench(&format!("cycle/{label}"), || {
+            black_box(cyc.run_block(&job));
+        });
+        let sf = b.bench(&format!("functional/{label}"), || {
+            black_box(fun.run_block(&job));
+        });
+        let speedup = sc.mean.as_secs_f64() / sf.mean.as_secs_f64();
+        println!("  -> functional speedup on {label}: {speedup:.1}x (target >= 5x)\n");
+        records.push(JsonRecord::from_stats(&sc));
+        records.push(JsonRecord::from_stats(&sf));
+        records.push(JsonRecord {
+            name: format!("speedup/{label}"),
+            ns_per_iter: 0.0,
+            frames_per_s: Some(speedup),
+        });
+    }
+
+    // End-to-end batched traffic: the scene-labeling chain (the paper's
+    // power-simulation workload) at reduced frame size, one batch per
+    // worker-pool fan-out.
+    println!("== batched NetworkSession throughput (scene-labeling chain, 24x32 frames) ==");
+    let specs = SessionLayerSpec::synthetic_network(&networks::scene_labeling(), 7)
+        .expect("scene-labeling chains");
+    let n_frames = 4usize;
+    let mut g = Gen::new(99);
+    let frames: Vec<Image> =
+        (0..n_frames).map(|_| synthetic_scene(&mut g, 3, 24, 32)).collect();
+    let mut session_outputs: Vec<Vec<Image>> = Vec::new();
+    for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+        let mut sess = NetworkSession::new(cfg, kind, 4, specs.clone());
+        session_outputs.push(sess.run_batch(frames.clone()));
+        let s = b.bench(&format!("session/{}/batch{}", kind.name(), n_frames), || {
+            black_box(sess.run_batch(frames.clone()));
+        });
+        println!("  -> {:.2} frames/s on {}\n", n_frames as f64 / s.mean.as_secs_f64(), kind.name());
+        records.push(JsonRecord::with_frames(&s, n_frames as f64));
+    }
+    assert_eq!(session_outputs[0], session_outputs[1], "session engines diverge");
+    println!("session outputs bit-identical across engines");
+
+    // Anchor at the workspace root regardless of cargo's bench cwd, so
+    // the checked-in evidence file is the one that gets refreshed.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+    emit_json(path, "engines", &records).expect("write BENCH_engines.json");
+    println!("wrote {path} ({} records)", records.len());
+}

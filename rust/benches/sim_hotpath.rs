@@ -3,7 +3,7 @@
 //! simulated Mcycles/s for the configurations that dominate real
 //! workloads, plus the end-to-end layer path through the coordinator.
 
-use yodann::bench::{black_box, Bencher};
+use yodann::bench::{black_box, emit_json, Bencher, JsonRecord};
 use yodann::coordinator::{run_layer, ExecOptions, LayerWorkload};
 use yodann::hw::{BlockJob, Chip, ChipConfig};
 use yodann::testkit::Gen;
@@ -61,4 +61,11 @@ fn main() {
         s.per_second(cycles as f64) / 1e6,
         cycles
     );
+
+    // Machine-readable trajectory record (name, ns/iter, frames/s),
+    // anchored at the workspace root regardless of cargo's bench cwd.
+    let records: Vec<JsonRecord> = b.results().iter().map(JsonRecord::from_stats).collect();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
+    emit_json(path, "sim_hotpath", &records).expect("write BENCH_sim_hotpath.json");
+    println!("wrote {path} ({} records)", records.len());
 }

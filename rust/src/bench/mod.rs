@@ -136,6 +136,74 @@ impl Bencher {
     }
 }
 
+/// One machine-readable benchmark record: `name`, `ns_per_iter`, and an
+/// optional throughput figure (`frames_per_s` — null when the benchmark
+/// has no frame notion).
+#[derive(Debug, Clone)]
+pub struct JsonRecord {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean nanoseconds per iteration.
+    pub ns_per_iter: f64,
+    /// Frames per second, when the benchmark processes frames.
+    pub frames_per_s: Option<f64>,
+}
+
+impl JsonRecord {
+    /// Record from a [`Stats`] result.
+    pub fn from_stats(s: &Stats) -> JsonRecord {
+        JsonRecord { name: s.name.clone(), ns_per_iter: s.mean.as_secs_f64() * 1e9, frames_per_s: None }
+    }
+
+    /// Record from a [`Stats`] result that processes `frames` frames per
+    /// iteration.
+    pub fn with_frames(s: &Stats, frames: f64) -> JsonRecord {
+        JsonRecord {
+            name: s.name.clone(),
+            ns_per_iter: s.mean.as_secs_f64() * 1e9,
+            frames_per_s: Some(frames / s.mean.as_secs_f64()),
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Write benchmark records as a machine-readable JSON file (hand-rolled:
+/// the offline registry has no serde), so the perf trajectory across PRs
+/// is trackable — e.g. `BENCH_engines.json` from `cargo bench --bench
+/// engines`.
+pub fn emit_json(path: &str, suite: &str, records: &[JsonRecord]) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(suite)));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let frames = match r.frames_per_s {
+            Some(f) => format!("{f:.3}"),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.1}, \"frames_per_s\": {}}}{}\n",
+            json_escape(&r.name),
+            r.ns_per_iter,
+            frames,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +222,24 @@ mod tests {
         assert!(s.mean > Duration::ZERO);
         assert!(s.min <= s.median && s.median <= s.max);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_emission_roundtrips_structure() {
+        let records = vec![
+            JsonRecord { name: "a/b".into(), ns_per_iter: 1234.5, frames_per_s: None },
+            JsonRecord { name: "c\"d".into(), ns_per_iter: 7.0, frames_per_s: Some(62.5) },
+        ];
+        let path = std::env::temp_dir().join("yodann_bench_emit_test.json");
+        emit_json(path.to_str().unwrap(), "unit-test", &records).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.contains("\"suite\": \"unit-test\""));
+        assert!(text.contains("\"name\": \"a/b\""));
+        assert!(text.contains("\"frames_per_s\": null"));
+        assert!(text.contains("\"frames_per_s\": 62.500"));
+        assert!(text.contains("c\\\"d"));
+        // Exactly one trailing comma between the two records.
+        assert_eq!(text.matches("}},").count() + text.matches("},\n").count(), 1);
     }
 }

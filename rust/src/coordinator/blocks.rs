@@ -1,6 +1,19 @@
 //! Block decomposition: a convolution layer → the chip-block jobs of
 //! Algorithm 1 lines 1–3.
+//!
+//! Decomposition is split in two stages since the engine refactor:
+//!
+//! * [`plan_layer`] — pure geometry: output-channel blocks, input-channel
+//!   blocks and vertical tiles as index-only [`BlockPlan`]s, no data
+//!   copied. Engines consume plans directly against the full layer's
+//!   `Arc`-shareable data (`ConvEngine::run_plan`).
+//! * [`crate::engine::materialize_block`] — slices one plan into an owned
+//!   [`BlockJob`] for consumers that want the historical materialized
+//!   form (the cycle-accurate chip front door, tests, examples).
+//!
+//! [`decompose`] composes the two and is unchanged in behavior.
 
+use crate::engine::{materialize_block, BlockPlan, LayerData, PackedKernels};
 use crate::hw::{BlockJob, ChipConfig};
 use crate::workload::{BinaryKernels, Image, ScaleBias};
 
@@ -19,6 +32,20 @@ pub struct LayerWorkload {
     /// Per-output-channel scale/bias (applied once, after the off-chip
     /// partial-sum accumulation).
     pub scale_bias: ScaleBias,
+}
+
+impl LayerWorkload {
+    /// Borrow this workload as the engine-facing layer view.
+    pub fn as_layer_data<'a>(&'a self, packed: Option<&'a PackedKernels>) -> LayerData<'a> {
+        LayerData {
+            k: self.k,
+            zero_pad: self.zero_pad,
+            input: &self.input,
+            kernels: &self.kernels,
+            packed,
+            scale_bias: &self.scale_bias,
+        }
+    }
 }
 
 /// One decomposed job plus its position in the layer.
@@ -50,7 +77,7 @@ fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Decompose a layer into chip-block jobs on `cfg`.
+/// Plan a layer's decomposition on `cfg` — geometry only, no data:
 ///
 /// * output channels → blocks of `n_ch × streams` (dual modes compute 64);
 /// * input channels → blocks of `n_ch`, partial sums reduced off-chip;
@@ -62,8 +89,14 @@ fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
 /// the real α/β are applied once after the off-chip accumulation, which
 /// is where the paper's "summed together for every block of input
 /// channels" (line 37) happens.
-pub fn decompose(wl: &LayerWorkload, cfg: &ChipConfig) -> Vec<PlacedJob> {
-    let k = wl.k;
+pub fn plan_layer(
+    cfg: &ChipConfig,
+    k: usize,
+    zero_pad: bool,
+    n_in: usize,
+    n_out: usize,
+    h: usize,
+) -> Vec<BlockPlan> {
     let streams = if cfg.multi_kernel {
         crate::model::KernelMode::for_kernel(k).filters_per_sop()
     } else {
@@ -72,82 +105,57 @@ pub fn decompose(wl: &LayerWorkload, cfg: &ChipConfig) -> Vec<PlacedJob> {
     let out_cap = cfg.n_ch * streams;
     let in_cap = cfg.n_ch;
     let h_max = cfg.h_max();
-    let n_in = wl.input.c;
-    let h = wl.input.h;
-    let offset = if wl.zero_pad { (k - 1) / 2 } else { 0 };
-    let out_h_total = if wl.zero_pad { h } else { h - k + 1 };
+    let offset = if zero_pad { (k - 1) / 2 } else { 0 };
+    let out_h_total = if zero_pad { h } else { h - k + 1 };
 
     let in_chunks = chunks(n_in, in_cap);
-    let mut jobs = Vec::new();
-    for (out_base, out_len) in chunks(wl.kernels.n_out, out_cap) {
+    let mut plans = Vec::new();
+    for (out_base, out_len) in chunks(n_out, out_cap) {
         // Output-row tiles: each covers up to (h_max − overhang) output
         // rows; its input tile needs rows [row0−offset, row0+rows+k−1−offset).
         let mut row_base = 0usize;
         while row_base < out_h_total {
-            // Input rows this tile needs:
             let in_row0 = row_base as isize - offset as isize;
             // Max output rows such that input tile height ≤ h_max.
             let max_rows = h_max.saturating_sub(k - 1).max(1);
             let rows = max_rows.min(out_h_total - row_base);
             let in_row_end = in_row0 + (rows + k - 1) as isize;
-            let (clip0, clip1) = (in_row0.max(0) as usize, (in_row_end.min(h as isize)) as usize);
-            let tile_h = clip1 - clip0;
-
+            let (clip0, clip1) = (in_row0.max(0) as usize, in_row_end.min(h as isize) as usize);
             for (ib, &(in_base, in_len)) in in_chunks.iter().enumerate() {
-                // Slice the input tile.
-                let mut tile = Image::zeros(in_len, tile_h, wl.input.w);
-                for c in 0..in_len {
-                    for y in 0..tile_h {
-                        for x in 0..wl.input.w {
-                            *tile.at_mut(c, y, x) = wl.input.at(in_base + c, clip0 + y, x);
-                        }
-                    }
-                }
-                // Slice the kernels.
-                let mut bits = Vec::with_capacity(out_len * in_len * k * k);
-                for o in 0..out_len {
-                    for i in 0..in_len {
-                        for dy in 0..k {
-                            for dx in 0..k {
-                                bits.push(wl.kernels.bit(out_base + o, in_base + i, dy, dx));
-                            }
-                        }
-                    }
-                }
-                let kernels = BinaryKernels { n_out: out_len, n_in: in_len, k, bits };
-                // With a single input block the chip applies the real α/β
-                // directly on its Q7.9 accumulators (the normal silicon
-                // path). Only multi-block layers stream identity-scaled
-                // Q2.9 partials for the off-chip reduction — whose Q2.9
-                // clipping is the inherent cost of the paper's scheme.
-                let scale_bias = if in_chunks.len() == 1 {
-                    ScaleBias {
-                        alpha: wl.scale_bias.alpha[out_base..out_base + out_len].to_vec(),
-                        beta: wl.scale_bias.beta[out_base..out_base + out_len].to_vec(),
-                    }
-                } else {
-                    ScaleBias::identity(out_len)
-                };
-                let job = BlockJob {
-                    k,
-                    zero_pad: wl.zero_pad,
-                    image: tile.clone(),
-                    kernels,
-                    scale_bias,
-                };
-                jobs.push(PlacedJob {
-                    job,
+                plans.push(BlockPlan {
                     out_base,
+                    out_len,
+                    in_base,
+                    in_len,
                     in_block: ib,
                     in_blocks: in_chunks.len(),
                     row_base,
                     rows_valid: rows,
+                    clip0,
+                    tile_h: clip1 - clip0,
                 });
             }
             row_base += rows;
         }
     }
-    jobs
+    plans
+}
+
+/// Decompose a layer into materialized chip-block jobs on `cfg` (the
+/// historical interface: [`plan_layer`] + `materialize_block` per plan).
+pub fn decompose(wl: &LayerWorkload, cfg: &ChipConfig) -> Vec<PlacedJob> {
+    let data = wl.as_layer_data(None);
+    plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, wl.kernels.n_out, wl.input.h)
+        .into_iter()
+        .map(|p| PlacedJob {
+            job: materialize_block(&data, &p),
+            out_base: p.out_base,
+            in_block: p.in_block,
+            in_blocks: p.in_blocks,
+            row_base: p.row_base,
+            rows_valid: p.rows_valid,
+        })
+        .collect()
 }
 
 /// Offset (within a tile's output) of the first valid row, given the tile
@@ -232,5 +240,24 @@ mod tests {
         let jobs = decompose(&wl, &cfg);
         let rows: usize = jobs.iter().map(|j| j.rows_valid).sum();
         assert_eq!(rows, 40 - 4);
+    }
+
+    #[test]
+    fn plans_carry_no_data_and_match_materialization() {
+        let cfg = ChipConfig::yodann();
+        let wl = workload(3, 48, 40, 40, 8);
+        let plans = plan_layer(&cfg, wl.k, wl.zero_pad, wl.input.c, wl.kernels.n_out, wl.input.h);
+        let jobs = decompose(&wl, &cfg);
+        assert_eq!(plans.len(), jobs.len());
+        for (p, j) in plans.iter().zip(jobs.iter()) {
+            assert_eq!(p.out_base, j.out_base);
+            assert_eq!(p.in_block, j.in_block);
+            assert_eq!(p.in_blocks, j.in_blocks);
+            assert_eq!(p.row_base, j.row_base);
+            assert_eq!(p.rows_valid, j.rows_valid);
+            assert_eq!(p.tile_h, j.job.image.h);
+            assert_eq!(p.in_len, j.job.image.c);
+            assert_eq!(p.out_len, j.job.kernels.n_out);
+        }
     }
 }

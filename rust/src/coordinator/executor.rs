@@ -1,15 +1,22 @@
-//! The layer executor: runs decomposed block jobs on simulated chips,
-//! reduces input-channel partial sums off-chip, applies the final
-//! scale/bias, and aggregates the activity ledger.
+//! The layer executor: runs planned block jobs on a pool of convolution
+//! engines, reduces input-channel partial sums off-chip, applies the
+//! final scale/bias, and aggregates whatever activity ledger the engine
+//! kept.
+//!
+//! Since the engine refactor the executor is generic over
+//! [`ConvEngine`]: [`run_layer`] keeps the historical cycle-accurate
+//! behavior (bit-true outputs + full stats), [`run_layer_engine`]
+//! selects an engine at runtime, and [`run_layer_with`] takes any
+//! engine factory (one engine is built per worker thread).
 //!
 //! Concurrency model: blocks are independent up to the per-output-block
-//! reduction, so a `std::thread` worker pool simulates them in parallel
+//! reduction, so a `std::thread` worker pool computes them in parallel
 //! (the offline registry has no tokio). Parallelism accelerates the
-//! *simulation*; the chip-time ledger still sums every block's cycles,
-//! because the real device executes blocks sequentially.
+//! *host computation*; the chip-time ledger still sums every block's
+//! cycles, because the real device executes blocks sequentially.
 //!
 //! Numerical semantics of the off-chip reduction (Algorithm 1 line 37):
-//! each input-channel block leaves the chip as Q2.9 (identity scale —
+//! each input-channel block leaves the engine as Q2.9 (identity scale —
 //! saturating/truncating, exactly what the silicon streams); the host
 //! accumulates the partials in wide precision, clamps to the Q7.9
 //! accumulator range and applies the layer's α/β through the same
@@ -20,10 +27,14 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use super::blocks::{decompose, tile_row_skip, LayerWorkload, PlacedJob};
+use super::blocks::{plan_layer, tile_row_skip, LayerWorkload};
+use crate::engine::{
+    BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional, LayerData,
+    PackedKernels,
+};
 use crate::fixedpoint::{scale_bias, Q7_9};
-use crate::hw::{Chip, ChipConfig, ChipStats};
-use crate::workload::Image;
+use crate::hw::{ChipConfig, ChipStats};
+use crate::workload::{Image, ScaleBias};
 
 /// Execution options.
 #[derive(Debug, Clone, Copy)]
@@ -43,7 +54,8 @@ impl Default for ExecOptions {
 pub struct LayerRun {
     /// Output feature map (`n_out × out_h × out_w`, raw Q2.9).
     pub output: Image,
-    /// Merged activity statistics over all blocks.
+    /// Merged activity statistics over all blocks (all-zero except
+    /// `useful_ops` when the engine keeps no ledger).
     pub stats: ChipStats,
     /// Number of chip blocks executed.
     pub blocks: usize,
@@ -52,44 +64,114 @@ pub struct LayerRun {
     pub offchip_adds: u64,
 }
 
-/// Run one convolution layer on the simulated chip.
+/// Run one convolution layer on the cycle-accurate simulator (the
+/// historical default: bit-true outputs + full activity ledger).
 pub fn run_layer(wl: &LayerWorkload, cfg: &ChipConfig, opts: ExecOptions) -> LayerRun {
-    let jobs = decompose(wl, cfg);
-    let n_jobs = jobs.len();
+    let cfg_copy = *cfg;
+    run_layer_with(wl, cfg, opts, move || CycleAccurate::new(cfg_copy))
+}
+
+/// Run one convolution layer on a runtime-selected engine kind.
+pub fn run_layer_engine(
+    wl: &LayerWorkload,
+    cfg: &ChipConfig,
+    opts: ExecOptions,
+    kind: EngineKind,
+) -> LayerRun {
+    match kind {
+        EngineKind::CycleAccurate => run_layer(wl, cfg, opts),
+        EngineKind::Functional => run_layer_with(wl, cfg, opts, Functional::new),
+    }
+}
+
+/// Run one convolution layer with engines built by `make` (one engine
+/// per worker thread). Blocking, tiling, reduction and final scale/bias
+/// are engine-independent; outputs are bit-identical across engines.
+pub fn run_layer_with<E, F>(
+    wl: &LayerWorkload,
+    cfg: &ChipConfig,
+    opts: ExecOptions,
+    make: F,
+) -> LayerRun
+where
+    E: ConvEngine,
+    F: Fn() -> E + Sync,
+{
     let n_out = wl.kernels.n_out;
     let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
     let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
+    let plans = plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, n_out, wl.input.h);
+    let n_jobs = plans.len();
 
-    // Run the blocks (worker pool over a shared queue).
-    let results: Vec<(PlacedJob, crate::hw::BlockResult)> = run_jobs(jobs, cfg, opts);
+    // Pack the kernels once per layer, but only when the engine actually
+    // consumes the packed form (the cycle-accurate engine does not).
+    let mut engine0 = make();
+    let packed =
+        if engine0.wants_packed() { Some(PackedKernels::pack(&wl.kernels)) } else { None };
+    let data = wl.as_layer_data(packed.as_ref());
+
+    let results = run_plans(&data, plans, opts, &make, &mut engine0);
 
     // Reduce: wide-precision accumulation of per-input-block partials.
     let mut acc = vec![0i64; n_out * out_h * out_w];
     let mut stats = ChipStats::default();
     let mut offchip_adds = 0u64;
-    for (placed, result) in &results {
+    let mut single_in_block = true;
+    for (plan, result) in &results {
         stats.merge(&result.stats);
-        let skip = tile_row_skip(wl.zero_pad, wl.k, placed.row_base);
-        for o in 0..result.output.c {
-            let oo = placed.out_base + o;
-            for r in 0..placed.rows_valid {
-                let ty = skip + r; // row inside the tile's output
-                let ly = placed.row_base + r; // row in the layer output
-                for x in 0..out_w {
-                    let idx = (oo * out_h + ly) * out_w + x;
-                    acc[idx] += result.output.at(o, ty, x);
-                    if placed.in_block > 0 {
-                        offchip_adds += 1;
-                    }
+        if plan.in_blocks > 1 {
+            single_in_block = false;
+        }
+        offchip_adds +=
+            reduce_block(&mut acc, wl.zero_pad, wl.k, out_h, out_w, plan, &result.output);
+    }
+
+    let output = finalize_output(&acc, single_in_block, &wl.scale_bias, n_out, out_h, out_w);
+    LayerRun { output, stats, blocks: n_jobs, offchip_adds }
+}
+
+/// Accumulate one block's output tile into the layer-wide wide-precision
+/// accumulator. Returns the off-chip additions performed (partials from
+/// input blocks after the first).
+pub(crate) fn reduce_block(
+    acc: &mut [i64],
+    zero_pad: bool,
+    k: usize,
+    out_h: usize,
+    out_w: usize,
+    plan: &BlockPlan,
+    output: &Image,
+) -> u64 {
+    let skip = tile_row_skip(zero_pad, k, plan.row_base);
+    let mut adds = 0u64;
+    for o in 0..output.c {
+        let oo = plan.out_base + o;
+        for r in 0..plan.rows_valid {
+            let ty = skip + r; // row inside the tile's output
+            let ly = plan.row_base + r; // row in the layer output
+            for x in 0..out_w {
+                acc[(oo * out_h + ly) * out_w + x] += output.at(o, ty, x);
+                if plan.in_block > 0 {
+                    adds += 1;
                 }
             }
         }
     }
+    adds
+}
 
-    // Final scale/bias. Single-input-block layers already applied the
-    // real α/β on-chip (straight from the Q7.9 accumulators); the host
-    // only rescales when partials from several input blocks were reduced.
-    let single_in_block = results.iter().all(|(p, _)| p.in_blocks == 1);
+/// Final scale/bias over the reduced accumulator. Single-input-block
+/// layers already applied the real α/β on-chip (straight from the Q7.9
+/// accumulators); the host only rescales when partials from several
+/// input blocks were reduced.
+pub(crate) fn finalize_output(
+    acc: &[i64],
+    single_in_block: bool,
+    sb: &ScaleBias,
+    n_out: usize,
+    out_h: usize,
+    out_w: usize,
+) -> Image {
     let mut output = Image::zeros(n_out, out_h, out_w);
     for o in 0..n_out {
         for y in 0..out_h {
@@ -98,47 +180,52 @@ pub fn run_layer(wl: &LayerWorkload, cfg: &ChipConfig, opts: ExecOptions) -> Lay
                 *output.at_mut(o, y, x) = if single_in_block {
                     raw
                 } else {
-                    scale_bias(Q7_9.saturate(raw), wl.scale_bias.alpha[o], wl.scale_bias.beta[o])
+                    scale_bias(Q7_9.saturate(raw), sb.alpha[o], sb.beta[o])
                 };
             }
         }
     }
-
-    LayerRun { output, stats, blocks: n_jobs, offchip_adds }
+    output
 }
 
-/// Execute jobs on a pool of simulated chips.
-fn run_jobs(
-    jobs: Vec<PlacedJob>,
-    cfg: &ChipConfig,
+/// Execute plans on a pool of engines. `engine0` is reused on the
+/// single-worker path; the parallel path builds one engine per thread
+/// (engines need not be `Send`).
+fn run_plans<E, F>(
+    data: &LayerData<'_>,
+    plans: Vec<BlockPlan>,
     opts: ExecOptions,
-) -> Vec<(PlacedJob, crate::hw::BlockResult)> {
-    let workers = opts.workers.max(1).min(jobs.len().max(1));
+    make: &F,
+    engine0: &mut E,
+) -> Vec<(BlockPlan, EngineOutput)>
+where
+    E: ConvEngine,
+    F: Fn() -> E + Sync,
+{
+    let workers = opts.workers.max(1).min(plans.len().max(1));
     if workers <= 1 {
-        let mut chip = Chip::new(*cfg);
-        return jobs
+        return plans
             .into_iter()
             .map(|p| {
-                let r = chip.run_block(&p.job);
+                let r = engine0.run_plan(data, &p);
                 (p, r)
             })
             .collect();
     }
-    let queue = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>()));
+    let queue = Arc::new(Mutex::new(plans.into_iter().enumerate().collect::<Vec<_>>()));
     let (tx, rx) = mpsc::channel();
     std::thread::scope(|s| {
         for _ in 0..workers {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
-            let cfg = *cfg;
             s.spawn(move || {
-                let mut chip = Chip::new(cfg);
+                let mut engine = make();
                 loop {
                     let item = queue.lock().unwrap().pop();
                     match item {
-                        Some((idx, placed)) => {
-                            let result = chip.run_block(&placed.job);
-                            tx.send((idx, placed, result)).unwrap();
+                        Some((idx, plan)) => {
+                            let result = engine.run_plan(data, &plan);
+                            tx.send((idx, plan, result)).unwrap();
                         }
                         None => break,
                     }
@@ -147,7 +234,7 @@ fn run_jobs(
         }
         drop(tx);
     });
-    let mut collected: Vec<(usize, PlacedJob, crate::hw::BlockResult)> = rx.into_iter().collect();
+    let mut collected: Vec<(usize, BlockPlan, EngineOutput)> = rx.into_iter().collect();
     collected.sort_by_key(|(i, _, _)| *i);
     collected.into_iter().map(|(_, p, r)| (p, r)).collect()
 }
@@ -226,5 +313,20 @@ mod tests {
         let b = run_layer(&w, &cfg, ExecOptions { workers: 4 });
         assert_eq!(a.output, b.output);
         assert_eq!(a.stats.cycles.total(), b.stats.cycles.total());
+    }
+
+    #[test]
+    fn engine_selection_is_bit_identical() {
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(5, 7, 6, 14, 10, 66);
+        let cyc = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, EngineKind::CycleAccurate);
+        let fun = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, EngineKind::Functional);
+        assert_eq!(cyc.output, fun.output);
+        assert_eq!(cyc.blocks, fun.blocks);
+        assert_eq!(cyc.offchip_adds, fun.offchip_adds);
+        // The functional engine keeps no cycle ledger.
+        assert_eq!(fun.stats.cycles.total(), 0);
+        assert!(cyc.stats.cycles.total() > 0);
+        assert_eq!(fun.stats.useful_ops, cyc.stats.useful_ops);
     }
 }

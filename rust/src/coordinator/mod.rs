@@ -4,26 +4,36 @@
 //! image tile at a time; everything else is the host's job (paper
 //! Algorithm 1 lines 1–3 and 37):
 //!
-//! * [`blocks`] — decompose a convolution layer into [`hw::BlockJob`]s:
-//!   output-channel blocks, input-channel blocks, and vertical image
-//!   tiles with `k − 1` rows of overlap (the η_tile cost of Eq. 9);
-//! * [`executor`] — run the jobs on one or more simulated chips using a
-//!   `std::thread` worker pool (tokio is unavailable offline; blocks are
-//!   independent up to the partial-sum reduction), accumulate
-//!   input-channel partial sums off-chip, apply the final scale/bias,
-//!   and merge activity statistics;
-//! * [`golden`] — check simulator block outputs bit-for-bit against the
-//!   AOT-compiled JAX/Pallas golden model via [`crate::runtime`];
+//! * [`blocks`] — decompose a convolution layer into index-only
+//!   [`crate::engine::BlockPlan`]s (zero-copy) or materialized
+//!   [`crate::hw::BlockJob`]s: output-channel blocks, input-channel
+//!   blocks, and vertical image tiles with `k − 1` rows of overlap (the
+//!   η_tile cost of Eq. 9);
+//! * [`executor`] — run the planned blocks on a pool of convolution
+//!   engines ([`crate::engine::ConvEngine`]: cycle-accurate or
+//!   functional popcount), accumulate input-channel partial sums
+//!   off-chip, apply the final scale/bias, and merge activity
+//!   statistics;
+//! * [`session`] — batched multi-frame inference: a persistent worker
+//!   pool with `Arc`-shared kernels/scale-bias and reusable accumulator
+//!   buffers runs a whole network over frame batches with one setup;
+//! * [`golden`] (feature `golden`) — check block outputs bit-for-bit
+//!   against the AOT-compiled JAX/Pallas golden model via
+//!   `crate::runtime`;
 //! * [`metrics`] — roll simulated cycles/energy into the paper's metrics
 //!   (Θ, TOp/s/W, FPS, J/frame) for cross-validation against the
 //!   analytic model of [`crate::model::efficiency`].
 
 pub mod blocks;
 pub mod executor;
+#[cfg(feature = "golden")]
 pub mod golden;
 pub mod metrics;
+pub mod session;
 
-pub use blocks::{decompose, LayerWorkload};
-pub use executor::{run_layer, ExecOptions, LayerRun};
+pub use blocks::{decompose, plan_layer, LayerWorkload};
+pub use executor::{run_layer, run_layer_engine, run_layer_with, ExecOptions, LayerRun};
+#[cfg(feature = "golden")]
 pub use golden::{check_block, GoldenReport};
 pub use metrics::SimMetrics;
+pub use session::{NetworkSession, SessionLayerSpec};

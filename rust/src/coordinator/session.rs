@@ -1,0 +1,493 @@
+//! Batched network sessions: run a whole CNN over many frames with one
+//! setup.
+//!
+//! [`NetworkSession`] holds a **persistent worker pool** (threads live
+//! for the session's lifetime, fed over a channel) and `Arc`-shared
+//! per-layer state — kernels, scale/bias and the pre-packed popcount
+//! words ([`crate::engine::PackedKernels`]) are packed **once** at
+//! session build and shared by every worker, eliminating the per-job
+//! `Image`/`BinaryKernels` clones of the materializing path. Each worker
+//! owns one [`ConvEngine`] instance plus a reusable wide-precision
+//! accumulator, so steady-state frame processing allocates only the
+//! output images.
+//!
+//! Parallelism is **per frame**: a batch fans frames out across the
+//! pool, each worker carrying its frame through every layer (conv →
+//! optional quantized ReLU → optional 2×2 max-pool). Within a frame the
+//! blocks of a layer run sequentially on the worker's engine — for
+//! throughput traffic, frame-level parallelism keeps every core busy
+//! without any cross-thread reduction.
+//!
+//! The per-layer numerical pipeline is exactly the executor's:
+//! plan → engine blocks → off-chip wide accumulation → final α/β
+//! (Algorithm 1 line 37), so session outputs are bit-identical to
+//! [`super::executor::run_layer_engine`] layer by layer, for either
+//! engine kind.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::blocks::plan_layer;
+use super::executor::{finalize_output, reduce_block};
+use crate::engine::{ConvEngine, EngineKind, LayerData, PackedKernels};
+use crate::fixedpoint::Q2_9;
+use crate::hw::ChipConfig;
+use crate::model::Network;
+use crate::testkit::Gen;
+use crate::workload::{BinaryKernels, Image, ScaleBias};
+
+/// One layer of a session: conv parameters plus the inter-layer plumbing
+/// the host applies after it (quantized ReLU, 2×2 max-pool).
+#[derive(Debug, Clone)]
+pub struct SessionLayerSpec {
+    /// Kernel size (1..=7).
+    pub k: usize,
+    /// Zero-padded convolution.
+    pub zero_pad: bool,
+    /// Kernel set, shared across workers and frames.
+    pub kernels: Arc<BinaryKernels>,
+    /// Per-output-channel scale/bias, shared.
+    pub scale_bias: Arc<ScaleBias>,
+    /// Apply a quantized ReLU (`max(0, ·)`) after the conv.
+    pub relu: bool,
+    /// Apply a 2×2 max-pool after the conv (and ReLU, if any).
+    pub maxpool2: bool,
+}
+
+impl SessionLayerSpec {
+    /// Build a runnable layer chain from a Table-III network descriptor:
+    /// conv rows are expanded by their repeat counts, random binary
+    /// kernels and small range-preserving scales are generated from
+    /// `seed`, ReLU runs between layers, and a 2×2 max-pool is inserted
+    /// wherever the table's geometry halves. Returns an error for
+    /// networks that are not a simple chain (e.g. AlexNet's parallel
+    /// 11×11 split rows).
+    pub fn synthetic_network(net: &Network, seed: u64) -> Result<Vec<SessionLayerSpec>, String> {
+        let convs: Vec<_> = net.conv_layers().collect();
+        if convs.is_empty() {
+            return Err(format!("network '{}' has no conv layers", net.id));
+        }
+        let mut g = Gen::new(seed);
+        let mut specs: Vec<SessionLayerSpec> = Vec::new();
+        let mut prev_out: Option<usize> = None;
+        for (idx, c) in convs.iter().enumerate() {
+            for rep in 0..c.repeat.max(1) {
+                let n_in = if rep == 0 { c.n_in } else { c.n_out };
+                if let Some(p) = prev_out {
+                    if p != n_in {
+                        return Err(format!(
+                            "network '{}' is not a simple chain at layer '{}': previous \
+                             output {} feeds declared input {}",
+                            net.id, c.label, p, n_in
+                        ));
+                    }
+                }
+                specs.push(SessionLayerSpec {
+                    k: c.k,
+                    zero_pad: c.zero_pad,
+                    kernels: Arc::new(BinaryKernels::random(&mut g, c.n_out, n_in, c.k)),
+                    scale_bias: Arc::new(ScaleBias {
+                        alpha: vec![Q2_9.from_f64(0.05); c.n_out],
+                        beta: vec![Q2_9.from_f64(0.01); c.n_out],
+                    }),
+                    relu: true,
+                    maxpool2: false,
+                });
+                prev_out = Some(c.n_out);
+            }
+            // Pool after this row when the next row's tabulated height
+            // is half of this row's.
+            if let Some(next) = convs.get(idx + 1) {
+                if next.h * 2 == c.h {
+                    specs.last_mut().unwrap().maxpool2 = true;
+                }
+            }
+        }
+        specs.last_mut().unwrap().relu = false;
+        Ok(specs)
+    }
+}
+
+/// Internal per-layer state: the spec plus the session-wide packed
+/// kernel words (packed only for engines that consume them).
+struct SessionLayer {
+    spec: SessionLayerSpec,
+    packed: Option<Arc<PackedKernels>>,
+}
+
+/// A persistent multi-frame inference session over one network.
+pub struct NetworkSession {
+    tx: Option<Sender<(usize, Image)>>,
+    rx_out: Receiver<(usize, Result<Image, String>)>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    engine: EngineKind,
+    n_layers: usize,
+    n_in: usize,
+}
+
+impl NetworkSession {
+    /// Build a session: validates the layer chain, packs every layer's
+    /// kernels once, and spins up `workers` threads each owning one
+    /// engine of `kind`.
+    pub fn new(
+        cfg: ChipConfig,
+        kind: EngineKind,
+        workers: usize,
+        specs: Vec<SessionLayerSpec>,
+    ) -> NetworkSession {
+        assert!(!specs.is_empty(), "session needs at least one layer");
+        for (i, s) in specs.iter().enumerate() {
+            assert!(s.k >= 1 && s.k <= 7, "layer {i}: kernel size {} unsupported", s.k);
+            assert_eq!(
+                s.scale_bias.alpha.len(),
+                s.kernels.n_out,
+                "layer {i}: scale/bias arity mismatch"
+            );
+            if i > 0 {
+                assert_eq!(
+                    specs[i - 1].kernels.n_out,
+                    s.kernels.n_in,
+                    "layer {i}: channel chain mismatch"
+                );
+            }
+        }
+        let n_in = specs[0].kernels.n_in;
+        // Pack once per session, only when the engine consumes the packed
+        // form (the cycle-accurate engine materializes jobs instead).
+        let pack = matches!(kind, EngineKind::Functional);
+        let layers: Vec<SessionLayer> = specs
+            .into_iter()
+            .map(|spec| {
+                let packed =
+                    pack.then(|| Arc::new(PackedKernels::pack(&spec.kernels)));
+                SessionLayer { spec, packed }
+            })
+            .collect();
+        let n_layers = layers.len();
+        let layers = Arc::new(layers);
+        let workers = workers.max(1);
+        let (tx, rx_in) = channel::<(usize, Image)>();
+        let rx_in = Arc::new(Mutex::new(rx_in));
+        let (tx_out, rx_out) = channel::<(usize, Result<Image, String>)>();
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx_in);
+            let tx_out = tx_out.clone();
+            let layers = Arc::clone(&layers);
+            handles.push(std::thread::spawn(move || {
+                let mut engine = kind.build(cfg);
+                let mut acc: Vec<i64> = Vec::new();
+                loop {
+                    // Take the next frame; holding the lock while idle is
+                    // fine — exactly one waiter is handed each task.
+                    let task = rx.lock().unwrap().recv();
+                    let (idx, frame) = match task {
+                        Ok(t) => t,
+                        Err(_) => break, // session dropped
+                    };
+                    // A panic (bad frame geometry, engine bug) must reach
+                    // the batch as an error — a silently dead worker would
+                    // leave run_batch waiting forever on this frame.
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_frame_inner(&cfg, &mut *engine, &layers, frame, &mut acc)
+                    }))
+                    .map_err(panic_message);
+                    if out.is_err() {
+                        // Engine/scratch state may be mid-frame garbage.
+                        engine = kind.build(cfg);
+                        acc = Vec::new();
+                    }
+                    if tx_out.send((idx, out)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        NetworkSession { tx: Some(tx), rx_out, handles, workers, engine: kind, n_layers, n_in }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Engine kind the pool runs.
+    pub fn engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Layers in the network.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Run one frame through the whole network.
+    pub fn run_frame(&mut self, frame: Image) -> Image {
+        self.run_batch(vec![frame]).pop().unwrap()
+    }
+
+    /// Run a batch of frames, fanned out across the worker pool.
+    /// Results come back in input order.
+    ///
+    /// Panics on frames whose channel count does not match the first
+    /// layer (validated up front — a worker dying mid-batch would
+    /// otherwise leave the batch waiting forever).
+    pub fn run_batch(&mut self, frames: Vec<Image>) -> Vec<Image> {
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(
+                f.c, self.n_in,
+                "frame {i} has {} channels, the network takes {}",
+                f.c, self.n_in
+            );
+        }
+        let n = frames.len();
+        let tx = self.tx.as_ref().expect("session already shut down");
+        for (i, f) in frames.into_iter().enumerate() {
+            tx.send((i, f)).expect("worker pool died");
+        }
+        let mut out: Vec<Option<Image>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<(usize, String)> = None;
+        for _ in 0..n {
+            let (i, res) = self.rx_out.recv().expect("worker pool died");
+            match res {
+                Ok(img) => out[i] = Some(img),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some((i, e));
+                    }
+                }
+            }
+        }
+        if let Some((i, e)) = first_err {
+            panic!("frame {i} failed in a session worker: {e}");
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+impl Drop for NetworkSession {
+    fn drop(&mut self) {
+        // Closing the task channel makes every worker's recv() fail;
+        // join them before the result receiver is torn down.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Carry one frame through every layer on one engine: per layer,
+/// plan → blocks → wide reduction (reusing `acc`) → final α/β → ReLU /
+/// max-pool. Identical numerics to `run_layer_engine`, minus the clones.
+fn run_frame_inner(
+    cfg: &ChipConfig,
+    engine: &mut dyn ConvEngine,
+    layers: &[SessionLayer],
+    frame: Image,
+    acc: &mut Vec<i64>,
+) -> Image {
+    let mut x = frame;
+    for (li, layer) in layers.iter().enumerate() {
+        let spec = &layer.spec;
+        assert_eq!(
+            x.c, spec.kernels.n_in,
+            "layer {li}: frame has {} channels, kernels expect {}",
+            x.c, spec.kernels.n_in
+        );
+        let n_out = spec.kernels.n_out;
+        let (out_h, out_w) = if spec.zero_pad {
+            (x.h, x.w)
+        } else {
+            (x.h - spec.k + 1, x.w - spec.k + 1)
+        };
+        let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
+        let data = LayerData {
+            k: spec.k,
+            zero_pad: spec.zero_pad,
+            input: &x,
+            kernels: &spec.kernels,
+            packed: layer.packed.as_deref(),
+            scale_bias: &spec.scale_bias,
+        };
+        acc.clear();
+        acc.resize(n_out * out_h * out_w, 0);
+        let mut single_in_block = true;
+        for plan in &plans {
+            let r = engine.run_plan(&data, plan);
+            if plan.in_blocks > 1 {
+                single_in_block = false;
+            }
+            reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
+        }
+        let mut y =
+            finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w);
+        if spec.relu {
+            y.data.iter_mut().for_each(|v| *v = (*v).max(0));
+        }
+        if spec.maxpool2 && y.h >= 2 && y.w >= 2 {
+            y = maxpool2(&y);
+        }
+        x = y;
+    }
+    x
+}
+
+/// Best-effort panic payload → message.
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "<non-string panic>".into()
+    }
+}
+
+/// 2×2 max-pool with stride 2 (odd trailing rows/columns dropped).
+fn maxpool2(img: &Image) -> Image {
+    let mut out = Image::zeros(img.c, img.h / 2, img.w / 2);
+    for c in 0..img.c {
+        for y in 0..out.h {
+            for x in 0..out.w {
+                *out.at_mut(c, y, x) = img
+                    .at(c, 2 * y, 2 * x)
+                    .max(img.at(c, 2 * y, 2 * x + 1))
+                    .max(img.at(c, 2 * y + 1, 2 * x))
+                    .max(img.at(c, 2 * y + 1, 2 * x + 1));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_layer_engine, ExecOptions, LayerWorkload};
+    use crate::model::networks;
+    use crate::workload::synthetic_scene;
+
+    fn two_layer_specs(seed: u64) -> Vec<SessionLayerSpec> {
+        let mut g = Gen::new(seed);
+        vec![
+            SessionLayerSpec {
+                k: 3,
+                zero_pad: true,
+                kernels: Arc::new(BinaryKernels::random(&mut g, 6, 3, 3)),
+                scale_bias: Arc::new(ScaleBias {
+                    alpha: vec![Q2_9.from_f64(0.1); 6],
+                    beta: vec![0; 6],
+                }),
+                relu: true,
+                maxpool2: true,
+            },
+            SessionLayerSpec {
+                k: 5,
+                zero_pad: true,
+                kernels: Arc::new(BinaryKernels::random(&mut g, 4, 6, 5)),
+                scale_bias: Arc::new(ScaleBias {
+                    alpha: vec![Q2_9.from_f64(0.1); 4],
+                    beta: vec![0; 4],
+                }),
+                relu: false,
+                maxpool2: false,
+            },
+        ]
+    }
+
+    fn manual_reference(specs: &[SessionLayerSpec], cfg: &ChipConfig, frame: &Image) -> Image {
+        let mut x = frame.clone();
+        for spec in specs {
+            let wl = LayerWorkload {
+                k: spec.k,
+                zero_pad: spec.zero_pad,
+                input: x.clone(),
+                kernels: (*spec.kernels).clone(),
+                scale_bias: (*spec.scale_bias).clone(),
+            };
+            let run = run_layer_engine(&wl, cfg, ExecOptions { workers: 1 },
+                EngineKind::CycleAccurate);
+            x = run.output;
+            if spec.relu {
+                x.data.iter_mut().for_each(|v| *v = (*v).max(0));
+            }
+            if spec.maxpool2 && x.h >= 2 && x.w >= 2 {
+                x = maxpool2(&x);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn session_matches_layerwise_executor_both_engines() {
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(77);
+        let mut g = Gen::new(5);
+        let frame = synthetic_scene(&mut g, 3, 12, 12);
+        let want = manual_reference(&specs, &cfg, &frame);
+        for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+            let mut sess = NetworkSession::new(cfg, kind, 2, specs.clone());
+            let got = sess.run_frame(frame.clone());
+            assert_eq!(got, want, "engine {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn batch_results_are_ordered_and_deterministic() {
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(78);
+        let mut g = Gen::new(9);
+        let frames: Vec<Image> = (0..6).map(|_| synthetic_scene(&mut g, 3, 10, 10)).collect();
+        let mut sess = NetworkSession::new(cfg, EngineKind::Functional, 3, specs.clone());
+        let batch = sess.run_batch(frames.clone());
+        assert_eq!(batch.len(), frames.len());
+        // Order: each batch slot must equal its frame run alone.
+        let mut solo = NetworkSession::new(cfg, EngineKind::Functional, 1, specs);
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(batch[i], solo.run_frame(f), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn session_survives_multiple_batches() {
+        let cfg = ChipConfig::tiny(4);
+        let mut sess = NetworkSession::new(cfg, EngineKind::Functional, 2, two_layer_specs(79));
+        let mut g = Gen::new(1);
+        for _ in 0..3 {
+            let frames: Vec<Image> =
+                (0..4).map(|_| synthetic_scene(&mut g, 3, 8, 8)).collect();
+            let out = sess.run_batch(frames);
+            assert_eq!(out.len(), 4);
+            assert_eq!((out[0].c, out[0].h, out[0].w), (4, 4, 4));
+        }
+    }
+
+    #[test]
+    fn synthetic_network_chains_and_pools() {
+        let specs = SessionLayerSpec::synthetic_network(&networks::scene_labeling(), 3).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert!(specs[0].maxpool2 && specs[1].maxpool2);
+        assert!(!specs[2].relu);
+        assert_eq!(specs[0].kernels.n_in, 3);
+        assert_eq!(specs[2].kernels.n_out, 256);
+        // bc-cifar10 pools after rows 2 and 4.
+        let bc = SessionLayerSpec::synthetic_network(&networks::bc_cifar10(), 3).unwrap();
+        assert_eq!(bc.len(), 6);
+        assert!(bc[1].maxpool2 && bc[3].maxpool2);
+        assert!(!bc[0].maxpool2);
+        // AlexNet's parallel split rows are rejected with a clear error.
+        let err = SessionLayerSpec::synthetic_network(&networks::alexnet(), 3).unwrap_err();
+        assert!(err.contains("not a simple chain"), "{err}");
+    }
+
+    #[test]
+    fn seeded_specs_are_reproducible() {
+        let a = SessionLayerSpec::synthetic_network(&networks::bc_svhn(), 42).unwrap();
+        let b = SessionLayerSpec::synthetic_network(&networks::bc_svhn(), 42).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.kernels.bits, y.kernels.bits);
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! The functional engine: YodaNN's sign-select-and-add datapath as a
+//! bit-packed popcount kernel, with no per-cycle ledger.
+//!
+//! Per (output, input) channel pair the k×k weight bits live in one
+//! `u64` ([`PackedKernels`]); per output pixel and input channel the
+//! window's activations are packed into 12 offset-binary bitplanes, and
+//! every output channel's window dot is then 12 `AND`+`POPCNT` steps
+//! (see the identity in the module docs of [`crate::engine`]). The
+//! accumulation order — exact window dot, Q7.9 saturating add per input
+//! channel, Scale-Bias to Q2.9 — is byte-for-byte the chip's, so the
+//! outputs are bit-identical to [`super::CycleAccurate`].
+
+use super::{BlockPlan, ConvEngine, EngineOutput, LayerData};
+use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+use crate::hw::{BlockJob, ChipStats};
+use crate::workload::{BinaryKernels, Image};
+
+/// Offset added to a raw Q2.9 sample to make it a non-negative 12-bit
+/// code (`x + 2048 ∈ [0, 4096)`).
+const OFFSET: i64 = 2048;
+/// Bitplanes in the offset-binary activation code.
+const PLANES: usize = 12;
+
+/// Kernel weight bits packed one `u64` word per (output, input) channel
+/// pair: bit `dy·k + dx` is 1 ⇔ w = +1 (the paper's Eq. 5 encoding).
+/// Pack once per layer (or once per session) and share by reference.
+#[derive(Debug, Clone)]
+pub struct PackedKernels {
+    /// Kernel size.
+    pub k: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Output channels.
+    pub n_out: usize,
+    words: Vec<u64>,
+    sign_sums: Vec<i64>,
+}
+
+impl PackedKernels {
+    /// Pack a kernel set (`k² ≤ 64` required; the chip supports k ≤ 7).
+    pub fn pack(kernels: &BinaryKernels) -> PackedKernels {
+        let k = kernels.k;
+        let kk = k * k;
+        assert!(kk >= 1 && kk <= 64, "kernel {k}x{k} does not fit a u64 word");
+        let mut words = Vec::with_capacity(kernels.n_out * kernels.n_in);
+        let mut sign_sums = Vec::with_capacity(kernels.n_out * kernels.n_in);
+        for o in 0..kernels.n_out {
+            for i in 0..kernels.n_in {
+                let mut w = 0u64;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        if kernels.bit(o, i, dy, dx) {
+                            w |= 1u64 << (dy * k + dx);
+                        }
+                    }
+                }
+                words.push(w);
+                sign_sums.push(2 * w.count_ones() as i64 - kk as i64);
+            }
+        }
+        PackedKernels { k, n_in: kernels.n_in, n_out: kernels.n_out, words, sign_sums }
+    }
+
+    /// Packed weight word of kernel (out, in).
+    #[inline]
+    pub fn word(&self, o: usize, i: usize) -> u64 {
+        self.words[o * self.n_in + i]
+    }
+
+    /// `Σ_j w_j` over the window of kernel (out, in): `2·pc(P) − k²`.
+    #[inline]
+    pub fn sign_sum(&self, o: usize, i: usize) -> i64 {
+        self.sign_sums[o * self.n_in + i]
+    }
+}
+
+/// The functional popcount engine. Holds reusable accumulator scratch so
+/// a worker thread allocates nothing per block.
+#[derive(Debug, Default)]
+pub struct Functional {
+    accs: Vec<i64>,
+}
+
+impl Functional {
+    /// New engine with empty scratch.
+    pub fn new() -> Functional {
+        Functional::default()
+    }
+}
+
+impl ConvEngine for Functional {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        let layer = LayerData {
+            k: job.k,
+            zero_pad: job.zero_pad,
+            input: &job.image,
+            kernels: &job.kernels,
+            packed: None,
+            scale_bias: &job.scale_bias,
+        };
+        let plan =
+            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
+        self.run_plan(&layer, &plan)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let k = layer.k;
+        let kk = k * k;
+        let w = layer.input.w;
+        let tile_h = plan.tile_h;
+        if !layer.zero_pad {
+            assert!(tile_h >= k && w >= k, "tile {tile_h}x{w} smaller than kernel {k} (valid mode)");
+        }
+        let offset = if layer.zero_pad { ((k - 1) / 2) as isize } else { 0 };
+        let (out_h, out_w) =
+            if layer.zero_pad { (tile_h, w) } else { (tile_h + 1 - k, w + 1 - k) };
+        let n_in = plan.in_len;
+        let n_out = plan.out_len;
+        // Borrow the caller's packed kernels, or pack this block's slice
+        // view on the fly (cheap: one pass over the weight bits).
+        let local;
+        let packed: &PackedKernels = match layer.packed {
+            Some(p) => {
+                debug_assert_eq!(p.k, k);
+                p
+            }
+            None => {
+                local = PackedKernels::pack(layer.kernels);
+                &local
+            }
+        };
+        // Partial (non-final) input blocks stream identity-scaled Q2.9,
+        // exactly like the silicon (coordinator/blocks.rs docs).
+        let identity = plan.in_blocks > 1;
+        let input = layer.input;
+        let kk_offset = kk as i64 * OFFSET;
+        let mut out = Image::zeros(n_out, out_h, out_w);
+        self.accs.clear();
+        self.accs.resize(n_out, 0);
+        let accs = &mut self.accs;
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                for i in 0..n_in {
+                    // Pack this channel's k×k window into offset-binary
+                    // bitplanes; positions outside the *tile* read the
+                    // zero-padding halo (code 2048), like the chip's
+                    // padding muxes.
+                    let mut planes = [0u64; PLANES];
+                    let mut total: i64 = 0; // Σ_j x_j (true window sum)
+                    let mut j = 0u32;
+                    for dy in 0..k {
+                        let ty = y as isize + dy as isize - offset;
+                        let row_ok = ty >= 0 && ty < tile_h as isize;
+                        for dx in 0..k {
+                            let tx = x as isize + dx as isize - offset;
+                            let px = if row_ok && tx >= 0 && tx < w as isize {
+                                input.at(plan.in_base + i, plan.clip0 + ty as usize, tx as usize)
+                            } else {
+                                0
+                            };
+                            debug_assert!(
+                                crate::fixedpoint::Q2_9.contains(px),
+                                "activation {px} outside Q2.9"
+                            );
+                            total += px;
+                            let mut u = (px + OFFSET) as u64;
+                            while u != 0 {
+                                planes[u.trailing_zeros() as usize] |= 1u64 << j;
+                                u &= u - 1;
+                            }
+                            j += 1;
+                        }
+                    }
+                    let sum_u = total + kk_offset;
+                    for (o, acc) in accs.iter_mut().enumerate() {
+                        let word = packed.word(plan.out_base + o, plan.in_base + i);
+                        let mut dot2: i64 = 0;
+                        for (b, &plane) in planes.iter().enumerate() {
+                            dot2 += ((plane & word).count_ones() as i64) << b;
+                        }
+                        // Σ w·x = 2·Σ_b 2^b·pc(U_b ∧ P) − Σ u − 2048·Σ w
+                        let sop = 2 * dot2
+                            - sum_u
+                            - OFFSET * packed.sign_sum(plan.out_base + o, plan.in_base + i);
+                        *acc = sat_add(Q7_9, *acc, sop);
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+        let stats = ChipStats {
+            useful_ops: 2 * kk as u64 * (n_in * n_out) as u64 * (out_h * out_w) as u64,
+            ..Default::default()
+        };
+        EngineOutput { output: out, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, reference_conv, synthetic_scene, ScaleBias};
+
+    fn job(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, zp: bool, seed: u64) -> BlockJob {
+        let mut g = Gen::new(seed);
+        BlockJob {
+            k,
+            zero_pad: zp,
+            image: random_image(&mut g, n_in, h, w, 0.05),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(&mut g, n_out),
+        }
+    }
+
+    #[test]
+    fn packed_words_match_bits() {
+        let mut g = Gen::new(1);
+        let ks = BinaryKernels::random(&mut g, 3, 2, 5);
+        let p = PackedKernels::pack(&ks);
+        for o in 0..3 {
+            for i in 0..2 {
+                let mut plus = 0i64;
+                for dy in 0..5 {
+                    for dx in 0..5 {
+                        let bit = ks.bit(o, i, dy, dx);
+                        assert_eq!((p.word(o, i) >> (dy * 5 + dx)) & 1 == 1, bit);
+                        plus += if bit { 1 } else { -1 };
+                    }
+                }
+                assert_eq!(p.sign_sum(o, i), plus);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_all_kernel_sizes() {
+        for k in 1..=7usize {
+            let j = job(k, 3, 4, 10, 9, true, 40 + k as u64);
+            let want = reference_conv(&j.image, &j.kernels, &j.scale_bias, true);
+            assert_eq!(Functional::new().run_block(&j).output, want, "k={k} padded");
+            if k > 1 {
+                let j = job(k, 2, 3, 11, 10, false, 80 + k as u64);
+                let want = reference_conv(&j.image, &j.kernels, &j.scale_bias, false);
+                assert_eq!(Functional::new().run_block(&j).output, want, "k={k} valid");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_in_saturating_regime() {
+        // Full-amplitude scene with many channels: Q7.9 saturation fires
+        // and the per-channel saturation order must still agree.
+        let mut g = Gen::new(9);
+        let image = synthetic_scene(&mut g, 16, 10, 10);
+        let kernels = BinaryKernels::random(&mut g, 8, 16, 3);
+        let sb = ScaleBias::random(&mut g, 8);
+        let j = BlockJob {
+            k: 3,
+            zero_pad: true,
+            image: image.clone(),
+            kernels: kernels.clone(),
+            scale_bias: sb.clone(),
+        };
+        let want = reference_conv(&image, &kernels, &sb, true);
+        assert_eq!(Functional::new().run_block(&j).output, want);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_blocks() {
+        let mut e = Functional::new();
+        let a = job(3, 2, 6, 8, 8, true, 1);
+        let b = job(5, 3, 2, 9, 9, false, 2);
+        let ra1 = e.run_block(&a).output;
+        let rb = e.run_block(&b).output;
+        let ra2 = e.run_block(&a).output;
+        assert_eq!(ra1, ra2);
+        assert_eq!(rb, reference_conv(&b.image, &b.kernels, &b.scale_bias, false));
+    }
+
+    #[test]
+    fn useful_ops_follow_eq7() {
+        let j = job(3, 2, 4, 6, 5, true, 3);
+        let s = Functional::new().run_block(&j).stats;
+        assert_eq!(s.useful_ops, 2 * 9 * (2 * 4) as u64 * (6 * 5) as u64);
+        assert_eq!(s.cycles.total(), 0); // no ledger
+    }
+}

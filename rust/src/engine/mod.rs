@@ -1,0 +1,302 @@
+//! Pluggable convolution engines — the bit-true datapath decoupled from
+//! activity accounting.
+//!
+//! Everything that *computes* a chip block now goes through the
+//! [`ConvEngine`] trait, with two implementations:
+//!
+//! * [`CycleAccurate`] — wraps [`crate::hw::Chip`]: the per-cycle
+//!   simulator with the full activity ledger (SCM bank events, SoP
+//!   operator counts, cycle breakdown). Unchanged bit-true + stats
+//!   semantics; this is what the paper's tables and the energy model
+//!   consume.
+//! * [`Functional`] — outputs only, as fast as the host allows: kernels
+//!   bit-packed into one `u64` word per (output, input) channel pair
+//!   ([`PackedKernels`]), window dots evaluated as popcounts over the
+//!   activations' offset-binary bitplanes, and the identical
+//!   Q2.9/Q7.9/Q10.18 saturation order (per-input-channel `sat_add`,
+//!   then the Scale-Bias datapath). No per-cycle ledger is kept, which
+//!   is the point: serving throughput traffic does not need one.
+//!
+//! The two engines are **bit-identical** on every supported geometry
+//! (k ∈ 1..=7, zero-padded and valid, channel-blocked and vertically
+//! tiled) — `rust/tests/engine_equivalence.rs` sweeps this exhaustively.
+//!
+//! Engines consume work in two forms: a materialized [`BlockJob`]
+//! (`run_block`, the historical interface), or a zero-copy
+//! ([`LayerData`], [`BlockPlan`]) pair (`run_plan`) where the plan is
+//! pure indices into the full layer's image/kernel/scale data — this is
+//! what lets [`crate::coordinator::session::NetworkSession`] share one
+//! `Arc`'d kernel set across a worker pool without per-job clones.
+//!
+//! ### The popcount identity
+//!
+//! Activations are 12-bit Q2.9 raw values `x ∈ [−2048, 2047]`. Encode
+//! each window sample in offset binary `u = x + 2048 ∈ [0, 4096)` and
+//! pack bit `b` of every window sample into a plane word `U_b` (window
+//! position `j` = bit `j`). With `P` the kernel's packed weight word
+//! (bit 1 ⇔ w = +1, Eq. 5) and `S = Σ_j w_j = 2·pc(P) − k²`:
+//!
+//! ```text
+//! Σ_j w_j·x_j = 2·Σ_b 2^b·pc(U_b ∧ P) − Σ_j u_j − 2048·S
+//! ```
+//!
+//! which is exact integer arithmetic — the sign-select-and-add of the
+//! paper's SoP units, done `12 AND+POPCNT` per (window, output channel)
+//! with the plane packing amortized over all output channels.
+
+pub mod cycle;
+pub mod functional;
+
+pub use cycle::CycleAccurate;
+pub use functional::{Functional, PackedKernels};
+
+use crate::hw::{BlockJob, ChipConfig, ChipStats};
+use crate::workload::{BinaryKernels, Image, ScaleBias};
+
+/// A planned chip block: pure indices into the parent layer's data —
+/// no image tiles, no kernel slices. Produced by
+/// [`crate::coordinator::blocks::plan_layer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockPlan {
+    /// First output channel this block computes.
+    pub out_base: usize,
+    /// Output channels in this block.
+    pub out_len: usize,
+    /// First input channel of this block.
+    pub in_base: usize,
+    /// Input channels in this block.
+    pub in_len: usize,
+    /// Input-channel block index (for the off-chip partial-sum reduction).
+    pub in_block: usize,
+    /// Total input-channel blocks for this output block.
+    pub in_blocks: usize,
+    /// First output row of this tile in the layer's output.
+    pub row_base: usize,
+    /// Rows of valid (non-halo) output this tile contributes.
+    pub rows_valid: usize,
+    /// First input row of the tile in the full image.
+    pub clip0: usize,
+    /// Input rows in the tile.
+    pub tile_h: usize,
+}
+
+impl BlockPlan {
+    /// A plan covering one whole (already materialized) block job —
+    /// the `run_block` → `run_plan` adapter.
+    pub fn whole(k: usize, zero_pad: bool, n_out: usize, n_in: usize, h: usize) -> BlockPlan {
+        BlockPlan {
+            out_base: 0,
+            out_len: n_out,
+            in_base: 0,
+            in_len: n_in,
+            in_block: 0,
+            in_blocks: 1,
+            row_base: 0,
+            rows_valid: if zero_pad { h } else { (h + 1).saturating_sub(k) },
+            clip0: 0,
+            tile_h: h,
+        }
+    }
+}
+
+/// A borrowed view of one full layer's data: what a [`BlockPlan`]
+/// indexes into. `packed` optionally carries the pre-packed kernel
+/// bit-words so the functional engine packs once per layer (or once per
+/// session) rather than once per block.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerData<'a> {
+    /// Kernel size (1..=7).
+    pub k: usize,
+    /// Zero-padded convolution.
+    pub zero_pad: bool,
+    /// Full input feature map.
+    pub input: &'a Image,
+    /// Full kernel set.
+    pub kernels: &'a BinaryKernels,
+    /// Pre-packed kernel bit-words, if the caller has them.
+    pub packed: Option<&'a PackedKernels>,
+    /// Full per-output-channel scale/bias.
+    pub scale_bias: &'a ScaleBias,
+}
+
+/// What an engine returns for one block: the output tile, plus whatever
+/// activity the engine chose to account (the functional engine only
+/// fills `useful_ops`; the cycle-accurate engine fills everything).
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    /// Output tile (`out_len × out_h × out_w`, raw Q2.9).
+    pub output: Image,
+    /// Activity statistics (all-zero except `useful_ops` for engines
+    /// that keep no ledger).
+    pub stats: ChipStats,
+}
+
+/// A convolution engine: computes chip blocks with YodaNN's exact
+/// arithmetic. Implementations may keep per-instance scratch state, so
+/// the coordinator builds one engine per worker thread.
+pub trait ConvEngine {
+    /// Short engine name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether this engine consumes [`LayerData::packed`] — callers skip
+    /// the per-layer packing pass for engines that don't.
+    fn wants_packed(&self) -> bool {
+        false
+    }
+
+    /// Execute one materialized block job.
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput;
+
+    /// Execute one planned block against the full layer's data. The
+    /// default materializes the job (tile + kernel slices) and calls
+    /// [`Self::run_block`]; engines that can work zero-copy override it.
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let job = materialize_block(layer, plan);
+        self.run_block(&job)
+    }
+}
+
+/// Materialize a planned block into an owned [`BlockJob`]: slice the
+/// image tile, the kernel bits and the scale/bias exactly as the chip
+/// expects them. Intermediate (non-final) input blocks get identity
+/// scale/bias — the real α/β are applied after the off-chip reduction
+/// (Algorithm 1 line 37).
+pub fn materialize_block(layer: &LayerData<'_>, plan: &BlockPlan) -> BlockJob {
+    let k = layer.k;
+    let input = layer.input;
+    let mut tile = Image::zeros(plan.in_len, plan.tile_h, input.w);
+    for c in 0..plan.in_len {
+        for y in 0..plan.tile_h {
+            for x in 0..input.w {
+                *tile.at_mut(c, y, x) = input.at(plan.in_base + c, plan.clip0 + y, x);
+            }
+        }
+    }
+    let mut bits = Vec::with_capacity(plan.out_len * plan.in_len * k * k);
+    for o in 0..plan.out_len {
+        for i in 0..plan.in_len {
+            for dy in 0..k {
+                for dx in 0..k {
+                    bits.push(layer.kernels.bit(plan.out_base + o, plan.in_base + i, dy, dx));
+                }
+            }
+        }
+    }
+    let kernels = BinaryKernels { n_out: plan.out_len, n_in: plan.in_len, k, bits };
+    let scale_bias = if plan.in_blocks == 1 {
+        ScaleBias {
+            alpha: layer.scale_bias.alpha[plan.out_base..plan.out_base + plan.out_len].to_vec(),
+            beta: layer.scale_bias.beta[plan.out_base..plan.out_base + plan.out_len].to_vec(),
+        }
+    } else {
+        ScaleBias::identity(plan.out_len)
+    };
+    BlockJob { k, zero_pad: layer.zero_pad, image: tile, kernels, scale_bias }
+}
+
+/// Runtime-selectable engine kind (CLI, benches, sessions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Cycle-accurate chip simulation with the full activity ledger.
+    CycleAccurate,
+    /// Functional bit-packed popcount datapath, outputs only.
+    Functional,
+}
+
+impl EngineKind {
+    /// Engine name as printed in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::CycleAccurate => "cycle-accurate",
+            EngineKind::Functional => "functional",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "cycle" | "cycle-accurate" | "sim" => Some(EngineKind::CycleAccurate),
+            "functional" | "fast" | "popcount" => Some(EngineKind::Functional),
+            _ => None,
+        }
+    }
+
+    /// Build a boxed engine of this kind.
+    pub fn build(self, cfg: ChipConfig) -> Box<dyn ConvEngine> {
+        match self {
+            EngineKind::CycleAccurate => Box::new(CycleAccurate::new(cfg)),
+            EngineKind::Functional => Box::new(Functional::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::random_image;
+
+    #[test]
+    fn engine_kind_parses_cli_spellings() {
+        assert_eq!(EngineKind::parse("cycle"), Some(EngineKind::CycleAccurate));
+        assert_eq!(EngineKind::parse("cycle-accurate"), Some(EngineKind::CycleAccurate));
+        assert_eq!(EngineKind::parse("functional"), Some(EngineKind::Functional));
+        assert_eq!(EngineKind::parse("popcount"), Some(EngineKind::Functional));
+        assert_eq!(EngineKind::parse("nope"), None);
+        assert_eq!(EngineKind::Functional.name(), "functional");
+    }
+
+    #[test]
+    fn materialize_whole_plan_reproduces_the_layer() {
+        let mut g = Gen::new(3);
+        let input = random_image(&mut g, 3, 6, 5, 0.05);
+        let kernels = BinaryKernels::random(&mut g, 4, 3, 3);
+        let sb = ScaleBias::random(&mut g, 4);
+        let layer = LayerData {
+            k: 3,
+            zero_pad: true,
+            input: &input,
+            kernels: &kernels,
+            packed: None,
+            scale_bias: &sb,
+        };
+        let plan = BlockPlan::whole(3, true, 4, 3, 6);
+        let job = materialize_block(&layer, &plan);
+        assert_eq!(job.image, input);
+        assert_eq!(job.kernels.bits, kernels.bits);
+        assert_eq!(job.scale_bias.alpha, sb.alpha);
+    }
+
+    #[test]
+    fn materialize_partial_block_gets_identity_scale() {
+        let mut g = Gen::new(4);
+        let input = random_image(&mut g, 4, 6, 5, 0.05);
+        let kernels = BinaryKernels::random(&mut g, 2, 4, 3);
+        let sb = ScaleBias::random(&mut g, 2);
+        let layer = LayerData {
+            k: 3,
+            zero_pad: true,
+            input: &input,
+            kernels: &kernels,
+            packed: None,
+            scale_bias: &sb,
+        };
+        let plan = BlockPlan {
+            out_base: 0,
+            out_len: 2,
+            in_base: 2,
+            in_len: 2,
+            in_block: 1,
+            in_blocks: 2,
+            row_base: 0,
+            rows_valid: 6,
+            clip0: 0,
+            tile_h: 6,
+        };
+        let job = materialize_block(&layer, &plan);
+        assert_eq!(job.image.c, 2);
+        assert_eq!(job.image.at(0, 1, 2), input.at(2, 1, 2));
+        assert_eq!(job.scale_bias.alpha, vec![512, 512]);
+        assert_eq!(job.scale_bias.beta, vec![0, 0]);
+    }
+}

@@ -11,6 +11,11 @@
 //!   latch-based SCM image memory (6×8 banks), sliding-window image bank,
 //!   SoP units with multi-kernel support, ChannelSummers, Scale-Bias unit,
 //!   ready-valid I/O and the controller FSM of the paper's Algorithm 1.
+//! * [`engine`] — pluggable convolution engines behind the `ConvEngine`
+//!   trait: `CycleAccurate` (wraps [`hw::Chip`], full activity ledger) and
+//!   `Functional` (bit-packed u64 popcount datapath, identical
+//!   Q2.9/Q7.9/Q10.18 saturation order, no per-cycle ledger) — bit-identical
+//!   outputs, selected per workload (accounting vs throughput).
 //! * [`power`] — analytic voltage/frequency/power/area models calibrated to
 //!   the paper's reported corners (Table I/II, Figs. 6, 11, 12).
 //! * [`model`] — CNN layer/network descriptors (all networks of Table III)
@@ -19,7 +24,10 @@
 //!   vertical image tiling, streaming, off-chip partial-sum accumulation,
 //!   and metric roll-ups for Tables III–V.
 //! * [`runtime`] — PJRT executor for the JAX/Pallas golden model that
-//!   `make artifacts` AOT-lowers to `artifacts/*.hlo.txt`.
+//!   `make artifacts` AOT-lowers to `artifacts/*.hlo.txt`. Gated behind the
+//!   `golden` cargo feature (it needs the offline `xla` crate closure); the
+//!   default build is std-only so the tier-1 verify runs without any
+//!   registry.
 //! * [`workload`] — deterministic synthetic workload generators (the
 //!   Stanford-backgrounds stand-in, weight generators).
 //! * [`report`] — paper-reported reference values and table/figure renderers
@@ -32,14 +40,22 @@
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod fixedpoint;
 pub mod hw;
 pub mod model;
 pub mod power;
 pub mod report;
+#[cfg(feature = "golden")]
 pub mod runtime;
 pub mod testkit;
 pub mod workload;
 
-/// Crate-wide result type.
+/// Crate-wide result type (anyhow-backed when the `golden` runtime and
+/// its dependency closure are enabled; plain boxed-error otherwise).
+#[cfg(feature = "golden")]
 pub type Result<T> = anyhow::Result<T>;
+
+/// Crate-wide result type (std-only default build).
+#[cfg(not(feature = "golden"))]
+pub type Result<T> = std::result::Result<T, Box<dyn std::error::Error + Send + Sync>>;

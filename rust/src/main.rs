@@ -9,20 +9,28 @@
 //! yodann golden [--seed N]            simulator vs PJRT golden model
 //! yodann figure <2|6|11|12|13>        regenerate a paper figure's series
 //! yodann sweep [--points 13]          voltage sweep (Fig. 11 data)
+//! yodann throughput [--net id ...]    batch frames through a NetworkSession (frames/s)
 //! yodann networks                     list known networks
 //! ```
 
+use std::time::Instant;
+
 use yodann::cli::Args;
-use yodann::coordinator::{check_block, metrics::sim_metrics};
+#[cfg(feature = "golden")]
+use yodann::coordinator::check_block;
+use yodann::coordinator::{metrics::sim_metrics, NetworkSession, SessionLayerSpec};
+use yodann::engine::EngineKind;
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner};
 use yodann::power::{ArchId, CorePowerModel};
 use yodann::report::{figures, paper, table::fmt, tables};
 use yodann::testkit::Gen;
-use yodann::workload::{random_image, BinaryKernels, ScaleBias};
+use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
 
-const VALUE_KEYS: &[&str] =
-    &["net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch"];
+const VALUE_KEYS: &[&str] = &[
+    "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
+    "engine", "scale",
+];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +54,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "golden" => cmd_golden(&args),
         "sweep" => cmd_sweep(&args),
+        "throughput" => cmd_throughput(&args),
         "networks" => cmd_networks(),
         other => Err(format!("unknown command '{other}' (try --help)")),
     };
@@ -69,6 +78,10 @@ fn print_help() {
          \x20 golden [--seed N]           check simulator vs the PJRT golden model\n\
          \x20 figure <2|6|11|12|13>       regenerate a paper figure's data series\n\
          \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
+         \x20 throughput [--net scene-labeling] [--frames 8] [--engine both|functional|cycle]\n\
+         \x20            [--workers N] [--scale 0.25] [--seed 42]\n\
+         \x20                             batch synthetic frames through a NetworkSession\n\
+         \x20                             and report frames/s per engine (A/B + equality)\n\
          \x20 networks                    list the networks of Tables III–V"
     );
 }
@@ -295,6 +308,15 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "golden"))]
+fn cmd_golden(_args: &Args) -> Result<(), String> {
+    Err("this binary was built without the `golden` feature (PJRT/XLA golden-model \
+         runtime); rebuild with `cargo build --features golden` and the xla/anyhow \
+         dependencies enabled (see rust/Cargo.toml)"
+        .into())
+}
+
+#[cfg(feature = "golden")]
 fn cmd_golden(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed", 7)?;
     let mut rt = yodann::runtime::Runtime::open_default().map_err(|e| e.to_string())?;
@@ -336,6 +358,76 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     println!("{:>5} {:>9} {:>12} {:>12}", "V", "f (MHz)", "GOp/s", "TOp/s/W");
     for p in figures::fig11_sweep(arch, points) {
         println!("{:>5.2} {:>9.1} {:>12.1} {:>12.2}", p.v, p.f_mhz, p.theta_gops, p.en_eff_tops_w);
+    }
+    Ok(())
+}
+
+/// Batch synthetic frames through a [`NetworkSession`] on one or both
+/// engines: the end-to-end throughput A/B. With `--engine both` the two
+/// engines' outputs are also checked for bit-identity.
+fn cmd_throughput(args: &Args) -> Result<(), String> {
+    let id = args.get("net", "scene-labeling");
+    let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
+    let n_frames = args.get_usize("frames", 8)?.max(1);
+    let workers = args.get_usize(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )?;
+    let scale = args.get_f64("scale", 0.25)?;
+    if !(scale > 0.0) {
+        return Err("--scale must be positive".into());
+    }
+    let seed = args.get_u64("seed", 42)?;
+    let kinds: Vec<EngineKind> = match args.get("engine", "both") {
+        "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
+        other => vec![EngineKind::parse(other)
+            .ok_or_else(|| format!("unknown engine '{other}' (both|functional|cycle)"))?],
+    };
+
+    let specs = SessionLayerSpec::synthetic_network(&net, seed)?;
+    let h = ((net.img.0 as f64 * scale).round() as usize).max(16);
+    let w = ((net.img.1 as f64 * scale).round() as usize).max(16);
+    let c0 = specs[0].kernels.n_in;
+    let mut g = Gen::new(seed ^ 0xF00D);
+    let frames: Vec<Image> = (0..n_frames).map(|_| synthetic_scene(&mut g, c0, h, w)).collect();
+
+    println!(
+        "{} ({} conv layers, seeded binary weights), {} frames of {}x{}x{}, {} workers:",
+        net.name,
+        specs.len(),
+        n_frames,
+        c0,
+        h,
+        w,
+        workers
+    );
+    let cfg = ChipConfig::yodann();
+    let mut runs: Vec<(EngineKind, Vec<Image>, f64)> = Vec::new();
+    for kind in kinds {
+        let mut sess = NetworkSession::new(cfg, kind, workers, specs.clone());
+        let t0 = Instant::now();
+        let out = sess.run_batch(frames.clone());
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {:<16} {:>8.3} s  ->  {:>8.2} frames/s",
+            kind.name(),
+            dt,
+            n_frames as f64 / dt
+        );
+        runs.push((kind, out, dt));
+    }
+    if runs.len() == 2 {
+        let (ka, oa, ta) = &runs[0];
+        let (kb, ob, tb) = &runs[1];
+        if oa != ob {
+            return Err(format!(
+                "engine outputs diverge: {} vs {} — this is a bug",
+                ka.name(),
+                kb.name()
+            ));
+        }
+        println!("  outputs bit-identical across engines");
+        println!("  {} speedup over {}: {:.1}x", ka.name(), kb.name(), tb / ta);
     }
     Ok(())
 }

@@ -161,15 +161,24 @@ impl Runtime {
         })
     }
 
-    /// Open `artifacts/` relative to the repo root (assumes cwd or its
-    /// parents contain it — tests and examples run from the repo).
+    /// Open `artifacts/` by walking from the current directory up through
+    /// every ancestor (tests, benches and examples run from varying
+    /// depths inside the repo; any of them finds the repo-root artifacts).
     pub fn open_default() -> Result<Runtime> {
-        for base in ["artifacts", "../artifacts", "../../artifacts"] {
-            if Path::new(base).join("manifest.txt").exists() {
-                return Runtime::open(base);
+        let mut dir =
+            std::env::current_dir().context("cannot determine the current directory")?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return Runtime::open(cand);
+            }
+            if !dir.pop() {
+                return Err(anyhow!(
+                    "artifacts/manifest.txt not found in the current directory or any \
+                     ancestor — run `make artifacts`"
+                ));
             }
         }
-        Err(anyhow!("artifacts/manifest.txt not found — run `make artifacts`"))
     }
 
     /// All known artifacts.

@@ -1,0 +1,194 @@
+//! The equivalence obligation of the engine refactor: the `Functional`
+//! popcount engine must be **bit-identical** to the `CycleAccurate`
+//! chip simulator on every supported geometry — all kernel sizes
+//! 1..=7, zero-padded and valid convolutions, channel-blocked and
+//! vertically tiled layers, any worker count, saturating and
+//! non-saturating amplitudes — and batched `NetworkSession` inference
+//! must match the layer-by-layer executor for either engine.
+
+use std::sync::Arc;
+
+use yodann::coordinator::{
+    run_layer_engine, ExecOptions, LayerWorkload, NetworkSession, SessionLayerSpec,
+};
+use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
+use yodann::fixedpoint::Q2_9;
+use yodann::hw::{BlockJob, ChipConfig};
+use yodann::testkit::{property, Gen};
+use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
+
+#[test]
+fn block_level_equivalence_every_kernel_size() {
+    let cfg = ChipConfig::tiny(4);
+    for k in 1..=7usize {
+        for zero_pad in [true, false] {
+            if !zero_pad && k == 1 {
+                continue; // identical to padded k=1
+            }
+            let mut g = Gen::new(1000 + k as u64);
+            let job = BlockJob {
+                k,
+                zero_pad,
+                image: random_image(&mut g, 3, 11, 10, 0.05),
+                kernels: BinaryKernels::random(&mut g, 4, 3, k),
+                scale_bias: ScaleBias::random(&mut g, 4),
+            };
+            let cyc = CycleAccurate::new(cfg).run_block(&job);
+            let fun = Functional::new().run_block(&job);
+            assert_eq!(cyc.output, fun.output, "k={k} zero_pad={zero_pad}");
+        }
+    }
+}
+
+#[test]
+fn prop_engines_identical_on_random_blocked_tiled_layers() {
+    // The central refactor property: ANY random geometry — including
+    // channel blocking (n_in > n_ch), dual-mode output blocking
+    // (n_out > n_ch), vertical tiling (small image_mem_rows) and
+    // Q7.9-saturating amplitudes — produces bit-identical outputs on
+    // both engines under any worker count.
+    property("functional == cycle-accurate", 0xE9E9, 40, |g| {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 4 * g.range(8, 24); // shrink h_max → tiling
+        let k = g.range(1, 7);
+        let n_in = g.range(1, 10);
+        let n_out = g.range(1, 12);
+        let zero_pad = g.bool();
+        let h = g.range(k.max(2), 28);
+        let w = g.range(k.max(2), 10);
+        let amplitude = *g.choose(&[0.01, 0.05, 0.4]); // through saturation
+        let wl = LayerWorkload {
+            k,
+            zero_pad,
+            input: random_image(g, n_in, h, w, amplitude),
+            kernels: BinaryKernels::random(g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(g, n_out),
+        };
+        let workers = g.range(1, 4);
+        let cyc = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::CycleAccurate);
+        let fun = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Functional);
+        assert_eq!(
+            cyc.output, fun.output,
+            "k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} amp={amplitude}"
+        );
+        assert_eq!(cyc.blocks, fun.blocks);
+        assert_eq!(cyc.offchip_adds, fun.offchip_adds);
+    });
+}
+
+#[test]
+fn full_chip_equivalence_in_saturating_regime() {
+    // Full-amplitude scene on the taped-out configuration: ChannelSummer
+    // saturation fires and the input-channel saturation order must agree.
+    let cfg = ChipConfig::yodann();
+    let mut g = Gen::new(0x5A7E);
+    let wl = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: synthetic_scene(&mut g, 64, 12, 12),
+        kernels: BinaryKernels::random(&mut g, 32, 64, 3),
+        scale_bias: ScaleBias::random(&mut g, 32),
+    };
+    let cyc = run_layer_engine(&wl, &cfg, ExecOptions::default(), EngineKind::CycleAccurate);
+    let fun = run_layer_engine(&wl, &cfg, ExecOptions::default(), EngineKind::Functional);
+    assert_eq!(cyc.output, fun.output);
+    assert!(cyc.stats.summer_saturations > 0, "regime not saturating — weak test");
+}
+
+#[test]
+fn session_batch_equals_layerwise_executor() {
+    // Batched session inference (persistent pool, Arc-shared kernels,
+    // zero-copy plans) vs the materializing executor, layer by layer.
+    let cfg = ChipConfig::tiny(4);
+    let mut g = Gen::new(0xBA7C);
+    let k1 = Arc::new(BinaryKernels::random(&mut g, 6, 3, 3));
+    let k2 = Arc::new(BinaryKernels::random(&mut g, 4, 6, 5));
+    let sb1 = Arc::new(ScaleBias {
+        alpha: vec![Q2_9.from_f64(0.08); 6],
+        beta: vec![Q2_9.from_f64(0.02); 6],
+    });
+    let sb2 = Arc::new(ScaleBias { alpha: vec![Q2_9.from_f64(0.1); 4], beta: vec![0; 4] });
+    let specs = vec![
+        SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::clone(&k1),
+            scale_bias: Arc::clone(&sb1),
+            relu: true,
+            maxpool2: true,
+        },
+        SessionLayerSpec {
+            k: 5,
+            zero_pad: true,
+            kernels: Arc::clone(&k2),
+            scale_bias: Arc::clone(&sb2),
+            relu: false,
+            maxpool2: false,
+        },
+    ];
+    let frames: Vec<Image> = (0..5).map(|_| synthetic_scene(&mut g, 3, 14, 12)).collect();
+
+    // Reference: the executor path with the cycle-accurate engine.
+    let reference: Vec<Image> = frames
+        .iter()
+        .map(|f| {
+            let wl1 = LayerWorkload {
+                k: 3,
+                zero_pad: true,
+                input: f.clone(),
+                kernels: (*k1).clone(),
+                scale_bias: (*sb1).clone(),
+            };
+            let mut x =
+                run_layer_engine(&wl1, &cfg, ExecOptions { workers: 1 }, EngineKind::CycleAccurate)
+                    .output;
+            x.data.iter_mut().for_each(|v| *v = (*v).max(0));
+            // 2x2 max-pool, stride 2.
+            let mut p = Image::zeros(x.c, x.h / 2, x.w / 2);
+            for c in 0..p.c {
+                for y in 0..p.h {
+                    for xx in 0..p.w {
+                        *p.at_mut(c, y, xx) = x
+                            .at(c, 2 * y, 2 * xx)
+                            .max(x.at(c, 2 * y, 2 * xx + 1))
+                            .max(x.at(c, 2 * y + 1, 2 * xx))
+                            .max(x.at(c, 2 * y + 1, 2 * xx + 1));
+                    }
+                }
+            }
+            let wl2 = LayerWorkload {
+                k: 5,
+                zero_pad: true,
+                input: p,
+                kernels: (*k2).clone(),
+                scale_bias: (*sb2).clone(),
+            };
+            run_layer_engine(&wl2, &cfg, ExecOptions { workers: 1 }, EngineKind::CycleAccurate)
+                .output
+        })
+        .collect();
+
+    for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+        let mut sess = NetworkSession::new(cfg, kind, 3, specs.clone());
+        let batch = sess.run_batch(frames.clone());
+        assert_eq!(batch, reference, "engine {}", kind.name());
+    }
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    let cfg = ChipConfig::tiny(4);
+    let mut g = Gen::new(0x333);
+    let wl = LayerWorkload {
+        k: 3,
+        zero_pad: true,
+        input: random_image(&mut g, 9, 20, 8, 0.05),
+        kernels: BinaryKernels::random(&mut g, 10, 9, 3),
+        scale_bias: ScaleBias::random(&mut g, 10),
+    };
+    let base = run_layer_engine(&wl, &cfg, ExecOptions { workers: 1 }, EngineKind::Functional);
+    for workers in [2, 3, 8] {
+        let r = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Functional);
+        assert_eq!(r.output, base.output, "workers={workers}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Workload-generator determinism and `Image` accessor edge cases —
+//! the properties batched sessions and benchmarks lean on (a frame
+//! generator that drifts across calls would silently invalidate every
+//! A/B comparison).
+
+use yodann::fixedpoint::Q2_9;
+use yodann::testkit::{property, Gen};
+use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image};
+
+#[test]
+fn synthetic_scene_is_deterministic_per_seed() {
+    for seed in [0u64, 1, 42, 0xDEAD_BEEF] {
+        let a = synthetic_scene(&mut Gen::new(seed), 3, 20, 24);
+        let b = synthetic_scene(&mut Gen::new(seed), 3, 20, 24);
+        assert_eq!(a, b, "seed {seed}");
+    }
+}
+
+#[test]
+fn synthetic_scene_differs_across_seeds_and_advances_the_generator() {
+    let a = synthetic_scene(&mut Gen::new(7), 3, 16, 16);
+    let b = synthetic_scene(&mut Gen::new(8), 3, 16, 16);
+    assert_ne!(a, b, "distinct seeds must give distinct frames");
+    // Consecutive frames from ONE generator differ too (batch generation).
+    let mut g = Gen::new(7);
+    let f1 = synthetic_scene(&mut g, 3, 16, 16);
+    let f2 = synthetic_scene(&mut g, 3, 16, 16);
+    assert_ne!(f1, f2, "one generator must not repeat frames");
+}
+
+#[test]
+fn prop_synthetic_scene_stays_in_q29_for_any_geometry() {
+    property("scene in Q2.9", 0x5CE2E, 30, |g| {
+        let c = g.range(1, 4);
+        let h = g.range(4, 24);
+        let w = g.range(4, 24);
+        let img = synthetic_scene(g, c, h, w);
+        assert_eq!((img.c, img.h, img.w), (c, h, w));
+        assert_eq!(img.data.len(), c * h * w);
+        for &v in &img.data {
+            assert!(Q2_9.contains(v), "{v} outside Q2.9");
+        }
+    });
+}
+
+#[test]
+fn random_generators_are_reproducible() {
+    let ka = BinaryKernels::random(&mut Gen::new(5), 4, 3, 7);
+    let kb = BinaryKernels::random(&mut Gen::new(5), 4, 3, 7);
+    assert_eq!(ka.bits, kb.bits);
+    let ia = random_image(&mut Gen::new(6), 2, 9, 9, 0.1);
+    let ib = random_image(&mut Gen::new(6), 2, 9, 9, 0.1);
+    assert_eq!(ia, ib);
+}
+
+#[test]
+fn at_padded_edges() {
+    let mut img = Image::zeros(2, 3, 4);
+    for (i, v) in img.data.iter_mut().enumerate() {
+        *v = i as i64 + 1;
+    }
+    // Interior agrees with the checked accessor.
+    for c in 0..2 {
+        for y in 0..3 {
+            for x in 0..4 {
+                assert_eq!(img.at_padded(c, y as isize, x as isize), img.at(c, y, x));
+            }
+        }
+    }
+    // One past every border reads the zero halo.
+    assert_eq!(img.at_padded(0, -1, 0), 0);
+    assert_eq!(img.at_padded(0, 0, -1), 0);
+    assert_eq!(img.at_padded(0, 3, 0), 0);
+    assert_eq!(img.at_padded(0, 0, 4), 0);
+    assert_eq!(img.at_padded(1, -1, -1), 0);
+    assert_eq!(img.at_padded(1, 3, 4), 0);
+    // Far outside too.
+    assert_eq!(img.at_padded(1, isize::MIN / 2, isize::MAX / 2), 0);
+    // Corners of the valid region are real samples.
+    assert_eq!(img.at_padded(0, 0, 0), 1);
+    assert_eq!(img.at_padded(1, 2, 3), 24);
+}
+
+#[test]
+fn at_padded_degenerate_1x1() {
+    let mut img = Image::zeros(1, 1, 1);
+    *img.at_mut(0, 0, 0) = 99;
+    assert_eq!(img.at_padded(0, 0, 0), 99);
+    assert_eq!(img.at_padded(0, 1, 0), 0);
+    assert_eq!(img.at_padded(0, 0, 1), 0);
+    assert_eq!(img.at_padded(0, -1, 0), 0);
+}
