@@ -9,6 +9,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== cargo clippy --all-targets -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy unavailable; skipping"
+fi
+
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check || echo "WARNING: cargo fmt --check found drift (advisory only)"

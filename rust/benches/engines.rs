@@ -1,10 +1,12 @@
 //! A/B benchmark of the convolution engines: the cycle-accurate chip
-//! simulator vs the functional bit-packed popcount datapath, on the
-//! block hot paths that dominate real workloads and on end-to-end
-//! batched `NetworkSession` traffic. Outputs are asserted bit-identical
-//! before any timing, and the results are written to
-//! `BENCH_engines.json` (name, ns/iter, frames/s) so the perf
-//! trajectory is trackable across PRs.
+//! simulator vs the functional popcount datapath — and, since the raster
+//! refactor, the raster-based functional engine vs its PR-1 per-window
+//! packing baseline — on the block hot paths that dominate real
+//! workloads and on end-to-end batched `NetworkSession` traffic. Outputs
+//! are asserted bit-identical before any timing, and the results are
+//! written to `BENCH_engines.json` (name, ns/iter, frames/s) so the perf
+//! trajectory is trackable across PRs (the `speedup/raster-vs-pr1`
+//! record is the raster refactor's headline number).
 
 use yodann::bench::{black_box, emit_json, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec};
@@ -54,16 +56,38 @@ fn main() {
         println!("  -> functional speedup on {label}: {speedup:.1}x (target >= 5x)\n");
         records.push(JsonRecord::from_stats(&sc));
         records.push(JsonRecord::from_stats(&sf));
-        records.push(JsonRecord {
-            name: format!("speedup/{label}"),
-            ns_per_iter: 0.0,
-            frames_per_s: Some(speedup),
-        });
+        records.push(JsonRecord::ratio(&format!("speedup/{label}"), speedup));
     }
+
+    // The raster refactor's A/B: layer-resident bitplane raster vs the
+    // PR-1 per-window repacking, same engine arithmetic either side, on
+    // the k=3 throughput workload.
+    println!("== raster vs PR-1 per-window packing (functional engine, k=3) ==");
+    let job = block(3, 32, 64, 16, 16, 1);
+    let mut fun = Functional::new();
+    let mut pr1 = Functional::per_window();
+    assert_eq!(
+        fun.run_block(&job).output,
+        pr1.run_block(&job).output,
+        "raster and per-window functional diverge"
+    );
+    let sr = b.bench("functional-raster/k3_32to64_16x16", || {
+        black_box(fun.run_block(&job));
+    });
+    let sp = b.bench("functional-pr1/k3_32to64_16x16", || {
+        black_box(pr1.run_block(&job));
+    });
+    let raster_speedup = sp.mean.as_secs_f64() / sr.mean.as_secs_f64();
+    println!("  -> raster speedup over PR-1 packing: {raster_speedup:.2}x (target >= 3x)\n");
+    records.push(JsonRecord::from_stats(&sr));
+    records.push(JsonRecord::from_stats(&sp));
+    records.push(JsonRecord::ratio("speedup/raster-vs-pr1", raster_speedup));
 
     // End-to-end batched traffic: the scene-labeling chain (the paper's
     // power-simulation workload) at reduced frame size, one batch per
-    // worker-pool fan-out.
+    // worker-pool fan-out. The functional engines exercise the
+    // layer-resident raster path (packed once per frame per layer by the
+    // session workers).
     println!("== batched NetworkSession throughput (scene-labeling chain, 24x32 frames) ==");
     let specs = SessionLayerSpec::synthetic_network(&networks::scene_labeling(), 7)
         .expect("scene-labeling chains");
@@ -72,7 +96,9 @@ fn main() {
     let frames: Vec<Image> =
         (0..n_frames).map(|_| synthetic_scene(&mut g, 3, 24, 32)).collect();
     let mut session_outputs: Vec<Vec<Image>> = Vec::new();
-    for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+    for kind in
+        [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow]
+    {
         let mut sess = NetworkSession::new(cfg, kind, 4, specs.clone());
         session_outputs.push(sess.run_batch(frames.clone()));
         let s = b.bench(&format!("session/{}/batch{}", kind.name(), n_frames), || {
@@ -81,7 +107,9 @@ fn main() {
         println!("  -> {:.2} frames/s on {}\n", n_frames as f64 / s.mean.as_secs_f64(), kind.name());
         records.push(JsonRecord::with_frames(&s, n_frames as f64));
     }
-    assert_eq!(session_outputs[0], session_outputs[1], "session engines diverge");
+    for other in &session_outputs[1..] {
+        assert_eq!(&session_outputs[0], other, "session engines diverge");
+    }
     println!("session outputs bit-identical across engines");
 
     // Anchor at the workspace root regardless of cargo's bench cwd, so

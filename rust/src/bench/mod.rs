@@ -164,6 +164,12 @@ impl JsonRecord {
             frames_per_s: Some(frames / s.mean.as_secs_f64()),
         }
     }
+
+    /// A derived speedup/ratio record (`speedup/...` convention): no
+    /// ns/iter of its own, the ratio rides in `frames_per_s`.
+    pub fn ratio(name: &str, ratio: f64) -> JsonRecord {
+        JsonRecord { name: name.to_string(), ns_per_iter: 0.0, frames_per_s: Some(ratio) }
+    }
 }
 
 fn json_escape(s: &str) -> String {

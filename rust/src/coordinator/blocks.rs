@@ -35,7 +35,9 @@ pub struct LayerWorkload {
 }
 
 impl LayerWorkload {
-    /// Borrow this workload as the engine-facing layer view.
+    /// Borrow this workload as the engine-facing layer view. The caller
+    /// fills [`LayerData::raster`] when it packed a layer-resident
+    /// bitplane raster (see `run_layer_with`).
     pub fn as_layer_data<'a>(&'a self, packed: Option<&'a PackedKernels>) -> LayerData<'a> {
         LayerData {
             k: self.k,
@@ -43,6 +45,7 @@ impl LayerWorkload {
             input: &self.input,
             kernels: &self.kernels,
             packed,
+            raster: None,
             scale_bias: &self.scale_bias,
         }
     }
@@ -159,17 +162,18 @@ pub fn decompose(wl: &LayerWorkload, cfg: &ChipConfig) -> Vec<PlacedJob> {
 }
 
 /// Offset (within a tile's output) of the first valid row, given the tile
-/// position: tiles after the first produce `offset` rows of halo overlap
-/// at the top when zero-padded... — with our slicing the valid rows start
-/// where the requested `row_base` maps into the tile, which is `offset`
-/// for interior tiles and 0 for the first (clipped) tile.
+/// position. The tile's input starts at `clip0 = max(0, row_base − offset)`,
+/// so layer output row `row_base` sits at tile output row
+/// `row_base − clip0 = min(offset, row_base)`. For interior tiles that is
+/// `offset`, for the first tile 0 — and for interior tiles that are still
+/// clipped by the image top (`0 < row_base < offset`, possible only when
+/// `h_max − k + 1 < offset`) it is `row_base`: returning `offset` there
+/// would slice a vertically shifted window. Caught by the raster
+/// refactor's mirror verification; `thin_tiles_near_the_top_stay_correct`
+/// pins it.
 pub fn tile_row_skip(zero_pad: bool, k: usize, row_base: usize) -> usize {
     let offset = if zero_pad { (k - 1) / 2 } else { 0 };
-    if row_base == 0 {
-        0
-    } else {
-        offset
-    }
+    offset.min(row_base)
 }
 
 #[cfg(test)]

@@ -29,8 +29,8 @@ use std::sync::{Arc, Mutex};
 
 use super::blocks::{plan_layer, tile_row_skip, LayerWorkload};
 use crate::engine::{
-    BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional, LayerData,
-    PackedKernels,
+    BitplaneRaster, BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional,
+    LayerData, PackedKernels,
 };
 use crate::fixedpoint::{scale_bias, Q7_9};
 use crate::hw::{ChipConfig, ChipStats};
@@ -81,6 +81,7 @@ pub fn run_layer_engine(
     match kind {
         EngineKind::CycleAccurate => run_layer(wl, cfg, opts),
         EngineKind::Functional => run_layer_with(wl, cfg, opts, Functional::new),
+        EngineKind::FunctionalPerWindow => run_layer_with(wl, cfg, opts, Functional::per_window),
     }
 }
 
@@ -103,12 +104,21 @@ where
     let plans = plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, n_out, wl.input.h);
     let n_jobs = plans.len();
 
-    // Pack the kernels once per layer, but only when the engine actually
-    // consumes the packed form (the cycle-accurate engine does not).
+    // Pack the kernels — and the activations' bitplane raster — once per
+    // layer, but only when the engine actually consumes the packed forms
+    // (the cycle-accurate engine consumes neither). The raster is shared
+    // read-only by every worker, so each block's windows assemble by
+    // shifts instead of repacking pixels.
     let mut engine0 = make();
     let packed =
         if engine0.wants_packed() { Some(PackedKernels::pack(&wl.kernels)) } else { None };
-    let data = wl.as_layer_data(packed.as_ref());
+    let raster = engine0.wants_raster().then(|| {
+        let mut r = BitplaneRaster::new();
+        r.pack(&wl.input, wl.k, wl.zero_pad);
+        r
+    });
+    let mut data = wl.as_layer_data(packed.as_ref());
+    data.raster = raster.as_ref();
 
     let results = run_plans(&data, plans, opts, &make, &mut engine0);
 
@@ -306,6 +316,25 @@ mod tests {
     }
 
     #[test]
+    fn thin_tiles_near_the_top_stay_correct() {
+        // h_max = 7 with k = 7 forces 1-row tiles, so interior tiles
+        // near the image top are still clipped (0 < row_base < offset).
+        // tile_row_skip used to return `offset` there, slicing a
+        // vertically shifted window out of the tile — wrong on every
+        // engine. Found by the raster refactor's mirror verification.
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 7 * 4; // h_max = 7
+        let w = wl(7, 2, 3, 20, 8, 77);
+        let want = reference_conv(&w.input, &w.kernels, &w.scale_bias, true);
+        for kind in
+            [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow]
+        {
+            let run = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, kind);
+            assert_eq!(run.output, want, "engine {}", kind.name());
+        }
+    }
+
+    #[test]
     fn parallel_and_serial_agree() {
         let cfg = ChipConfig::tiny(4);
         let w = wl(3, 8, 8, 12, 12, 55);
@@ -321,11 +350,15 @@ mod tests {
         let w = wl(5, 7, 6, 14, 10, 66);
         let cyc = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, EngineKind::CycleAccurate);
         let fun = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, EngineKind::Functional);
+        let pr1 =
+            run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, EngineKind::FunctionalPerWindow);
         assert_eq!(cyc.output, fun.output);
+        assert_eq!(cyc.output, pr1.output);
         assert_eq!(cyc.blocks, fun.blocks);
         assert_eq!(cyc.offchip_adds, fun.offchip_adds);
-        // The functional engine keeps no cycle ledger.
+        // The functional engines keep no cycle ledger.
         assert_eq!(fun.stats.cycles.total(), 0);
+        assert_eq!(pr1.stats.cycles.total(), 0);
         assert!(cyc.stats.cycles.total() > 0);
         assert_eq!(fun.stats.useful_ops, cyc.stats.useful_ops);
     }

@@ -8,8 +8,9 @@
 //! session build and shared by every worker, eliminating the per-job
 //! `Image`/`BinaryKernels` clones of the materializing path. Each worker
 //! owns one [`ConvEngine`] instance plus a reusable wide-precision
-//! accumulator, so steady-state frame processing allocates only the
-//! output images.
+//! accumulator and a reusable [`BitplaneRaster`] scratch (activations
+//! packed once per frame per layer for engines that consume rasters),
+//! so steady-state frame processing allocates only the output images.
 //!
 //! Parallelism is **per frame**: a batch fans frames out across the
 //! pool, each worker carrying its frame through every layer (conv →
@@ -30,7 +31,7 @@ use std::thread::JoinHandle;
 
 use super::blocks::plan_layer;
 use super::executor::{finalize_output, reduce_block};
-use crate::engine::{ConvEngine, EngineKind, LayerData, PackedKernels};
+use crate::engine::{BitplaneRaster, ConvEngine, EngineKind, LayerData, PackedKernels};
 use crate::fixedpoint::Q2_9;
 use crate::hw::ChipConfig;
 use crate::model::Network;
@@ -139,7 +140,7 @@ impl NetworkSession {
     ) -> NetworkSession {
         assert!(!specs.is_empty(), "session needs at least one layer");
         for (i, s) in specs.iter().enumerate() {
-            assert!(s.k >= 1 && s.k <= 7, "layer {i}: kernel size {} unsupported", s.k);
+            assert!((1..=7).contains(&s.k), "layer {i}: kernel size {} unsupported", s.k);
             assert_eq!(
                 s.scale_bias.alpha.len(),
                 s.kernels.n_out,
@@ -156,7 +157,7 @@ impl NetworkSession {
         let n_in = specs[0].kernels.n_in;
         // Pack once per session, only when the engine consumes the packed
         // form (the cycle-accurate engine materializes jobs instead).
-        let pack = matches!(kind, EngineKind::Functional);
+        let pack = matches!(kind, EngineKind::Functional | EngineKind::FunctionalPerWindow);
         let layers: Vec<SessionLayer> = specs
             .into_iter()
             .map(|spec| {
@@ -179,6 +180,10 @@ impl NetworkSession {
             handles.push(std::thread::spawn(move || {
                 let mut engine = kind.build(cfg);
                 let mut acc: Vec<i64> = Vec::new();
+                // Per-worker raster scratch, repacked once per (frame,
+                // layer) and reused across frames — steady-state serving
+                // of same-geometry traffic allocates nothing here.
+                let mut raster = BitplaneRaster::new();
                 loop {
                     // Take the next frame; holding the lock while idle is
                     // fine — exactly one waiter is handed each task.
@@ -191,13 +196,14 @@ impl NetworkSession {
                     // the batch as an error — a silently dead worker would
                     // leave run_batch waiting forever on this frame.
                     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_frame_inner(&cfg, &mut *engine, &layers, frame, &mut acc)
+                        run_frame_inner(&cfg, &mut *engine, &layers, frame, &mut acc, &mut raster)
                     }))
                     .map_err(panic_message);
                     if out.is_err() {
                         // Engine/scratch state may be mid-frame garbage.
                         engine = kind.build(cfg);
                         acc = Vec::new();
+                        raster = BitplaneRaster::new();
                     }
                     if tx_out.send((idx, out)).is_err() {
                         break;
@@ -279,14 +285,16 @@ impl Drop for NetworkSession {
 }
 
 /// Carry one frame through every layer on one engine: per layer,
-/// plan → blocks → wide reduction (reusing `acc`) → final α/β → ReLU /
-/// max-pool. Identical numerics to `run_layer_engine`, minus the clones.
+/// raster pack (engines that want one) → plan → blocks → wide reduction
+/// (reusing `acc`) → final α/β → ReLU / max-pool. Identical numerics to
+/// `run_layer_engine`, minus the clones.
 fn run_frame_inner(
     cfg: &ChipConfig,
     engine: &mut dyn ConvEngine,
     layers: &[SessionLayer],
     frame: Image,
     acc: &mut Vec<i64>,
+    raster: &mut BitplaneRaster,
 ) -> Image {
     let mut x = frame;
     for (li, layer) in layers.iter().enumerate() {
@@ -303,12 +311,20 @@ fn run_frame_inner(
             (x.h - spec.k + 1, x.w - spec.k + 1)
         };
         let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
+        // Pack this layer's activations once into the worker's reusable
+        // raster scratch; every block of the layer then slices windows
+        // out of it by shifts.
+        let wants_raster = engine.wants_raster();
+        if wants_raster {
+            raster.pack(&x, spec.k, spec.zero_pad);
+        }
         let data = LayerData {
             k: spec.k,
             zero_pad: spec.zero_pad,
             input: &x,
             kernels: &spec.kernels,
             packed: layer.packed.as_deref(),
+            raster: wants_raster.then_some(&*raster),
             scale_bias: &spec.scale_bias,
         };
         acc.clear();
@@ -427,7 +443,11 @@ mod tests {
         let mut g = Gen::new(5);
         let frame = synthetic_scene(&mut g, 3, 12, 12);
         let want = manual_reference(&specs, &cfg, &frame);
-        for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+        for kind in [
+            EngineKind::CycleAccurate,
+            EngineKind::Functional,
+            EngineKind::FunctionalPerWindow,
+        ] {
             let mut sess = NetworkSession::new(cfg, kind, 2, specs.clone());
             let got = sess.run_frame(frame.clone());
             assert_eq!(got, want, "engine {}", kind.name());

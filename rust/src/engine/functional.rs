@@ -3,27 +3,53 @@
 //!
 //! Per (output, input) channel pair the k×k weight bits live in one
 //! `u64` ([`PackedKernels`]); per output pixel and input channel the
-//! window's activations are packed into 12 offset-binary bitplanes, and
-//! every output channel's window dot is then 12 `AND`+`POPCNT` steps
-//! (see the identity in the module docs of [`crate::engine`]). The
-//! accumulation order — exact window dot, Q7.9 saturating add per input
-//! channel, Scale-Bias to Q2.9 — is byte-for-byte the chip's, so the
-//! outputs are bit-identical to [`super::CycleAccurate`].
+//! window's activations arrive as 12 offset-binary plane words. Since
+//! the raster refactor those words come from a layer-resident
+//! [`BitplaneRaster`] — packed once per layer (or per block tile) and
+//! sliced per window with shifts — and the window dot folds multiple
+//! planes into each `AND`+`POPCNT` via replicated kernel fields (4
+//! popcounts instead of 12 at k ≤ 3; see the grouped-popcount notes in
+//! [`crate::engine`]'s module docs). The accumulation order — exact
+//! window dot, Q7.9 saturating add per input channel, Scale-Bias to
+//! Q2.9 — is byte-for-byte the chip's, so the outputs are bit-identical
+//! to [`super::CycleAccurate`].
+//!
+//! The PR-1 per-window packing loop survives behind
+//! [`Functional::per_window`] (engine name `functional-pr1`) purely as
+//! the A/B baseline for `benches/engines.rs` and the `yodann throughput`
+//! subcommand.
 
+use super::raster::{BitplaneRaster, OFFSET, PLANES};
 use super::{BlockPlan, ConvEngine, EngineOutput, LayerData};
 use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
 use crate::hw::{BlockJob, ChipStats};
 use crate::workload::{BinaryKernels, Image};
 
-/// Offset added to a raw Q2.9 sample to make it a non-negative 12-bit
-/// code (`x + 2048 ∈ [0, 4096)`).
-const OFFSET: i64 = 2048;
-/// Bitplanes in the offset-binary activation code.
-const PLANES: usize = 12;
+/// Planes folded into one popcount for a k×k kernel: the largest `m`
+/// dividing 12 with `(2^m − 1)·k² ≤ 64`, so that plane `t` of a group
+/// can appear `2^t` times in one word and a single `POPCNT` returns the
+/// weighted partial sum `Σ_t 2^t·pc_t`.
+fn planes_per_group(kk: usize) -> usize {
+    for m in [6usize, 4, 3, 2, 1] {
+        if ((1usize << m) - 1) * kk <= 64 {
+            return m;
+        }
+    }
+    unreachable!("k² ≤ 49 always admits m = 1")
+}
 
 /// Kernel weight bits packed one `u64` word per (output, input) channel
 /// pair: bit `dy·k + dx` is 1 ⇔ w = +1 (the paper's Eq. 5 encoding).
 /// Pack once per layer (or once per session) and share by reference.
+///
+/// Besides the plain words the pack also precomputes the **replicated**
+/// form for the grouped-popcount dot — the k² weight bits copied into
+/// every `2^m − 1` field of the word — stored input-channel-major so the
+/// raster hot loop walks it contiguously. Both forms are kept
+/// deliberately (16 bytes per channel pair): one pack per layer/session
+/// serves every functional variant, which is what lets the A/B benches
+/// and `--engine all` share a single packed set. Packing is
+/// `O(n_out·n_in·k²)` — noise next to the convolution it feeds.
 #[derive(Debug, Clone)]
 pub struct PackedKernels {
     /// Kernel size.
@@ -34,6 +60,12 @@ pub struct PackedKernels {
     pub n_out: usize,
     words: Vec<u64>,
     sign_sums: Vec<i64>,
+    /// Replicated weight words, transposed: `[i·n_out + o]`.
+    rep: Vec<u64>,
+    /// Sign sums, transposed: `[i·n_out + o]`.
+    sign_t: Vec<i64>,
+    /// Planes per popcount group (function of k alone).
+    m: usize,
 }
 
 impl PackedKernels {
@@ -41,11 +73,16 @@ impl PackedKernels {
     pub fn pack(kernels: &BinaryKernels) -> PackedKernels {
         let k = kernels.k;
         let kk = k * k;
-        assert!(kk >= 1 && kk <= 64, "kernel {k}x{k} does not fit a u64 word");
-        let mut words = Vec::with_capacity(kernels.n_out * kernels.n_in);
-        let mut sign_sums = Vec::with_capacity(kernels.n_out * kernels.n_in);
-        for o in 0..kernels.n_out {
-            for i in 0..kernels.n_in {
+        assert!((1..=64).contains(&kk), "kernel {k}x{k} does not fit a u64 word");
+        let m = planes_per_group(kk);
+        let fields = (1usize << m) - 1;
+        let (n_out, n_in) = (kernels.n_out, kernels.n_in);
+        let mut words = Vec::with_capacity(n_out * n_in);
+        let mut sign_sums = Vec::with_capacity(n_out * n_in);
+        let mut rep = vec![0u64; n_out * n_in];
+        let mut sign_t = vec![0i64; n_out * n_in];
+        for o in 0..n_out {
+            for i in 0..n_in {
                 let mut w = 0u64;
                 for dy in 0..k {
                     for dx in 0..k {
@@ -54,11 +91,18 @@ impl PackedKernels {
                         }
                     }
                 }
+                let sign = 2 * w.count_ones() as i64 - kk as i64;
                 words.push(w);
-                sign_sums.push(2 * w.count_ones() as i64 - kk as i64);
+                sign_sums.push(sign);
+                let mut r = 0u64;
+                for f in 0..fields {
+                    r |= w << (f * kk);
+                }
+                rep[i * n_out + o] = r;
+                sign_t[i * n_out + o] = sign;
             }
         }
-        PackedKernels { k, n_in: kernels.n_in, n_out: kernels.n_out, words, sign_sums }
+        PackedKernels { k, n_in, n_out, words, sign_sums, rep, sign_t, m }
     }
 
     /// Packed weight word of kernel (out, in).
@@ -72,60 +116,80 @@ impl PackedKernels {
     pub fn sign_sum(&self, o: usize, i: usize) -> i64 {
         self.sign_sums[o * self.n_in + i]
     }
+
+    /// Planes folded into one popcount group for this kernel size.
+    #[inline]
+    pub fn planes_per_group(&self) -> usize {
+        self.m
+    }
+
+    /// Replicated weight words of input channel `i` for output channels
+    /// `out_base..out_base+out_len` — contiguous for the hot loop.
+    #[inline]
+    pub fn rep_slice(&self, i: usize, out_base: usize, out_len: usize) -> &[u64] {
+        &self.rep[i * self.n_out + out_base..][..out_len]
+    }
+
+    /// Sign sums of input channel `i` for a contiguous output range.
+    #[inline]
+    pub fn sign_slice(&self, i: usize, out_base: usize, out_len: usize) -> &[i64] {
+        &self.sign_t[i * self.n_out + out_base..][..out_len]
+    }
 }
 
-/// The functional popcount engine. Holds reusable accumulator scratch so
-/// a worker thread allocates nothing per block.
+/// The functional popcount engine. Holds reusable accumulator and raster
+/// scratch so a worker thread allocates nothing per block in steady
+/// state.
 #[derive(Debug, Default)]
 pub struct Functional {
     accs: Vec<i64>,
+    raster: BitplaneRaster,
+    per_window: bool,
 }
 
 impl Functional {
-    /// New engine with empty scratch.
+    /// New engine on the raster fast path, with empty scratch.
     pub fn new() -> Functional {
         Functional::default()
     }
-}
 
-impl ConvEngine for Functional {
-    fn name(&self) -> &'static str {
-        "functional"
+    /// The PR-1 per-window packing path — kept only as the measured A/B
+    /// baseline for the raster refactor (benches, `yodann throughput`).
+    pub fn per_window() -> Functional {
+        Functional { per_window: true, ..Functional::default() }
     }
 
-    fn wants_packed(&self) -> bool {
-        true
+    /// Raster-scratch packs that had to grow a buffer (steady-state
+    /// serving keeps this constant; see the scratch-reuse tests).
+    pub fn raster_reallocs(&self) -> u64 {
+        self.raster.reallocs()
     }
 
-    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
-        let layer = LayerData {
-            k: job.k,
-            zero_pad: job.zero_pad,
-            input: &job.image,
-            kernels: &job.kernels,
-            packed: None,
-            scale_bias: &job.scale_bias,
-        };
-        let plan =
-            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
-        self.run_plan(&layer, &plan)
+    /// Common block geometry checks: tile output shape of a plan.
+    fn out_dims(layer: &LayerData<'_>, plan: &BlockPlan) -> (usize, usize) {
+        let (k, w, tile_h) = (layer.k, layer.input.w, plan.tile_h);
+        if !layer.zero_pad {
+            assert!(
+                tile_h >= k && w >= k,
+                "tile {tile_h}x{w} smaller than kernel {k} (valid mode)"
+            );
+        }
+        if layer.zero_pad {
+            (tile_h, w)
+        } else {
+            (tile_h + 1 - k, w + 1 - k)
+        }
     }
 
-    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+    /// The raster hot path: windows assembled from a bitplane raster —
+    /// the caller's layer-resident one if present, else this engine's
+    /// scratch packed from the plan's tile view.
+    fn run_plan_raster(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
         let k = layer.k;
         let kk = k * k;
-        let w = layer.input.w;
-        let tile_h = plan.tile_h;
-        if !layer.zero_pad {
-            assert!(tile_h >= k && w >= k, "tile {tile_h}x{w} smaller than kernel {k} (valid mode)");
-        }
-        let offset = if layer.zero_pad { ((k - 1) / 2) as isize } else { 0 };
-        let (out_h, out_w) =
-            if layer.zero_pad { (tile_h, w) } else { (tile_h + 1 - k, w + 1 - k) };
+        let (out_h, out_w) = Self::out_dims(layer, plan);
         let n_in = plan.in_len;
         let n_out = plan.out_len;
-        // Borrow the caller's packed kernels, or pack this block's slice
-        // view on the fly (cheap: one pass over the weight bits).
         let local;
         let packed: &PackedKernels = match layer.packed {
             Some(p) => {
@@ -137,8 +201,126 @@ impl ConvEngine for Functional {
                 &local
             }
         };
-        // Partial (non-final) input blocks stream identity-scaled Q2.9,
-        // exactly like the silicon (coordinator/blocks.rs docs).
+        let identity = plan.in_blocks > 1;
+        // Split-borrow the scratch fields so the raster can be packed
+        // mutably and then read while `accs` is written.
+        let Functional { accs, raster: scratch, .. } = self;
+        // (c_base, row0) map plan-local (channel, window row) into raster
+        // coordinates: the layer-resident raster holds every channel and
+        // row of the layer; the block-local scratch holds only this
+        // plan's view.
+        let (raster, c_base, row0): (&BitplaneRaster, usize, usize) = match layer.raster {
+            Some(r) => {
+                debug_assert_eq!(r.k(), k);
+                (r, plan.in_base, plan.clip0)
+            }
+            None => {
+                scratch.pack_view(
+                    layer.input,
+                    k,
+                    layer.zero_pad,
+                    plan.in_base,
+                    plan.in_len,
+                    plan.clip0,
+                    plan.tile_h,
+                );
+                (&*scratch, 0, 0)
+            }
+        };
+        let m = packed.planes_per_group();
+        let groups = PLANES / m;
+        // Per-sub-plane fold multipliers: plane t of a group appears 2^t
+        // times at fields 2^t−1 .. 2^(t+1)−2, so multiplying the plane
+        // word by F_t = Σ 2^(field·k²) replicates it in one op — exact,
+        // because the fields are disjoint (no carries) and the top bit
+        // index fields·k² − 1 ≤ 63.
+        let mut fold = [0u64; PLANES];
+        for (t, f) in fold[..m].iter_mut().enumerate() {
+            let copies = 1usize << t;
+            for cpy in 0..copies {
+                *f |= 1u64 << ((copies - 1 + cpy) * kk);
+            }
+        }
+        let mut out = Image::zeros(n_out, out_h, out_w);
+        accs.clear();
+        accs.resize(n_out, 0);
+        let mut planes = [0u64; PLANES];
+        let mut gwords = [0u64; PLANES];
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                for i in 0..n_in {
+                    let sum_u = raster.window(c_base + i, row0 + y, x, &mut planes);
+                    // Fold m consecutive planes per popcount group: plane
+                    // t of a group appears 2^t times, so one POPCNT later
+                    // yields Σ_t 2^t·pc_t directly.
+                    if m == 1 {
+                        gwords = planes;
+                    } else {
+                        for (g, gw) in gwords[..groups].iter_mut().enumerate() {
+                            let mut acc = 0u64;
+                            for (t, &u) in planes[g * m..g * m + m].iter().enumerate() {
+                                acc |= u * fold[t];
+                            }
+                            *gw = acc;
+                        }
+                    }
+                    let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                    let signs = packed.sign_slice(plan.in_base + i, plan.out_base, n_out);
+                    for (o, acc) in accs.iter_mut().enumerate() {
+                        let rep = reps[o];
+                        let mut dot2: i64 = 0;
+                        for (g, &gw) in gwords[..groups].iter().enumerate() {
+                            dot2 += ((gw & rep).count_ones() as i64) << (m * g);
+                        }
+                        // Σ w·x = 2·Σ_b 2^b·pc(U_b ∧ P) − Σ u − 2048·Σ w
+                        let sop = 2 * dot2 - sum_u - OFFSET * signs[o];
+                        *acc = sat_add(Q7_9, *acc, sop);
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+        let stats = ChipStats {
+            useful_ops: 2 * kk as u64 * (n_in * n_out) as u64 * (out_h * out_w) as u64,
+            ..Default::default()
+        };
+        EngineOutput { output: out, stats }
+    }
+
+    /// The PR-1 baseline: repack every (output pixel × input channel)
+    /// window from the image, bit by bit. Kept for measured comparison
+    /// only — the raster path is the default.
+    fn run_plan_per_window(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let k = layer.k;
+        let kk = k * k;
+        let w = layer.input.w;
+        let tile_h = plan.tile_h;
+        let (out_h, out_w) = Self::out_dims(layer, plan);
+        let offset = if layer.zero_pad { ((k - 1) / 2) as isize } else { 0 };
+        let n_in = plan.in_len;
+        let n_out = plan.out_len;
+        let local;
+        let packed: &PackedKernels = match layer.packed {
+            Some(p) => {
+                debug_assert_eq!(p.k, k);
+                p
+            }
+            None => {
+                local = PackedKernels::pack(layer.kernels);
+                &local
+            }
+        };
         let identity = plan.in_blocks > 1;
         let input = layer.input;
         let kk_offset = kk as i64 * OFFSET;
@@ -153,24 +335,22 @@ impl ConvEngine for Functional {
                     // Pack this channel's k×k window into offset-binary
                     // bitplanes; positions outside the *tile* read the
                     // zero-padding halo (code 2048), like the chip's
-                    // padding muxes.
+                    // padding muxes. (Activation range validation happens
+                    // once per pixel at raster-pack time on the default
+                    // path, not here.)
                     let mut planes = [0u64; PLANES];
                     let mut total: i64 = 0; // Σ_j x_j (true window sum)
                     let mut j = 0u32;
                     for dy in 0..k {
                         let ty = y as isize + dy as isize - offset;
-                        let row_ok = ty >= 0 && ty < tile_h as isize;
+                        let row_ok = (0..tile_h as isize).contains(&ty);
                         for dx in 0..k {
                             let tx = x as isize + dx as isize - offset;
-                            let px = if row_ok && tx >= 0 && tx < w as isize {
+                            let px = if row_ok && (0..w as isize).contains(&tx) {
                                 input.at(plan.in_base + i, plan.clip0 + ty as usize, tx as usize)
                             } else {
                                 0
                             };
-                            debug_assert!(
-                                crate::fixedpoint::Q2_9.contains(px),
-                                "activation {px} outside Q2.9"
-                            );
                             total += px;
                             let mut u = (px + OFFSET) as u64;
                             while u != 0 {
@@ -215,6 +395,47 @@ impl ConvEngine for Functional {
     }
 }
 
+impl ConvEngine for Functional {
+    fn name(&self) -> &'static str {
+        if self.per_window {
+            "functional-pr1"
+        } else {
+            "functional"
+        }
+    }
+
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    fn wants_raster(&self) -> bool {
+        !self.per_window
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        let layer = LayerData {
+            k: job.k,
+            zero_pad: job.zero_pad,
+            input: &job.image,
+            kernels: &job.kernels,
+            packed: None,
+            raster: None,
+            scale_bias: &job.scale_bias,
+        };
+        let plan =
+            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
+        self.run_plan(&layer, &plan)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        if self.per_window {
+            self.run_plan_per_window(layer, plan)
+        } else {
+            self.run_plan_raster(layer, plan)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +469,35 @@ mod tests {
                     }
                 }
                 assert_eq!(p.sign_sum(o, i), plus);
+                assert_eq!(p.sign_slice(i, o, 1)[0], plus);
+            }
+        }
+    }
+
+    #[test]
+    fn plane_grouping_obeys_word_capacity() {
+        // (2^m − 1)·k² ≤ 64 and m divides 12, maximal.
+        for (k, want_m) in [(1usize, 6usize), (2, 4), (3, 3), (4, 2), (5, 1), (6, 1), (7, 1)] {
+            assert_eq!(planes_per_group(k * k), want_m, "k={k}");
+            assert!(((1usize << want_m) - 1) * k * k <= 64);
+            assert_eq!(PLANES % want_m, 0);
+        }
+    }
+
+    #[test]
+    fn replicated_words_repeat_the_plain_word() {
+        let mut g = Gen::new(2);
+        let ks = BinaryKernels::random(&mut g, 2, 2, 3);
+        let p = PackedKernels::pack(&ks);
+        let kk = 9;
+        let fields = (1usize << p.planes_per_group()) - 1; // 7 for k=3
+        for o in 0..2 {
+            for i in 0..2 {
+                let rep = p.rep_slice(i, o, 1)[0];
+                for f in 0..fields {
+                    assert_eq!((rep >> (f * kk)) & ((1u64 << kk) - 1), p.word(o, i), "field {f}");
+                }
+                assert_eq!(rep >> (fields * kk), 0, "no stray bits past the last field");
             }
         }
     }
@@ -258,10 +508,16 @@ mod tests {
             let j = job(k, 3, 4, 10, 9, true, 40 + k as u64);
             let want = reference_conv(&j.image, &j.kernels, &j.scale_bias, true);
             assert_eq!(Functional::new().run_block(&j).output, want, "k={k} padded");
+            assert_eq!(Functional::per_window().run_block(&j).output, want, "k={k} padded pr1");
             if k > 1 {
                 let j = job(k, 2, 3, 11, 10, false, 80 + k as u64);
                 let want = reference_conv(&j.image, &j.kernels, &j.scale_bias, false);
                 assert_eq!(Functional::new().run_block(&j).output, want, "k={k} valid");
+                assert_eq!(
+                    Functional::per_window().run_block(&j).output,
+                    want,
+                    "k={k} valid pr1"
+                );
             }
         }
     }
@@ -283,6 +539,7 @@ mod tests {
         };
         let want = reference_conv(&image, &kernels, &sb, true);
         assert_eq!(Functional::new().run_block(&j).output, want);
+        assert_eq!(Functional::per_window().run_block(&j).output, want);
     }
 
     #[test]
@@ -295,6 +552,22 @@ mod tests {
         let ra2 = e.run_block(&a).output;
         assert_eq!(ra1, ra2);
         assert_eq!(rb, reference_conv(&b.image, &b.kernels, &b.scale_bias, false));
+    }
+
+    #[test]
+    fn raster_scratch_stops_allocating_in_steady_state() {
+        // A session worker replays same-geometry blocks frame after
+        // frame; after the first block the raster scratch must never
+        // grow again.
+        let mut e = Functional::new();
+        let a = job(3, 4, 6, 12, 10, true, 21);
+        e.run_block(&a);
+        let warm = e.raster_reallocs();
+        for seed in 0..4 {
+            let frame = job(3, 4, 6, 12, 10, true, 100 + seed);
+            e.run_block(&frame);
+        }
+        assert_eq!(e.raster_reallocs(), warm, "steady-state blocks must not allocate");
     }
 
     #[test]

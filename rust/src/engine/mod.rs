@@ -28,27 +28,51 @@
 //! what lets [`crate::coordinator::session::NetworkSession`] share one
 //! `Arc`'d kernel set across a worker pool without per-job clones.
 //!
-//! ### The popcount identity
+//! ### The popcount identity, raster-resident
 //!
 //! Activations are 12-bit Q2.9 raw values `x ∈ [−2048, 2047]`. Encode
 //! each window sample in offset binary `u = x + 2048 ∈ [0, 4096)` and
 //! pack bit `b` of every window sample into a plane word `U_b` (window
-//! position `j` = bit `j`). With `P` the kernel's packed weight word
-//! (bit 1 ⇔ w = +1, Eq. 5) and `S = Σ_j w_j = 2·pc(P) − k²`:
+//! position `j = dy·k + dx` = bit `j`). With `P` the kernel's packed
+//! weight word (bit 1 ⇔ w = +1, Eq. 5) and `S = Σ_j w_j = 2·pc(P) − k²`:
 //!
 //! ```text
 //! Σ_j w_j·x_j = 2·Σ_b 2^b·pc(U_b ∧ P) − Σ_j u_j − 2048·S
 //! ```
 //!
 //! which is exact integer arithmetic — the sign-select-and-add of the
-//! paper's SoP units, done `12 AND+POPCNT` per (window, output channel)
-//! with the plane packing amortized over all output channels.
+//! paper's SoP units.
+//!
+//! **Where the window words come from.** Each pixel's code `u` never
+//! changes within a layer, so the activations are packed exactly once
+//! into a layer-resident [`BitplaneRaster`]: per (channel, padded row),
+//! 12 bitplane rows u64-packed along x with the zero-pad halo pre-baked
+//! (halo code 2048 = plane 11), plus a per-row **prefix-sum of `u`** so
+//! a window's `Σu` is k subtractions instead of k² adds. A window's
+//! `U_b` then assembles as k shift+mask row extracts per plane — work
+//! amortized over *all* output channels of the window, replacing PR 1's
+//! per-(pixel × channel) bit-by-bit repack. The raster flows through
+//! [`LayerData::raster`] exactly like [`PackedKernels`]: packed once per
+//! layer by the executor, once per frame per layer by a session worker
+//! (into reusable scratch — steady-state serving allocates nothing).
+//!
+//! **Grouped popcounts.** When `(2^m − 1)·k² ≤ 64`, m consecutive
+//! planes share one AND+POPCNT: plane `t` of a group is replicated
+//! `2^t` times into disjoint k²-bit fields of one word, the kernel word
+//! is replicated into every field (precomputed in [`PackedKernels`]),
+//! and a single popcount returns the weighted partial `Σ_t 2^t·pc_t`.
+//! For k ≤ 3 that is 4 popcounts per (window, output channel) instead
+//! of 12; k = 4 needs 6; k ≥ 5 falls back to one plane per popcount.
+//! The arithmetic stays exact — fields are disjoint, each holds at most
+//! k² bits — so outputs remain bit-identical to the chip.
 
 pub mod cycle;
 pub mod functional;
+pub mod raster;
 
 pub use cycle::CycleAccurate;
 pub use functional::{Functional, PackedKernels};
+pub use raster::BitplaneRaster;
 
 use crate::hw::{BlockJob, ChipConfig, ChipStats};
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -115,6 +139,11 @@ pub struct LayerData<'a> {
     pub kernels: &'a BinaryKernels,
     /// Pre-packed kernel bit-words, if the caller has them.
     pub packed: Option<&'a PackedKernels>,
+    /// Layer-resident bitplane raster of `input` (all channels, all
+    /// rows, halo pre-baked), if the caller packed one. Engines that
+    /// consume rasters fall back to packing a block-local tile view
+    /// into their own scratch when this is `None`.
+    pub raster: Option<&'a BitplaneRaster>,
     /// Full per-output-channel scale/bias.
     pub scale_bias: &'a ScaleBias,
 }
@@ -144,6 +173,12 @@ pub trait ConvEngine {
         false
     }
 
+    /// Whether this engine consumes [`LayerData::raster`] — callers skip
+    /// the per-layer activation packing pass for engines that don't.
+    fn wants_raster(&self) -> bool {
+        false
+    }
+
     /// Execute one materialized block job.
     fn run_block(&mut self, job: &BlockJob) -> EngineOutput;
 
@@ -167,9 +202,7 @@ pub fn materialize_block(layer: &LayerData<'_>, plan: &BlockPlan) -> BlockJob {
     let mut tile = Image::zeros(plan.in_len, plan.tile_h, input.w);
     for c in 0..plan.in_len {
         for y in 0..plan.tile_h {
-            for x in 0..input.w {
-                *tile.at_mut(c, y, x) = input.at(plan.in_base + c, plan.clip0 + y, x);
-            }
+            tile.row_mut(c, y).copy_from_slice(input.row(plan.in_base + c, plan.clip0 + y));
         }
     }
     let mut bits = Vec::with_capacity(plan.out_len * plan.in_len * k * k);
@@ -199,8 +232,12 @@ pub fn materialize_block(layer: &LayerData<'_>, plan: &BlockPlan) -> BlockJob {
 pub enum EngineKind {
     /// Cycle-accurate chip simulation with the full activity ledger.
     CycleAccurate,
-    /// Functional bit-packed popcount datapath, outputs only.
+    /// Functional popcount datapath on the layer-resident bitplane
+    /// raster, outputs only.
     Functional,
+    /// The PR-1 functional baseline that repacks every window bit by
+    /// bit — kept only for measured A/B against the raster path.
+    FunctionalPerWindow,
 }
 
 impl EngineKind {
@@ -209,6 +246,7 @@ impl EngineKind {
         match self {
             EngineKind::CycleAccurate => "cycle-accurate",
             EngineKind::Functional => "functional",
+            EngineKind::FunctionalPerWindow => "functional-pr1",
         }
     }
 
@@ -216,7 +254,8 @@ impl EngineKind {
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s {
             "cycle" | "cycle-accurate" | "sim" => Some(EngineKind::CycleAccurate),
-            "functional" | "fast" | "popcount" => Some(EngineKind::Functional),
+            "functional" | "fast" | "popcount" | "raster" => Some(EngineKind::Functional),
+            "functional-pr1" | "per-window" | "pr1" => Some(EngineKind::FunctionalPerWindow),
             _ => None,
         }
     }
@@ -226,6 +265,7 @@ impl EngineKind {
         match self {
             EngineKind::CycleAccurate => Box::new(CycleAccurate::new(cfg)),
             EngineKind::Functional => Box::new(Functional::new()),
+            EngineKind::FunctionalPerWindow => Box::new(Functional::per_window()),
         }
     }
 }
@@ -242,8 +282,14 @@ mod tests {
         assert_eq!(EngineKind::parse("cycle-accurate"), Some(EngineKind::CycleAccurate));
         assert_eq!(EngineKind::parse("functional"), Some(EngineKind::Functional));
         assert_eq!(EngineKind::parse("popcount"), Some(EngineKind::Functional));
+        assert_eq!(EngineKind::parse("pr1"), Some(EngineKind::FunctionalPerWindow));
+        assert_eq!(
+            EngineKind::parse("functional-pr1"),
+            Some(EngineKind::FunctionalPerWindow)
+        );
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Functional.name(), "functional");
+        assert_eq!(EngineKind::FunctionalPerWindow.name(), "functional-pr1");
     }
 
     #[test]
@@ -258,6 +304,7 @@ mod tests {
             input: &input,
             kernels: &kernels,
             packed: None,
+            raster: None,
             scale_bias: &sb,
         };
         let plan = BlockPlan::whole(3, true, 4, 3, 6);
@@ -279,6 +326,7 @@ mod tests {
             input: &input,
             kernels: &kernels,
             packed: None,
+            raster: None,
             scale_bias: &sb,
         };
         let plan = BlockPlan {

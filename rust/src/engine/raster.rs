@@ -1,0 +1,294 @@
+//! Layer-resident bitplane rasters: activations packed **once**, windows
+//! assembled by shifts.
+//!
+//! The functional engine's popcount identity (see [`crate::engine`] docs)
+//! consumes each k×k window as 12 offset-binary plane words. PR 1 rebuilt
+//! those words from scratch for every (output pixel × input channel) —
+//! `out_h·out_w·n_in·k²·12` bit inserts per block even though a pixel's
+//! code never changes within a layer. [`BitplaneRaster`] removes that
+//! redundancy the way the chip's image bank does: pack every input pixel
+//! exactly once, keep the feature map resident in the layout the datapath
+//! consumes, and slide windows over it with shifts.
+//!
+//! Per (channel, padded row) the raster stores:
+//!
+//! * **12 plane rows**, u64-packed along x (bit `pc` of plane `b` ⇔ bit
+//!   `b` of the pixel's offset-binary code `u = x + 2048`). The
+//!   zero-padding halo is pre-baked: halo pixels hold code 2048, i.e.
+//!   plane 11 set, all others clear. Each plane row carries one guard
+//!   word so two-word window extracts never branch on the row end.
+//! * **prefix sums of `u`** (`usums[x]` = Σ of codes left of padded
+//!   column x), so a window's Σu is `k` subtractions — one per row —
+//!   instead of k² adds.
+//!
+//! A window's plane word for output position (y, x) then assembles as
+//! `k` shift+mask row extracts per plane (window bit `dy·k+dx` ⇔ padded
+//! column `x+dx` of padded row `y+dy`), amortized across **all** output
+//! channels of that window. Both convolution modes use the same
+//! coordinates: with the halo pre-baked, the window for output (y, x)
+//! always starts at padded row y, padded column x.
+//!
+//! The buffers are plain `Vec`s reused across `pack` calls (`resize`
+//! after `clear` keeps capacity), so a worker that serves same-geometry
+//! frames allocates nothing in steady state — [`Self::reallocs`] counts
+//! the packs that actually had to grow, which tests pin down.
+
+use crate::fixedpoint::Q2_9;
+use crate::workload::Image;
+
+/// Bitplanes in the offset-binary activation code (12-bit Q2.9).
+pub const PLANES: usize = 12;
+
+/// Offset added to a raw Q2.9 sample to make it a non-negative 12-bit
+/// code (`x + 2048 ∈ [0, 4096)`). Zero-padding halo pixels carry exactly
+/// this code (bit 11 alone).
+pub const OFFSET: i64 = 2048;
+
+/// A packed bitplane raster of one image view (a full layer input or one
+/// block's tile), with the convolution halo pre-baked. Reusable scratch:
+/// `pack_view` overwrites in place and only allocates when it must grow.
+#[derive(Debug, Default)]
+pub struct BitplaneRaster {
+    k: usize,
+    channels: usize,
+    /// Padded width (w + k − 1 when zero-padded, w otherwise).
+    pw: usize,
+    /// Padded height per channel.
+    ph: usize,
+    /// u64 words per plane row, including one guard word.
+    stride: usize,
+    /// Plane words: `[(c·ph + y)·PLANES + b] · stride`.
+    words: Vec<u64>,
+    /// Prefix sums of `u` per padded row: `[(c·ph + y)] · (pw + 1)`.
+    usums: Vec<i64>,
+    reallocs: u64,
+}
+
+impl BitplaneRaster {
+    /// Empty raster scratch (packs lazily on first use).
+    pub fn new() -> BitplaneRaster {
+        BitplaneRaster::default()
+    }
+
+    /// Pack a full image (all channels, all rows) — the layer-resident
+    /// form shared by every block of a layer.
+    pub fn pack(&mut self, img: &Image, k: usize, zero_pad: bool) {
+        self.pack_view(img, k, zero_pad, 0, img.c, 0, img.h);
+    }
+
+    /// Pack a sub-view of `img`: channels `c0..c0+c_len`, rows
+    /// `y0..y0+y_len`. Rows outside the view read as zero-padding halo
+    /// even where the image has data — exactly the per-tile semantics of
+    /// a materialized [`crate::hw::BlockJob`].
+    ///
+    /// This is also where activations are validated: each pixel is
+    /// checked against Q2.9 **once** (debug builds), instead of k² times
+    /// per pixel in the window inner loop.
+    #[allow(clippy::too_many_arguments)] // raw view geometry, mirrors BlockPlan fields
+    pub fn pack_view(
+        &mut self,
+        img: &Image,
+        k: usize,
+        zero_pad: bool,
+        c0: usize,
+        c_len: usize,
+        y0: usize,
+        y_len: usize,
+    ) {
+        assert!((1..=7).contains(&k), "kernel size {k} unsupported");
+        assert!(c0 + c_len <= img.c && y0 + y_len <= img.h, "view outside image");
+        let halo = if zero_pad { k - 1 } else { 0 };
+        let offset = if zero_pad { (k - 1) / 2 } else { 0 };
+        let pw = img.w + halo;
+        let ph = y_len + halo;
+        let stride = pw.div_ceil(64) + 1; // +1 guard word: branch-free extracts
+        self.k = k;
+        self.channels = c_len;
+        self.pw = pw;
+        self.ph = ph;
+        self.stride = stride;
+        let word_len = c_len * ph * PLANES * stride;
+        let usum_len = c_len * ph * (pw + 1);
+        if word_len > self.words.capacity() || usum_len > self.usums.capacity() {
+            self.reallocs += 1;
+        }
+        self.words.clear();
+        self.words.resize(word_len, 0);
+        self.usums.clear();
+        self.usums.resize(usum_len, 0);
+
+        for c in 0..c_len {
+            for py in 0..ph {
+                let row = c * ph + py;
+                let wbase = row * PLANES * stride;
+                let ubase = row * (pw + 1);
+                // Padded row py holds view row py − offset; outside the
+                // view it is all halo (code 2048 = bit 11 alone).
+                if py < offset || py >= offset + y_len {
+                    Self::fill_halo_row(
+                        &mut self.words[wbase..wbase + PLANES * stride],
+                        &mut self.usums[ubase..ubase + pw + 1],
+                        pw,
+                        stride,
+                    );
+                    continue;
+                }
+                let src = img.row(c0 + c, y0 + py - offset);
+                let words = &mut self.words[wbase..wbase + PLANES * stride];
+                let usums = &mut self.usums[ubase..ubase + pw + 1];
+                let mut run = 0i64;
+                for pc in 0..pw {
+                    let u = if (offset..offset + img.w).contains(&pc) {
+                        let px = src[pc - offset];
+                        debug_assert!(
+                            Q2_9.contains(px),
+                            "activation {px} outside Q2.9 at packed col {pc}"
+                        );
+                        (px + OFFSET) as u64
+                    } else {
+                        OFFSET as u64
+                    };
+                    run += u as i64;
+                    usums[pc + 1] = run;
+                    let mut bits = u;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        words[b * stride + (pc >> 6)] |= 1u64 << (pc & 63);
+                        bits &= bits - 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write one all-halo padded row: plane 11 set across `pw` columns,
+    /// prefix sums of the constant code 2048.
+    fn fill_halo_row(words: &mut [u64], usums: &mut [i64], pw: usize, stride: usize) {
+        let p11 = &mut words[11 * stride..12 * stride];
+        for wi in 0..pw >> 6 {
+            p11[wi] = !0u64;
+        }
+        if pw & 63 != 0 {
+            p11[pw >> 6] = (1u64 << (pw & 63)) - 1;
+        }
+        for pc in 0..pw {
+            usums[pc + 1] = usums[pc] + OFFSET;
+        }
+    }
+
+    /// Assemble the 12 window plane words for output position (y, x) of
+    /// packed channel `c`, and return the window's Σu.
+    ///
+    /// `y`/`x` are output coordinates, which equal the window's top-left
+    /// corner in padded raster coordinates for both convolution modes.
+    /// Each plane word is built from `k` shift+mask row extracts (two
+    /// word reads per extract, guard word makes the pair unconditional);
+    /// Σu is `k` prefix-sum subtractions.
+    #[inline]
+    pub fn window(&self, c: usize, y: usize, x: usize, out: &mut [u64; PLANES]) -> i64 {
+        let k = self.k;
+        debug_assert!(c < self.channels, "channel {c} outside raster ({})", self.channels);
+        debug_assert!(y + k <= self.ph && x + k <= self.pw, "window ({y},{x}) outside raster");
+        let mask = (1u64 << k) - 1;
+        let mut sum_u = 0i64;
+        *out = [0u64; PLANES];
+        let wi = x >> 6;
+        let sh = (x & 63) as u32;
+        for dy in 0..k {
+            let row = c * self.ph + y + dy;
+            let ubase = row * (self.pw + 1);
+            sum_u += self.usums[ubase + x + k] - self.usums[ubase + x];
+            let wbase = row * PLANES * self.stride + wi;
+            let jshift = (dy * k) as u32;
+            for (b, plane) in out.iter_mut().enumerate() {
+                let p = wbase + b * self.stride;
+                let lo = self.words[p] >> sh;
+                let bits = if sh == 0 { lo } else { lo | (self.words[p + 1] << (64 - sh)) };
+                *plane |= (bits & mask) << jshift;
+            }
+        }
+        sum_u
+    }
+
+    /// Kernel size this raster was packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Channels packed into this raster.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Padded (height, width) per channel.
+    pub fn padded_dims(&self) -> (usize, usize) {
+        (self.ph, self.pw)
+    }
+
+    /// Number of `pack`/`pack_view` calls that had to grow a buffer.
+    /// Steady-state serving of same-geometry frames keeps this constant —
+    /// the scratch-reuse tests assert exactly that.
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The window-extraction-vs-naive-packing oracle sweep (every kernel
+    // size, both modes, u64-word-boundary widths) lives in
+    // `rust/tests/raster_props.rs` — the unit tests here cover only what
+    // that property cannot see: view/halo semantics and scratch reuse.
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::random_image;
+
+    #[test]
+    fn view_rows_outside_tile_read_as_halo() {
+        // Packing rows 2..5 of a 8-row image must behave exactly like
+        // packing a standalone image holding only those rows.
+        let mut g = Gen::new(9);
+        let img = random_image(&mut g, 2, 8, 7, 0.3);
+        let mut crop = Image::zeros(2, 3, 7);
+        for c in 0..2 {
+            for y in 0..3 {
+                crop.row_mut(c, y).copy_from_slice(img.row(c, 2 + y));
+            }
+        }
+        let mut via_view = BitplaneRaster::new();
+        via_view.pack_view(&img, 3, true, 0, 2, 2, 3);
+        let mut via_crop = BitplaneRaster::new();
+        via_crop.pack(&crop, 3, true);
+        let mut a = [0u64; PLANES];
+        let mut b = [0u64; PLANES];
+        for c in 0..2 {
+            for y in 0..3 {
+                for x in 0..7 {
+                    let ua = via_view.window(c, y, x, &mut a);
+                    let ub = via_crop.window(c, y, x, &mut b);
+                    assert_eq!((a, ua), (b, ub), "c={c} y={y} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repacking_same_geometry_never_reallocates() {
+        let mut g = Gen::new(11);
+        let img = random_image(&mut g, 3, 10, 9, 0.1);
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, 3, true);
+        let after_first = r.reallocs();
+        for _ in 0..5 {
+            let frame = random_image(&mut g, 3, 10, 9, 0.1);
+            r.pack(&frame, 3, true);
+        }
+        assert_eq!(r.reallocs(), after_first, "steady-state pack must not allocate");
+        // A strictly larger geometry grows once, then is steady again.
+        let big = random_image(&mut g, 3, 20, 9, 0.1);
+        r.pack(&big, 3, true);
+        assert_eq!(r.reallocs(), after_first + 1);
+        r.pack(&big, 3, true);
+        assert_eq!(r.reallocs(), after_first + 1);
+    }
+}

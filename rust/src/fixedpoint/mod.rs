@@ -69,6 +69,7 @@ impl QFormat {
     }
 
     /// True if `raw` is representable without saturation.
+    #[allow(clippy::manual_range_contains)] // RangeInclusive::contains is not const
     pub const fn contains(self, raw: i64) -> bool {
         raw >= self.min_raw() && raw <= self.max_raw()
     }

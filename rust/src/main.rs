@@ -78,10 +78,12 @@ fn print_help() {
          \x20 golden [--seed N]           check simulator vs the PJRT golden model\n\
          \x20 figure <2|6|11|12|13>       regenerate a paper figure's data series\n\
          \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
-         \x20 throughput [--net scene-labeling] [--frames 8] [--engine both|functional|cycle]\n\
+         \x20 throughput [--net scene-labeling] [--frames 8]\n\
+         \x20            [--engine both|all|functional|functional-pr1|cycle]\n\
          \x20            [--workers N] [--scale 0.25] [--seed 42]\n\
          \x20                             batch synthetic frames through a NetworkSession\n\
-         \x20                             and report frames/s per engine (A/B + equality)\n\
+         \x20                             and report frames/s per engine (A/B + equality;\n\
+         \x20                             'all' includes the PR-1 per-window baseline)\n\
          \x20 networks                    list the networks of Tables III–V"
     );
 }
@@ -363,8 +365,10 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 }
 
 /// Batch synthetic frames through a [`NetworkSession`] on one or both
-/// engines: the end-to-end throughput A/B. With `--engine both` the two
-/// engines' outputs are also checked for bit-identity.
+/// engines: the end-to-end throughput A/B. With more than one engine
+/// selected (`--engine both`, or `--engine all` which adds the PR-1
+/// per-window functional baseline) every engine's outputs are also
+/// checked for bit-identity against the first.
 fn cmd_throughput(args: &Args) -> Result<(), String> {
     let id = args.get("net", "scene-labeling");
     let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
@@ -374,14 +378,22 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     )?;
     let scale = args.get_f64("scale", 0.25)?;
-    if !(scale > 0.0) {
+    if scale.is_nan() || scale <= 0.0 {
         return Err("--scale must be positive".into());
     }
     let seed = args.get_u64("seed", 42)?;
     let kinds: Vec<EngineKind> = match args.get("engine", "both") {
         "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
-        other => vec![EngineKind::parse(other)
-            .ok_or_else(|| format!("unknown engine '{other}' (both|functional|cycle)"))?],
+        // The raster-refactor A/B: new functional vs the PR-1 per-window
+        // packing baseline, plus the cycle simulator for reference.
+        "all" => vec![
+            EngineKind::Functional,
+            EngineKind::FunctionalPerWindow,
+            EngineKind::CycleAccurate,
+        ],
+        other => vec![EngineKind::parse(other).ok_or_else(|| {
+            format!("unknown engine '{other}' (both|all|functional|functional-pr1|cycle)")
+        })?],
     };
 
     let specs = SessionLayerSpec::synthetic_network(&net, seed)?;
@@ -416,18 +428,19 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         );
         runs.push((kind, out, dt));
     }
-    if runs.len() == 2 {
+    if runs.len() > 1 {
         let (ka, oa, ta) = &runs[0];
-        let (kb, ob, tb) = &runs[1];
-        if oa != ob {
-            return Err(format!(
-                "engine outputs diverge: {} vs {} — this is a bug",
-                ka.name(),
-                kb.name()
-            ));
+        for (kb, ob, tb) in &runs[1..] {
+            if oa != ob {
+                return Err(format!(
+                    "engine outputs diverge: {} vs {} — this is a bug",
+                    ka.name(),
+                    kb.name()
+                ));
+            }
+            println!("  {} speedup over {}: {:.1}x", ka.name(), kb.name(), tb / ta);
         }
         println!("  outputs bit-identical across engines");
-        println!("  {} speedup over {}: {:.1}x", ka.name(), kb.name(), tb / ta);
     }
     Ok(())
 }

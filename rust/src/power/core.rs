@@ -149,7 +149,7 @@ impl CorePowerModel {
         }
         for w in self.anchors.windows(2) {
             let (a, b) = (w[0], w[1]);
-            if v >= a.0 && v <= b.0 {
+            if (a.0..=b.0).contains(&v) {
                 let t = (v - a.0) / (b.0 - a.0);
                 return c(&a) + t * (c(&b) - c(&a));
             }

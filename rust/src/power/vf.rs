@@ -82,7 +82,7 @@ impl VfCurve {
     /// (SRAM fails below 0.8 V, standard cells below 0.6 V, §III-C).
     pub fn freq(&self, v: f64) -> f64 {
         assert!(
-            v >= self.vmin - 1e-9 && v <= self.vmax + 1e-9,
+            (self.vmin - 1e-9..=self.vmax + 1e-9).contains(&v),
             "supply {v} V outside operating range [{}, {}] V",
             self.vmin,
             self.vmax

@@ -43,6 +43,22 @@ impl Image {
         &mut self.data[(c * self.h + y) * self.w + x]
     }
 
+    /// One full pixel row of a channel as a slice — the unit the block
+    /// materializer and the bitplane raster consume (whole-row copies
+    /// and packs instead of per-pixel `at` calls).
+    #[inline]
+    pub fn row(&self, c: usize, y: usize) -> &[i64] {
+        let base = (c * self.h + y) * self.w;
+        &self.data[base..base + self.w]
+    }
+
+    /// Mutable full pixel row of a channel.
+    #[inline]
+    pub fn row_mut(&mut self, c: usize, y: usize) -> &mut [i64] {
+        let base = (c * self.h + y) * self.w;
+        &mut self.data[base..base + self.w]
+    }
+
     /// Zero-padded accessor: coordinates outside the image read 0, the
     /// halo the accelerator synthesizes for zero-padded layers.
     #[inline]
@@ -242,6 +258,16 @@ mod tests {
         assert_eq!(img.at_padded(1, 2, 3), 77);
         assert_eq!(img.at_padded(1, -1, 0), 0);
         assert_eq!(img.at_padded(1, 0, 4), 0);
+    }
+
+    #[test]
+    fn row_slices_alias_at_indexing() {
+        let mut img = Image::zeros(2, 3, 4);
+        *img.at_mut(1, 2, 0) = 5;
+        *img.at_mut(1, 2, 3) = 9;
+        assert_eq!(img.row(1, 2), &[5, 0, 0, 9]);
+        img.row_mut(0, 1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(img.at(0, 1, 2), 3);
     }
 
     #[test]

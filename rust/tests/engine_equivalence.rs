@@ -1,10 +1,12 @@
 //! The equivalence obligation of the engine refactor: the `Functional`
-//! popcount engine must be **bit-identical** to the `CycleAccurate`
-//! chip simulator on every supported geometry — all kernel sizes
-//! 1..=7, zero-padded and valid convolutions, channel-blocked and
-//! vertically tiled layers, any worker count, saturating and
-//! non-saturating amplitudes — and batched `NetworkSession` inference
-//! must match the layer-by-layer executor for either engine.
+//! popcount engine — now running on the layer-resident bitplane raster —
+//! must be **bit-identical** to the `CycleAccurate` chip simulator on
+//! every supported geometry — all kernel sizes 1..=7, zero-padded and
+//! valid convolutions, channel-blocked and vertically tiled layers, any
+//! worker count, saturating and non-saturating amplitudes — and batched
+//! `NetworkSession` inference must match the layer-by-layer executor
+//! for every engine kind (including the PR-1 per-window baseline kept
+//! for A/B benches).
 
 use std::sync::Arc;
 
@@ -67,10 +69,13 @@ fn prop_engines_identical_on_random_blocked_tiled_layers() {
         let workers = g.range(1, 4);
         let cyc = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::CycleAccurate);
         let fun = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Functional);
+        let pr1 =
+            run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::FunctionalPerWindow);
         assert_eq!(
             cyc.output, fun.output,
             "k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} amp={amplitude}"
         );
+        assert_eq!(cyc.output, pr1.output, "per-window baseline diverges");
         assert_eq!(cyc.blocks, fun.blocks);
         assert_eq!(cyc.offchip_adds, fun.offchip_adds);
     });
@@ -168,7 +173,11 @@ fn session_batch_equals_layerwise_executor() {
         })
         .collect();
 
-    for kind in [EngineKind::CycleAccurate, EngineKind::Functional] {
+    for kind in [
+        EngineKind::CycleAccurate,
+        EngineKind::Functional,
+        EngineKind::FunctionalPerWindow,
+    ] {
         let mut sess = NetworkSession::new(cfg, kind, 3, specs.clone());
         let batch = sess.run_batch(frames.clone());
         assert_eq!(batch, reference, "engine {}", kind.name());

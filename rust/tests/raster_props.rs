@@ -1,0 +1,167 @@
+//! Property tests of the layer-resident bitplane raster: window
+//! extraction must be bit-equal to the naive per-window packing of PR 1
+//! on arbitrary images — including zero-pad halo positions and
+//! valid-mode edges — and the raster-based functional engine must match
+//! the per-window baseline on any blocked/tiled layer geometry. Also
+//! pins the steady-state scratch-reuse guarantee the batched serving
+//! path relies on.
+
+use yodann::coordinator::{run_layer_engine, ExecOptions, LayerWorkload};
+use yodann::engine::raster::{BitplaneRaster, OFFSET, PLANES};
+use yodann::engine::{ConvEngine, EngineKind, Functional};
+use yodann::hw::{BlockJob, ChipConfig};
+use yodann::testkit::{property, Gen};
+use yodann::workload::{random_image, BinaryKernels, Image, ScaleBias};
+
+/// The PR-1 inner loop as the oracle: pack one window's 12 offset-binary
+/// plane words (and Σu) straight from the image, bit by bit.
+fn naive_window(
+    img: &Image,
+    k: usize,
+    zero_pad: bool,
+    c: usize,
+    y: usize,
+    x: usize,
+) -> ([u64; PLANES], i64) {
+    let offset = if zero_pad { ((k - 1) / 2) as isize } else { 0 };
+    let mut planes = [0u64; PLANES];
+    let mut sum_u = 0i64;
+    let mut j = 0u32;
+    for dy in 0..k {
+        for dx in 0..k {
+            let ty = y as isize + dy as isize - offset;
+            let tx = x as isize + dx as isize - offset;
+            let px = img.at_padded(c, ty, tx);
+            let mut u = (px + OFFSET) as u64;
+            sum_u += u as i64;
+            while u != 0 {
+                planes[u.trailing_zeros() as usize] |= 1u64 << j;
+                u &= u - 1;
+            }
+            j += 1;
+        }
+    }
+    (planes, sum_u)
+}
+
+#[test]
+fn prop_window_extraction_equals_naive_packing() {
+    // ANY random geometry, full Q2.9 amplitude, every output position —
+    // halo corners, valid-mode edges and windows straddling one or two
+    // u64 word boundaries (w up to 130) included.
+    property("raster window == naive pack", 0x8A57E8, 40, |g| {
+        let k = g.range(1, 7);
+        let zero_pad = g.bool();
+        let c = g.range(1, 3);
+        let h = g.range(k, 12);
+        let w = match g.range(0, 2) {
+            0 => g.range(k, 12),
+            1 => g.range(60, 70),  // windows straddle the first word boundary
+            _ => g.range(126, 130), // and the second
+        };
+        let img = random_image(g, c, h, w, *g.choose(&[0.05, 1.0]));
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, k, zero_pad);
+        let (out_h, out_w) =
+            if zero_pad { (h, w) } else { (h + 1 - k, w + 1 - k) };
+        let mut planes = [0u64; PLANES];
+        for ch in 0..c {
+            for y in 0..out_h {
+                for x in 0..out_w {
+                    let sum_u = r.window(ch, y, x, &mut planes);
+                    let (want, want_u) = naive_window(&img, k, zero_pad, ch, y, x);
+                    assert_eq!(
+                        (planes, sum_u),
+                        (want, want_u),
+                        "k={k} pad={zero_pad} c={ch} y={y} x={x} ({h}x{w})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_raster_engine_equals_per_window_engine() {
+    // The refactor's layer-level obligation, old vs new functional: any
+    // channel-blocked, vertically tiled, saturating geometry — identical
+    // outputs whether windows come from the layer-resident raster or the
+    // per-window repack.
+    property("raster functional == pr1 functional", 0x8A57E9, 25, |g| {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 4 * g.range(8, 24); // shrink h_max → tiling
+        let k = g.range(1, 7);
+        let n_in = g.range(1, 10);
+        let n_out = g.range(1, 12);
+        let zero_pad = g.bool();
+        let h = g.range(k.max(2), 26);
+        let w = g.range(k.max(2), 10);
+        let amplitude = *g.choose(&[0.01, 0.05, 0.4]);
+        let wl = LayerWorkload {
+            k,
+            zero_pad,
+            input: random_image(g, n_in, h, w, amplitude),
+            kernels: BinaryKernels::random(g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(g, n_out),
+        };
+        let workers = g.range(1, 4);
+        let new = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Functional);
+        let old =
+            run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::FunctionalPerWindow);
+        assert_eq!(
+            new.output, old.output,
+            "k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} amp={amplitude}"
+        );
+        assert_eq!(new.blocks, old.blocks);
+        assert_eq!(new.stats.useful_ops, old.stats.useful_ops);
+    });
+}
+
+#[test]
+fn session_style_frame_loop_has_zero_steady_state_allocs() {
+    // A session worker repacks its one raster scratch per (frame, layer)
+    // with layer geometries alternating within each frame. After the
+    // first frame warms the buffers to the largest layer, no further
+    // frame may allocate.
+    let mut g = Gen::new(0x5C7A);
+    let mut raster = BitplaneRaster::new();
+    let frame_layers = |g: &mut Gen| {
+        vec![
+            random_image(g, 3, 20, 16, 0.1), // layer 1 input, k=3 padded
+            random_image(g, 6, 10, 8, 0.1),  // layer 2 input, k=5 padded
+        ]
+    };
+    for img in frame_layers(&mut g) {
+        raster.pack(&img, if img.c == 3 { 3 } else { 5 }, true);
+    }
+    let warm = raster.reallocs();
+    for _ in 0..5 {
+        for img in frame_layers(&mut g) {
+            raster.pack(&img, if img.c == 3 { 3 } else { 5 }, true);
+        }
+    }
+    assert_eq!(raster.reallocs(), warm, "steady-state frames must not allocate");
+}
+
+#[test]
+fn engine_raster_scratch_is_reused_across_blocks() {
+    // Block-local fallback path (run_block, no layer-resident raster):
+    // the engine's own scratch must also stop allocating once warm.
+    let mut g = Gen::new(0x5C7B);
+    let mut e = Functional::new();
+    let mut job = |g: &mut Gen| BlockJob {
+        k: 3,
+        zero_pad: true,
+        image: random_image(g, 4, 12, 10, 0.05),
+        kernels: BinaryKernels::random(g, 6, 4, 3),
+        scale_bias: ScaleBias::random(g, 6),
+    };
+    let first = job(&mut g);
+    e.run_block(&first);
+    let warm = e.raster_reallocs();
+    for _ in 0..4 {
+        let j = job(&mut g);
+        e.run_block(&j);
+    }
+    assert_eq!(e.raster_reallocs(), warm, "same-geometry blocks must not allocate");
+}
