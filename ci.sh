@@ -9,6 +9,12 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== cargo build --examples (every non-golden example; quickstart needs --features golden) =="
+cargo build --examples
+
+echo "== cargo test --release -q (release-mode overflow/wrap behavior) =="
+cargo test --release -q
+
 echo "== cargo clippy --all-targets -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings

@@ -8,8 +8,8 @@
 //! trajectory is trackable across PRs (the `speedup/raster-vs-pr1`
 //! record is the raster refactor's headline number).
 
-use yodann::bench::{black_box, emit_json, Bencher, JsonRecord};
-use yodann::coordinator::{NetworkSession, SessionLayerSpec};
+use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
+use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::model::networks;
@@ -112,9 +112,55 @@ fn main() {
     }
     println!("session outputs bit-identical across engines");
 
+    // Intra-frame shard scaling: the same batch under the per-frame
+    // schedule vs per-shard grids of growing stripe count, functional
+    // engine, 4 workers. Records land under the `shard-scaling/` schema:
+    // `shard-scaling/<policy>/batchN` carries frames/s (and ns/iter),
+    // `shard-scaling/speedup-<grid>` carries the ratio over per-frame.
+    println!("== intra-frame shard scaling (scene-labeling chain, 2-frame batch) ==");
+    let shard_frames: Vec<Image> = frames[..2].to_vec();
+    let policies = [
+        ShardPolicy::PerFrame,
+        ShardPolicy::PerShard(ShardGrid::striped(2)),
+        ShardPolicy::PerShard(ShardGrid::striped(4)),
+        ShardPolicy::PerShard(ShardGrid::new(2, 2)),
+    ];
+    let mut per_frame_s = None;
+    let mut shard_outputs: Vec<Vec<Image>> = Vec::new();
+    for policy in policies {
+        let mut sess =
+            NetworkSession::with_policy(cfg, EngineKind::Functional, 4, policy, specs.clone());
+        shard_outputs.push(sess.run_batch(shard_frames.clone()));
+        let s = b.bench(&format!("shard-scaling/{policy}/batch{}", shard_frames.len()), || {
+            black_box(sess.run_batch(shard_frames.clone()));
+        });
+        println!(
+            "  -> {:.2} frames/s under {policy}\n",
+            shard_frames.len() as f64 / s.mean.as_secs_f64()
+        );
+        records.push(JsonRecord::with_frames(&s, shard_frames.len() as f64));
+        match policy {
+            ShardPolicy::PerFrame => per_frame_s = Some(s.mean.as_secs_f64()),
+            ShardPolicy::PerShard(grid) => {
+                let ratio = per_frame_s.expect("per-frame measured first") / s.mean.as_secs_f64();
+                records.push(JsonRecord::ratio(&format!("shard-scaling/speedup-{grid}"), ratio));
+            }
+            ShardPolicy::Auto => {}
+        }
+    }
+    for other in &shard_outputs[1..] {
+        assert_eq!(&shard_outputs[0], other, "shard policies diverge");
+    }
+    println!("shard-policy outputs bit-identical across grids");
+
     // Anchor at the workspace root regardless of cargo's bench cwd, so
-    // the checked-in evidence file is the one that gets refreshed.
+    // the checked-in evidence file is the one that gets refreshed. The
+    // emission is strict: an empty or placeholder record set aborts the
+    // bench with a non-zero exit instead of clobbering real numbers.
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
-    emit_json(path, "engines", &records).expect("write BENCH_engines.json");
+    if let Err(e) = emit_json_strict(path, "engines", &records) {
+        eprintln!("refusing to write {path}: {e}");
+        std::process::exit(1);
+    }
     println!("wrote {path} ({} records)", records.len());
 }

@@ -69,7 +69,7 @@ pub struct PlacedJob {
 }
 
 /// Split `n` into chunks of at most `cap`.
-fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
+pub(crate) fn chunks(n: usize, cap: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
     let mut base = 0;
     while base < n {
@@ -100,6 +100,30 @@ pub fn plan_layer(
     n_out: usize,
     h: usize,
 ) -> Vec<BlockPlan> {
+    check_plan_geometry(cfg, k, zero_pad, h);
+    let out_h_total = if zero_pad { h } else { h - k + 1 };
+    plan_block_range(cfg, k, zero_pad, n_in, h, 0, out_h_total, 0, n_out)
+}
+
+/// Plan the chip blocks covering output rows `row0 .. row0 + rows` of
+/// output channels `out0 .. out0 + out_len` — the **single source** of
+/// the Eq. 9 tiling/blocking geometry, shared by [`plan_layer`] (the
+/// whole layer) and [`super::shard::shard_block_plans`] (one shard's
+/// stripe × channel group). Keeping one copy is what lets the sharded
+/// and unsharded paths stay bit-identical by construction.
+#[allow(clippy::too_many_arguments)] // raw range geometry, mirrors BlockPlan fields
+pub(crate) fn plan_block_range(
+    cfg: &ChipConfig,
+    k: usize,
+    zero_pad: bool,
+    n_in: usize,
+    h: usize,
+    row0: usize,
+    rows_total: usize,
+    out0: usize,
+    out_len_total: usize,
+) -> Vec<BlockPlan> {
+    check_plan_geometry(cfg, k, zero_pad, h);
     let streams = if cfg.multi_kernel {
         crate::model::KernelMode::for_kernel(k).filters_per_sop()
     } else {
@@ -109,19 +133,20 @@ pub fn plan_layer(
     let in_cap = cfg.n_ch;
     let h_max = cfg.h_max();
     let offset = if zero_pad { (k - 1) / 2 } else { 0 };
-    let out_h_total = if zero_pad { h } else { h - k + 1 };
 
     let in_chunks = chunks(n_in, in_cap);
     let mut plans = Vec::new();
-    for (out_base, out_len) in chunks(n_out, out_cap) {
+    for (ob, out_len) in chunks(out_len_total, out_cap) {
+        let out_base = out0 + ob;
         // Output-row tiles: each covers up to (h_max − overhang) output
         // rows; its input tile needs rows [row0−offset, row0+rows+k−1−offset).
-        let mut row_base = 0usize;
-        while row_base < out_h_total {
+        let mut row_base = row0;
+        let row_end = row0 + rows_total;
+        while row_base < row_end {
             let in_row0 = row_base as isize - offset as isize;
             // Max output rows such that input tile height ≤ h_max.
             let max_rows = h_max.saturating_sub(k - 1).max(1);
-            let rows = max_rows.min(out_h_total - row_base);
+            let rows = max_rows.min(row_end - row_base);
             let in_row_end = in_row0 + (rows + k - 1) as isize;
             let (clip0, clip1) = (in_row0.max(0) as usize, in_row_end.min(h as isize) as usize);
             for (ib, &(in_base, in_len)) in in_chunks.iter().enumerate() {
@@ -142,6 +167,37 @@ pub fn plan_layer(
         }
     }
     plans
+}
+
+/// Geometry preconditions shared by [`plan_layer`] and the shard planner
+/// ([`super::shard::shard_block_plans`]). Found by the k = 5/7 thin-tile
+/// audit:
+///
+/// * `h_max < k` — the image memory cannot hold even one window, yet the
+///   tiler would still emit "tiles" of up to `k > h_max` input rows
+///   (`max_rows` is clamped to 1 to guarantee progress), silently
+///   exceeding chip capacity on every engine.
+/// * valid-mode `h < k` — the layer has no output rows and
+///   `h − k + 1` *wraps* in release builds (debug builds panic on the
+///   subtraction), turning the row loop into a near-2⁶⁴ iteration hang.
+///
+/// Both are impossible-to-satisfy requests, so they fail loudly here with
+/// the geometry spelled out instead. Pinned by
+/// `rust/tests/raster_props.rs`.
+pub(crate) fn check_plan_geometry(cfg: &ChipConfig, k: usize, zero_pad: bool, h: usize) {
+    assert!((1..=7).contains(&k), "kernel size {k} unsupported (1..=7)");
+    assert!(
+        cfg.h_max() >= k,
+        "h_max {} cannot hold one {k}x{k} window (image memory of {} rows / {} channels); \
+         Eq. 9 tiling requires h_max >= k",
+        cfg.h_max(),
+        cfg.image_mem_rows,
+        cfg.n_ch
+    );
+    assert!(
+        zero_pad || h >= k,
+        "valid-mode layer of height {h} has no output rows for kernel {k}"
+    );
 }
 
 /// Decompose a layer into materialized chip-block jobs on `cfg` (the

@@ -99,9 +99,11 @@ where
     F: Fn() -> E + Sync,
 {
     let n_out = wl.kernels.n_out;
+    // Plan first: plan_layer's geometry guard fires before the output
+    // shape math can underflow on impossible layers (valid-mode h < k).
+    let plans = plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, n_out, wl.input.h);
     let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
     let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
-    let plans = plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, n_out, wl.input.h);
     let n_jobs = plans.len();
 
     // Pack the kernels — and the activations' bitplane raster — once per
@@ -200,8 +202,10 @@ pub(crate) fn finalize_output(
 
 /// Execute plans on a pool of engines. `engine0` is reused on the
 /// single-worker path; the parallel path builds one engine per thread
-/// (engines need not be `Send`).
-fn run_plans<E, F>(
+/// (engines need not be `Send`). Results come back in `plans` order
+/// regardless of completion order — the shard executor relies on that
+/// to re-associate results with their shards.
+pub(crate) fn run_plans<E, F>(
     data: &LayerData<'_>,
     plans: Vec<BlockPlan>,
     opts: ExecOptions,

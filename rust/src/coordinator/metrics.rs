@@ -55,7 +55,52 @@ pub fn sim_metrics(stats: &ChipStats, arch: ArchId, v: f64, dual_stream: bool) -
     }
 }
 
+/// Roll a sharded layer's per-chip activity into one multi-chip metric:
+/// every shard is priced at the corner like a chip of its own
+/// ([`sim_metrics`]), then reduced with [`SimMetrics::merge_parallel`] —
+/// wall-clock is the critical-path chip, energy and ops add. The halo
+/// rows striping re-loads (Eq. 9, now crossing chips) are *in* the
+/// per-shard cycle ledgers, so the scaling curve this reports is the
+/// honest one, not linear-by-construction.
+pub fn sharded_metrics(
+    per_shard: &[ChipStats],
+    arch: ArchId,
+    v: f64,
+    dual_stream: bool,
+) -> SimMetrics {
+    assert!(!per_shard.is_empty(), "sharded_metrics needs at least one shard");
+    per_shard
+        .iter()
+        .map(|s| sim_metrics(s, arch, v, dual_stream))
+        .reduce(|a, b| a.merge_parallel(&b))
+        .unwrap()
+}
+
 impl SimMetrics {
+    /// Merge metrics of runs executing **in parallel** on separate chips
+    /// at the same corner (a shard grid): wall time and cycles follow
+    /// the critical path (max), ops and energy add, and device power is
+    /// the sum of per-chip averages — the grid's aggregate envelope
+    /// while all chips are busy.
+    pub fn merge_parallel(&self, other: &SimMetrics) -> SimMetrics {
+        assert!((self.v - other.v).abs() < 1e-12, "corner mismatch");
+        let cycles = self.cycles.max(other.cycles);
+        let time = self.time.max(other.time);
+        let ops = self.ops + other.ops;
+        let core_energy = self.core_energy + other.core_energy;
+        SimMetrics {
+            v: self.v,
+            f: self.f,
+            cycles,
+            time,
+            ops,
+            theta: ops as f64 / time,
+            core_energy,
+            en_eff: ops as f64 / core_energy,
+            device_power: self.device_power + other.device_power,
+        }
+    }
+
     /// Merge metrics of consecutive runs (same corner).
     pub fn merge(&self, other: &SimMetrics) -> SimMetrics {
         assert!((self.v - other.v).abs() < 1e-12, "corner mismatch");
@@ -107,6 +152,36 @@ mod tests {
             "{} TOp/s/W",
             m.en_eff / 1e12
         );
+    }
+
+    #[test]
+    fn parallel_merge_takes_the_critical_path() {
+        // Two unequal shards: wall time is the slower chip's, ops and
+        // energy add, so throughput sits between 1x and 2x of one chip.
+        let a = sim_metrics(&full_stats(4000, 32), ArchId::Bin32Multi, 0.6, false);
+        let b = sim_metrics(&full_stats(1000, 32), ArchId::Bin32Multi, 0.6, false);
+        let m = a.merge_parallel(&b);
+        assert_eq!(m.cycles, 4000);
+        assert!((m.time - a.time).abs() < 1e-15);
+        assert_eq!(m.ops, a.ops + b.ops);
+        assert!((m.core_energy - (a.core_energy + b.core_energy)).abs() < 1e-15);
+        assert!(m.theta > a.theta && m.theta < 2.0 * a.theta);
+        assert!((m.device_power - (a.device_power + b.device_power)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_metrics_of_balanced_shards_scales_throughput() {
+        // Four equal shards: same wall-clock as one, 4x the ops — the
+        // ideal-scaling corner of the model.
+        let stats: Vec<ChipStats> = (0..4).map(|_| full_stats(1000, 32)).collect();
+        let one = sim_metrics(&stats[0], ArchId::Bin32Multi, 0.6, false);
+        let grid = sharded_metrics(&stats, ArchId::Bin32Multi, 0.6, false);
+        assert_eq!(grid.cycles, one.cycles);
+        assert_eq!(grid.ops, 4 * one.ops);
+        assert!((grid.theta / one.theta - 4.0).abs() < 1e-9);
+        // Energy per op is unchanged: parallelism is not an efficiency
+        // model, only a wall-clock one.
+        assert!((grid.en_eff - one.en_eff).abs() / one.en_eff < 1e-12);
     }
 
     #[test]

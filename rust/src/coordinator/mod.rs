@@ -16,7 +16,12 @@
 //!   statistics;
 //! * [`session`] — batched multi-frame inference: a persistent worker
 //!   pool with `Arc`-shared kernels/scale-bias and reusable accumulator
-//!   buffers runs a whole network over frame batches with one setup;
+//!   buffers runs a whole network over frame batches with one setup,
+//!   scheduled per frame, per shard, or hybrid ([`ShardPolicy`]);
+//! * [`shard`] — multi-chip sharded execution: a layer's output striped
+//!   across a [`ShardGrid`] of chip instances, each resolving its input
+//!   halo against the shared layer raster, with per-shard activity for
+//!   the power/throughput roll-ups;
 //! * [`golden`] (feature `golden`) — check block outputs bit-for-bit
 //!   against the AOT-compiled JAX/Pallas golden model via
 //!   `crate::runtime`;
@@ -30,6 +35,7 @@ pub mod executor;
 pub mod golden;
 pub mod metrics;
 pub mod session;
+pub mod shard;
 
 pub use blocks::{decompose, plan_layer, LayerWorkload};
 pub use executor::{run_layer, run_layer_engine, run_layer_with, ExecOptions, LayerRun};
@@ -37,3 +43,7 @@ pub use executor::{run_layer, run_layer_engine, run_layer_with, ExecOptions, Lay
 pub use golden::{check_block, GoldenReport};
 pub use metrics::SimMetrics;
 pub use session::{NetworkSession, SessionLayerSpec};
+pub use shard::{
+    plan_layer_shards, run_layer_sharded, LayerShard, ShardActivity, ShardGrid, ShardPolicy,
+    ShardedLayerRun,
+};

@@ -8,30 +8,48 @@
 //! session build and shared by every worker, eliminating the per-job
 //! `Image`/`BinaryKernels` clones of the materializing path. Each worker
 //! owns one [`ConvEngine`] instance plus a reusable wide-precision
-//! accumulator and a reusable [`BitplaneRaster`] scratch (activations
-//! packed once per frame per layer for engines that consume rasters),
-//! so steady-state frame processing allocates only the output images.
+//! accumulator and a reusable [`BitplaneRaster`] scratch, so
+//! steady-state frame processing allocates only the output images.
 //!
-//! Parallelism is **per frame**: a batch fans frames out across the
-//! pool, each worker carrying its frame through every layer (conv →
-//! optional quantized ReLU → optional 2×2 max-pool). Within a frame the
-//! blocks of a layer run sequentially on the worker's engine — for
-//! throughput traffic, frame-level parallelism keeps every core busy
-//! without any cross-thread reduction.
+//! Scheduling is governed by [`ShardPolicy`]:
+//!
+//! * **[`ShardPolicy::PerFrame`]** (the historical default) — a batch
+//!   fans frames out across the pool, each worker carrying its frame
+//!   through every layer (conv → optional quantized ReLU → optional 2×2
+//!   max-pool). Within a frame the blocks of a layer run sequentially on
+//!   the worker's engine — for batch traffic this keeps every core busy
+//!   with no cross-thread reduction.
+//! * **[`ShardPolicy::PerShard`]** — intra-frame parallelism for
+//!   latency-bound traffic (single frames, small batches): frames run in
+//!   order and each layer's output is striped across a
+//!   [`ShardGrid`](super::shard::ShardGrid) of chip instances; shard
+//!   tasks fan out across the same persistent pool, every shard
+//!   resolving its input halo against one shared per-layer
+//!   [`BitplaneRaster`] (packed once into caller-side reusable scratch,
+//!   shared via `Arc` — no activation copies), and the caller stitches
+//!   stripes through the executor's wide-precision reduction.
+//! * **[`ShardPolicy::Auto`]** — batches with at least one frame per
+//!   worker run per-frame; smaller batches shard each frame across the
+//!   whole pool (`workers × 1` stripes).
 //!
 //! The per-layer numerical pipeline is exactly the executor's:
 //! plan → engine blocks → off-chip wide accumulation → final α/β
-//! (Algorithm 1 line 37), so session outputs are bit-identical to
-//! [`super::executor::run_layer_engine`] layer by layer, for either
-//! engine kind.
+//! (Algorithm 1 line 37), and the i64 stitch reduction is
+//! order-invariant, so session outputs are **bit-identical** to
+//! [`super::executor::run_layer_engine`] layer by layer, for every
+//! engine kind and every policy (`rust/tests/conformance.rs` fuzzes the
+//! whole matrix).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::blocks::plan_layer;
+use super::blocks::{check_plan_geometry, plan_layer};
 use super::executor::{finalize_output, reduce_block};
-use crate::engine::{BitplaneRaster, ConvEngine, EngineKind, LayerData, PackedKernels};
+use super::shard::{plan_layer_shards, shard_block_plans, ShardGrid, ShardPolicy};
+use crate::engine::{
+    BitplaneRaster, BlockPlan, ConvEngine, EngineKind, EngineOutput, LayerData, PackedKernels,
+};
 use crate::fixedpoint::Q2_9;
 use crate::hw::ChipConfig;
 use crate::model::Network;
@@ -117,25 +135,87 @@ struct SessionLayer {
     packed: Option<Arc<PackedKernels>>,
 }
 
+/// Owned, `Arc`-shared view of the layer currently being sharded across
+/// the pool: what a worker rebuilds a [`LayerData`] from. Activations
+/// (`input`, `raster`) are shared, never copied per shard.
+struct ShardLayer {
+    k: usize,
+    zero_pad: bool,
+    input: Arc<Image>,
+    kernels: Arc<BinaryKernels>,
+    packed: Option<Arc<PackedKernels>>,
+    raster: Option<Arc<BitplaneRaster>>,
+    scale_bias: Arc<ScaleBias>,
+}
+
+impl ShardLayer {
+    fn as_layer_data(&self) -> LayerData<'_> {
+        LayerData {
+            k: self.k,
+            zero_pad: self.zero_pad,
+            input: &self.input,
+            kernels: &self.kernels,
+            packed: self.packed.as_deref(),
+            raster: self.raster.as_deref(),
+            scale_bias: &self.scale_bias,
+        }
+    }
+}
+
+/// A unit of pool work: one whole frame (per-frame schedule) or one
+/// shard of one layer (per-shard schedule).
+enum Task {
+    Frame(usize, Image),
+    Shard { shard: usize, plans: Vec<BlockPlan>, layer: Arc<ShardLayer> },
+}
+
+/// A worker's reply to one [`Task`].
+enum Reply {
+    Frame(usize, Result<Image, String>),
+    Shard(usize, Result<Vec<(BlockPlan, EngineOutput)>, String>),
+}
+
 /// A persistent multi-frame inference session over one network.
 pub struct NetworkSession {
-    tx: Option<Sender<(usize, Image)>>,
-    rx_out: Receiver<(usize, Result<Image, String>)>,
+    cfg: ChipConfig,
+    tx: Option<Sender<Task>>,
+    rx_out: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
+    layers: Arc<Vec<SessionLayer>>,
     workers: usize,
     engine: EngineKind,
-    n_layers: usize,
+    policy: ShardPolicy,
     n_in: usize,
+    /// Caller-side scratch for the sharded schedule: the per-layer
+    /// raster every shard reads (swapped out while a layer is in
+    /// flight, reclaimed through `Arc::try_unwrap` afterwards) and the
+    /// wide stitch accumulator.
+    shard_raster: Option<BitplaneRaster>,
+    shard_acc: Vec<i64>,
 }
 
 impl NetworkSession {
-    /// Build a session: validates the layer chain, packs every layer's
-    /// kernels once, and spins up `workers` threads each owning one
-    /// engine of `kind`.
+    /// Build a session on the historical per-frame schedule — see
+    /// [`NetworkSession::with_policy`].
     pub fn new(
         cfg: ChipConfig,
         kind: EngineKind,
         workers: usize,
+        specs: Vec<SessionLayerSpec>,
+    ) -> NetworkSession {
+        NetworkSession::with_policy(cfg, kind, workers, ShardPolicy::PerFrame, specs)
+    }
+
+    /// Build a session: validates the layer chain, packs every layer's
+    /// kernels once, and spins up `workers` threads each owning one
+    /// engine of `kind`. `policy` picks the batch schedule (and can be
+    /// changed later with [`NetworkSession::set_policy`]); outputs are
+    /// bit-identical under every policy.
+    pub fn with_policy(
+        cfg: ChipConfig,
+        kind: EngineKind,
+        workers: usize,
+        policy: ShardPolicy,
         specs: Vec<SessionLayerSpec>,
     ) -> NetworkSession {
         assert!(!specs.is_empty(), "session needs at least one layer");
@@ -157,61 +237,41 @@ impl NetworkSession {
         let n_in = specs[0].kernels.n_in;
         // Pack once per session, only when the engine consumes the packed
         // form (the cycle-accurate engine materializes jobs instead).
-        let pack = matches!(kind, EngineKind::Functional | EngineKind::FunctionalPerWindow);
         let layers: Vec<SessionLayer> = specs
             .into_iter()
             .map(|spec| {
                 let packed =
-                    pack.then(|| Arc::new(PackedKernels::pack(&spec.kernels)));
+                    kind.wants_packed().then(|| Arc::new(PackedKernels::pack(&spec.kernels)));
                 SessionLayer { spec, packed }
             })
             .collect();
-        let n_layers = layers.len();
         let layers = Arc::new(layers);
         let workers = workers.max(1);
-        let (tx, rx_in) = channel::<(usize, Image)>();
+        let (tx, rx_in) = channel::<Task>();
         let rx_in = Arc::new(Mutex::new(rx_in));
-        let (tx_out, rx_out) = channel::<(usize, Result<Image, String>)>();
+        let (tx_out, rx_out) = channel::<Reply>();
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = Arc::clone(&rx_in);
             let tx_out = tx_out.clone();
             let layers = Arc::clone(&layers);
             handles.push(std::thread::spawn(move || {
-                let mut engine = kind.build(cfg);
-                let mut acc: Vec<i64> = Vec::new();
-                // Per-worker raster scratch, repacked once per (frame,
-                // layer) and reused across frames — steady-state serving
-                // of same-geometry traffic allocates nothing here.
-                let mut raster = BitplaneRaster::new();
-                loop {
-                    // Take the next frame; holding the lock while idle is
-                    // fine — exactly one waiter is handed each task.
-                    let task = rx.lock().unwrap().recv();
-                    let (idx, frame) = match task {
-                        Ok(t) => t,
-                        Err(_) => break, // session dropped
-                    };
-                    // A panic (bad frame geometry, engine bug) must reach
-                    // the batch as an error — a silently dead worker would
-                    // leave run_batch waiting forever on this frame.
-                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_frame_inner(&cfg, &mut *engine, &layers, frame, &mut acc, &mut raster)
-                    }))
-                    .map_err(panic_message);
-                    if out.is_err() {
-                        // Engine/scratch state may be mid-frame garbage.
-                        engine = kind.build(cfg);
-                        acc = Vec::new();
-                        raster = BitplaneRaster::new();
-                    }
-                    if tx_out.send((idx, out)).is_err() {
-                        break;
-                    }
-                }
+                worker_loop(cfg, kind, &rx, &tx_out, &layers);
             }));
         }
-        NetworkSession { tx: Some(tx), rx_out, handles, workers, engine: kind, n_layers, n_in }
+        NetworkSession {
+            cfg,
+            tx: Some(tx),
+            rx_out,
+            handles,
+            layers,
+            workers,
+            engine: kind,
+            policy,
+            n_in,
+            shard_raster: Some(BitplaneRaster::new()),
+            shard_acc: Vec::new(),
+        }
     }
 
     /// Worker threads in the pool.
@@ -224,9 +284,29 @@ impl NetworkSession {
         self.engine
     }
 
+    /// The batch schedule in force.
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Change the batch schedule (takes effect from the next batch;
+    /// outputs are bit-identical under every policy).
+    pub fn set_policy(&mut self, policy: ShardPolicy) {
+        self.policy = policy;
+    }
+
     /// Layers in the network.
     pub fn n_layers(&self) -> usize {
-        self.n_layers
+        self.layers.len()
+    }
+
+    /// Sharded-schedule raster packs that had to grow the caller-side
+    /// scratch. Steady-state serving of same-geometry traffic keeps this
+    /// constant — the scratch-reuse tests pin it (a lost scratch, e.g. a
+    /// shard still holding the `Arc` at reclaim time, shows up here as
+    /// renewed growth).
+    pub fn shard_raster_reallocs(&self) -> u64 {
+        self.shard_raster.as_ref().map_or(u64::MAX, |r| r.reallocs())
     }
 
     /// Run one frame through the whole network.
@@ -234,8 +314,9 @@ impl NetworkSession {
         self.run_batch(vec![frame]).pop().unwrap()
     }
 
-    /// Run a batch of frames, fanned out across the worker pool.
-    /// Results come back in input order.
+    /// Run a batch of frames under the session's [`ShardPolicy`].
+    /// Results come back in input order regardless of the schedule or
+    /// completion order.
     ///
     /// Panics on frames whose channel count does not match the first
     /// layer (validated up front — a worker dying mid-batch would
@@ -248,15 +329,33 @@ impl NetworkSession {
                 f.c, self.n_in
             );
         }
+        match self.policy {
+            ShardPolicy::PerFrame => self.run_batch_per_frame(frames),
+            ShardPolicy::PerShard(grid) => self.run_batch_sharded(frames, grid),
+            ShardPolicy::Auto => {
+                if frames.len() >= self.workers {
+                    self.run_batch_per_frame(frames)
+                } else {
+                    self.run_batch_sharded(frames, ShardGrid::striped(self.workers))
+                }
+            }
+        }
+    }
+
+    /// The per-frame schedule: frames fan out across the pool.
+    fn run_batch_per_frame(&mut self, frames: Vec<Image>) -> Vec<Image> {
         let n = frames.len();
         let tx = self.tx.as_ref().expect("session already shut down");
         for (i, f) in frames.into_iter().enumerate() {
-            tx.send((i, f)).expect("worker pool died");
+            tx.send(Task::Frame(i, f)).expect("worker pool died");
         }
         let mut out: Vec<Option<Image>> = (0..n).map(|_| None).collect();
         let mut first_err: Option<(usize, String)> = None;
         for _ in 0..n {
-            let (i, res) = self.rx_out.recv().expect("worker pool died");
+            let (i, res) = match self.rx_out.recv().expect("worker pool died") {
+                Reply::Frame(i, res) => (i, res),
+                Reply::Shard(..) => unreachable!("shard reply during a per-frame batch"),
+            };
             match res {
                 Ok(img) => out[i] = Some(img),
                 Err(e) => {
@@ -271,6 +370,108 @@ impl NetworkSession {
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
+
+    /// The per-shard schedule: frames run in order, each layer striped
+    /// across the pool on `grid`.
+    fn run_batch_sharded(&mut self, frames: Vec<Image>, grid: ShardGrid) -> Vec<Image> {
+        frames
+            .into_iter()
+            .enumerate()
+            .map(|(i, f)| self.run_frame_sharded(i, f, grid))
+            .collect()
+    }
+
+    /// Carry one frame through every layer, fanning each layer's shards
+    /// out across the pool: raster pack (shared, caller-side scratch) →
+    /// shard plans → pool fan-out → wide stitch reduction → final α/β →
+    /// ReLU / max-pool. Identical numerics to the per-frame path.
+    fn run_frame_sharded(&mut self, fidx: usize, frame: Image, grid: ShardGrid) -> Image {
+        let layers = Arc::clone(&self.layers);
+        let mut acc = std::mem::take(&mut self.shard_acc);
+        let mut x = Arc::new(frame);
+        for (li, layer) in layers.iter().enumerate() {
+            let spec = &layer.spec;
+            assert_eq!(
+                x.c, spec.kernels.n_in,
+                "layer {li}: frame has {} channels, kernels expect {}",
+                x.c, spec.kernels.n_in
+            );
+            let n_out = spec.kernels.n_out;
+            check_plan_geometry(&self.cfg, spec.k, spec.zero_pad, x.h);
+            let (out_h, out_w) = if spec.zero_pad {
+                (x.h, x.w)
+            } else {
+                (x.h - spec.k + 1, x.w - spec.k + 1)
+            };
+            // Pack this layer's activations once into the caller-side
+            // reusable scratch; every shard reads it through the Arc.
+            // Packing happens *in place* so a panic mid-pack (e.g. the
+            // Q2.9 range debug_assert) leaves the scratch owned by the
+            // session instead of dropped with the unwind.
+            let raster = self.engine.wants_raster().then(|| {
+                let r = self.shard_raster.get_or_insert_with(BitplaneRaster::new);
+                r.pack(&x, spec.k, spec.zero_pad);
+                Arc::new(std::mem::take(r))
+            });
+            let shards = plan_layer_shards(grid, out_h, n_out);
+            let sl = Arc::new(ShardLayer {
+                k: spec.k,
+                zero_pad: spec.zero_pad,
+                input: Arc::clone(&x),
+                kernels: Arc::clone(&spec.kernels),
+                packed: layer.packed.clone(),
+                raster: raster.clone(),
+                scale_bias: Arc::clone(&spec.scale_bias),
+            });
+            let tx = self.tx.as_ref().expect("session already shut down");
+            for s in &shards {
+                let plans = shard_block_plans(&self.cfg, spec.k, spec.zero_pad, x.c, x.h, s);
+                tx.send(Task::Shard { shard: s.index, plans, layer: Arc::clone(&sl) })
+                    .expect("worker pool died");
+            }
+            acc.clear();
+            acc.resize(n_out * out_h * out_w, 0);
+            let mut single_in_block = true;
+            let mut first_err: Option<String> = None;
+            for _ in 0..shards.len() {
+                match self.rx_out.recv().expect("worker pool died") {
+                    Reply::Shard(_, Ok(results)) => {
+                        for (plan, r) in &results {
+                            if plan.in_blocks > 1 {
+                                single_in_block = false;
+                            }
+                            reduce_block(
+                                &mut acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output,
+                            );
+                        }
+                    }
+                    Reply::Shard(s, Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(format!("shard {s}: {e}"));
+                        }
+                    }
+                    Reply::Frame(..) => unreachable!("frame reply during a sharded layer"),
+                }
+            }
+            // Reclaim the raster scratch: workers drop their ShardLayer
+            // Arc before replying, so after the last reply the caller's
+            // `sl` is the only owner and the unwraps below are
+            // deterministic.
+            drop(sl);
+            if let Some(arc) = raster {
+                if let Ok(r) = Arc::try_unwrap(arc) {
+                    self.shard_raster = Some(r);
+                }
+            }
+            if let Some(e) = first_err {
+                self.shard_acc = acc;
+                panic!("frame {fidx}, sharded layer {li} failed in a session worker: {e}");
+            }
+            x = Arc::new(finalize_layer(spec, &acc, single_in_block, out_h, out_w));
+        }
+        self.shard_acc = acc;
+        Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone())
+    }
 }
 
 impl Drop for NetworkSession {
@@ -280,6 +481,70 @@ impl Drop for NetworkSession {
         self.tx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// One pool worker: owns an engine plus per-frame scratch, serves both
+/// frame and shard tasks until the session closes the task channel.
+fn worker_loop(
+    cfg: ChipConfig,
+    kind: EngineKind,
+    rx: &Mutex<Receiver<Task>>,
+    tx_out: &Sender<Reply>,
+    layers: &[SessionLayer],
+) {
+    let mut engine = kind.build(cfg);
+    let mut acc: Vec<i64> = Vec::new();
+    // Per-worker raster scratch for the per-frame schedule, repacked
+    // once per (frame, layer) and reused across frames — steady-state
+    // serving of same-geometry traffic allocates nothing here. (The
+    // sharded schedule shares one caller-side raster instead.)
+    let mut raster = BitplaneRaster::new();
+    loop {
+        // Take the next task; holding the lock while idle is fine —
+        // exactly one waiter is handed each task.
+        let task = rx.lock().unwrap().recv();
+        let task = match task {
+            Ok(t) => t,
+            Err(_) => break, // session dropped
+        };
+        // A panic (bad frame geometry, engine bug) must reach the batch
+        // as an error — a silently dead worker would leave run_batch
+        // waiting forever on the task's reply.
+        match task {
+            Task::Frame(idx, frame) => {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_frame_inner(&cfg, &mut *engine, layers, frame, &mut acc, &mut raster)
+                }))
+                .map_err(panic_message);
+                if out.is_err() {
+                    // Engine/scratch state may be mid-frame garbage.
+                    engine = kind.build(cfg);
+                    acc = Vec::new();
+                    raster = BitplaneRaster::new();
+                }
+                if tx_out.send(Reply::Frame(idx, out)).is_err() {
+                    break;
+                }
+            }
+            Task::Shard { shard, plans, layer } => {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let data = layer.as_layer_data();
+                    plans.iter().map(|p| (*p, engine.run_plan(&data, p))).collect::<Vec<_>>()
+                }))
+                .map_err(panic_message);
+                // Drop the shared-layer Arc *before* replying: the
+                // coordinator reclaims the raster scratch via
+                // Arc::try_unwrap once the last reply arrives.
+                drop(layer);
+                if out.is_err() {
+                    engine = kind.build(cfg);
+                }
+                if tx_out.send(Reply::Shard(shard, out)).is_err() {
+                    break;
+                }
+            }
         }
     }
 }
@@ -305,12 +570,14 @@ fn run_frame_inner(
             x.c, spec.kernels.n_in
         );
         let n_out = spec.kernels.n_out;
+        // Plan first: plan_layer's geometry guard fires before the
+        // output shape math can underflow (valid-mode h < k).
+        let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
         let (out_h, out_w) = if spec.zero_pad {
             (x.h, x.w)
         } else {
             (x.h - spec.k + 1, x.w - spec.k + 1)
         };
-        let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
         // Pack this layer's activations once into the worker's reusable
         // raster scratch; every block of the layer then slices windows
         // out of it by shifts.
@@ -337,17 +604,37 @@ fn run_frame_inner(
             }
             reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
         }
-        let mut y =
-            finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w);
-        if spec.relu {
-            y.data.iter_mut().for_each(|v| *v = (*v).max(0));
-        }
-        if spec.maxpool2 && y.h >= 2 && y.w >= 2 {
-            y = maxpool2(&y);
-        }
-        x = y;
+        x = finalize_layer(spec, acc, single_in_block, out_h, out_w);
     }
     x
+}
+
+/// The shared inter-layer epilogue of both schedules: final α/β over the
+/// reduced wide accumulator, then the layer's quantized ReLU and 2×2
+/// max-pool. One copy keeps the per-frame and per-shard paths
+/// bit-identical by construction.
+fn finalize_layer(
+    spec: &SessionLayerSpec,
+    acc: &[i64],
+    single_in_block: bool,
+    out_h: usize,
+    out_w: usize,
+) -> Image {
+    let mut y = finalize_output(
+        acc,
+        single_in_block,
+        &spec.scale_bias,
+        spec.kernels.n_out,
+        out_h,
+        out_w,
+    );
+    if spec.relu {
+        y.data.iter_mut().for_each(|v| *v = (*v).max(0));
+    }
+    if spec.maxpool2 && y.h >= 2 && y.w >= 2 {
+        y = maxpool2(&y);
+    }
+    y
 }
 
 /// Best-effort panic payload → message.
@@ -443,14 +730,86 @@ mod tests {
         let mut g = Gen::new(5);
         let frame = synthetic_scene(&mut g, 3, 12, 12);
         let want = manual_reference(&specs, &cfg, &frame);
-        for kind in [
-            EngineKind::CycleAccurate,
-            EngineKind::Functional,
-            EngineKind::FunctionalPerWindow,
-        ] {
+        for kind in EngineKind::ALL {
             let mut sess = NetworkSession::new(cfg, kind, 2, specs.clone());
             let got = sess.run_frame(frame.clone());
             assert_eq!(got, want, "engine {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn every_policy_matches_the_per_frame_schedule() {
+        // The hybrid-schedule obligation: per-shard and auto batches are
+        // bit-identical to per-frame, for every engine kind.
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(81);
+        let mut g = Gen::new(17);
+        let frames: Vec<Image> = (0..3).map(|_| synthetic_scene(&mut g, 3, 11, 13)).collect();
+        for kind in EngineKind::ALL {
+            let mut base = NetworkSession::new(cfg, kind, 3, specs.clone());
+            let want = base.run_batch(frames.clone());
+            for policy in [
+                ShardPolicy::PerShard(ShardGrid::striped(3)),
+                ShardPolicy::PerShard(ShardGrid::new(2, 2)),
+                ShardPolicy::Auto,
+            ] {
+                let mut sess =
+                    NetworkSession::with_policy(cfg, kind, 3, policy, specs.clone());
+                let got = sess.run_batch(frames.clone());
+                assert_eq!(got, want, "engine {} policy {policy}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_batch_results_any_policy() {
+        // 1, 2 and 8 workers over the same batch must be bit-identical
+        // under every schedule.
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(82);
+        let mut g = Gen::new(23);
+        let frames: Vec<Image> = (0..4).map(|_| synthetic_scene(&mut g, 3, 10, 12)).collect();
+        let policies = [
+            ShardPolicy::PerFrame,
+            ShardPolicy::PerShard(ShardGrid::striped(4)),
+            ShardPolicy::Auto,
+        ];
+        for policy in policies {
+            let mut base =
+                NetworkSession::with_policy(cfg, EngineKind::Functional, 1, policy, specs.clone());
+            let want = base.run_batch(frames.clone());
+            for workers in [2, 8] {
+                let mut sess = NetworkSession::with_policy(
+                    cfg,
+                    EngineKind::Functional,
+                    workers,
+                    policy,
+                    specs.clone(),
+                );
+                let got = sess.run_batch(frames.clone());
+                assert_eq!(got, want, "workers={workers} policy {policy}");
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_independent_of_frame_submission_order() {
+        // Submitting the same frames permuted returns the same images,
+        // permuted the same way — no cross-frame state, any policy.
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(83);
+        let mut g = Gen::new(29);
+        let frames: Vec<Image> = (0..5).map(|_| synthetic_scene(&mut g, 3, 9, 9)).collect();
+        let perm = [3usize, 0, 4, 2, 1];
+        for policy in [ShardPolicy::PerFrame, ShardPolicy::PerShard(ShardGrid::striped(2))] {
+            let mut sess =
+                NetworkSession::with_policy(cfg, EngineKind::Functional, 3, policy, specs.clone());
+            let fwd = sess.run_batch(frames.clone());
+            let permuted: Vec<Image> = perm.iter().map(|&i| frames[i].clone()).collect();
+            let back = sess.run_batch(permuted);
+            for (slot, &src) in perm.iter().enumerate() {
+                assert_eq!(back[slot], fwd[src], "slot {slot} policy {policy}");
+            }
         }
     }
 
@@ -482,6 +841,37 @@ mod tests {
             assert_eq!(out.len(), 4);
             assert_eq!((out[0].c, out[0].h, out[0].w), (4, 4, 4));
         }
+    }
+
+    #[test]
+    fn sharded_schedule_reuses_the_caller_side_raster_scratch() {
+        // The per-shard analog of the worker scratch-reuse guarantee:
+        // after the first frame warms the caller-side raster to the
+        // largest layer, steady-state frames must not grow it — which
+        // also proves the Arc round-trip reclaims the scratch every
+        // layer instead of silently dropping it.
+        let cfg = ChipConfig::tiny(4);
+        let mut sess = NetworkSession::with_policy(
+            cfg,
+            EngineKind::Functional,
+            3,
+            ShardPolicy::PerShard(ShardGrid::striped(3)),
+            two_layer_specs(84),
+        );
+        let mut g = Gen::new(31);
+        sess.run_frame(synthetic_scene(&mut g, 3, 12, 12));
+        let warm = sess.shard_raster_reallocs();
+        assert!(warm < u64::MAX, "raster scratch lost after warm-up");
+        for _ in 0..3 {
+            let frames: Vec<Image> =
+                (0..2).map(|_| synthetic_scene(&mut g, 3, 12, 12)).collect();
+            sess.run_batch(frames);
+        }
+        assert_eq!(
+            sess.shard_raster_reallocs(),
+            warm,
+            "steady-state sharded frames must not grow the raster scratch"
+        );
     }
 
     #[test]

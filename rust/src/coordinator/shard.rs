@@ -1,0 +1,430 @@
+//! Multi-chip sharded execution: one layer's output feature map split
+//! across a grid of simulated chip instances.
+//!
+//! YodaNN scales throughput by tiling feature maps across chip blocks
+//! (Algorithm 1); its successor *Hyperdrive* (arXiv:1804.00623) runs the
+//! same binary-weight datapath on a systolic grid of chips with border
+//! exchange, and *XNORBIN* (arXiv:1803.05849) leans on feature-map
+//! partitioning to stay inside on-chip memory. This module adds that
+//! intra-frame axis of parallelism on top of the existing per-frame one:
+//!
+//! * [`ShardGrid`] — a `stripes × out_groups` partition of a layer's
+//!   output: horizontal stripes of output rows × groups of output
+//!   channels, each shard one independent chip instance.
+//! * [`plan_layer_shards`] — balanced shard geometry for one layer.
+//! * [`shard_block_plans`] — exactly [`super::blocks::plan_layer`]'s
+//!   block/tile geometry, restricted to one shard. Plans carry
+//!   **layer-global** coordinates, so every engine consumes them against
+//!   the one shared layer raster ([`crate::engine::BitplaneRaster`]) with
+//!   the k-dependent input halo rows resolved by indices — no activation
+//!   is ever copied per shard — and the existing off-chip reduction
+//!   stitches stripes with no coordinate translation.
+//! * [`run_layer_sharded`] — the multi-chip executor: shards fan out
+//!   across a worker pool, partial sums reduce into one wide
+//!   accumulator, and per-shard activity is kept so the power and
+//!   throughput models can price the grid
+//!   ([`super::metrics::sharded_metrics`],
+//!   [`crate::power::MultiChipPower`]).
+//! * [`ShardPolicy`] — how a [`super::NetworkSession`] schedules a batch:
+//!   frames across workers, shards across workers, or an automatic
+//!   hybrid.
+//!
+//! **Bit-identity.** Shard boundaries never change outputs: each output
+//! pixel's per-input-block partial is produced by the same window over
+//! the same rows with the same in-block channel order regardless of
+//! which stripe computes it, and the i64 wide reduction is
+//! order-invariant. `rust/tests/conformance.rs` fuzzes this across the
+//! whole engine × shard matrix.
+
+use super::blocks::{check_plan_geometry, plan_block_range, LayerWorkload};
+use super::executor::{finalize_output, reduce_block, run_plans, ExecOptions, LayerRun};
+use crate::engine::{BitplaneRaster, BlockPlan, ConvEngine, EngineKind, PackedKernels};
+use crate::hw::{ChipConfig, ChipStats};
+
+/// A `stripes × out_groups` shard grid: output rows are split into
+/// `stripes` horizontal stripes and output channels into `out_groups`
+/// groups; every cell is computed by one independent chip instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardGrid {
+    /// Horizontal stripes of output rows.
+    pub stripes: usize,
+    /// Output-channel groups.
+    pub out_groups: usize,
+}
+
+impl ShardGrid {
+    /// A validated grid (both axes ≥ 1).
+    pub fn new(stripes: usize, out_groups: usize) -> ShardGrid {
+        assert!(stripes >= 1 && out_groups >= 1, "shard grid must be at least 1x1");
+        ShardGrid { stripes, out_groups }
+    }
+
+    /// Pure row-striping (`n × 1`), the common case.
+    pub fn striped(stripes: usize) -> ShardGrid {
+        ShardGrid::new(stripes, 1)
+    }
+
+    /// Chip instances in the grid.
+    pub fn chips(&self) -> usize {
+        self.stripes * self.out_groups
+    }
+
+    /// Parse the CLI spelling: `"N"` (stripes only) or `"NxM"`
+    /// (stripes × output-channel groups).
+    pub fn parse(s: &str) -> Option<ShardGrid> {
+        let (a, b) = match s.split_once(['x', 'X']) {
+            Some((a, b)) => (a, b),
+            None => (s, "1"),
+        };
+        let stripes: usize = a.trim().parse().ok()?;
+        let out_groups: usize = b.trim().parse().ok()?;
+        if stripes == 0 || out_groups == 0 {
+            return None;
+        }
+        Some(ShardGrid { stripes, out_groups })
+    }
+}
+
+impl std::fmt::Display for ShardGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Through f.pad so table printers can width-align grids.
+        f.pad(&format!("{}x{}", self.stripes, self.out_groups))
+    }
+}
+
+/// How a [`super::NetworkSession`] schedules a batch of frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Frame-level parallelism only (the historical schedule): each
+    /// worker carries one frame through every layer.
+    PerFrame,
+    /// Intra-frame parallelism: frames run in order, and each layer's
+    /// shards fan out across the worker pool.
+    PerShard(ShardGrid),
+    /// Hybrid: batches with at least one frame per worker run
+    /// [`ShardPolicy::PerFrame`]; smaller batches shard each frame
+    /// across the idle workers (`workers × 1` stripes).
+    Auto,
+}
+
+impl ShardPolicy {
+    /// Parse the CLI spelling: `per-frame`, `auto`, `per-shard:NxM`
+    /// (or a bare grid `NxM`).
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "per-frame" | "frame" => Some(ShardPolicy::PerFrame),
+            "auto" => Some(ShardPolicy::Auto),
+            other => {
+                let g = other.strip_prefix("per-shard:").unwrap_or(other);
+                ShardGrid::parse(g).map(ShardPolicy::PerShard)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ShardPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Through f.pad so table printers can width-align policies.
+        let s = match self {
+            ShardPolicy::PerFrame => "per-frame".to_string(),
+            ShardPolicy::PerShard(g) => format!("per-shard:{g}"),
+            ShardPolicy::Auto => "auto".to_string(),
+        };
+        f.pad(&s)
+    }
+}
+
+/// One shard of a layer: the output-row stripe `row0 .. row0 + rows`
+/// times the output-channel group `out0 .. out0 + out_len`, computed by
+/// one chip instance. Coordinates are layer-global.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShard {
+    /// Shard index in the flattened grid (group-major).
+    pub index: usize,
+    /// First output row of the stripe.
+    pub row0: usize,
+    /// Output rows in the stripe.
+    pub rows: usize,
+    /// First output channel of the group.
+    pub out0: usize,
+    /// Output channels in the group.
+    pub out_len: usize,
+}
+
+/// Partition a layer's `out_h × n_out` output space on `grid`, balanced
+/// to within one row/channel. Axes larger than the space collapse (a
+/// 8-stripe grid over 3 output rows yields 3 stripes), so every returned
+/// shard is non-empty and the union covers the output exactly once.
+pub fn plan_layer_shards(grid: ShardGrid, out_h: usize, n_out: usize) -> Vec<LayerShard> {
+    let stripes = grid.stripes.min(out_h.max(1));
+    let out_groups = grid.out_groups.min(n_out.max(1));
+    let mut shards = Vec::with_capacity(stripes * out_groups);
+    let mut out0 = 0;
+    for g in 0..out_groups {
+        let out_len = n_out / out_groups + usize::from(g < n_out % out_groups);
+        let mut row0 = 0;
+        for s in 0..stripes {
+            let rows = out_h / stripes + usize::from(s < out_h % stripes);
+            if rows > 0 && out_len > 0 {
+                shards.push(LayerShard { index: shards.len(), row0, rows, out0, out_len });
+            }
+            row0 += rows;
+        }
+        out0 += out_len;
+    }
+    shards
+}
+
+/// Plan one shard's chip blocks: [`super::blocks::plan_layer`]'s exact
+/// output-channel blocking and vertical tiling, restricted to the
+/// shard's stripe and channel group. The stripe's first tile re-loads
+/// the `k − 1` halo rows above `row0` (clipped at the image border) —
+/// the same Eq. 9 overlap the intra-chip tiles pay, now crossing chips.
+pub fn shard_block_plans(
+    cfg: &ChipConfig,
+    k: usize,
+    zero_pad: bool,
+    n_in: usize,
+    h: usize,
+    shard: &LayerShard,
+) -> Vec<BlockPlan> {
+    plan_block_range(
+        cfg, k, zero_pad, n_in, h, shard.row0, shard.rows, shard.out0, shard.out_len,
+    )
+}
+
+/// Activity of one shard (one chip instance) in a sharded layer run.
+#[derive(Debug, Clone)]
+pub struct ShardActivity {
+    /// The shard's geometry.
+    pub shard: LayerShard,
+    /// Merged activity of the shard's blocks (this chip's ledger).
+    pub stats: ChipStats,
+    /// Blocks the shard executed.
+    pub blocks: usize,
+}
+
+/// Result of a multi-chip sharded layer run: the stitched layer output
+/// plus the per-chip activity the power/throughput models aggregate.
+#[derive(Debug, Clone)]
+pub struct ShardedLayerRun {
+    /// The stitched layer result (stats merged over every shard — the
+    /// total activity of the grid; wall-clock parallelism is priced by
+    /// [`super::metrics::sharded_metrics`] over [`Self::per_shard`]).
+    pub run: LayerRun,
+    /// Per-shard activity, indexed like [`plan_layer_shards`]'s output.
+    pub per_shard: Vec<ShardActivity>,
+    /// The grid that was executed.
+    pub grid: ShardGrid,
+}
+
+/// Run one convolution layer sharded on `grid`: every shard's blocks fan
+/// out across `opts.workers` threads, all consuming the one shared
+/// kernel pack + layer raster; the host stitches stripes through the
+/// same wide-precision reduction the unsharded executor uses. Outputs
+/// are **bit-identical** to [`super::executor::run_layer_engine`] for
+/// every engine kind and every grid.
+pub fn run_layer_sharded(
+    wl: &LayerWorkload,
+    cfg: &ChipConfig,
+    opts: ExecOptions,
+    kind: EngineKind,
+    grid: ShardGrid,
+) -> ShardedLayerRun {
+    let n_out = wl.kernels.n_out;
+    // Guard first: the output shape math below underflows on impossible
+    // layers (valid-mode h < k) before any per-shard planning would.
+    check_plan_geometry(cfg, wl.k, wl.zero_pad, wl.input.h);
+    let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
+    let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
+    let shards = plan_layer_shards(grid, out_h, n_out);
+    let mut shard_of: Vec<usize> = Vec::new();
+    let mut plans: Vec<BlockPlan> = Vec::new();
+    for s in &shards {
+        for p in shard_block_plans(cfg, wl.k, wl.zero_pad, wl.input.c, wl.input.h, s) {
+            shard_of.push(s.index);
+            plans.push(p);
+        }
+    }
+    let n_jobs = plans.len();
+
+    // Shared read-only forms, packed once per layer exactly like
+    // `run_layer_with`: kernel words and the layer-resident raster.
+    let packed = kind.wants_packed().then(|| PackedKernels::pack(&wl.kernels));
+    let raster = kind.wants_raster().then(|| {
+        let mut r = BitplaneRaster::new();
+        r.pack(&wl.input, wl.k, wl.zero_pad);
+        r
+    });
+    let mut data = wl.as_layer_data(packed.as_ref());
+    data.raster = raster.as_ref();
+
+    // The executor's worker pool returns results in `plans` order, so
+    // `shard_of[i]` re-associates `results[i]` with its chip.
+    let make = || kind.build(*cfg);
+    let mut engine0: Box<dyn ConvEngine> = make();
+    let results = run_plans(&data, plans, opts, &make, &mut engine0);
+
+    let mut acc = vec![0i64; n_out * out_h * out_w];
+    let mut per_shard: Vec<ShardActivity> = shards
+        .iter()
+        .map(|s| ShardActivity { shard: *s, stats: ChipStats::default(), blocks: 0 })
+        .collect();
+    let mut stats = ChipStats::default();
+    let mut offchip_adds = 0u64;
+    let mut single_in_block = true;
+    for (sidx, (plan, result)) in shard_of.iter().zip(results.iter()) {
+        stats.merge(&result.stats);
+        per_shard[*sidx].stats.merge(&result.stats);
+        per_shard[*sidx].blocks += 1;
+        if plan.in_blocks > 1 {
+            single_in_block = false;
+        }
+        offchip_adds +=
+            reduce_block(&mut acc, wl.zero_pad, wl.k, out_h, out_w, plan, &result.output);
+    }
+    let output = finalize_output(&acc, single_in_block, &wl.scale_bias, n_out, out_h, out_w);
+    ShardedLayerRun {
+        run: LayerRun { output, stats, blocks: n_jobs, offchip_adds },
+        per_shard,
+        grid,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_layer_engine;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, BinaryKernels, ScaleBias};
+
+    fn wl(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> LayerWorkload {
+        let mut g = Gen::new(seed);
+        LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(&mut g, n_in, h, w, 0.05),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(&mut g, n_out),
+        }
+    }
+
+    #[test]
+    fn grid_parses_cli_spellings() {
+        assert_eq!(ShardGrid::parse("4"), Some(ShardGrid::striped(4)));
+        assert_eq!(ShardGrid::parse("2x3"), Some(ShardGrid::new(2, 3)));
+        assert_eq!(ShardGrid::parse("2X3"), Some(ShardGrid::new(2, 3)));
+        assert_eq!(ShardGrid::parse("0x2"), None);
+        assert_eq!(ShardGrid::parse("2x"), None);
+        assert_eq!(ShardGrid::parse("nope"), None);
+        assert_eq!(ShardGrid::new(2, 3).chips(), 6);
+        assert_eq!(ShardGrid::new(2, 3).to_string(), "2x3");
+    }
+
+    #[test]
+    fn policy_parses_cli_spellings() {
+        assert_eq!(ShardPolicy::parse("per-frame"), Some(ShardPolicy::PerFrame));
+        assert_eq!(ShardPolicy::parse("auto"), Some(ShardPolicy::Auto));
+        assert_eq!(
+            ShardPolicy::parse("per-shard:2x2"),
+            Some(ShardPolicy::PerShard(ShardGrid::new(2, 2)))
+        );
+        assert_eq!(
+            ShardPolicy::parse("4"),
+            Some(ShardPolicy::PerShard(ShardGrid::striped(4)))
+        );
+        assert_eq!(ShardPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn shards_tile_the_output_space_exactly_once() {
+        for (grid, out_h, n_out) in [
+            (ShardGrid::new(3, 2), 17, 7),
+            (ShardGrid::new(1, 1), 5, 3),
+            (ShardGrid::new(8, 3), 3, 2), // grid larger than the space
+            (ShardGrid::new(2, 5), 10, 4),
+        ] {
+            let shards = plan_layer_shards(grid, out_h, n_out);
+            let mut cover = vec![0u32; out_h * n_out];
+            for s in &shards {
+                assert!(s.rows > 0 && s.out_len > 0, "empty shard emitted");
+                for o in s.out0..s.out0 + s.out_len {
+                    for y in s.row0..s.row0 + s.rows {
+                        cover[o * out_h + y] += 1;
+                    }
+                }
+            }
+            assert!(cover.iter().all(|&c| c == 1), "grid {grid} over {out_h}x{n_out}");
+            assert!(shards.len() <= grid.chips());
+            let max = shards.iter().map(|s| s.rows).max().unwrap();
+            let min = shards.iter().map(|s| s.rows).min().unwrap();
+            assert!(max - min <= 1, "stripes unbalanced: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn shard_plans_match_unsharded_plans_on_the_trivial_grid() {
+        let cfg = ChipConfig::tiny(4);
+        let (k, n_in, n_out, h) = (5, 9, 10, 30);
+        let whole = LayerShard { index: 0, row0: 0, rows: h, out0: 0, out_len: n_out };
+        let sharded = shard_block_plans(&cfg, k, true, n_in, h, &whole);
+        let unsharded = crate::coordinator::blocks::plan_layer(&cfg, k, true, n_in, n_out, h);
+        assert_eq!(sharded, unsharded);
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_unsharded_every_engine() {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 4 * 12; // h_max = 12 → intra-shard tiling too
+        let w = wl(3, 6, 9, 21, 8, 0xA1);
+        for kind in EngineKind::ALL {
+            let want = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, kind);
+            for grid in [ShardGrid::striped(2), ShardGrid::new(3, 2), ShardGrid::new(5, 3)] {
+                let got = run_layer_sharded(&w, &cfg, ExecOptions { workers: 3 }, kind, grid);
+                assert_eq!(
+                    got.run.output,
+                    want.output,
+                    "engine {} grid {grid}",
+                    kind.name()
+                );
+                assert_eq!(got.run.offchip_adds, want.offchip_adds);
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_activity_sums_to_the_merged_ledger() {
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(5, 4, 6, 18, 9, 0xB2);
+        let grid = ShardGrid::new(3, 2);
+        let run = run_layer_sharded(&w, &cfg, ExecOptions { workers: 2 },
+            EngineKind::CycleAccurate, grid);
+        assert_eq!(run.per_shard.len(), 6);
+        let block_sum: usize = run.per_shard.iter().map(|s| s.blocks).sum();
+        assert_eq!(block_sum, run.run.blocks);
+        let cycle_sum: u64 = run.per_shard.iter().map(|s| s.stats.cycles.total()).sum();
+        assert_eq!(cycle_sum, run.run.stats.cycles.total());
+        let ops_sum: u64 = run.per_shard.iter().map(|s| s.stats.useful_ops).sum();
+        assert_eq!(ops_sum, run.run.stats.useful_ops);
+        assert!(run.per_shard.iter().all(|s| s.stats.cycles.total() > 0));
+    }
+
+    #[test]
+    fn striping_pays_the_halo_reload_penalty() {
+        // More stripes ⇒ more k−1-row reloads ⇒ more total chip cycles —
+        // the Eq. 9 cost the metrics aggregation must price, not hide.
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(7, 2, 3, 24, 8, 0xC3);
+        let solo = run_layer_sharded(&w, &cfg, ExecOptions { workers: 1 },
+            EngineKind::CycleAccurate, ShardGrid::striped(1));
+        let quad = run_layer_sharded(&w, &cfg, ExecOptions { workers: 4 },
+            EngineKind::CycleAccurate, ShardGrid::striped(4));
+        assert_eq!(solo.run.output, quad.run.output);
+        assert!(
+            quad.run.stats.cycles.total() > solo.run.stats.cycles.total(),
+            "4-stripe grid must re-load halo rows: {} vs {}",
+            quad.run.stats.cycles.total(),
+            solo.run.stats.cycles.total()
+        );
+    }
+}

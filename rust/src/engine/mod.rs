@@ -191,6 +191,31 @@ pub trait ConvEngine {
     }
 }
 
+/// Forwarding impl so a runtime-selected boxed engine satisfies generic
+/// `E: ConvEngine` bounds (e.g. the executor's worker pool). Dispatch
+/// goes through the inner trait object — one virtual call, no recursion.
+impl ConvEngine for Box<dyn ConvEngine> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn wants_packed(&self) -> bool {
+        (**self).wants_packed()
+    }
+
+    fn wants_raster(&self) -> bool {
+        (**self).wants_raster()
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        (**self).run_block(job)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        (**self).run_plan(layer, plan)
+    }
+}
+
 /// Materialize a planned block into an owned [`BlockJob`]: slice the
 /// image tile, the kernel bits and the scale/bias exactly as the chip
 /// expects them. Intermediate (non-final) input blocks get identity
@@ -241,6 +266,25 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Every engine kind, in report order — one axis of the
+    /// engine × shard conformance matrix (`rust/tests/conformance.rs`).
+    pub const ALL: [EngineKind; 3] =
+        [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow];
+
+    /// Whether engines of this kind consume [`LayerData::packed`] — the
+    /// static mirror of [`ConvEngine::wants_packed`], for callers that
+    /// pack shared state before any engine instance exists (sessions,
+    /// the shard executor).
+    pub fn wants_packed(self) -> bool {
+        matches!(self, EngineKind::Functional | EngineKind::FunctionalPerWindow)
+    }
+
+    /// Whether engines of this kind consume [`LayerData::raster`] — the
+    /// static mirror of [`ConvEngine::wants_raster`].
+    pub fn wants_raster(self) -> bool {
+        matches!(self, EngineKind::Functional)
+    }
+
     /// Engine name as printed in reports.
     pub fn name(self) -> &'static str {
         match self {
@@ -290,6 +334,18 @@ mod tests {
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Functional.name(), "functional");
         assert_eq!(EngineKind::FunctionalPerWindow.name(), "functional-pr1");
+    }
+
+    #[test]
+    fn static_wants_mirror_the_built_engines() {
+        // The EngineKind predicates must never drift from what the
+        // engines they build actually consume.
+        let cfg = ChipConfig::tiny(4);
+        for kind in EngineKind::ALL {
+            let e = kind.build(cfg);
+            assert_eq!(kind.wants_packed(), e.wants_packed(), "{}", kind.name());
+            assert_eq!(kind.wants_raster(), e.wants_raster(), "{}", kind.name());
+        }
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!   and the paper's throughput-efficiency analytics (Eqs. 6–11).
 //! * [`coordinator`] — the L3 off-chip orchestration: channel blocking,
 //!   vertical image tiling, streaming, off-chip partial-sum accumulation,
-//!   and metric roll-ups for Tables III–V.
+//!   multi-chip sharded execution (`ShardGrid` stripes × channel groups
+//!   resolved against one shared layer raster, `ShardPolicy`-scheduled
+//!   batched sessions), and metric roll-ups for Tables III–V.
 //! * [`runtime`] — PJRT executor for the JAX/Pallas golden model that
 //!   `make artifacts` AOT-lowers to `artifacts/*.hlo.txt`. Gated behind the
 //!   `golden` cargo feature (it needs the offline `xla` crate closure); the

@@ -15,10 +15,13 @@
 
 use std::time::Instant;
 
+use yodann::bench::{merge_json, JsonRecord};
 use yodann::cli::Args;
 #[cfg(feature = "golden")]
 use yodann::coordinator::check_block;
-use yodann::coordinator::{metrics::sim_metrics, NetworkSession, SessionLayerSpec};
+use yodann::coordinator::{
+    metrics::sim_metrics, NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy,
+};
 use yodann::engine::EngineKind;
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner};
@@ -29,7 +32,7 @@ use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, Scal
 
 const VALUE_KEYS: &[&str] = &[
     "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
-    "engine", "scale",
+    "engine", "scale", "shards",
 ];
 
 fn main() {
@@ -80,10 +83,16 @@ fn print_help() {
          \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
          \x20 throughput [--net scene-labeling] [--frames 8]\n\
          \x20            [--engine both|all|functional|functional-pr1|cycle]\n\
-         \x20            [--workers N] [--scale 0.25] [--seed 42]\n\
+         \x20            [--workers N] [--scale 0.25] [--seed 42] [--shards NxM]\n\
          \x20                             batch synthetic frames through a NetworkSession\n\
          \x20                             and report frames/s per engine (A/B + equality;\n\
-         \x20                             'all' includes the PR-1 per-window baseline)\n\
+         \x20                             'all' includes the PR-1 per-window baseline).\n\
+         \x20                             --shards N (row stripes) or NxM (x output-channel\n\
+         \x20                             groups) also runs every engine on the multi-chip\n\
+         \x20                             per-shard schedule, checks bit-identity against\n\
+         \x20                             the per-frame run, prints the grid's power\n\
+         \x20                             envelope + halo exchange, and merges\n\
+         \x20                             shard-scaling records into BENCH_engines.json\n\
          \x20 networks                    list the networks of Tables III–V"
     );
 }
@@ -368,7 +377,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 /// engines: the end-to-end throughput A/B. With more than one engine
 /// selected (`--engine both`, or `--engine all` which adds the PR-1
 /// per-window functional baseline) every engine's outputs are also
-/// checked for bit-identity against the first.
+/// checked for bit-identity against the first. With `--shards NxM`
+/// every engine additionally runs the multi-chip per-shard schedule on
+/// that grid, bit-identity against the per-frame run is enforced, and
+/// the measured shard-scaling records are merged into
+/// `BENCH_engines.json`.
 fn cmd_throughput(args: &Args) -> Result<(), String> {
     let id = args.get("net", "scene-labeling");
     let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
@@ -382,6 +395,13 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         return Err("--scale must be positive".into());
     }
     let seed = args.get_u64("seed", 42)?;
+    let shards: Option<ShardGrid> = match args.options.get("shards") {
+        None => None,
+        Some(s) => Some(
+            ShardGrid::parse(s)
+                .ok_or_else(|| format!("--shards '{s}' is not N or NxM (stripes x groups)"))?,
+        ),
+    };
     let kinds: Vec<EngineKind> = match args.get("engine", "both") {
         "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
         // The raster-refactor A/B: new functional vs the PR-1 per-window
@@ -414,7 +434,41 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         workers
     );
     let cfg = ChipConfig::yodann();
+    // Clamp the requested grid to layer 1's output space: axes beyond
+    // it can never materialize as chips, and the printed envelope plus
+    // the merged shard-scaling records must describe the grid that
+    // actually runs.
+    let out_h0 = if specs[0].zero_pad { h } else { h + 1 - specs[0].k };
+    let shards = shards.map(|g| {
+        let eff = ShardGrid::new(
+            g.stripes.min(out_h0),
+            g.out_groups.min(specs[0].kernels.n_out),
+        );
+        if eff != g {
+            println!(
+                "  note: --shards {g} clamped to {eff} (layer 1 outputs {out_h0} rows x {} \
+                 channels)",
+                specs[0].kernels.n_out
+            );
+        }
+        eff
+    });
+    if let Some(grid) = shards {
+        // Analytic grid envelope: every chip burns core + pads
+        // concurrently, and stripe neighbours re-exchange the k−1 halo
+        // rows of the first layer's input every frame.
+        let envelope =
+            yodann::power::MultiChipPower::at(ArchId::Bin32Multi, 0.6, grid.chips(), specs[0].k);
+        let halo = yodann::power::halo_exchange_words(grid.stripes, specs[0].k, w, c0);
+        println!(
+            "  shard grid {grid}: {} chips, {:.1} mW device envelope @0.6 V, \
+             {halo} halo words/frame (layer 1)",
+            envelope.chips,
+            envelope.total_w() * 1e3
+        );
+    }
     let mut runs: Vec<(EngineKind, Vec<Image>, f64)> = Vec::new();
+    let mut shard_records: Vec<JsonRecord> = Vec::new();
     for kind in kinds {
         let mut sess = NetworkSession::new(cfg, kind, workers, specs.clone());
         let t0 = Instant::now();
@@ -426,6 +480,46 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             dt,
             n_frames as f64 / dt
         );
+        if let Some(grid) = shards {
+            let mut sh = NetworkSession::with_policy(
+                cfg,
+                kind,
+                workers,
+                ShardPolicy::PerShard(grid),
+                specs.clone(),
+            );
+            let t0 = Instant::now();
+            let out_sh = sh.run_batch(frames.clone());
+            let dt_sh = t0.elapsed().as_secs_f64();
+            if out_sh != out {
+                return Err(format!(
+                    "sharded outputs diverge from per-frame on {} — this is a bug",
+                    kind.name()
+                ));
+            }
+            println!(
+                "  {:<16} {:>8.3} s  ->  {:>8.2} frames/s  (per-shard:{grid}, \
+                 bit-identical, {:.2}x vs per-frame)",
+                kind.name(),
+                dt_sh,
+                n_frames as f64 / dt_sh,
+                dt / dt_sh
+            );
+            shard_records.push(JsonRecord {
+                name: format!("shard-scaling/cli/{}/per-frame/batch{n_frames}", kind.name()),
+                ns_per_iter: dt * 1e9,
+                frames_per_s: Some(n_frames as f64 / dt),
+            });
+            shard_records.push(JsonRecord {
+                name: format!("shard-scaling/cli/{}/{grid}/batch{n_frames}", kind.name()),
+                ns_per_iter: dt_sh * 1e9,
+                frames_per_s: Some(n_frames as f64 / dt_sh),
+            });
+            shard_records.push(JsonRecord::ratio(
+                &format!("shard-scaling/cli/{}/speedup-{grid}", kind.name()),
+                dt / dt_sh,
+            ));
+        }
         runs.push((kind, out, dt));
     }
     if runs.len() > 1 {
@@ -441,6 +535,13 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             println!("  {} speedup over {}: {:.1}x", ka.name(), kb.name(), tb / ta);
         }
         println!("  outputs bit-identical across engines");
+    }
+    if !shard_records.is_empty() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+        let total = merge_json(path, "engines", &shard_records)
+            .map_err(|e| format!("merging shard-scaling records into {path}: {e}"))?;
+        println!("  merged {} shard-scaling records into {path} ({total} total)",
+            shard_records.len());
     }
     Ok(())
 }

@@ -14,6 +14,9 @@
 //! * [`io`] — the pad power model the paper itself uses (328 mW @ 400 MHz,
 //!   scaled with frequency; extra term for the second output stream and for
 //!   12× weight I/O in the fixed-point baseline).
+//! * [`multichip`] — aggregate power envelope and halo border-exchange
+//!   accounting for sharded multi-chip grids
+//!   ([`crate::coordinator::shard`]).
 //! * [`area`] — per-unit gate-equivalent areas (Fig. 6, floorplan §IV-B).
 //! * [`calib`] — every constant, each annotated with the table/figure it
 //!   anchors to.
@@ -22,9 +25,11 @@ pub mod area;
 pub mod calib;
 pub mod core;
 pub mod io;
+pub mod multichip;
 pub mod vf;
 
 pub use self::core::{ArchId, CorePowerModel, PowerBreakdown};
 pub use area::{area_breakdown, metric_area_mge, AreaBreakdown};
 pub use io::IoPowerModel;
+pub use multichip::{halo_exchange_words, MultiChipPower};
 pub use vf::VfCurve;

@@ -1,0 +1,100 @@
+//! Multi-chip power envelope and border-exchange accounting for sharded
+//! execution (the Hyperdrive scaling axis, arXiv:1804.00623).
+//!
+//! A [`crate::coordinator::ShardGrid`] runs one frame on several chip
+//! instances at once. Two costs the single-chip models do not see:
+//!
+//! * the **aggregate power envelope** — every chip burns its own core
+//!   and pad power concurrently, so the device budget multiplies with
+//!   the grid even when per-chip efficiency is unchanged;
+//! * the **border exchange** — vertically adjacent stripes both need the
+//!   `k − 1` halo rows at their boundary (the Eq. 9 tiling overlap, now
+//!   crossing chips), so those activation words are transferred twice.
+//!
+//! Wall-clock/energy aggregation of the *simulated* activity lives in
+//! [`crate::coordinator::metrics::sharded_metrics`]; this module prices
+//! the analytic envelope the same way the paper's Table I prices one
+//! chip.
+
+use super::{ArchId, CorePowerModel, IoPowerModel};
+
+/// Aggregate power envelope of a grid of identical chips at one
+/// operating corner, all running kernel size `k` at full utilization.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiChipPower {
+    /// Chip instances in the grid.
+    pub chips: usize,
+    /// Core power of one chip (W).
+    pub core_w_each: f64,
+    /// Pad power of one chip (W).
+    pub io_w_each: f64,
+}
+
+impl MultiChipPower {
+    /// Price a `chips`-instance grid of `arch` at supply `v`, kernel
+    /// size `k` (the architecture's own kernel-mode capability applies,
+    /// exactly as for one chip).
+    pub fn at(arch: ArchId, v: f64, chips: usize, k: usize) -> MultiChipPower {
+        assert!(chips >= 1, "a grid needs at least one chip");
+        let core = CorePowerModel::new(arch);
+        let io =
+            if arch.binary_weights() { IoPowerModel::binary() } else { IoPowerModel::q29() };
+        MultiChipPower {
+            chips,
+            core_w_each: core.p_core(v, k),
+            io_w_each: io.power_for_kernel(core.freq(v), k, arch.multi_kernel()),
+        }
+    }
+
+    /// Total device power of the grid (W): every chip's core + pads.
+    pub fn total_w(&self) -> f64 {
+        self.chips as f64 * (self.core_w_each + self.io_w_each)
+    }
+}
+
+/// Activation words crossed between vertically adjacent stripes per
+/// layer: each of the `stripes − 1` interior borders re-transfers the
+/// `k − 1` shared halo rows (`w` pixels × `n_in` channels each) — zero
+/// for an unsharded layer, growing linearly with the stripe count. This
+/// is the I/O price of intra-frame scaling that Eq. 9 charges intra-chip
+/// tiling.
+pub fn halo_exchange_words(stripes: usize, k: usize, w: usize, n_in: usize) -> u64 {
+    if stripes <= 1 || k <= 1 {
+        return 0;
+    }
+    ((stripes - 1) * (k - 1) * w * n_in) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_power_is_linear_in_chips() {
+        let one = MultiChipPower::at(ArchId::Bin32Multi, 0.6, 1, 7);
+        let four = MultiChipPower::at(ArchId::Bin32Multi, 0.6, 4, 7);
+        assert_eq!(four.chips, 4);
+        assert!((four.total_w() / one.total_w() - 4.0).abs() < 1e-9);
+        assert!(one.core_w_each > 0.0 && one.io_w_each > 0.0);
+    }
+
+    #[test]
+    fn single_chip_envelope_matches_the_single_chip_models() {
+        let p = MultiChipPower::at(ArchId::Bin32Multi, 1.2, 1, 7);
+        let core = CorePowerModel::new(ArchId::Bin32Multi);
+        assert!((p.core_w_each - core.p_core(1.2, 7)).abs() < 1e-12);
+        let io = IoPowerModel::binary();
+        assert!(
+            (p.io_w_each - io.power_for_kernel(core.freq(1.2), 7, true)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn halo_exchange_follows_the_stripe_count() {
+        assert_eq!(halo_exchange_words(1, 7, 320, 3), 0);
+        assert_eq!(halo_exchange_words(2, 7, 320, 3), 6 * 320 * 3);
+        assert_eq!(halo_exchange_words(4, 7, 320, 3), 3 * 6 * 320 * 3);
+        assert_eq!(halo_exchange_words(4, 1, 320, 3), 0); // 1x1 needs no halo
+        assert_eq!(halo_exchange_words(3, 3, 16, 8), 2 * 2 * 16 * 8);
+    }
+}

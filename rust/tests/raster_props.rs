@@ -6,12 +6,12 @@
 //! pins the steady-state scratch-reuse guarantee the batched serving
 //! path relies on.
 
-use yodann::coordinator::{run_layer_engine, ExecOptions, LayerWorkload};
+use yodann::coordinator::{decompose, run_layer_engine, ExecOptions, LayerWorkload};
 use yodann::engine::raster::{BitplaneRaster, OFFSET, PLANES};
-use yodann::engine::{ConvEngine, EngineKind, Functional};
+use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::testkit::{property, Gen};
-use yodann::workload::{random_image, BinaryKernels, Image, ScaleBias};
+use yodann::workload::{random_image, reference_conv, BinaryKernels, Image, ScaleBias};
 
 /// The PR-1 inner loop as the oracle: pack one window's 12 offset-binary
 /// plane words (and Σu) straight from the image, bit by bit.
@@ -141,6 +141,107 @@ fn session_style_frame_loop_has_zero_steady_state_allocs() {
         }
     }
     assert_eq!(raster.reallocs(), warm, "steady-state frames must not allocate");
+}
+
+#[test]
+fn k5_k7_tiles_thinner_than_the_halo_stay_correct() {
+    // The k ≤ 3 analog was pinned by PR 2's
+    // `thin_tiles_near_the_top_stay_correct`; this is the k = 5/7 audit:
+    // h_max barely ≥ k forces 1-row tiles whose interior `row_base`
+    // sits below the halo offset *and* whose bottoms clip at the image
+    // edge — on thin (h < k) and regular images, every engine, against
+    // the software reference.
+    for (k, h_max, h) in
+        [(5usize, 5usize, 3usize), (5, 6, 17), (7, 7, 4), (7, 8, 23), (7, 7, 20)]
+    {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = h_max * 4;
+        let mut g = Gen::new(0x7714 ^ (k * 100 + h) as u64);
+        let wl = LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(&mut g, 3, h, 8, 0.4),
+            kernels: BinaryKernels::random(&mut g, 5, 3, k),
+            scale_bias: ScaleBias::random(&mut g, 5),
+        };
+        let want = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+        for kind in EngineKind::ALL {
+            let run = run_layer_engine(&wl, &cfg, ExecOptions { workers: 2 }, kind);
+            assert_eq!(
+                run.output,
+                want,
+                "k={k} h_max={h_max} h={h} engine {}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn thin_tile_jobs_materialize_identically_for_k5_k7() {
+    // The materialized front door (`materialize_block`, what the cycle
+    // engine consumes) and the functional engine's `pack_view` fallback
+    // must agree tile by tile on 1-row thin tiles — and no tile may
+    // exceed the chip's image-memory capacity.
+    for k in [5usize, 7] {
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = k * 4; // h_max = k → 1-row tiles
+        let mut g = Gen::new(0xAB0 + k as u64);
+        let wl = LayerWorkload {
+            k,
+            zero_pad: true,
+            input: random_image(&mut g, 2, 3 * k, 7, 0.3),
+            kernels: BinaryKernels::random(&mut g, 3, 2, k),
+            scale_bias: ScaleBias::random(&mut g, 3),
+        };
+        let jobs = decompose(&wl, &cfg);
+        assert!(jobs.len() > k, "expected 1-row tiles, got {} jobs", jobs.len());
+        for (ji, j) in jobs.iter().enumerate() {
+            assert!(j.job.image.h <= cfg.h_max(), "tile {ji} exceeds chip capacity");
+            let cyc = CycleAccurate::new(cfg).run_block(&j.job).output;
+            let fun = Functional::new().run_block(&j.job).output;
+            let pr1 = Functional::per_window().run_block(&j.job).output;
+            assert_eq!(cyc, fun, "k={k} tile {ji} (raster pack_view)");
+            assert_eq!(cyc, pr1, "k={k} tile {ji} (per-window)");
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "no output rows")]
+fn valid_mode_thin_image_fails_loudly_instead_of_wrapping() {
+    // h < k in valid mode used to underflow `h − k + 1`: a debug panic
+    // deep in plan_layer, a silent usize wrap (≈2⁶⁴-row "layer") in
+    // release. The geometry guard turns both into this message.
+    let cfg = ChipConfig::tiny(4);
+    let mut g = Gen::new(1);
+    let wl = LayerWorkload {
+        k: 5,
+        zero_pad: false,
+        input: random_image(&mut g, 2, 3, 8, 0.1),
+        kernels: BinaryKernels::random(&mut g, 2, 2, 5),
+        scale_bias: ScaleBias::random(&mut g, 2),
+    };
+    let _ = run_layer_engine(&wl, &cfg, ExecOptions { workers: 1 }, EngineKind::Functional);
+}
+
+#[test]
+#[should_panic(expected = "h_max")]
+fn h_max_smaller_than_kernel_fails_loudly_instead_of_overflowing_memory() {
+    // h_max < k: the image memory cannot hold one window, yet the tiler
+    // used to emit tiles of up to k > h_max input rows — silently
+    // exceeding chip capacity on every engine. Now a loud precondition.
+    let mut cfg = ChipConfig::tiny(4);
+    cfg.image_mem_rows = 4 * 4; // h_max = 4 < k = 7
+    let mut g = Gen::new(2);
+    let wl = LayerWorkload {
+        k: 7,
+        zero_pad: true,
+        input: random_image(&mut g, 2, 10, 8, 0.1),
+        kernels: BinaryKernels::random(&mut g, 2, 2, 7),
+        scale_bias: ScaleBias::random(&mut g, 2),
+    };
+    let _ = run_layer_engine(&wl, &cfg, ExecOptions { workers: 1 }, EngineKind::Functional);
 }
 
 #[test]
