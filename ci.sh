@@ -12,6 +12,13 @@ cargo test -q
 echo "== cargo build --examples (every non-golden example; quickstart needs --features golden) =="
 cargo build --examples
 
+echo "== cargo doc --no-deps with warnings denied (rustdoc is part of the serving API) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "== example smoke: the serving-API examples must run end to end =="
+cargo run --release --example serving_api
+cargo run --release --example sharded_throughput
+
 echo "== cargo test --release -q (release-mode overflow/wrap behavior) =="
 cargo test --release -q
 

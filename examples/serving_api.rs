@@ -1,0 +1,90 @@
+//! The serving API end to end: build a session with [`SessionBuilder`],
+//! pump frames through the non-blocking `submit` → [`FrameTicket`] path
+//! with backpressure handling, and read the per-frame telemetry
+//! (cycles, energy, Θ, power envelope) that rides on every result.
+//!
+//! The loop below is the intended shape of a serving frontend: admit
+//! frames while the bounded in-flight queue has room, drain finished
+//! tickets when it does not, and account every response.
+//!
+//! ```bash
+//! cargo run --release --example serving_api
+//! ```
+
+use std::collections::VecDeque;
+
+use yodann::api::{FrameTicket, SessionBuilder, YodannError};
+use yodann::engine::EngineKind;
+use yodann::model::networks;
+use yodann::testkit::Gen;
+use yodann::workload::{synthetic_scene, Image};
+
+fn main() {
+    let net = networks::scene_labeling();
+    println!("== serving {} through the Yodann facade ==\n", net.name);
+
+    // One validated configuration object; errors are typed and eager.
+    let mut session = SessionBuilder::new()
+        .network(&net, 42)
+        .engine(EngineKind::CycleAccurate) // full per-frame ledger
+        .workers(4)
+        .supply(0.6) // the paper's energy-optimal corner
+        .max_in_flight(3)
+        .build()
+        .expect("scene-labeling chains");
+    println!(
+        "session: {} layers, {} workers, policy {}, corner {:.1} V, in-flight bound {}\n",
+        session.n_layers(),
+        session.workers(),
+        session.policy(),
+        session.corner().v,
+        session.max_in_flight()
+    );
+
+    // A malformed request is a typed error, not a panic.
+    match session.submit(Image::zeros(5, 24, 32)) {
+        Err(YodannError::FrameChannelMismatch { got, expected }) => {
+            println!("rejected a {got}-channel frame (network takes {expected}) — typed error\n")
+        }
+        other => panic!("expected a typed channel mismatch, got {other:?}"),
+    }
+
+    // The serving loop: submit ahead, drain on backpressure.
+    let mut g = Gen::new(0x5EE5);
+    let traffic: Vec<Image> = (0..6).map(|_| synthetic_scene(&mut g, 3, 24, 32)).collect();
+    let mut pending: VecDeque<FrameTicket> = VecDeque::new();
+    println!("{:>5} {:>12} {:>12} {:>10} {:>12} {:>12}", "frame", "cycles", "energy uJ",
+        "GOp/s", "host ms", "envelope mW");
+    let drain = |t: FrameTicket| {
+        let r = t.wait().expect("frame computes");
+        let tel = &r.telemetry;
+        println!(
+            "{:>5} {:>12} {:>12.2} {:>10.2} {:>12.2} {:>12.2}",
+            tel.frame_id,
+            tel.cycles,
+            tel.energy_j().unwrap_or(0.0) * 1e6,
+            tel.chip_gops().unwrap_or(0.0),
+            tel.host_seconds * 1e3,
+            tel.envelope.total_w() * 1e3,
+        );
+    };
+    for frame in traffic {
+        loop {
+            match session.submit(frame.clone()) {
+                Ok(ticket) => {
+                    pending.push_back(ticket);
+                    break;
+                }
+                Err(YodannError::Backpressure { .. }) => {
+                    // Queue full: retire the oldest in-flight frame.
+                    drain(pending.pop_front().expect("backpressure implies pending work"));
+                }
+                Err(e) => panic!("unexpected submit failure: {e}"),
+            }
+        }
+    }
+    for t in pending {
+        drain(t);
+    }
+    println!("\n(telemetry is per frame, priced at the session corner — no side channels)");
+}

@@ -1,5 +1,6 @@
 //! Multi-chip sharded serving: the scene-labeling chain batched through
-//! a [`NetworkSession`] under every [`ShardPolicy`], with the sharded
+//! the [`Yodann`](yodann::api::Yodann) serving facade under every
+//! [`ShardPolicy`], with the sharded
 //! layer executor's per-chip activity rolled into the multi-chip power
 //! and throughput models.
 //!
@@ -20,9 +21,10 @@
 
 use std::time::Instant;
 
+use yodann::api::SessionBuilder;
 use yodann::coordinator::{
-    metrics::sharded_metrics, run_layer_sharded, ExecOptions, LayerWorkload, NetworkSession,
-    SessionLayerSpec, ShardGrid, ShardPolicy,
+    metrics::sharded_metrics, run_layer_sharded, ExecOptions, LayerWorkload, SessionLayerSpec,
+    ShardGrid, ShardPolicy,
 };
 use yodann::engine::EngineKind;
 use yodann::hw::ChipConfig;
@@ -55,10 +57,22 @@ fn main() {
         ShardPolicy::PerShard(ShardGrid::striped(4)),
         ShardPolicy::Auto,
     ] {
-        let mut sess =
-            NetworkSession::with_policy(cfg, EngineKind::Functional, 4, policy, specs.clone());
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(EngineKind::Functional)
+            .workers(4)
+            .shard_policy(policy)
+            .max_in_flight(frames.len())
+            .build()
+            .expect("scene-labeling serves");
         let t0 = Instant::now();
-        let out = sess.run_batch(frames.clone());
+        let out: Vec<Image> = sess
+            .run_batch(frames.clone())
+            .expect("batch runs")
+            .into_iter()
+            .map(|r| r.output)
+            .collect();
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "  {policy:<18} {dt:>8.3} s  ->  {:>7.2} frames/s",

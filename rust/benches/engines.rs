@@ -2,12 +2,15 @@
 //! simulator vs the functional popcount datapath — and, since the raster
 //! refactor, the raster-based functional engine vs its PR-1 per-window
 //! packing baseline — on the block hot paths that dominate real
-//! workloads and on end-to-end batched `NetworkSession` traffic. Outputs
+//! workloads and on end-to-end batched traffic through the serving
+//! facade (`yodann::api::Yodann`, differentially checked against the
+//! deprecated `NetworkSession` path). Outputs
 //! are asserted bit-identical before any timing, and the results are
 //! written to `BENCH_engines.json` (name, ns/iter, frames/s) so the perf
 //! trajectory is trackable across PRs (the `speedup/raster-vs-pr1`
 //! record is the raster refactor's headline number).
 
+use yodann::api::SessionBuilder;
 use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
@@ -83,12 +86,15 @@ fn main() {
     records.push(JsonRecord::from_stats(&sp));
     records.push(JsonRecord::ratio("speedup/raster-vs-pr1", raster_speedup));
 
-    // End-to-end batched traffic: the scene-labeling chain (the paper's
-    // power-simulation workload) at reduced frame size, one batch per
-    // worker-pool fan-out. The functional engines exercise the
-    // layer-resident raster path (packed once per frame per layer by the
-    // session workers).
-    println!("== batched NetworkSession throughput (scene-labeling chain, 24x32 frames) ==");
+    // End-to-end batched traffic through the serving facade: the
+    // scene-labeling chain (the paper's power-simulation workload) at
+    // reduced frame size, one batch per worker-pool fan-out. The
+    // functional engines exercise the layer-resident raster path; every
+    // engine's facade outputs are first checked bit-for-bit against the
+    // deprecated NetworkSession path (the redesign's old-vs-new
+    // differential), and the cycle-accurate run lands its per-frame
+    // telemetry (cycles, energy) in the emitted records.
+    println!("== batched Yodann-facade throughput (scene-labeling chain, 24x32 frames) ==");
     let specs = SessionLayerSpec::synthetic_network(&networks::scene_labeling(), 7)
         .expect("scene-labeling chains");
     let n_frames = 4usize;
@@ -99,10 +105,41 @@ fn main() {
     for kind in
         [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow]
     {
-        let mut sess = NetworkSession::new(cfg, kind, 4, specs.clone());
-        session_outputs.push(sess.run_batch(frames.clone()));
+        #[allow(deprecated)] // the old-vs-new differential needs the old path
+        let legacy = {
+            let mut old = NetworkSession::new(cfg, kind, 4, specs.clone());
+            old.run_batch(frames.clone())
+        };
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(kind)
+            .workers(4)
+            .shard_policy(ShardPolicy::PerFrame)
+            .max_in_flight(n_frames)
+            .build()
+            .expect("a valid serving session");
+        let results = sess.run_batch(frames.clone()).expect("batch runs");
+        if kind == EngineKind::CycleAccurate {
+            for r in &results {
+                let t = &r.telemetry;
+                let base = format!("frame-telemetry/bench/{}/frame{}", t.policy, t.frame_id);
+                records.push(JsonRecord::ratio(&format!("{base}/cycles"), t.cycles as f64));
+                if let Some(e) = t.energy_j() {
+                    records.push(JsonRecord::ratio(&format!("{base}/energy-uj"), e * 1e6));
+                }
+            }
+        }
+        let out: Vec<Image> = results.into_iter().map(|r| r.output).collect();
+        assert_eq!(
+            out,
+            legacy,
+            "facade diverges from the deprecated session path on {}",
+            kind.name()
+        );
+        session_outputs.push(out);
         let s = b.bench(&format!("session/{}/batch{}", kind.name(), n_frames), || {
-            black_box(sess.run_batch(frames.clone()));
+            black_box(sess.run_batch(frames.clone()).expect("batch runs"));
         });
         println!("  -> {:.2} frames/s on {}\n", n_frames as f64 / s.mean.as_secs_f64(), kind.name());
         records.push(JsonRecord::with_frames(&s, n_frames as f64));
@@ -110,7 +147,7 @@ fn main() {
     for other in &session_outputs[1..] {
         assert_eq!(&session_outputs[0], other, "session engines diverge");
     }
-    println!("session outputs bit-identical across engines");
+    println!("session outputs bit-identical across engines (and to the deprecated path)");
 
     // Intra-frame shard scaling: the same batch under the per-frame
     // schedule vs per-shard grids of growing stripe count, functional
@@ -128,11 +165,24 @@ fn main() {
     let mut per_frame_s = None;
     let mut shard_outputs: Vec<Vec<Image>> = Vec::new();
     for policy in policies {
-        let mut sess =
-            NetworkSession::with_policy(cfg, EngineKind::Functional, 4, policy, specs.clone());
-        shard_outputs.push(sess.run_batch(shard_frames.clone()));
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(EngineKind::Functional)
+            .workers(4)
+            .shard_policy(policy)
+            .max_in_flight(shard_frames.len())
+            .build()
+            .expect("a valid serving session");
+        shard_outputs.push(
+            sess.run_batch(shard_frames.clone())
+                .expect("batch runs")
+                .into_iter()
+                .map(|r| r.output)
+                .collect(),
+        );
         let s = b.bench(&format!("shard-scaling/{policy}/batch{}", shard_frames.len()), || {
-            black_box(sess.run_batch(shard_frames.clone()));
+            black_box(sess.run_batch(shard_frames.clone()).expect("batch runs"));
         });
         println!(
             "  -> {:.2} frames/s under {policy}\n",

@@ -1,0 +1,269 @@
+//! Typed errors for the serving API.
+//!
+//! The pre-redesign execution surface failed in three inconsistent ways:
+//! `Result<_, String>` from [`SessionLayerSpec::synthetic_network`],
+//! panics from the plan-geometry guards
+//! (`coordinator::blocks::check_plan_geometry`), and asserts inside
+//! `NetworkSession` construction and batch submission. [`YodannError`]
+//! replaces all three on the [`Yodann`](super::Yodann) facade: the
+//! builder validates eagerly and every runtime failure a caller can
+//! provoke (bad frame geometry, backpressure, a torn-down session) comes
+//! back as a matchable variant instead of a panic or an opaque string.
+//!
+//! [`SessionLayerSpec::synthetic_network`]: crate::coordinator::SessionLayerSpec::synthetic_network
+
+use crate::engine::EngineKind;
+
+/// Everything the serving API can refuse to do, as data.
+///
+/// Variants carry the numbers a caller needs to react (resize the frame,
+/// shed load, pick another engine) without parsing message text; the
+/// [`std::fmt::Display`] form spells each one out for logs. Layer-scoped
+/// failures are wrapped in [`YodannError::AtLayer`] so one geometry
+/// variant serves every layer of a chain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum YodannError {
+    /// The builder was given no layers (and no network).
+    NoLayers,
+    /// The network has no convolution layers to accelerate.
+    NoConvLayers {
+        /// Network id.
+        net: String,
+    },
+    /// The network's conv rows do not form a simple chain (e.g. AlexNet's
+    /// parallel 11×11 split rows).
+    NotASimpleChain {
+        /// Network id.
+        net: String,
+        /// Label of the row where the chain breaks.
+        layer: String,
+        /// Channels the previous row produces.
+        prev_out: usize,
+        /// Channels this row declares as input.
+        n_in: usize,
+    },
+    /// Kernel size outside the chip's supported 1..=7.
+    UnsupportedKernel {
+        /// Requested kernel size.
+        k: usize,
+    },
+    /// The per-output-channel scale/bias arity does not match the kernel
+    /// set.
+    ScaleBiasArity {
+        /// Scale/bias entries provided.
+        alphas: usize,
+        /// Output channels of the kernel set.
+        n_out: usize,
+    },
+    /// Consecutive layers disagree on their channel count.
+    ChannelChainMismatch {
+        /// Channels the previous layer produces.
+        prev_out: usize,
+        /// Channels this layer declares as input.
+        n_in: usize,
+    },
+    /// The chip's image memory cannot hold even one kernel window
+    /// (`h_max < k`, the Eq. 9 capacity precondition).
+    ChipCapacity {
+        /// Kernel size.
+        k: usize,
+        /// Tile-height capacity of the configured image memory.
+        h_max: usize,
+        /// Configured image-memory rows.
+        image_mem_rows: usize,
+        /// Configured channel parallelism.
+        n_ch: usize,
+    },
+    /// A valid-mode (non-padded) convolution over an image smaller than
+    /// the kernel: there are no output pixels. Pre-redesign this was a
+    /// debug panic / release `usize` wrap deep in the planner.
+    NoOutputRows {
+        /// Kernel size.
+        k: usize,
+        /// Which image axis is too small (`"height"` or `"width"`).
+        axis: &'static str,
+        /// Size of that axis when the offending layer runs.
+        size: usize,
+    },
+    /// A frame with a zero dimension was submitted.
+    EmptyFrame {
+        /// Frame channels.
+        c: usize,
+        /// Frame height.
+        h: usize,
+        /// Frame width.
+        w: usize,
+    },
+    /// The submitted frame's channel count does not match layer 1.
+    FrameChannelMismatch {
+        /// Channels the frame carries.
+        got: usize,
+        /// Channels the network's first layer expects.
+        expected: usize,
+    },
+    /// An engine spelling [`EngineKind::parse`] does not accept.
+    UnknownEngine {
+        /// The rejected spelling.
+        given: String,
+    },
+    /// A builder knob outside its valid range (zero workers, zero
+    /// in-flight capacity, a supply voltage off the V–f curve, …).
+    InvalidConfig {
+        /// What was wrong, spelled out.
+        what: String,
+    },
+    /// Backpressure: the bounded in-flight queue is full. Wait on (or
+    /// drop) an outstanding [`FrameTicket`](super::FrameTicket), then
+    /// resubmit.
+    Backpressure {
+        /// Tickets currently in flight.
+        in_flight: usize,
+        /// The session's in-flight bound.
+        limit: usize,
+    },
+    /// The session (or its dispatcher) is gone; the frame was not run.
+    SessionClosed,
+    /// A worker died computing this frame — an engine bug or a geometry
+    /// hole the eager validation missed; the session survives and
+    /// subsequent frames still run.
+    Worker {
+        /// The failed frame's ticket id.
+        frame: u64,
+        /// Best-effort panic payload.
+        message: String,
+    },
+    /// A layer-scoped error, tagged with the 0-based layer index.
+    AtLayer {
+        /// Layer index in the chain.
+        layer: usize,
+        /// The underlying error.
+        inner: Box<YodannError>,
+    },
+}
+
+impl YodannError {
+    /// Tag this error with the 0-based layer it occurred at.
+    pub fn at_layer(self, layer: usize) -> YodannError {
+        match self {
+            // Re-tagging keeps the innermost error and the newest index.
+            YodannError::AtLayer { inner, .. } => YodannError::AtLayer { layer, inner },
+            other => YodannError::AtLayer { layer, inner: Box::new(other) },
+        }
+    }
+}
+
+impl std::fmt::Display for YodannError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            YodannError::NoLayers => {
+                write!(f, "a session needs at least one layer (builder got none)")
+            }
+            YodannError::NoConvLayers { net } => {
+                write!(f, "network '{net}' has no conv layers")
+            }
+            YodannError::NotASimpleChain { net, layer, prev_out, n_in } => write!(
+                f,
+                "network '{net}' is not a simple chain at layer '{layer}': previous output \
+                 {prev_out} feeds declared input {n_in}"
+            ),
+            YodannError::UnsupportedKernel { k } => {
+                write!(f, "kernel size {k} unsupported (1..=7)")
+            }
+            YodannError::ScaleBiasArity { alphas, n_out } => write!(
+                f,
+                "scale/bias arity mismatch: {alphas} entries for {n_out} output channels"
+            ),
+            YodannError::ChannelChainMismatch { prev_out, n_in } => write!(
+                f,
+                "channel chain mismatch: previous layer outputs {prev_out} channels, this \
+                 layer takes {n_in}"
+            ),
+            YodannError::ChipCapacity { k, h_max, image_mem_rows, n_ch } => write!(
+                f,
+                "h_max {h_max} cannot hold one {k}x{k} window (image memory of \
+                 {image_mem_rows} rows / {n_ch} channels); Eq. 9 tiling requires h_max >= k"
+            ),
+            YodannError::NoOutputRows { k, axis, size } => write!(
+                f,
+                "valid-mode layer of {axis} {size} has no output rows for kernel {k}"
+            ),
+            YodannError::EmptyFrame { c, h, w } => {
+                write!(f, "frame of {c}x{h}x{w} has no pixels")
+            }
+            YodannError::FrameChannelMismatch { got, expected } => write!(
+                f,
+                "frame has {got} channels, the network takes {expected}"
+            ),
+            YodannError::UnknownEngine { given } => write!(
+                f,
+                "unknown engine '{given}' (accepted: {})",
+                EngineKind::ACCEPTED.join(", ")
+            ),
+            YodannError::InvalidConfig { what } => write!(f, "invalid configuration: {what}"),
+            YodannError::Backpressure { in_flight, limit } => write!(
+                f,
+                "in-flight queue full ({in_flight}/{limit}); wait on an outstanding ticket \
+                 before resubmitting"
+            ),
+            YodannError::SessionClosed => write!(f, "session is shut down"),
+            YodannError::Worker { frame, message } => {
+                write!(f, "frame {frame} failed in a session worker: {message}")
+            }
+            YodannError::AtLayer { layer, inner } => write!(f, "layer {layer}: {inner}"),
+        }
+    }
+}
+
+impl std::error::Error for YodannError {}
+
+/// `?`-compatibility with the string-error call sites that remain (the
+/// CLI's `Result<(), String>` commands).
+impl From<YodannError> for String {
+    fn from(e: YodannError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_the_historical_guard_phrases() {
+        // The plan-geometry guards now panic with these Display texts;
+        // the `should_panic(expected = ...)` pins in raster_props.rs
+        // match on the same substrings.
+        let e = YodannError::NoOutputRows { k: 5, axis: "height", size: 3 };
+        assert!(e.to_string().contains("no output rows"), "{e}");
+        let e = YodannError::ChipCapacity { k: 7, h_max: 4, image_mem_rows: 16, n_ch: 4 };
+        assert!(e.to_string().contains("h_max"), "{e}");
+        let e = YodannError::UnsupportedKernel { k: 9 };
+        assert!(e.to_string().contains("unsupported (1..=7)"), "{e}");
+    }
+
+    #[test]
+    fn at_layer_tags_and_retags() {
+        let e = YodannError::UnsupportedKernel { k: 0 }.at_layer(3);
+        assert_eq!(e.to_string(), "layer 3: kernel size 0 unsupported (1..=7)");
+        // Re-tagging replaces the index instead of nesting.
+        let e2 = e.at_layer(5);
+        assert!(matches!(&e2, YodannError::AtLayer { layer: 5, inner }
+            if matches!(**inner, YodannError::UnsupportedKernel { k: 0 })));
+    }
+
+    #[test]
+    fn unknown_engine_lists_the_accepted_spellings() {
+        let e = YodannError::UnknownEngine { given: "Quantum".into() };
+        let msg = e.to_string();
+        for &name in EngineKind::ACCEPTED {
+            assert!(msg.contains(name), "'{name}' missing from: {msg}");
+        }
+    }
+
+    #[test]
+    fn string_conversion_matches_display() {
+        let e = YodannError::SessionClosed;
+        let s: String = e.clone().into();
+        assert_eq!(s, e.to_string());
+    }
+}

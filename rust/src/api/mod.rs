@@ -1,0 +1,692 @@
+//! The serving-grade inference API: one facade over the whole execution
+//! stack.
+//!
+//! The pre-redesign surface grew bottom-up: `NetworkSession::new` /
+//! `with_policy` / `set_policy` spread configuration over three calls,
+//! `run_frame(Image) -> Image` blocked the caller and discarded the
+//! per-frame activity ledger, and malformed geometry panicked somewhere
+//! inside the planner. A request-queue serving system needs the
+//! opposite: one validated configuration object, non-blocking
+//! submission with backpressure, and observability on every response.
+//! That is this module:
+//!
+//! * [`SessionBuilder`] — every knob (network or explicit layers, engine
+//!   kind, worker count, shard policy, operating corner, in-flight
+//!   bound) in one place, validated **eagerly** at [`SessionBuilder::build`]
+//!   into typed [`YodannError`]s;
+//! * [`Yodann`] — the session facade: [`Yodann::submit`] enqueues a
+//!   frame and returns a [`FrameTicket`] immediately (or
+//!   [`YodannError::Backpressure`] when the bounded in-flight queue is
+//!   full); [`FrameTicket::poll`]/[`FrameTicket::wait`] retrieve the
+//!   [`FrameResult`];
+//! * [`FrameTelemetry`] — cycles, energy, Θ and the multi-chip power
+//!   envelope ride on every result, priced at the session's corner
+//!   through the same roll-ups as the paper's tables.
+//!
+//! The engine behind the facade is the unchanged
+//! [`NetworkSession`] worker pool — outputs are **bit-identical** to the
+//! deprecated `run_batch` path for every engine kind and shard policy
+//! (`rust/tests/conformance.rs` proves it differentially).
+
+mod error;
+mod ticket;
+
+pub use error::YodannError;
+pub use ticket::{FrameResult, FrameTelemetry, FrameTicket};
+
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::blocks::plan_geometry_check;
+use crate::coordinator::metrics::sim_metrics;
+use crate::coordinator::session::{panic_message, TracedFrame};
+use crate::coordinator::{NetworkSession, SessionLayerSpec, ShardPolicy};
+use crate::engine::EngineKind;
+use crate::hw::ChipConfig;
+use crate::model::{Corner, Network};
+use crate::power::{calib, MultiChipPower};
+use crate::workload::Image;
+use ticket::SlotGuard;
+
+/// Geometry of one layer, kept by the facade for eager per-frame
+/// validation (the full [`SessionLayerSpec`] lives with the session).
+#[derive(Debug, Clone, Copy)]
+struct LayerGeom {
+    k: usize,
+    zero_pad: bool,
+    maxpool2: bool,
+}
+
+/// One queued frame on its way to the dispatcher.
+struct Job {
+    id: u64,
+    frame: Image,
+    reply: Sender<Result<FrameResult, YodannError>>,
+}
+
+/// Everything the dispatcher needs to price a finished frame.
+struct TelemetryCtx {
+    engine: EngineKind,
+    policy: ShardPolicy,
+    corner: Corner,
+    dual_stream: bool,
+    envelope: MultiChipPower,
+}
+
+impl TelemetryCtx {
+    fn frame_result(&self, id: u64, traced: TracedFrame, host_seconds: f64) -> FrameResult {
+        let cycles = traced.stats.cycles.total();
+        let ops = traced.stats.useful_ops;
+        let metrics = (cycles > 0)
+            .then(|| sim_metrics(&traced.stats, self.corner.arch, self.corner.v, self.dual_stream));
+        FrameResult {
+            frame_id: id,
+            output: traced.output,
+            telemetry: FrameTelemetry {
+                frame_id: id,
+                engine: self.engine,
+                policy: self.policy,
+                corner: self.corner,
+                stats: traced.stats,
+                ops,
+                cycles,
+                host_seconds,
+                metrics,
+                envelope: self.envelope,
+            },
+        }
+    }
+}
+
+/// Builder for a [`Yodann`] serving session: one place for every knob,
+/// validated eagerly — [`SessionBuilder::build`] returns a typed
+/// [`YodannError`] instead of panicking later inside the planner.
+///
+/// Defaults: the taped-out chip ([`ChipConfig::yodann`]), the functional
+/// popcount engine, one worker per host core, the [`ShardPolicy::Auto`]
+/// schedule, the paper's energy-optimal corner (0.6 V), and an in-flight
+/// bound of `2 × workers`.
+///
+/// ```
+/// use yodann::api::{SessionBuilder, YodannError};
+///
+/// // Validation is eager and typed: no layers, no session.
+/// let err = SessionBuilder::new().build().unwrap_err();
+/// assert!(matches!(err, YodannError::NoLayers));
+/// ```
+#[derive(Clone)]
+pub struct SessionBuilder {
+    cfg: ChipConfig,
+    engine: EngineKind,
+    workers: usize,
+    policy: ShardPolicy,
+    corner: Corner,
+    dual_stream: Option<bool>,
+    max_in_flight: Option<usize>,
+    specs: Vec<SessionLayerSpec>,
+    deferred_err: Option<YodannError>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+impl SessionBuilder {
+    /// A builder with the defaults described on the type.
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            cfg: ChipConfig::yodann(),
+            engine: EngineKind::Functional,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            policy: ShardPolicy::Auto,
+            corner: Corner::energy_optimal(),
+            dual_stream: None,
+            max_in_flight: None,
+            specs: Vec::new(),
+            deferred_err: None,
+        }
+    }
+
+    /// Run a Table-III network with seeded synthetic binary weights
+    /// (see [`SessionLayerSpec::synthetic_network`]). A network that
+    /// cannot chain defers its typed error to [`SessionBuilder::build`].
+    pub fn network(mut self, net: &Network, seed: u64) -> SessionBuilder {
+        match SessionLayerSpec::synthetic_network(net, seed) {
+            Ok(specs) => {
+                self.specs = specs;
+                self.deferred_err = None;
+            }
+            Err(e) => self.deferred_err = Some(e),
+        }
+        self
+    }
+
+    /// Run an explicit layer chain.
+    pub fn layers(mut self, specs: Vec<SessionLayerSpec>) -> SessionBuilder {
+        self.specs = specs;
+        self.deferred_err = None;
+        self
+    }
+
+    /// Simulated chip configuration (default: the taped-out YodaNN).
+    pub fn chip(mut self, cfg: ChipConfig) -> SessionBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Convolution engine kind (default: [`EngineKind::Functional`]).
+    pub fn engine(mut self, kind: EngineKind) -> SessionBuilder {
+        self.engine = kind;
+        self
+    }
+
+    /// Worker threads in the session pool (default: host parallelism).
+    pub fn workers(mut self, n: usize) -> SessionBuilder {
+        self.workers = n;
+        self
+    }
+
+    /// Batch schedule (default: [`ShardPolicy::Auto`]).
+    pub fn shard_policy(mut self, policy: ShardPolicy) -> SessionBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Operating corner the per-frame telemetry is priced at (default:
+    /// the paper's energy-optimal 0.6 V corner).
+    pub fn corner(mut self, corner: Corner) -> SessionBuilder {
+        self.corner = corner;
+        self
+    }
+
+    /// Shortcut: keep the corner's architecture, change its supply (V).
+    pub fn supply(mut self, v: f64) -> SessionBuilder {
+        self.corner.v = v;
+        self
+    }
+
+    /// Force the dual-stream I/O pricing on or off (default: derived
+    /// from layer 1 — dual when `k < 6` and more than 32 output
+    /// channels, matching the chip's dual-filter modes).
+    pub fn dual_stream(mut self, on: bool) -> SessionBuilder {
+        self.dual_stream = Some(on);
+        self
+    }
+
+    /// Bound on frames in flight — submitted tickets whose result has
+    /// not been retrieved (default: `2 × workers`). When the queue is
+    /// full, [`Yodann::submit`] reports [`YodannError::Backpressure`].
+    pub fn max_in_flight(mut self, n: usize) -> SessionBuilder {
+        self.max_in_flight = Some(n);
+        self
+    }
+
+    /// Validate everything and spin up the session (worker pool +
+    /// dispatcher thread). Every failure is a typed [`YodannError`];
+    /// nothing is spawned unless the whole configuration is runnable.
+    pub fn build(self) -> Result<Yodann, YodannError> {
+        if let Some(e) = self.deferred_err {
+            return Err(e);
+        }
+        if self.specs.is_empty() {
+            return Err(YodannError::NoLayers);
+        }
+        if self.workers == 0 {
+            return Err(YodannError::InvalidConfig {
+                what: "workers must be >= 1 (0 requested)".into(),
+            });
+        }
+        let max_in_flight = self.max_in_flight.unwrap_or(2 * self.workers);
+        if max_in_flight == 0 {
+            return Err(YodannError::InvalidConfig {
+                what: "max_in_flight must be >= 1 (0 requested)".into(),
+            });
+        }
+        let v = self.corner.v;
+        let (v_lo, v_hi) = (self.corner.arch.v_min(), calib::V_NOM);
+        if !(v_lo - 1e-9..=v_hi + 1e-9).contains(&v) {
+            return Err(YodannError::InvalidConfig {
+                what: format!(
+                    "supply {v} V outside {}'s operating range [{v_lo}, {v_hi}] V",
+                    self.corner.arch.name()
+                ),
+            });
+        }
+        for (li, s) in self.specs.iter().enumerate() {
+            // The frame-independent geometry preconditions (k in 1..=7,
+            // image memory holds one window); zero_pad/h=1 here skips the
+            // per-frame height check, which `validate_frame` walks with
+            // the real frame at submission time.
+            plan_geometry_check(&self.cfg, s.k, true, 1).map_err(|e| e.at_layer(li))?;
+            if s.scale_bias.alpha.len() != s.kernels.n_out {
+                return Err(YodannError::ScaleBiasArity {
+                    alphas: s.scale_bias.alpha.len(),
+                    n_out: s.kernels.n_out,
+                }
+                .at_layer(li));
+            }
+            if li > 0 && self.specs[li - 1].kernels.n_out != s.kernels.n_in {
+                return Err(YodannError::ChannelChainMismatch {
+                    prev_out: self.specs[li - 1].kernels.n_out,
+                    n_in: s.kernels.n_in,
+                }
+                .at_layer(li));
+            }
+        }
+        let geom: Vec<LayerGeom> = self
+            .specs
+            .iter()
+            .map(|s| LayerGeom { k: s.k, zero_pad: s.zero_pad, maxpool2: s.maxpool2 })
+            .collect();
+        let n_in = self.specs[0].kernels.n_in;
+        let first = &self.specs[0];
+        let dual = self
+            .dual_stream
+            .unwrap_or(first.k < 6 && first.kernels.n_out > 32);
+        let chips = match self.policy {
+            ShardPolicy::PerFrame => 1,
+            ShardPolicy::PerShard(g) => g.chips(),
+            // Auto stripes small batches across the whole pool: price
+            // that worst case.
+            ShardPolicy::Auto => self.workers,
+        };
+        let ctx = TelemetryCtx {
+            engine: self.engine,
+            policy: self.policy,
+            corner: self.corner,
+            dual_stream: dual,
+            envelope: MultiChipPower::at(self.corner.arch, v, chips, first.k),
+        };
+        let session =
+            NetworkSession::spawn(self.cfg, self.engine, self.workers, self.policy, self.specs);
+        let (tx, rx) = channel::<Job>();
+        let dispatcher = std::thread::spawn(move || dispatcher_loop(session, rx, ctx));
+        Ok(Yodann {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            next_id: 0,
+            max_in_flight,
+            n_in,
+            geom,
+            engine: self.engine,
+            policy: self.policy,
+            workers: self.workers,
+            corner: self.corner,
+        })
+    }
+}
+
+/// The serving facade: a persistent inference session with non-blocking
+/// frame submission, bounded in-flight queueing, and per-frame
+/// telemetry.
+///
+/// Built by [`SessionBuilder`]. Frames go in through [`Yodann::submit`]
+/// (returning a [`FrameTicket`] immediately) or the blocking
+/// [`Yodann::run_batch`] convenience; every completed frame comes back
+/// as a [`FrameResult`] carrying the output image **and** its
+/// [`FrameTelemetry`]. The dispatcher batches adaptively — bursts of
+/// submissions fan across the whole worker pool under the session's
+/// [`ShardPolicy`], exactly like the pre-redesign batch path. Outputs
+/// are bit-identical to the deprecated [`NetworkSession`] paths for
+/// every engine kind and shard policy.
+///
+/// Dropping the session drains every in-flight frame first, so
+/// outstanding tickets stay redeemable.
+///
+/// ```
+/// use std::sync::Arc;
+/// use yodann::api::SessionBuilder;
+/// use yodann::coordinator::SessionLayerSpec;
+/// use yodann::engine::EngineKind;
+/// use yodann::testkit::Gen;
+/// use yodann::workload::{BinaryKernels, Image, ScaleBias};
+///
+/// let mut g = Gen::new(7);
+/// let layer = SessionLayerSpec {
+///     k: 3,
+///     zero_pad: true,
+///     kernels: Arc::new(BinaryKernels::random(&mut g, 4, 3, 3)),
+///     scale_bias: Arc::new(ScaleBias::identity(4)),
+///     relu: false,
+///     maxpool2: false,
+/// };
+/// let mut session = SessionBuilder::new()
+///     .layers(vec![layer])
+///     .engine(EngineKind::Functional)
+///     .workers(2)
+///     .build()
+///     .expect("a valid one-layer session");
+///
+/// let ticket = session.submit(Image::zeros(3, 8, 8)).expect("queue has room");
+/// let result = ticket.wait().expect("frame computes");
+/// assert_eq!((result.output.c, result.output.h, result.output.w), (4, 8, 8));
+/// assert!(result.telemetry.ops > 0); // Eq. 7 accounting rides on every result
+/// ```
+#[derive(Debug)]
+pub struct Yodann {
+    tx: Option<Sender<Job>>,
+    dispatcher: Option<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    next_id: u64,
+    max_in_flight: usize,
+    n_in: usize,
+    geom: Vec<LayerGeom>,
+    engine: EngineKind,
+    policy: ShardPolicy,
+    workers: usize,
+    corner: Corner,
+}
+
+impl Yodann {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// Engine kind the session runs.
+    pub fn engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Batch schedule in force.
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Worker threads in the session pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Layers in the network.
+    pub fn n_layers(&self) -> usize {
+        self.geom.len()
+    }
+
+    /// Operating corner the telemetry is priced at.
+    pub fn corner(&self) -> Corner {
+        self.corner
+    }
+
+    /// Frames currently in flight (submitted, result not yet retrieved).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// The in-flight bound; [`Yodann::submit`] backpressures at it.
+    pub fn max_in_flight(&self) -> usize {
+        self.max_in_flight
+    }
+
+    /// Validate a frame against the layer chain without running it: the
+    /// checks [`Yodann::submit`] performs, available for admission
+    /// control.
+    pub fn validate_frame(&self, frame: &Image) -> Result<(), YodannError> {
+        if frame.c == 0 || frame.h == 0 || frame.w == 0 {
+            return Err(YodannError::EmptyFrame { c: frame.c, h: frame.h, w: frame.w });
+        }
+        if frame.c != self.n_in {
+            return Err(YodannError::FrameChannelMismatch { got: frame.c, expected: self.n_in });
+        }
+        // Walk the chain's geometry: valid-mode layers shrink the map and
+        // can run out of pixels mid-network; pre-redesign that was a
+        // worker panic (debug) or a usize wrap (release).
+        let (mut h, mut w) = (frame.h, frame.w);
+        for (li, g) in self.geom.iter().enumerate() {
+            if !g.zero_pad {
+                if h < g.k {
+                    return Err(YodannError::NoOutputRows { k: g.k, axis: "height", size: h }
+                        .at_layer(li));
+                }
+                if w < g.k {
+                    return Err(YodannError::NoOutputRows { k: g.k, axis: "width", size: w }
+                        .at_layer(li));
+                }
+                h = h - g.k + 1;
+                w = w - g.k + 1;
+            }
+            if g.maxpool2 && h >= 2 && w >= 2 {
+                h /= 2;
+                w /= 2;
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit one frame for inference, **without blocking**: the frame
+    /// is validated eagerly, enqueued to the dispatcher, and a
+    /// [`FrameTicket`] for its result is returned immediately.
+    ///
+    /// Errors: any [`Yodann::validate_frame`] failure;
+    /// [`YodannError::Backpressure`] when [`Yodann::in_flight`] has
+    /// reached the bound (wait on or drop an outstanding ticket, then
+    /// resubmit); [`YodannError::SessionClosed`] if the dispatcher is
+    /// gone.
+    pub fn submit(&mut self, frame: Image) -> Result<FrameTicket, YodannError> {
+        self.validate_frame(&frame)?;
+        let occupied = self.in_flight.load(Ordering::SeqCst);
+        if occupied >= self.max_in_flight {
+            return Err(YodannError::Backpressure {
+                in_flight: occupied,
+                limit: self.max_in_flight,
+            });
+        }
+        let tx = self.tx.as_ref().ok_or(YodannError::SessionClosed)?;
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let slot = SlotGuard(Arc::clone(&self.in_flight));
+        let id = self.next_id;
+        let (reply_tx, reply_rx) = channel();
+        if tx.send(Job { id, frame, reply: reply_tx }).is_err() {
+            // `slot` drops here, releasing the claimed capacity.
+            return Err(YodannError::SessionClosed);
+        }
+        self.next_id += 1;
+        Ok(FrameTicket { id, rx: reply_rx, done: None, slot: Some(slot) })
+    }
+
+    /// Blocking convenience over [`Yodann::submit`]: run a whole batch,
+    /// pipelining submissions against the in-flight bound, and return
+    /// the results in input order. An empty batch is `Ok(vec![])`.
+    ///
+    /// Fails with [`YodannError::Backpressure`] only when capacity is
+    /// held by tickets *outside* this batch — drain those first.
+    pub fn run_batch(&mut self, frames: Vec<Image>) -> Result<Vec<FrameResult>, YodannError> {
+        let mut tickets: VecDeque<FrameTicket> = VecDeque::new();
+        let mut results: Vec<FrameResult> = Vec::with_capacity(frames.len());
+        for frame in frames {
+            while self.in_flight() >= self.max_in_flight {
+                match tickets.pop_front() {
+                    Some(t) => results.push(t.wait()?),
+                    None => {
+                        return Err(YodannError::Backpressure {
+                            in_flight: self.in_flight(),
+                            limit: self.max_in_flight,
+                        })
+                    }
+                }
+            }
+            tickets.push_back(self.submit(frame)?);
+        }
+        for t in tickets {
+            results.push(t.wait()?);
+        }
+        Ok(results)
+    }
+}
+
+impl Drop for Yodann {
+    fn drop(&mut self) {
+        // Close the job channel, then join: the dispatcher drains every
+        // already-submitted frame first, so outstanding tickets resolve.
+        self.tx.take();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The dispatcher thread: owns the worker-pool session, serves queued
+/// frames in submission order with **adaptive batching** — it drains
+/// every job already queued and hands them to the session as one batch,
+/// so a burst of submissions fans across the whole worker pool exactly
+/// like the pre-redesign `run_batch` (a frame-at-a-time dispatcher
+/// would serialize the pool under the per-frame schedule). A batch that
+/// panics a worker (an engine bug — geometry is validated before
+/// queueing) is converted to [`YodannError::Worker`] on each of its
+/// tickets; the session and the dispatcher survive for later frames.
+fn dispatcher_loop(mut session: NetworkSession, rx: Receiver<Job>, ctx: TelemetryCtx) {
+    while let Ok(first) = rx.recv() {
+        let mut jobs = vec![first];
+        while let Ok(j) = rx.try_recv() {
+            jobs.push(j);
+        }
+        let n = jobs.len();
+        let mut ids = Vec::with_capacity(n);
+        let mut frames = Vec::with_capacity(n);
+        let mut replies = Vec::with_capacity(n);
+        for Job { id, frame, reply } in jobs {
+            ids.push(id);
+            frames.push(frame);
+            replies.push(reply);
+        }
+        let t0 = Instant::now();
+        let out =
+            std::panic::catch_unwind(AssertUnwindSafe(|| session.run_batch_traced(frames)));
+        // Wall time amortized over the dispatch batch — the honest
+        // per-frame figure when frames share the pool.
+        let host_each = t0.elapsed().as_secs_f64() / n as f64;
+        // A dropped ticket is fine — its result is simply discarded.
+        match out {
+            Ok(batch) => {
+                for ((traced, &id), reply) in batch.into_iter().zip(&ids).zip(&replies) {
+                    let _ = reply.send(Ok(ctx.frame_result(id, traced, host_each)));
+                }
+            }
+            Err(p) => {
+                let message = panic_message(p);
+                for (&id, reply) in ids.iter().zip(&replies) {
+                    let _ = reply
+                        .send(Err(YodannError::Worker { frame: id, message: message.clone() }));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{BinaryKernels, ScaleBias};
+
+    fn spec(k: usize, n_in: usize, n_out: usize, zero_pad: bool, seed: u64) -> SessionLayerSpec {
+        let mut g = Gen::new(seed);
+        SessionLayerSpec {
+            k,
+            zero_pad,
+            kernels: Arc::new(BinaryKernels::random(&mut g, n_out, n_in, k)),
+            scale_bias: Arc::new(ScaleBias::identity(n_out)),
+            relu: false,
+            maxpool2: false,
+        }
+    }
+
+    #[test]
+    fn builder_validates_eagerly_and_typed() {
+        assert_eq!(SessionBuilder::new().build().unwrap_err(), YodannError::NoLayers);
+        let e = SessionBuilder::new().layers(vec![spec(3, 3, 4, true, 1)]).workers(0).build();
+        assert!(matches!(e.unwrap_err(), YodannError::InvalidConfig { .. }));
+        let e = SessionBuilder::new()
+            .layers(vec![spec(3, 3, 4, true, 1)])
+            .max_in_flight(0)
+            .build();
+        assert!(matches!(e.unwrap_err(), YodannError::InvalidConfig { .. }));
+        let e = SessionBuilder::new().layers(vec![spec(3, 3, 4, true, 1)]).supply(0.3).build();
+        assert!(matches!(e.unwrap_err(), YodannError::InvalidConfig { .. }));
+        // Broken channel chain, tagged with the offending layer.
+        let e = SessionBuilder::new()
+            .layers(vec![spec(3, 3, 4, true, 1), spec(3, 5, 2, true, 2)])
+            .build()
+            .unwrap_err();
+        assert!(matches!(&e, YodannError::AtLayer { layer: 1, inner }
+            if matches!(**inner, YodannError::ChannelChainMismatch { prev_out: 4, n_in: 5 })));
+        // A valid network set after a failed one clears the deferred
+        // error instead of reporting it stale.
+        let ok = SessionBuilder::new()
+            .network(&crate::model::networks::alexnet(), 1)
+            .network(&crate::model::networks::scene_labeling(), 1)
+            .workers(1)
+            .build();
+        assert!(ok.is_ok(), "{:?}", ok.err());
+    }
+
+    #[test]
+    fn frame_validation_walks_the_chain_geometry() {
+        // Two valid-mode k=5 layers: an 11×11 frame leaves 7×7 after
+        // layer 0 and 3×3 < k at layer 1 — the error names layer 1.
+        let session = SessionBuilder::new()
+            .layers(vec![spec(5, 2, 3, false, 3), spec(5, 3, 2, false, 4)])
+            .workers(1)
+            .build()
+            .unwrap();
+        assert!(session.validate_frame(&Image::zeros(2, 11, 11)).is_ok());
+        let e = session.validate_frame(&Image::zeros(2, 7, 11)).unwrap_err();
+        assert!(matches!(&e, YodannError::AtLayer { layer: 1, inner }
+            if matches!(**inner, YodannError::NoOutputRows { k: 5, axis: "height", size: 3 })));
+        let e = session.validate_frame(&Image::zeros(3, 11, 11)).unwrap_err();
+        assert_eq!(e, YodannError::FrameChannelMismatch { got: 3, expected: 2 });
+        let e = session.validate_frame(&Image::zeros(2, 0, 4)).unwrap_err();
+        assert!(matches!(e, YodannError::EmptyFrame { .. }));
+    }
+
+    #[test]
+    fn submit_backpressures_deterministically_and_recovers() {
+        let mut session = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 5)])
+            .workers(1)
+            .max_in_flight(2)
+            .build()
+            .unwrap();
+        let g = |s: u64| {
+            let mut g = Gen::new(s);
+            crate::workload::random_image(&mut g, 2, 6, 6, 0.05)
+        };
+        let t0 = session.submit(g(1)).unwrap();
+        let t1 = session.submit(g(2)).unwrap();
+        // Slots are held until tickets deliver — the third submit is
+        // refused no matter how fast the dispatcher is.
+        let e = session.submit(g(3)).unwrap_err();
+        assert_eq!(e, YodannError::Backpressure { in_flight: 2, limit: 2 });
+        let r0 = t0.wait().unwrap();
+        assert_eq!(r0.frame_id, 0);
+        // Capacity came back.
+        let t3 = session.submit(g(3)).unwrap();
+        assert_eq!(t3.id(), 2);
+        drop(t1);
+        assert!(t3.wait().is_ok());
+    }
+
+    #[test]
+    fn dropping_a_ticket_frees_its_slot() {
+        let mut session = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 6)])
+            .workers(1)
+            .max_in_flight(1)
+            .build()
+            .unwrap();
+        let t = session.submit(Image::zeros(2, 5, 5)).unwrap();
+        drop(t);
+        // The dropped ticket released its claim even if the frame is
+        // still computing.
+        let t2 = session.submit(Image::zeros(2, 5, 5)).unwrap();
+        assert!(t2.wait().is_ok());
+    }
+}

@@ -1,0 +1,188 @@
+//! Frame tickets and per-frame results for the serving API.
+//!
+//! [`Yodann::submit`](super::Yodann::submit) is non-blocking: it hands
+//! back a [`FrameTicket`] immediately and the frame computes on the
+//! session's dispatcher in the background. The ticket is the only handle
+//! to the result — [`FrameTicket::poll`] checks without blocking,
+//! [`FrameTicket::wait`] blocks until the frame is done. Every completed
+//! frame carries a [`FrameTelemetry`]: the merged activity ledger, the
+//! paper's metrics at the session's operating corner, and the
+//! multi-chip power-envelope snapshot — no side-channel accessors.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+use super::YodannError;
+use crate::coordinator::metrics::SimMetrics;
+use crate::coordinator::ShardPolicy;
+use crate::engine::EngineKind;
+use crate::hw::ChipStats;
+use crate::model::Corner;
+use crate::power::MultiChipPower;
+use crate::workload::Image;
+
+/// What the serving session observed computing one frame.
+///
+/// The ledger (`stats`) is merged over every chip block of every layer
+/// the frame executed. `metrics` prices that ledger at the session's
+/// operating corner through the same [`sim_metrics`] roll-up the paper's
+/// tables use — it is `Some` only for engines that keep a cycle ledger
+/// (the cycle-accurate engine); the functional engines count
+/// `useful_ops` but no cycles, so there is no chip time to price.
+///
+/// [`sim_metrics`]: crate::coordinator::metrics::sim_metrics
+#[derive(Debug, Clone)]
+pub struct FrameTelemetry {
+    /// Ticket id of the frame this telemetry belongs to.
+    pub frame_id: u64,
+    /// Engine kind that computed the frame.
+    pub engine: EngineKind,
+    /// Schedule the frame ran under.
+    pub policy: ShardPolicy,
+    /// Operating corner the metrics are priced at.
+    pub corner: Corner,
+    /// Merged activity ledger (all-zero except `useful_ops` for engines
+    /// without a cycle ledger).
+    pub stats: ChipStats,
+    /// Useful operations (Eq. 7 accounting), for every engine kind.
+    pub ops: u64,
+    /// Total simulated chip cycles (0 for ledger-free engines).
+    pub cycles: u64,
+    /// Host wall-clock seconds attributed to this frame: the dispatch
+    /// batch's wall time divided by its size (frames submitted in a
+    /// burst share the worker pool).
+    pub host_seconds: f64,
+    /// The paper's corner metrics (chip time, Θ, energy, Op/J) — `Some`
+    /// when the engine kept a cycle ledger.
+    pub metrics: Option<SimMetrics>,
+    /// Aggregate power envelope of the chip grid the schedule implies
+    /// (1 chip per-frame, `stripes × out_groups` per-shard).
+    pub envelope: MultiChipPower,
+}
+
+impl FrameTelemetry {
+    /// Simulated core energy for this frame (J), when priced.
+    pub fn energy_j(&self) -> Option<f64> {
+        self.metrics.as_ref().map(|m| m.core_energy)
+    }
+
+    /// Simulated chip throughput Θ for this frame (GOp/s), when priced.
+    pub fn chip_gops(&self) -> Option<f64> {
+        self.metrics.as_ref().map(|m| m.theta / 1e9)
+    }
+
+    /// Host-side throughput of this frame (GOp/s of useful work).
+    pub fn host_gops(&self) -> f64 {
+        if self.host_seconds > 0.0 {
+            self.ops as f64 / self.host_seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One completed frame: the output image plus its telemetry.
+#[derive(Debug, Clone)]
+pub struct FrameResult {
+    /// Ticket id (submission order).
+    pub frame_id: u64,
+    /// The network's output feature map.
+    pub output: Image,
+    /// Everything observed computing the frame.
+    pub telemetry: FrameTelemetry,
+}
+
+/// RAII occupancy of one in-flight slot: decremented exactly once, when
+/// the ticket delivers its result or is dropped unredeemed.
+#[derive(Debug)]
+pub(crate) struct SlotGuard(pub(crate) Arc<AtomicUsize>);
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A claim on one submitted frame's result.
+///
+/// Obtained from [`Yodann::submit`](super::Yodann::submit). The ticket
+/// occupies one slot of the session's bounded in-flight queue until its
+/// result is delivered (first `poll` that returns `true`, or `wait`) or
+/// the ticket is dropped — holding finished tickets without polling them
+/// therefore backpressures `submit`, which is the point: a serving loop
+/// that stops draining results stops admitting frames.
+///
+/// Tickets outlive their session: dropping the [`Yodann`](super::Yodann)
+/// first drains every in-flight frame, so a ticket polled afterwards
+/// still yields its result.
+///
+/// ```
+/// use yodann::api::SessionBuilder;
+/// use yodann::engine::EngineKind;
+/// use yodann::model::networks;
+/// use yodann::workload::Image;
+///
+/// let mut session = SessionBuilder::new()
+///     .network(&networks::scene_labeling(), 42)
+///     .engine(EngineKind::Functional)
+///     .workers(2)
+///     .build()
+///     .expect("scene-labeling chains");
+/// let mut ticket = session.submit(Image::zeros(3, 8, 8)).expect("queue has room");
+/// while !ticket.poll() {
+///     std::thread::yield_now(); // non-blocking: do other work here
+/// }
+/// let result = ticket.wait().expect("frame computes");
+/// assert_eq!(result.frame_id, 0);
+/// ```
+#[derive(Debug)]
+pub struct FrameTicket {
+    pub(crate) id: u64,
+    pub(crate) rx: Receiver<Result<FrameResult, YodannError>>,
+    pub(crate) done: Option<Result<FrameResult, YodannError>>,
+    pub(crate) slot: Option<SlotGuard>,
+}
+
+impl FrameTicket {
+    /// The frame's id (assigned in submission order, starting at 0).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Non-blocking readiness check. Returns `true` once the result (or
+    /// the frame's error) is in; the value is cached for [`Self::wait`].
+    /// Releases the in-flight slot the first time it returns `true`.
+    pub fn poll(&mut self) -> bool {
+        if self.done.is_some() {
+            return true;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.finish(r);
+                true
+            }
+            Err(TryRecvError::Empty) => false,
+            Err(TryRecvError::Disconnected) => {
+                self.finish(Err(YodannError::SessionClosed));
+                true
+            }
+        }
+    }
+
+    /// Block until the frame is done and return its result. Consumes the
+    /// ticket and releases its in-flight slot.
+    pub fn wait(mut self) -> Result<FrameResult, YodannError> {
+        if let Some(r) = self.done.take() {
+            return r;
+        }
+        let r = self.rx.recv().unwrap_or_else(|_| Err(YodannError::SessionClosed));
+        self.slot = None;
+        r
+    }
+
+    fn finish(&mut self, r: Result<FrameResult, YodannError>) {
+        self.done = Some(r);
+        self.slot = None; // release the in-flight slot exactly once
+    }
+}

@@ -13,6 +13,7 @@
 //!
 //! [`decompose`] composes the two and is unchanged in behavior.
 
+use crate::api::YodannError;
 use crate::engine::{materialize_block, BlockPlan, LayerData, PackedKernels};
 use crate::hw::{BlockJob, ChipConfig};
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -170,8 +171,10 @@ pub(crate) fn plan_block_range(
 }
 
 /// Geometry preconditions shared by [`plan_layer`] and the shard planner
-/// ([`super::shard::shard_block_plans`]). Found by the k = 5/7 thin-tile
-/// audit:
+/// ([`super::shard::shard_block_plans`]), as typed data — the single
+/// source of the checks [`check_plan_geometry`] panics on and the serving
+/// facade ([`crate::api::Yodann`]) reports as [`YodannError`]s. Found by
+/// the k = 5/7 thin-tile audit:
 ///
 /// * `h_max < k` — the image memory cannot hold even one window, yet the
 ///   tiler would still emit "tiles" of up to `k > h_max` input rows
@@ -180,24 +183,52 @@ pub(crate) fn plan_block_range(
 /// * valid-mode `h < k` — the layer has no output rows and
 ///   `h − k + 1` *wraps* in release builds (debug builds panic on the
 ///   subtraction), turning the row loop into a near-2⁶⁴ iteration hang.
-///
-/// Both are impossible-to-satisfy requests, so they fail loudly here with
-/// the geometry spelled out instead. Pinned by
-/// `rust/tests/raster_props.rs`.
+pub(crate) fn plan_geometry_check(
+    cfg: &ChipConfig,
+    k: usize,
+    zero_pad: bool,
+    h: usize,
+) -> Result<(), YodannError> {
+    if !(1..=7).contains(&k) {
+        return Err(YodannError::UnsupportedKernel { k });
+    }
+    if cfg.h_max() < k {
+        return Err(YodannError::ChipCapacity {
+            k,
+            h_max: cfg.h_max(),
+            image_mem_rows: cfg.image_mem_rows,
+            n_ch: cfg.n_ch,
+        });
+    }
+    if !zero_pad && h < k {
+        return Err(YodannError::NoOutputRows { k, axis: "height", size: h });
+    }
+    Ok(())
+}
+
+/// The panicking form of [`plan_geometry_check`], for the executor paths
+/// whose callers pre-validated (or accept the historical panic). Both are
+/// impossible-to-satisfy requests, so they fail loudly with the geometry
+/// spelled out. Pinned by `rust/tests/raster_props.rs`, whose expected
+/// panic substrings are the [`YodannError`] display texts.
 pub(crate) fn check_plan_geometry(cfg: &ChipConfig, k: usize, zero_pad: bool, h: usize) {
-    assert!((1..=7).contains(&k), "kernel size {k} unsupported (1..=7)");
-    assert!(
-        cfg.h_max() >= k,
-        "h_max {} cannot hold one {k}x{k} window (image memory of {} rows / {} channels); \
-         Eq. 9 tiling requires h_max >= k",
-        cfg.h_max(),
-        cfg.image_mem_rows,
-        cfg.n_ch
-    );
-    assert!(
-        zero_pad || h >= k,
-        "valid-mode layer of height {h} has no output rows for kernel {k}"
-    );
+    if let Err(e) = plan_geometry_check(cfg, k, zero_pad, h) {
+        panic!("{e}");
+    }
+}
+
+/// The width mirror of [`plan_geometry_check`]'s valid-mode height
+/// check. The planner only tiles rows so it never sees `w`, but every
+/// executor computes `out_w = w − k + 1` — which wraps in release
+/// builds on a valid-mode layer narrower than its kernel (found by the
+/// serving facade's `validate_frame` audit). Callers that compute an
+/// output width call this first; the facade reports the same condition
+/// as a typed [`YodannError::NoOutputRows`] before frames enter the
+/// queue.
+pub(crate) fn check_width_geometry(zero_pad: bool, k: usize, w: usize) {
+    if !zero_pad && w < k {
+        panic!("{}", YodannError::NoOutputRows { k, axis: "width", size: w });
+    }
 }
 
 /// Decompose a layer into materialized chip-block jobs on `cfg` (the

@@ -27,7 +27,7 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use super::blocks::{plan_layer, tile_row_skip, LayerWorkload};
+use super::blocks::{check_width_geometry, plan_layer, tile_row_skip, LayerWorkload};
 use crate::engine::{
     BitplaneRaster, BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional,
     LayerData, PackedKernels,
@@ -100,8 +100,10 @@ where
 {
     let n_out = wl.kernels.n_out;
     // Plan first: plan_layer's geometry guard fires before the output
-    // shape math can underflow on impossible layers (valid-mode h < k).
+    // shape math can underflow on impossible layers (valid-mode h < k);
+    // the width guard covers the out_w mirror of the same wrap.
     let plans = plan_layer(cfg, wl.k, wl.zero_pad, wl.input.c, n_out, wl.input.h);
+    check_width_geometry(wl.zero_pad, wl.k, wl.input.w);
     let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
     let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
     let n_jobs = plans.len();
@@ -336,6 +338,20 @@ mod tests {
             let run = run_layer_engine(&w, &cfg, ExecOptions { workers: 2 }, kind);
             assert_eq!(run.output, want, "engine {}", kind.name());
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "no output rows")]
+    fn valid_mode_thin_width_fails_loudly_instead_of_wrapping() {
+        // The width mirror of the h < k guard: a valid-mode layer
+        // narrower than its kernel used to wrap `w − k + 1` in release
+        // (debug panicked on the subtraction, with no geometry in the
+        // message). The serving facade reports the same condition as a
+        // typed error before frames reach here.
+        let cfg = ChipConfig::tiny(4);
+        let mut w = wl(5, 2, 3, 12, 3, 88); // w = 3 < k = 5
+        w.zero_pad = false;
+        run_layer(&w, &cfg, ExecOptions { workers: 1 });
     }
 
     #[test]

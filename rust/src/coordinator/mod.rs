@@ -17,7 +17,10 @@
 //! * [`session`] — batched multi-frame inference: a persistent worker
 //!   pool with `Arc`-shared kernels/scale-bias and reusable accumulator
 //!   buffers runs a whole network over frame batches with one setup,
-//!   scheduled per frame, per shard, or hybrid ([`ShardPolicy`]);
+//!   scheduled per frame, per shard, or hybrid ([`ShardPolicy`]). This
+//!   is the engine behind the serving facade ([`crate::api::Yodann`]);
+//!   its own `run_frame`/`run_batch` surface is deprecated in favor of
+//!   the facade's validated, ticketed, telemetry-carrying one;
 //! * [`shard`] — multi-chip sharded execution: a layer's output striped
 //!   across a [`ShardGrid`] of chip instances, each resolving its input
 //!   halo against the shared layer raster, with per-shard activity for

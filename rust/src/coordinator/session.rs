@@ -44,14 +44,15 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use super::blocks::{check_plan_geometry, plan_layer};
+use super::blocks::{check_plan_geometry, check_width_geometry, plan_layer};
 use super::executor::{finalize_output, reduce_block};
 use super::shard::{plan_layer_shards, shard_block_plans, ShardGrid, ShardPolicy};
+use crate::api::YodannError;
 use crate::engine::{
     BitplaneRaster, BlockPlan, ConvEngine, EngineKind, EngineOutput, LayerData, PackedKernels,
 };
 use crate::fixedpoint::Q2_9;
-use crate::hw::ChipConfig;
+use crate::hw::{ChipConfig, ChipStats};
 use crate::model::Network;
 use crate::testkit::Gen;
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -79,13 +80,19 @@ impl SessionLayerSpec {
     /// conv rows are expanded by their repeat counts, random binary
     /// kernels and small range-preserving scales are generated from
     /// `seed`, ReLU runs between layers, and a 2×2 max-pool is inserted
-    /// wherever the table's geometry halves. Returns an error for
-    /// networks that are not a simple chain (e.g. AlexNet's parallel
-    /// 11×11 split rows).
-    pub fn synthetic_network(net: &Network, seed: u64) -> Result<Vec<SessionLayerSpec>, String> {
+    /// wherever the table's geometry halves. Returns a typed
+    /// [`YodannError`] for specs that cannot run: networks without conv
+    /// layers ([`YodannError::NoConvLayers`] — e.g. a dense-only
+    /// descriptor) and networks that are not a simple chain
+    /// ([`YodannError::NotASimpleChain`] — e.g. AlexNet's parallel 11×11
+    /// split rows).
+    pub fn synthetic_network(
+        net: &Network,
+        seed: u64,
+    ) -> Result<Vec<SessionLayerSpec>, YodannError> {
         let convs: Vec<_> = net.conv_layers().collect();
         if convs.is_empty() {
-            return Err(format!("network '{}' has no conv layers", net.id));
+            return Err(YodannError::NoConvLayers { net: net.id.to_string() });
         }
         let mut g = Gen::new(seed);
         let mut specs: Vec<SessionLayerSpec> = Vec::new();
@@ -95,11 +102,12 @@ impl SessionLayerSpec {
                 let n_in = if rep == 0 { c.n_in } else { c.n_out };
                 if let Some(p) = prev_out {
                     if p != n_in {
-                        return Err(format!(
-                            "network '{}' is not a simple chain at layer '{}': previous \
-                             output {} feeds declared input {}",
-                            net.id, c.label, p, n_in
-                        ));
+                        return Err(YodannError::NotASimpleChain {
+                            net: net.id.to_string(),
+                            layer: c.label.to_string(),
+                            prev_out: p,
+                            n_in,
+                        });
                     }
                 }
                 specs.push(SessionLayerSpec {
@@ -169,9 +177,23 @@ enum Task {
     Shard { shard: usize, plans: Vec<BlockPlan>, layer: Arc<ShardLayer> },
 }
 
+/// One fully processed frame: the output image plus the merged activity
+/// of every block the frame executed, across all layers (all-zero except
+/// `useful_ops` for engines that keep no ledger). This is what the
+/// serving facade ([`crate::api::Yodann`]) rolls into per-frame
+/// [`SimMetrics`](super::metrics::SimMetrics) — the session keeps the
+/// ledger instead of discarding it.
+#[derive(Debug, Clone)]
+pub(crate) struct TracedFrame {
+    /// The network's output for this frame.
+    pub(crate) output: Image,
+    /// Merged per-frame activity ledger.
+    pub(crate) stats: ChipStats,
+}
+
 /// A worker's reply to one [`Task`].
 enum Reply {
-    Frame(usize, Result<Image, String>),
+    Frame(usize, Result<TracedFrame, String>),
     Shard(usize, Result<Vec<(BlockPlan, EngineOutput)>, String>),
 }
 
@@ -195,23 +217,36 @@ pub struct NetworkSession {
 }
 
 impl NetworkSession {
-    /// Build a session on the historical per-frame schedule — see
-    /// [`NetworkSession::with_policy`].
+    /// Build a session on the historical per-frame schedule.
+    #[deprecated(note = "configure and build through `yodann::api::SessionBuilder` instead")]
     pub fn new(
         cfg: ChipConfig,
         kind: EngineKind,
         workers: usize,
         specs: Vec<SessionLayerSpec>,
     ) -> NetworkSession {
-        NetworkSession::with_policy(cfg, kind, workers, ShardPolicy::PerFrame, specs)
+        NetworkSession::spawn(cfg, kind, workers, ShardPolicy::PerFrame, specs)
     }
 
-    /// Build a session: validates the layer chain, packs every layer's
-    /// kernels once, and spins up `workers` threads each owning one
-    /// engine of `kind`. `policy` picks the batch schedule (and can be
-    /// changed later with [`NetworkSession::set_policy`]); outputs are
-    /// bit-identical under every policy.
+    /// Build a session with an explicit batch schedule.
+    #[deprecated(note = "configure and build through `yodann::api::SessionBuilder` instead")]
     pub fn with_policy(
+        cfg: ChipConfig,
+        kind: EngineKind,
+        workers: usize,
+        policy: ShardPolicy,
+        specs: Vec<SessionLayerSpec>,
+    ) -> NetworkSession {
+        NetworkSession::spawn(cfg, kind, workers, policy, specs)
+    }
+
+    /// Build a session: validates the layer chain (panicking on bad
+    /// specs — the [`crate::api::SessionBuilder`] validates the same
+    /// conditions eagerly into typed errors first), packs every layer's
+    /// kernels once, and spins up `workers` threads each owning one
+    /// engine of `kind`. `policy` picks the batch schedule; outputs are
+    /// bit-identical under every policy.
+    pub(crate) fn spawn(
         cfg: ChipConfig,
         kind: EngineKind,
         workers: usize,
@@ -291,6 +326,7 @@ impl NetworkSession {
 
     /// Change the batch schedule (takes effect from the next batch;
     /// outputs are bit-identical under every policy).
+    #[deprecated(note = "pick the schedule once via `SessionBuilder::shard_policy` instead")]
     pub fn set_policy(&mut self, policy: ShardPolicy) {
         self.policy = policy;
     }
@@ -310,18 +346,26 @@ impl NetworkSession {
     }
 
     /// Run one frame through the whole network.
+    #[deprecated(note = "submit through `yodann::api::Yodann` for tickets and telemetry")]
     pub fn run_frame(&mut self, frame: Image) -> Image {
-        self.run_batch(vec![frame]).pop().unwrap()
+        self.run_batch_traced(vec![frame]).pop().unwrap().output
+    }
+
+    /// Run a batch of frames, discarding the per-frame activity ledgers.
+    #[deprecated(note = "submit through `yodann::api::Yodann` for tickets and telemetry")]
+    pub fn run_batch(&mut self, frames: Vec<Image>) -> Vec<Image> {
+        self.run_batch_traced(frames).into_iter().map(|t| t.output).collect()
     }
 
     /// Run a batch of frames under the session's [`ShardPolicy`].
     /// Results come back in input order regardless of the schedule or
-    /// completion order.
+    /// completion order, each carrying its merged activity ledger.
     ///
     /// Panics on frames whose channel count does not match the first
     /// layer (validated up front — a worker dying mid-batch would
-    /// otherwise leave the batch waiting forever).
-    pub fn run_batch(&mut self, frames: Vec<Image>) -> Vec<Image> {
+    /// otherwise leave the batch waiting forever). The serving facade
+    /// validates frames into typed errors before they get here.
+    pub(crate) fn run_batch_traced(&mut self, frames: Vec<Image>) -> Vec<TracedFrame> {
         for (i, f) in frames.iter().enumerate() {
             assert_eq!(
                 f.c, self.n_in,
@@ -343,13 +387,13 @@ impl NetworkSession {
     }
 
     /// The per-frame schedule: frames fan out across the pool.
-    fn run_batch_per_frame(&mut self, frames: Vec<Image>) -> Vec<Image> {
+    fn run_batch_per_frame(&mut self, frames: Vec<Image>) -> Vec<TracedFrame> {
         let n = frames.len();
         let tx = self.tx.as_ref().expect("session already shut down");
         for (i, f) in frames.into_iter().enumerate() {
             tx.send(Task::Frame(i, f)).expect("worker pool died");
         }
-        let mut out: Vec<Option<Image>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<TracedFrame>> = (0..n).map(|_| None).collect();
         let mut first_err: Option<(usize, String)> = None;
         for _ in 0..n {
             let (i, res) = match self.rx_out.recv().expect("worker pool died") {
@@ -357,7 +401,7 @@ impl NetworkSession {
                 Reply::Shard(..) => unreachable!("shard reply during a per-frame batch"),
             };
             match res {
-                Ok(img) => out[i] = Some(img),
+                Ok(traced) => out[i] = Some(traced),
                 Err(e) => {
                     if first_err.is_none() {
                         first_err = Some((i, e));
@@ -373,7 +417,7 @@ impl NetworkSession {
 
     /// The per-shard schedule: frames run in order, each layer striped
     /// across the pool on `grid`.
-    fn run_batch_sharded(&mut self, frames: Vec<Image>, grid: ShardGrid) -> Vec<Image> {
+    fn run_batch_sharded(&mut self, frames: Vec<Image>, grid: ShardGrid) -> Vec<TracedFrame> {
         frames
             .into_iter()
             .enumerate()
@@ -385,9 +429,10 @@ impl NetworkSession {
     /// out across the pool: raster pack (shared, caller-side scratch) →
     /// shard plans → pool fan-out → wide stitch reduction → final α/β →
     /// ReLU / max-pool. Identical numerics to the per-frame path.
-    fn run_frame_sharded(&mut self, fidx: usize, frame: Image, grid: ShardGrid) -> Image {
+    fn run_frame_sharded(&mut self, fidx: usize, frame: Image, grid: ShardGrid) -> TracedFrame {
         let layers = Arc::clone(&self.layers);
         let mut acc = std::mem::take(&mut self.shard_acc);
+        let mut frame_stats = ChipStats::default();
         let mut x = Arc::new(frame);
         for (li, layer) in layers.iter().enumerate() {
             let spec = &layer.spec;
@@ -398,6 +443,7 @@ impl NetworkSession {
             );
             let n_out = spec.kernels.n_out;
             check_plan_geometry(&self.cfg, spec.k, spec.zero_pad, x.h);
+            check_width_geometry(spec.zero_pad, spec.k, x.w);
             let (out_h, out_w) = if spec.zero_pad {
                 (x.h, x.w)
             } else {
@@ -437,6 +483,7 @@ impl NetworkSession {
                 match self.rx_out.recv().expect("worker pool died") {
                     Reply::Shard(_, Ok(results)) => {
                         for (plan, r) in &results {
+                            frame_stats.merge(&r.stats);
                             if plan.in_blocks > 1 {
                                 single_in_block = false;
                             }
@@ -470,7 +517,10 @@ impl NetworkSession {
             x = Arc::new(finalize_layer(spec, &acc, single_in_block, out_h, out_w));
         }
         self.shard_acc = acc;
-        Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone())
+        TracedFrame {
+            output: Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone()),
+            stats: frame_stats,
+        }
     }
 }
 
@@ -552,7 +602,8 @@ fn worker_loop(
 /// Carry one frame through every layer on one engine: per layer,
 /// raster pack (engines that want one) → plan → blocks → wide reduction
 /// (reusing `acc`) → final α/β → ReLU / max-pool. Identical numerics to
-/// `run_layer_engine`, minus the clones.
+/// `run_layer_engine`, minus the clones; the frame's activity ledger is
+/// merged across every block of every layer.
 fn run_frame_inner(
     cfg: &ChipConfig,
     engine: &mut dyn ConvEngine,
@@ -560,7 +611,8 @@ fn run_frame_inner(
     frame: Image,
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
-) -> Image {
+) -> TracedFrame {
+    let mut stats = ChipStats::default();
     let mut x = frame;
     for (li, layer) in layers.iter().enumerate() {
         let spec = &layer.spec;
@@ -571,8 +623,10 @@ fn run_frame_inner(
         );
         let n_out = spec.kernels.n_out;
         // Plan first: plan_layer's geometry guard fires before the
-        // output shape math can underflow (valid-mode h < k).
+        // output shape math can underflow (valid-mode h < k); the width
+        // guard covers the out_w mirror.
         let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
+        check_width_geometry(spec.zero_pad, spec.k, x.w);
         let (out_h, out_w) = if spec.zero_pad {
             (x.h, x.w)
         } else {
@@ -599,6 +653,7 @@ fn run_frame_inner(
         let mut single_in_block = true;
         for plan in &plans {
             let r = engine.run_plan(&data, plan);
+            stats.merge(&r.stats);
             if plan.in_blocks > 1 {
                 single_in_block = false;
             }
@@ -606,7 +661,7 @@ fn run_frame_inner(
         }
         x = finalize_layer(spec, acc, single_in_block, out_h, out_w);
     }
-    x
+    TracedFrame { output: x, stats }
 }
 
 /// The shared inter-layer epilogue of both schedules: final α/β over the
@@ -637,8 +692,9 @@ fn finalize_layer(
     y
 }
 
-/// Best-effort panic payload → message.
-fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+/// Best-effort panic payload → message (shared with the serving
+/// dispatcher, which converts coordinator panics to typed errors).
+pub(crate) fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = e.downcast_ref::<String>() {
         s.clone()
     } else if let Some(s) = e.downcast_ref::<&str>() {
@@ -666,6 +722,7 @@ fn maxpool2(img: &Image) -> Image {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the old NetworkSession surface stays pinned for one release
 mod tests {
     use super::*;
     use crate::coordinator::{run_layer_engine, ExecOptions, LayerWorkload};
@@ -887,9 +944,13 @@ mod tests {
         assert_eq!(bc.len(), 6);
         assert!(bc[1].maxpool2 && bc[3].maxpool2);
         assert!(!bc[0].maxpool2);
-        // AlexNet's parallel split rows are rejected with a clear error.
+        // AlexNet's parallel split rows are rejected with a typed error.
         let err = SessionLayerSpec::synthetic_network(&networks::alexnet(), 3).unwrap_err();
-        assert!(err.contains("not a simple chain"), "{err}");
+        assert!(
+            matches!(&err, YodannError::NotASimpleChain { net, .. } if net == "alexnet"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("not a simple chain"), "{err}");
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! order-invariant. `rust/tests/conformance.rs` fuzzes this across the
 //! whole engine × shard matrix.
 
-use super::blocks::{check_plan_geometry, plan_block_range, LayerWorkload};
+use super::blocks::{check_plan_geometry, check_width_geometry, plan_block_range, LayerWorkload};
 use super::executor::{finalize_output, reduce_block, run_plans, ExecOptions, LayerRun};
 use crate::engine::{BitplaneRaster, BlockPlan, ConvEngine, EngineKind, PackedKernels};
 use crate::hw::{ChipConfig, ChipStats};
@@ -108,10 +108,10 @@ pub enum ShardPolicy {
 }
 
 impl ShardPolicy {
-    /// Parse the CLI spelling: `per-frame`, `auto`, `per-shard:NxM`
-    /// (or a bare grid `NxM`).
+    /// Parse the CLI spelling, case-insensitively: `per-frame`, `auto`,
+    /// `per-shard:NxM` (or a bare grid `NxM`).
     pub fn parse(s: &str) -> Option<ShardPolicy> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "per-frame" | "frame" => Some(ShardPolicy::PerFrame),
             "auto" => Some(ShardPolicy::Auto),
             other => {
@@ -233,8 +233,10 @@ pub fn run_layer_sharded(
 ) -> ShardedLayerRun {
     let n_out = wl.kernels.n_out;
     // Guard first: the output shape math below underflows on impossible
-    // layers (valid-mode h < k) before any per-shard planning would.
+    // layers (valid-mode h < k, and its w < k mirror) before any
+    // per-shard planning would.
     check_plan_geometry(cfg, wl.k, wl.zero_pad, wl.input.h);
+    check_width_geometry(wl.zero_pad, wl.k, wl.input.w);
     let out_h = if wl.zero_pad { wl.input.h } else { wl.input.h - wl.k + 1 };
     let out_w = if wl.zero_pad { wl.input.w } else { wl.input.w - wl.k + 1 };
     let shards = plan_layer_shards(grid, out_h, n_out);
@@ -325,6 +327,11 @@ mod tests {
     fn policy_parses_cli_spellings() {
         assert_eq!(ShardPolicy::parse("per-frame"), Some(ShardPolicy::PerFrame));
         assert_eq!(ShardPolicy::parse("auto"), Some(ShardPolicy::Auto));
+        assert_eq!(ShardPolicy::parse("Auto"), Some(ShardPolicy::Auto));
+        assert_eq!(
+            ShardPolicy::parse("Per-Shard:2x2"),
+            Some(ShardPolicy::PerShard(ShardGrid::new(2, 2)))
+        );
         assert_eq!(
             ShardPolicy::parse("per-shard:2x2"),
             Some(ShardPolicy::PerShard(ShardGrid::new(2, 2)))

@@ -294,9 +294,24 @@ impl EngineKind {
         }
     }
 
-    /// Parse a CLI spelling.
+    /// Every spelling [`EngineKind::parse`] accepts, for error messages
+    /// (`yodann throughput --engine` echoes this list on a bad value).
+    pub const ACCEPTED: &'static [&'static str] = &[
+        "cycle",
+        "cycle-accurate",
+        "sim",
+        "functional",
+        "fast",
+        "popcount",
+        "raster",
+        "functional-pr1",
+        "per-window",
+        "pr1",
+    ];
+
+    /// Parse a CLI spelling, case-insensitively.
     pub fn parse(s: &str) -> Option<EngineKind> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "cycle" | "cycle-accurate" | "sim" => Some(EngineKind::CycleAccurate),
             "functional" | "fast" | "popcount" | "raster" => Some(EngineKind::Functional),
             "functional-pr1" | "per-window" | "pr1" => Some(EngineKind::FunctionalPerWindow),
@@ -334,6 +349,23 @@ mod tests {
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Functional.name(), "functional");
         assert_eq!(EngineKind::FunctionalPerWindow.name(), "functional-pr1");
+    }
+
+    #[test]
+    fn engine_kind_parse_is_case_insensitive_and_accepted_is_exhaustive() {
+        // Shell users type what they type: every accepted spelling must
+        // parse in any case, and ACCEPTED must list exactly the
+        // spellings that parse.
+        assert_eq!(EngineKind::parse("Cycle"), Some(EngineKind::CycleAccurate));
+        assert_eq!(EngineKind::parse("FUNCTIONAL"), Some(EngineKind::Functional));
+        assert_eq!(EngineKind::parse("Per-Window"), Some(EngineKind::FunctionalPerWindow));
+        for &name in EngineKind::ACCEPTED {
+            assert!(EngineKind::parse(name).is_some(), "ACCEPTED lists unparsable '{name}'");
+            assert!(
+                EngineKind::parse(&name.to_uppercase()).is_some(),
+                "'{name}' fails to parse uppercased"
+            );
+        }
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! crate substitutes every physical artifact with an executable model (see
 //! DESIGN.md §1):
 //!
+//! * [`api`] — the serving-grade public surface: a [`api::SessionBuilder`]
+//!   validating every knob eagerly into typed [`api::YodannError`]s, the
+//!   [`api::Yodann`] facade with non-blocking `submit` → `FrameTicket`
+//!   (`poll`/`wait`), a bounded in-flight queue with backpressure, and
+//!   per-frame telemetry (cycles, energy, Θ, power envelope) on every
+//!   result. This is the intended front door; the coordinator's session
+//!   API beneath it is deprecated.
 //! * [`hw`] — a cycle-accurate, bit-true simulator of the chip: filter bank,
 //!   latch-based SCM image memory (6×8 banks), sliding-window image bank,
 //!   SoP units with multi-kernel support, ChannelSummers, Scale-Bias unit,
@@ -48,6 +55,7 @@
 // style exemption.
 #![allow(clippy::needless_range_loop)]
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

@@ -15,13 +15,12 @@
 
 use std::time::Instant;
 
-use yodann::bench::{merge_json, JsonRecord};
+use yodann::api::{SessionBuilder, YodannError};
+use yodann::bench::{merge_json, validate_records, JsonRecord};
 use yodann::cli::Args;
 #[cfg(feature = "golden")]
 use yodann::coordinator::check_block;
-use yodann::coordinator::{
-    metrics::sim_metrics, NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy,
-};
+use yodann::coordinator::{metrics::sim_metrics, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::EngineKind;
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner};
@@ -92,7 +91,10 @@ fn print_help() {
          \x20                             per-shard schedule, checks bit-identity against\n\
          \x20                             the per-frame run, prints the grid's power\n\
          \x20                             envelope + halo exchange, and merges\n\
-         \x20                             shard-scaling records into BENCH_engines.json\n\
+         \x20                             shard-scaling records into BENCH_engines.json.\n\
+         \x20                             Cycle-accurate runs also merge per-frame\n\
+         \x20                             telemetry records (id, cycles, energy, policy;\n\
+         \x20                             first 8 frames) into BENCH_engines.json\n\
          \x20 networks                    list the networks of Tables III–V"
     );
 }
@@ -373,15 +375,16 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Batch synthetic frames through a [`NetworkSession`] on one or both
-/// engines: the end-to-end throughput A/B. With more than one engine
-/// selected (`--engine both`, or `--engine all` which adds the PR-1
-/// per-window functional baseline) every engine's outputs are also
+/// Batch synthetic frames through the serving facade (`yodann::api::Yodann`)
+/// on one or both engines: the end-to-end throughput A/B. With more than one
+/// engine selected (`--engine both`, or `--engine all` which adds the
+/// PR-1 per-window functional baseline) every engine's outputs are also
 /// checked for bit-identity against the first. With `--shards NxM`
 /// every engine additionally runs the multi-chip per-shard schedule on
 /// that grid, bit-identity against the per-frame run is enforced, and
 /// the measured shard-scaling records are merged into
-/// `BENCH_engines.json`.
+/// `BENCH_engines.json`. The cycle-accurate engine's run also lands its
+/// per-frame telemetry (frame id, cycles, energy, policy) there.
 fn cmd_throughput(args: &Args) -> Result<(), String> {
     let id = args.get("net", "scene-labeling");
     let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
@@ -402,7 +405,7 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
                 .ok_or_else(|| format!("--shards '{s}' is not N or NxM (stripes x groups)"))?,
         ),
     };
-    let kinds: Vec<EngineKind> = match args.get("engine", "both") {
+    let kinds: Vec<EngineKind> = match args.get("engine", "both").to_ascii_lowercase().as_str() {
         "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
         // The raster-refactor A/B: new functional vs the PR-1 per-window
         // packing baseline, plus the cycle simulator for reference.
@@ -412,7 +415,10 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             EngineKind::CycleAccurate,
         ],
         other => vec![EngineKind::parse(other).ok_or_else(|| {
-            format!("unknown engine '{other}' (both|all|functional|functional-pr1|cycle)")
+            format!(
+                "{} (or the multi-engine spellings: both, all)",
+                YodannError::UnknownEngine { given: other.to_string() }
+            )
         })?],
     };
 
@@ -468,11 +474,18 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         );
     }
     let mut runs: Vec<(EngineKind, Vec<Image>, f64)> = Vec::new();
-    let mut shard_records: Vec<JsonRecord> = Vec::new();
+    let mut merged_records: Vec<JsonRecord> = Vec::new();
     for kind in kinds {
-        let mut sess = NetworkSession::new(cfg, kind, workers, specs.clone());
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(kind)
+            .workers(workers)
+            .shard_policy(ShardPolicy::PerFrame)
+            .max_in_flight(n_frames)
+            .build()?;
         let t0 = Instant::now();
-        let out = sess.run_batch(frames.clone());
+        let results = sess.run_batch(frames.clone())?;
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "  {:<16} {:>8.3} s  ->  {:>8.2} frames/s",
@@ -480,17 +493,53 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             dt,
             n_frames as f64 / dt
         );
+        // The cycle-accurate run carries a full per-frame ledger: land
+        // it as frame-telemetry records (id, cycles, energy, policy).
+        // Capped at the first TELEMETRY_FRAMES so re-runs with different
+        // --frames values replace a stable record set instead of leaving
+        // stale high-index records behind.
+        const TELEMETRY_FRAMES: usize = 8;
+        if kind == EngineKind::CycleAccurate {
+            let mut sum_cycles = 0u64;
+            let mut sum_uj = 0.0f64;
+            let mut priced = 0usize;
+            for r in results.iter().take(TELEMETRY_FRAMES) {
+                let t = &r.telemetry;
+                let base =
+                    format!("frame-telemetry/cli/{id}/{}/frame{}", t.policy, t.frame_id);
+                merged_records.push(JsonRecord::ratio(&format!("{base}/cycles"), t.cycles as f64));
+                if let Some(e) = t.energy_j() {
+                    merged_records.push(JsonRecord::ratio(&format!("{base}/energy-uj"), e * 1e6));
+                }
+                sum_cycles += t.cycles;
+                sum_uj += t.energy_j().unwrap_or(0.0) * 1e6;
+                priced += 1;
+            }
+            if priced > 0 {
+                println!(
+                    "  {:<16} telemetry: avg {} cycles, {:.2} uJ/frame @{:.1} V \
+                     (first {priced}/{n_frames} frames -> BENCH_engines.json)",
+                    "",
+                    sum_cycles / priced as u64,
+                    sum_uj / priced as f64,
+                    sess.corner().v
+                );
+            }
+        }
+        let out: Vec<Image> = results.into_iter().map(|r| r.output).collect();
         if let Some(grid) = shards {
-            let mut sh = NetworkSession::with_policy(
-                cfg,
-                kind,
-                workers,
-                ShardPolicy::PerShard(grid),
-                specs.clone(),
-            );
+            let mut sh = SessionBuilder::new()
+                .chip(cfg)
+                .layers(specs.clone())
+                .engine(kind)
+                .workers(workers)
+                .shard_policy(ShardPolicy::PerShard(grid))
+                .max_in_flight(n_frames)
+                .build()?;
             let t0 = Instant::now();
-            let out_sh = sh.run_batch(frames.clone());
+            let results_sh = sh.run_batch(frames.clone())?;
             let dt_sh = t0.elapsed().as_secs_f64();
+            let out_sh: Vec<Image> = results_sh.into_iter().map(|r| r.output).collect();
             if out_sh != out {
                 return Err(format!(
                     "sharded outputs diverge from per-frame on {} — this is a bug",
@@ -505,17 +554,17 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
                 n_frames as f64 / dt_sh,
                 dt / dt_sh
             );
-            shard_records.push(JsonRecord {
+            merged_records.push(JsonRecord {
                 name: format!("shard-scaling/cli/{}/per-frame/batch{n_frames}", kind.name()),
                 ns_per_iter: dt * 1e9,
                 frames_per_s: Some(n_frames as f64 / dt),
             });
-            shard_records.push(JsonRecord {
+            merged_records.push(JsonRecord {
                 name: format!("shard-scaling/cli/{}/{grid}/batch{n_frames}", kind.name()),
                 ns_per_iter: dt_sh * 1e9,
                 frames_per_s: Some(n_frames as f64 / dt_sh),
             });
-            shard_records.push(JsonRecord::ratio(
+            merged_records.push(JsonRecord::ratio(
                 &format!("shard-scaling/cli/{}/speedup-{grid}", kind.name()),
                 dt / dt_sh,
             ));
@@ -536,12 +585,15 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         }
         println!("  outputs bit-identical across engines");
     }
-    if !shard_records.is_empty() {
+    if !merged_records.is_empty() {
+        // The schema gate first: a bogus record set (zero cycles, NaN
+        // ratios) must fail loudly, not land in the evidence file.
+        validate_records(&merged_records)
+            .map_err(|e| format!("telemetry/shard records failed validation: {e}"))?;
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
-        let total = merge_json(path, "engines", &shard_records)
-            .map_err(|e| format!("merging shard-scaling records into {path}: {e}"))?;
-        println!("  merged {} shard-scaling records into {path} ({total} total)",
-            shard_records.len());
+        let total = merge_json(path, "engines", &merged_records)
+            .map_err(|e| format!("merging records into {path}: {e}"))?;
+        println!("  merged {} records into {path} ({total} total)", merged_records.len());
     }
     Ok(())
 }

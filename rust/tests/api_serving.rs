@@ -1,0 +1,248 @@
+//! The serving API's behavioral contract: typed errors on every former
+//! panic path, edge-case batches, ticket lifecycle (including after the
+//! session is gone), backpressure, and per-frame telemetry — everything
+//! ISSUE 4 promises the facade over and above the raw coordinator.
+
+use std::sync::Arc;
+
+use yodann::api::{SessionBuilder, YodannError};
+use yodann::coordinator::{SessionLayerSpec, ShardGrid, ShardPolicy};
+use yodann::engine::EngineKind;
+use yodann::hw::ChipConfig;
+use yodann::model::layer::{DenseLayer, Layer};
+use yodann::model::{networks, Network};
+use yodann::testkit::Gen;
+use yodann::workload::{random_image, reference_conv, BinaryKernels, Image, ScaleBias};
+
+fn one_layer(k: usize, n_in: usize, n_out: usize, zero_pad: bool, seed: u64) -> SessionLayerSpec {
+    let mut g = Gen::new(seed);
+    SessionLayerSpec {
+        k,
+        zero_pad,
+        kernels: Arc::new(BinaryKernels::random(&mut g, n_out, n_in, k)),
+        scale_bias: Arc::new(ScaleBias::random(&mut g, n_out)),
+        relu: false,
+        maxpool2: false,
+    }
+}
+
+#[test]
+fn empty_batch_is_ok_and_empty() {
+    let mut sess = SessionBuilder::new()
+        .layers(vec![one_layer(3, 3, 4, true, 1)])
+        .workers(2)
+        .build()
+        .unwrap();
+    let out = sess.run_batch(Vec::new()).unwrap();
+    assert!(out.is_empty());
+    assert_eq!(sess.in_flight(), 0);
+}
+
+#[test]
+fn one_by_one_frames_serve_and_match_the_reference() {
+    // A 1×1 zero-padded frame is a legal (if degenerate) request: one
+    // output pixel per channel, bit-identical to the reference conv.
+    let spec = one_layer(3, 3, 5, true, 2);
+    let kernels = Arc::clone(&spec.kernels);
+    let sb = Arc::clone(&spec.scale_bias);
+    let mut sess = SessionBuilder::new().layers(vec![spec]).workers(1).build().unwrap();
+    let mut g = Gen::new(3);
+    let frame = random_image(&mut g, 3, 1, 1, 0.1);
+    let want = reference_conv(&frame, &kernels, &sb, true);
+    let got = sess.submit(frame).unwrap().wait().unwrap();
+    assert_eq!((got.output.c, got.output.h, got.output.w), (5, 1, 1));
+    assert_eq!(got.output, want);
+}
+
+#[test]
+fn mismatched_geometry_is_a_typed_error_not_a_panic() {
+    // Valid-mode k=5 over a 3-row frame: pre-redesign this panicked in a
+    // worker (debug) or wrapped a usize (release). Now: a typed error,
+    // the frame never enters the queue, and the session stays usable.
+    let mut sess = SessionBuilder::new()
+        .layers(vec![one_layer(5, 2, 3, false, 4)])
+        .workers(1)
+        .build()
+        .unwrap();
+    let err = sess.submit(Image::zeros(2, 3, 9)).unwrap_err();
+    assert!(
+        matches!(&err, YodannError::AtLayer { layer: 0, inner }
+            if matches!(**inner, YodannError::NoOutputRows { k: 5, axis: "height", size: 3 })),
+        "{err}"
+    );
+    // Channel mismatch likewise.
+    let err = sess.submit(Image::zeros(7, 9, 9)).unwrap_err();
+    assert_eq!(err, YodannError::FrameChannelMismatch { got: 7, expected: 2 });
+    // And a well-formed frame still serves.
+    let ok = sess.submit(Image::zeros(2, 9, 9)).unwrap().wait().unwrap();
+    assert_eq!((ok.output.h, ok.output.w), (5, 5));
+}
+
+#[test]
+fn tickets_survive_session_drop() {
+    // Dropping the session drains in-flight frames before the
+    // dispatcher exits; an outstanding ticket still redeems.
+    let mut sess = SessionBuilder::new()
+        .layers(vec![one_layer(3, 3, 4, true, 5)])
+        .workers(2)
+        .build()
+        .unwrap();
+    let mut g = Gen::new(6);
+    let frame = random_image(&mut g, 3, 10, 10, 0.05);
+    let mut ticket = sess.submit(frame).unwrap();
+    drop(sess);
+    assert!(ticket.poll(), "result must be delivered by the draining dispatcher");
+    let res = ticket.wait().unwrap();
+    assert_eq!(res.frame_id, 0);
+    assert_eq!((res.output.c, res.output.h, res.output.w), (4, 10, 10));
+}
+
+#[test]
+fn backpressure_is_reported_and_recoverable() {
+    let mut sess = SessionBuilder::new()
+        .layers(vec![one_layer(3, 2, 2, true, 7)])
+        .workers(1)
+        .max_in_flight(2)
+        .build()
+        .unwrap();
+    let mut g = Gen::new(8);
+    let frames: Vec<Image> = (0..3).map(|_| random_image(&mut g, 2, 8, 8, 0.05)).collect();
+    let t0 = sess.submit(frames[0].clone()).unwrap();
+    let _t1 = sess.submit(frames[1].clone()).unwrap();
+    assert_eq!(sess.in_flight(), 2);
+    let err = sess.submit(frames[2].clone()).unwrap_err();
+    assert_eq!(err, YodannError::Backpressure { in_flight: 2, limit: 2 });
+    // Draining one ticket frees one slot.
+    t0.wait().unwrap();
+    let t2 = sess.submit(frames[2].clone()).unwrap();
+    assert!(t2.wait().is_ok());
+}
+
+#[test]
+fn run_batch_pipelines_past_the_in_flight_bound() {
+    // 6 frames through a bound of 2: the convenience loop must drain
+    // as it goes and return everything in input order.
+    let specs = vec![one_layer(3, 3, 4, true, 9)];
+    let mut g = Gen::new(10);
+    let frames: Vec<Image> = (0..6).map(|_| random_image(&mut g, 3, 9, 9, 0.05)).collect();
+    let mut bounded = SessionBuilder::new()
+        .layers(specs.clone())
+        .workers(2)
+        .max_in_flight(2)
+        .build()
+        .unwrap();
+    let got = bounded.run_batch(frames.clone()).unwrap();
+    assert_eq!(got.len(), 6);
+    assert_eq!(sess_ids(&got), vec![0, 1, 2, 3, 4, 5]);
+    // Same answers as an unbounded session.
+    let mut roomy = SessionBuilder::new()
+        .layers(specs)
+        .workers(2)
+        .max_in_flight(16)
+        .build()
+        .unwrap();
+    let want = roomy.run_batch(frames).unwrap();
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert_eq!(g.output, w.output);
+    }
+}
+
+fn sess_ids(rs: &[yodann::api::FrameResult]) -> Vec<u64> {
+    rs.iter().map(|r| r.frame_id).collect()
+}
+
+#[test]
+fn telemetry_rides_on_every_result() {
+    let specs = vec![one_layer(3, 3, 4, true, 11)];
+    let mut g = Gen::new(12);
+    let frame = random_image(&mut g, 3, 12, 12, 0.05);
+    // Cycle-accurate: full ledger, priced metrics.
+    let mut cyc = SessionBuilder::new()
+        .layers(specs.clone())
+        .engine(EngineKind::CycleAccurate)
+        .workers(1)
+        .supply(0.6)
+        .build()
+        .unwrap();
+    let r = cyc.submit(frame.clone()).unwrap().wait().unwrap();
+    let t = &r.telemetry;
+    assert_eq!(t.engine, EngineKind::CycleAccurate);
+    assert!(t.cycles > 0 && t.ops > 0);
+    let m = t.metrics.as_ref().expect("cycle engine prices its frames");
+    assert!(m.time > 0.0 && m.theta > 0.0);
+    assert!(t.energy_j().unwrap() > 0.0);
+    assert!(t.chip_gops().unwrap() > 0.0);
+    assert!((t.corner.v - 0.6).abs() < 1e-12);
+    assert!(t.envelope.total_w() > 0.0);
+    // Functional: ops only — same Eq. 7 count, no cycle ledger, no
+    // fabricated metrics.
+    let mut fun = SessionBuilder::new()
+        .layers(specs)
+        .engine(EngineKind::Functional)
+        .workers(1)
+        .build()
+        .unwrap();
+    let rf = fun.submit(frame).unwrap().wait().unwrap();
+    assert_eq!(rf.telemetry.ops, t.ops, "Eq. 7 accounting must not depend on the engine");
+    assert_eq!(rf.telemetry.cycles, 0);
+    assert!(rf.telemetry.metrics.is_none());
+    // The two engines also agree on the image, of course.
+    assert_eq!(rf.output, r.output);
+}
+
+#[test]
+fn per_shard_sessions_report_the_grid_envelope() {
+    let mut grid4 = SessionBuilder::new()
+        .layers(vec![one_layer(3, 3, 4, true, 13)])
+        .shard_policy(ShardPolicy::PerShard(ShardGrid::new(2, 2)))
+        .workers(2)
+        .build()
+        .unwrap();
+    let mut g = Gen::new(14);
+    let r = grid4.submit(random_image(&mut g, 3, 10, 10, 0.05)).unwrap().wait().unwrap();
+    assert_eq!(r.telemetry.policy, ShardPolicy::PerShard(ShardGrid::new(2, 2)));
+    assert_eq!(r.telemetry.envelope.chips, 4);
+    // 4 chips burn 4x one chip's envelope.
+    let one_chip = r.telemetry.envelope.core_w_each + r.telemetry.envelope.io_w_each;
+    assert!((r.telemetry.envelope.total_w() - 4.0 * one_chip).abs() < 1e-12);
+}
+
+#[test]
+fn synthetic_network_rejects_unknown_layer_kinds_typed() {
+    // A descriptor with no conv rows at all — only a host-side dense
+    // layer the accelerator cannot schedule — must come back as a typed
+    // NoConvLayers, not a stringly error (regression for the
+    // unknown-layer-kind spec path).
+    let dense_only = Network {
+        id: "dense-only",
+        name: "DenseOnly",
+        img: (8, 8),
+        layers: vec![Layer::Dense(DenseLayer { label: "fc", n_in: 64, n_out: 10, repeat: 1 })],
+    };
+    let err = SessionLayerSpec::synthetic_network(&dense_only, 1).unwrap_err();
+    assert_eq!(err, YodannError::NoConvLayers { net: "dense-only".into() });
+    // Through the builder, the same spec fails at build — eagerly.
+    let err = SessionBuilder::new().network(&dense_only, 1).build().unwrap_err();
+    assert_eq!(err, YodannError::NoConvLayers { net: "dense-only".into() });
+    // And the non-chain network keeps its typed rejection.
+    let err = SessionBuilder::new().network(&networks::alexnet(), 1).build().unwrap_err();
+    assert!(matches!(err, YodannError::NotASimpleChain { .. }));
+}
+
+#[test]
+fn builder_rejects_chip_capacity_violations_eagerly() {
+    // h_max < k used to panic deep in the planner on the first frame;
+    // the builder refuses at build time, naming the layer.
+    let mut cfg = ChipConfig::tiny(4);
+    cfg.image_mem_rows = 4 * 4; // h_max = 4 < k = 7
+    let err = SessionBuilder::new()
+        .chip(cfg)
+        .layers(vec![one_layer(7, 2, 2, true, 15)])
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(&err, YodannError::AtLayer { layer: 0, inner }
+            if matches!(**inner, YodannError::ChipCapacity { k: 7, h_max: 4, .. })),
+        "{err}"
+    );
+}

@@ -13,11 +13,15 @@
 //!   input/output block limits, **thin images with h < k**, thin
 //!   vertical tiles, saturating amplitudes — asserting all engine kinds
 //!   × sharded/unsharded agree bit-for-bit;
-//! * the Table-III networks: every chain network runs as a
-//!   `NetworkSession` under every `ShardPolicy`, and every network's
-//!   first conv row (AlexNet's 6×6 split included) runs
-//!   sharded-vs-unsharded on every engine kind.
+//! * the Table-III networks: every chain network runs through the
+//!   serving facade (`yodann::api::Yodann`) under every `ShardPolicy`,
+//!   and every network's first conv row (AlexNet's 6×6 split included)
+//!   runs sharded-vs-unsharded on every engine kind;
+//! * the API-redesign differential: `Yodann::submit`/`wait` vs the
+//!   deprecated `NetworkSession::run_batch`, bit-for-bit, over the
+//!   engine × policy matrix on two Table-III networks.
 
+use yodann::api::SessionBuilder;
 use yodann::coordinator::{
     run_layer_engine, run_layer_sharded, ExecOptions, LayerWorkload, NetworkSession,
     SessionLayerSpec, ShardGrid, ShardPolicy,
@@ -27,6 +31,36 @@ use yodann::hw::ChipConfig;
 use yodann::model::networks;
 use yodann::testkit::{property, Gen};
 use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
+
+/// Run a batch through the serving facade, returning bare images.
+fn facade_batch(
+    cfg: ChipConfig,
+    kind: EngineKind,
+    workers: usize,
+    policy: ShardPolicy,
+    specs: &[SessionLayerSpec],
+    frames: &[Image],
+) -> Vec<Image> {
+    let mut sess = SessionBuilder::new()
+        .chip(cfg)
+        .layers(specs.to_vec())
+        .engine(kind)
+        .workers(workers)
+        .shard_policy(policy)
+        .max_in_flight(frames.len().max(1))
+        .build()
+        .expect("conformance specs are valid");
+    // Through the non-blocking path on purpose: submit everything, then
+    // redeem tickets in order — this is the surface the redesign ships.
+    let tickets: Vec<_> = frames
+        .iter()
+        .map(|f| sess.submit(f.clone()).expect("batch fits the in-flight bound"))
+        .collect();
+    tickets
+        .into_iter()
+        .map(|t| t.wait().expect("frame computes").output)
+        .collect()
+}
 
 #[test]
 fn prop_engine_shard_matrix_is_bit_identical() {
@@ -116,9 +150,16 @@ fn table_iii_network_sessions_conform_across_policies() {
             };
             let mut want: Option<Image> = None;
             for policy in policies {
-                let mut sess =
-                    NetworkSession::with_policy(cfg, kind, 3, policy, kind_specs.clone());
-                let got = sess.run_frame(frame.clone());
+                let got = facade_batch(
+                    cfg,
+                    kind,
+                    3,
+                    policy,
+                    &kind_specs,
+                    std::slice::from_ref(&frame),
+                )
+                .pop()
+                .unwrap();
                 match &want {
                     None => want = Some(got),
                     Some(w) => {
@@ -205,13 +246,64 @@ fn sharded_executor_agrees_with_sessions_under_per_shard() {
             relu: false,
             maxpool2: false,
         }];
-        let mut sess = NetworkSession::with_policy(
+        let got = facade_batch(
             cfg,
             kind,
             3,
             ShardPolicy::PerShard(grid),
-            specs,
-        );
-        assert_eq!(sess.run_frame(frame.clone()), direct, "engine {}", kind.name());
+            &specs,
+            std::slice::from_ref(&frame),
+        )
+        .pop()
+        .unwrap();
+        assert_eq!(got, direct, "engine {}", kind.name());
+    }
+}
+
+#[test]
+fn facade_is_bit_identical_to_the_pre_redesign_session() {
+    // The redesign's differential obligation: `Yodann::submit`/`wait`
+    // must reproduce the deprecated `NetworkSession::run_batch` exactly,
+    // for every engine kind × shard policy, on (at least) two Table-III
+    // networks. The cycle-accurate legs run the first layer only, like
+    // the policy-conformance test above — full-chain engine equality is
+    // pinned by the fuzzer at block granularity.
+    let cfg = ChipConfig::yodann();
+    let policies = [
+        ShardPolicy::PerFrame,
+        ShardPolicy::PerShard(ShardGrid::striped(3)),
+        ShardPolicy::PerShard(ShardGrid::new(2, 2)),
+        ShardPolicy::Auto,
+    ];
+    for net in [networks::bc_cifar10(), networks::bc_svhn()] {
+        let mut specs =
+            SessionLayerSpec::synthetic_network(&net, 0xD1FF).expect("Table-III chain");
+        specs.truncate(4);
+        let mut g = Gen::new(0xFACADE ^ net.conv_ops());
+        let frames: Vec<Image> =
+            (0..2).map(|_| synthetic_scene(&mut g, specs[0].kernels.n_in, 8, 8)).collect();
+        for kind in EngineKind::ALL {
+            let kind_specs = if kind == EngineKind::CycleAccurate {
+                specs[..1].to_vec()
+            } else {
+                specs.clone()
+            };
+            for policy in policies {
+                #[allow(deprecated)] // the differential's whole point
+                let legacy = {
+                    let mut old =
+                        NetworkSession::with_policy(cfg, kind, 3, policy, kind_specs.clone());
+                    old.run_batch(frames.clone())
+                };
+                let new = facade_batch(cfg, kind, 3, policy, &kind_specs, &frames);
+                assert_eq!(
+                    new,
+                    legacy,
+                    "facade diverges from NetworkSession: {} {} {policy}",
+                    net.id,
+                    kind.name()
+                );
+            }
+        }
     }
 }

@@ -4,15 +4,14 @@
 //! every supported geometry — all kernel sizes 1..=7, zero-padded and
 //! valid convolutions, channel-blocked and vertically tiled layers, any
 //! worker count, saturating and non-saturating amplitudes — and batched
-//! `NetworkSession` inference must match the layer-by-layer executor
-//! for every engine kind (including the PR-1 per-window baseline kept
-//! for A/B benches).
+//! inference through the serving facade (`yodann::api::Yodann`) must
+//! match the layer-by-layer executor for every engine kind (including
+//! the PR-1 per-window baseline kept for A/B benches).
 
 use std::sync::Arc;
 
-use yodann::coordinator::{
-    run_layer_engine, ExecOptions, LayerWorkload, NetworkSession, SessionLayerSpec,
-};
+use yodann::api::SessionBuilder;
+use yodann::coordinator::{run_layer_engine, ExecOptions, LayerWorkload, SessionLayerSpec};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
 use yodann::fixedpoint::Q2_9;
 use yodann::hw::{BlockJob, ChipConfig};
@@ -178,8 +177,20 @@ fn session_batch_equals_layerwise_executor() {
         EngineKind::Functional,
         EngineKind::FunctionalPerWindow,
     ] {
-        let mut sess = NetworkSession::new(cfg, kind, 3, specs.clone());
-        let batch = sess.run_batch(frames.clone());
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(kind)
+            .workers(3)
+            .max_in_flight(frames.len())
+            .build()
+            .expect("two-layer chain is valid");
+        let batch: Vec<Image> = sess
+            .run_batch(frames.clone())
+            .expect("batch runs")
+            .into_iter()
+            .map(|r| r.output)
+            .collect();
         assert_eq!(batch, reference, "engine {}", kind.name());
     }
 }
