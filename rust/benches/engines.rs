@@ -203,6 +203,31 @@ fn main() {
     }
     println!("shard-policy outputs bit-identical across grids");
 
+    // Graph-IR serving: ResNet-18's residual topology (width/4, scaled
+    // frames) through the facade's graph path — the record that tracks
+    // the step-interpreter's overhead across PRs.
+    println!("== graph-IR serving (resnet18 graph, width/4, 24x16 frames) ==");
+    let graph = networks::resnet18_graph_scaled(11, 4);
+    let mut gsess = SessionBuilder::new()
+        .chip(cfg)
+        .graph(&graph)
+        .engine(EngineKind::Functional)
+        .workers(4)
+        .shard_policy(ShardPolicy::PerFrame)
+        .max_in_flight(4)
+        .build()
+        .expect("the resnet18 graph builds");
+    let mut gg = Gen::new(123);
+    let gframes: Vec<Image> = (0..4).map(|_| synthetic_scene(&mut gg, 3, 24, 16)).collect();
+    let s = b.bench("graph/resnet18-w4/batch4", || {
+        black_box(gsess.run_batch(gframes.clone()).expect("graph batch runs"));
+    });
+    println!(
+        "  -> {:.2} frames/s through the residual graph plan\n",
+        gframes.len() as f64 / s.mean.as_secs_f64()
+    );
+    records.push(JsonRecord::with_frames(&s, gframes.len() as f64));
+
     // Anchor at the workspace root regardless of cargo's bench cwd, so
     // the checked-in evidence file is the one that gets refreshed. The
     // emission is strict: an empty or placeholder record set aborts the

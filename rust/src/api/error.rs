@@ -106,6 +106,62 @@ pub enum YodannError {
         /// The rejected spelling.
         given: String,
     },
+    /// A network id [`crate::model::networks::network`] does not know —
+    /// the Display form echoes every accepted id (mirroring
+    /// [`EngineKind::ACCEPTED`] for engines).
+    UnknownNetwork {
+        /// The rejected id.
+        given: String,
+    },
+    /// A graph join node ([`Add`]/[`Concat`]) with fewer than two
+    /// inputs — it joins nothing.
+    ///
+    /// [`Add`]: crate::model::graph::GraphOp::Add
+    /// [`Concat`]: crate::model::graph::GraphOp::Concat
+    GraphArity {
+        /// Label of the offending node.
+        node: String,
+        /// The operation kind ("add" or "concat").
+        op: &'static str,
+        /// Inputs the node was given.
+        inputs: usize,
+    },
+    /// A graph join node whose branches disagree on their channel count
+    /// (residual [`Add`] needs identical channels on every input).
+    ///
+    /// [`Add`]: crate::model::graph::GraphOp::Add
+    GraphChannelMismatch {
+        /// Label of the offending node.
+        node: String,
+        /// Channels of the first branch.
+        a: usize,
+        /// Channels of the disagreeing branch.
+        b: usize,
+    },
+    /// A graph join node whose branches disagree on their feature-map
+    /// shape for the submitted frame (c, h, w).
+    GraphShapeMismatch {
+        /// Label of the offending node.
+        node: String,
+        /// Shape of the first branch.
+        a: (usize, usize, usize),
+        /// Shape of the disagreeing branch.
+        b: (usize, usize, usize),
+    },
+    /// A graph node that is on no path to the output — built but never
+    /// used, which is almost always a wiring mistake.
+    GraphDisconnected {
+        /// Label of the offending node.
+        node: String,
+    },
+    /// [`SessionBuilder::weights`](super::SessionBuilder::weights)
+    /// supplied the wrong number of per-layer weight sets.
+    WeightsArity {
+        /// Weight sets supplied.
+        given: usize,
+        /// Conv layers the network has.
+        layers: usize,
+    },
     /// A builder knob outside its valid range (zero workers, zero
     /// in-flight capacity, a supply voltage off the V–f curve, …).
     InvalidConfig {
@@ -139,6 +195,14 @@ pub enum YodannError {
         /// The underlying error.
         inner: Box<YodannError>,
     },
+    /// A graph-node-scoped error, tagged with the node's label (the
+    /// graph analog of [`YodannError::AtLayer`]).
+    AtNode {
+        /// Label of the graph node.
+        node: String,
+        /// The underlying error.
+        inner: Box<YodannError>,
+    },
 }
 
 impl YodannError {
@@ -148,6 +212,17 @@ impl YodannError {
             // Re-tagging keeps the innermost error and the newest index.
             YodannError::AtLayer { inner, .. } => YodannError::AtLayer { layer, inner },
             other => YodannError::AtLayer { layer, inner: Box::new(other) },
+        }
+    }
+
+    /// Tag this error with the graph node it occurred at.
+    pub fn at_node(self, node: &str) -> YodannError {
+        match self {
+            // Re-tagging keeps the innermost error and the newest label.
+            YodannError::AtNode { inner, .. } => {
+                YodannError::AtNode { node: node.to_string(), inner }
+            }
+            other => YodannError::AtNode { node: node.to_string(), inner: Box::new(other) },
         }
     }
 }
@@ -199,6 +274,33 @@ impl std::fmt::Display for YodannError {
                 "unknown engine '{given}' (accepted: {})",
                 EngineKind::ACCEPTED.join(", ")
             ),
+            YodannError::UnknownNetwork { given } => write!(
+                f,
+                "unknown network '{given}' (accepted: {})",
+                crate::model::networks::ACCEPTED.join(", ")
+            ),
+            YodannError::GraphArity { node, op, inputs } => write!(
+                f,
+                "graph node '{node}': {op} needs at least 2 inputs (got {inputs})"
+            ),
+            YodannError::GraphChannelMismatch { node, a, b } => write!(
+                f,
+                "graph node '{node}' joins branches of {a} and {b} channels"
+            ),
+            YodannError::GraphShapeMismatch { node, a, b } => write!(
+                f,
+                "graph node '{node}' joins branches of shape {}x{}x{} and {}x{}x{}",
+                a.0, a.1, a.2, b.0, b.1, b.2
+            ),
+            YodannError::GraphDisconnected { node } => write!(
+                f,
+                "graph node '{node}' is on no path to the output"
+            ),
+            YodannError::WeightsArity { given, layers } => write!(
+                f,
+                "weights() supplied {given} layer weight sets for a network of {layers} conv \
+                 layers"
+            ),
             YodannError::InvalidConfig { what } => write!(f, "invalid configuration: {what}"),
             YodannError::Backpressure { in_flight, limit } => write!(
                 f,
@@ -210,6 +312,7 @@ impl std::fmt::Display for YodannError {
                 write!(f, "frame {frame} failed in a session worker: {message}")
             }
             YodannError::AtLayer { layer, inner } => write!(f, "layer {layer}: {inner}"),
+            YodannError::AtNode { node, inner } => write!(f, "node '{node}': {inner}"),
         }
     }
 }
@@ -258,6 +361,26 @@ mod tests {
         for &name in EngineKind::ACCEPTED {
             assert!(msg.contains(name), "'{name}' missing from: {msg}");
         }
+    }
+
+    #[test]
+    fn unknown_network_lists_the_accepted_ids() {
+        let e = YodannError::UnknownNetwork { given: "lenet".into() };
+        let msg = e.to_string();
+        for &id in crate::model::networks::ACCEPTED {
+            assert!(msg.contains(id), "'{id}' missing from: {msg}");
+        }
+    }
+
+    #[test]
+    fn at_node_tags_and_retags() {
+        let e = YodannError::GraphChannelMismatch { node: "add1".into(), a: 64, b: 128 };
+        assert!(e.to_string().contains("64 and 128 channels"), "{e}");
+        let e = YodannError::UnsupportedKernel { k: 9 }.at_node("conv1");
+        assert_eq!(e.to_string(), "node 'conv1': kernel size 9 unsupported (1..=7)");
+        let e2 = e.at_node("conv2");
+        assert!(matches!(&e2, YodannError::AtNode { node, inner }
+            if node == "conv2" && matches!(**inner, YodannError::UnsupportedKernel { k: 9 })));
     }
 
     #[test]

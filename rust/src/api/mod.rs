@@ -10,9 +10,12 @@
 //! submission with backpressure, and observability on every response.
 //! That is this module:
 //!
-//! * [`SessionBuilder`] — every knob (network or explicit layers, engine
-//!   kind, worker count, shard policy, operating corner, in-flight
-//!   bound) in one place, validated **eagerly** at [`SessionBuilder::build`]
+//! * [`SessionBuilder`] — every knob (network, explicit layers, or a
+//!   [`NetworkGraph`] via [`SessionBuilder::graph`] — the IR that runs
+//!   AlexNet's 11×11 split and ResNet's residual shortcuts — plus
+//!   engine kind, worker count, shard policy, operating corner,
+//!   in-flight bound, caller-supplied [`Weights`]) in one place,
+//!   validated **eagerly** at [`SessionBuilder::build`]
 //!   into typed [`YodannError`]s;
 //! * [`Yodann`] — the session facade: [`Yodann::submit`] enqueues a
 //!   frame and returns a [`FrameTicket`] immediately (or
@@ -44,23 +47,15 @@ use std::time::Instant;
 
 use crate::coordinator::blocks::plan_geometry_check;
 use crate::coordinator::metrics::sim_metrics;
-use crate::coordinator::session::{panic_message, TracedFrame};
+use crate::coordinator::session::{chain_compiled, panic_message, TracedFrame};
 use crate::coordinator::{NetworkSession, SessionLayerSpec, ShardPolicy};
 use crate::engine::EngineKind;
 use crate::hw::ChipConfig;
+use crate::model::graph::{CompiledGraph, NetworkGraph, Weights};
 use crate::model::{Corner, Network};
 use crate::power::{calib, MultiChipPower};
 use crate::workload::Image;
 use ticket::SlotGuard;
-
-/// Geometry of one layer, kept by the facade for eager per-frame
-/// validation (the full [`SessionLayerSpec`] lives with the session).
-#[derive(Debug, Clone, Copy)]
-struct LayerGeom {
-    k: usize,
-    zero_pad: bool,
-    maxpool2: bool,
-}
 
 /// One queued frame on its way to the dispatcher.
 struct Job {
@@ -129,6 +124,8 @@ pub struct SessionBuilder {
     dual_stream: Option<bool>,
     max_in_flight: Option<usize>,
     specs: Vec<SessionLayerSpec>,
+    graph: Option<CompiledGraph>,
+    weights: Option<Vec<Weights>>,
     deferred_err: Option<YodannError>,
 }
 
@@ -150,17 +147,24 @@ impl SessionBuilder {
             dual_stream: None,
             max_in_flight: None,
             specs: Vec::new(),
+            graph: None,
+            weights: None,
             deferred_err: None,
         }
     }
 
     /// Run a Table-III network with seeded synthetic binary weights
     /// (see [`SessionLayerSpec::synthetic_network`]). A network that
-    /// cannot chain defers its typed error to [`SessionBuilder::build`].
+    /// cannot chain defers its typed error to [`SessionBuilder::build`]
+    /// — the non-chain networks (AlexNet's 11×11 split, ResNet's
+    /// shortcuts) run through [`SessionBuilder::graph`] instead, using
+    /// the graph encodings in [`crate::model::networks`]
+    /// (`alexnet_graph`, `resnet18_graph`, `resnet34_graph`).
     pub fn network(mut self, net: &Network, seed: u64) -> SessionBuilder {
         match SessionLayerSpec::synthetic_network(net, seed) {
             Ok(specs) => {
                 self.specs = specs;
+                self.graph = None;
                 self.deferred_err = None;
             }
             Err(e) => self.deferred_err = Some(e),
@@ -171,7 +175,38 @@ impl SessionBuilder {
     /// Run an explicit layer chain.
     pub fn layers(mut self, specs: Vec<SessionLayerSpec>) -> SessionBuilder {
         self.specs = specs;
+        self.graph = None;
         self.deferred_err = None;
+        self
+    }
+
+    /// Run a [`NetworkGraph`] — the graph IR that expresses what a
+    /// chain cannot: parallel kernel-split branches recombined off-chip
+    /// (AlexNet §IV-D), residual adds with projection shortcuts
+    /// (ResNet), stride-2 subsampling, channel concat. The graph is
+    /// compiled ([`NetworkGraph::compile`]) immediately; a graph that
+    /// does not type-check defers its typed error to
+    /// [`SessionBuilder::build`].
+    pub fn graph(mut self, g: &NetworkGraph) -> SessionBuilder {
+        match g.compile() {
+            Ok(cg) => {
+                self.graph = Some(cg);
+                self.specs = Vec::new();
+                self.deferred_err = None;
+            }
+            Err(e) => self.deferred_err = Some(e),
+        }
+        self
+    }
+
+    /// Override every conv layer's kernels and scale/bias with
+    /// caller-supplied [`Weights`], in layer (step) order — how real
+    /// trained BinaryConnect weights run over a network or graph whose
+    /// topology was described with seeded placeholders. Arity and
+    /// per-layer geometry (k, n_in, n_out) are validated at
+    /// [`SessionBuilder::build`] into typed errors.
+    pub fn weights(mut self, weights: Vec<Weights>) -> SessionBuilder {
+        self.weights = Some(weights);
         self
     }
 
@@ -235,8 +270,74 @@ impl SessionBuilder {
         if let Some(e) = self.deferred_err {
             return Err(e);
         }
-        if self.specs.is_empty() {
-            return Err(YodannError::NoLayers);
+        // Lower the model to one compiled plan: a graph was compiled
+        // (and type-checked) by `graph()`; a chain gets the historical
+        // eager checks here, then the shim lowering.
+        let mut plan: CompiledGraph = match self.graph {
+            Some(cg) => cg,
+            None => {
+                if self.specs.is_empty() {
+                    return Err(YodannError::NoLayers);
+                }
+                for (li, s) in self.specs.iter().enumerate() {
+                    if s.scale_bias.alpha.len() != s.kernels.n_out {
+                        return Err(YodannError::ScaleBiasArity {
+                            alphas: s.scale_bias.alpha.len(),
+                            n_out: s.kernels.n_out,
+                        }
+                        .at_layer(li));
+                    }
+                    if li > 0 && self.specs[li - 1].kernels.n_out != s.kernels.n_in {
+                        return Err(YodannError::ChannelChainMismatch {
+                            prev_out: self.specs[li - 1].kernels.n_out,
+                            n_in: s.kernels.n_in,
+                        }
+                        .at_layer(li));
+                    }
+                }
+                chain_compiled(&self.specs)
+            }
+        };
+        // `weights()` overrides every conv layer's parameters in plan
+        // order — caller-supplied (e.g. trained) weights over a seeded
+        // topology — with the layer geometry re-checked.
+        if let Some(ws) = self.weights {
+            if ws.len() != plan.convs.len() {
+                return Err(YodannError::WeightsArity {
+                    given: ws.len(),
+                    layers: plan.convs.len(),
+                });
+            }
+            for (li, (c, w)) in plan.convs.iter_mut().zip(ws).enumerate() {
+                if w.kernels.k != c.k
+                    || w.kernels.n_in != c.kernels.n_in
+                    || w.kernels.n_out != c.kernels.n_out
+                {
+                    return Err(YodannError::InvalidConfig {
+                        what: format!(
+                            "weights() layer {li} is {}->{} k{}, but the network's '{}' layer \
+                             is {}->{} k{}",
+                            w.kernels.n_in,
+                            w.kernels.n_out,
+                            w.kernels.k,
+                            c.label,
+                            c.kernels.n_in,
+                            c.kernels.n_out,
+                            c.k
+                        ),
+                    }
+                    .at_layer(li));
+                }
+                if w.scale_bias.alpha.len() != w.kernels.n_out {
+                    return Err(YodannError::ScaleBiasArity {
+                        alphas: w.scale_bias.alpha.len(),
+                        n_out: w.kernels.n_out,
+                    }
+                    .at_layer(li));
+                }
+                c.kernels = w.kernels;
+                c.scale_bias = w.scale_bias;
+            }
         }
         if self.workers == 0 {
             return Err(YodannError::InvalidConfig {
@@ -259,34 +360,14 @@ impl SessionBuilder {
                 ),
             });
         }
-        for (li, s) in self.specs.iter().enumerate() {
+        for (li, c) in plan.convs.iter().enumerate() {
             // The frame-independent geometry preconditions (k in 1..=7,
             // image memory holds one window); zero_pad/h=1 here skips the
             // per-frame height check, which `validate_frame` walks with
             // the real frame at submission time.
-            plan_geometry_check(&self.cfg, s.k, true, 1).map_err(|e| e.at_layer(li))?;
-            if s.scale_bias.alpha.len() != s.kernels.n_out {
-                return Err(YodannError::ScaleBiasArity {
-                    alphas: s.scale_bias.alpha.len(),
-                    n_out: s.kernels.n_out,
-                }
-                .at_layer(li));
-            }
-            if li > 0 && self.specs[li - 1].kernels.n_out != s.kernels.n_in {
-                return Err(YodannError::ChannelChainMismatch {
-                    prev_out: self.specs[li - 1].kernels.n_out,
-                    n_in: s.kernels.n_in,
-                }
-                .at_layer(li));
-            }
+            plan_geometry_check(&self.cfg, c.k, true, 1).map_err(|e| e.at_layer(li))?;
         }
-        let geom: Vec<LayerGeom> = self
-            .specs
-            .iter()
-            .map(|s| LayerGeom { k: s.k, zero_pad: s.zero_pad, maxpool2: s.maxpool2 })
-            .collect();
-        let n_in = self.specs[0].kernels.n_in;
-        let first = &self.specs[0];
+        let first = &plan.convs[0];
         let dual = self
             .dual_stream
             .unwrap_or(first.k < 6 && first.kernels.n_out > 32);
@@ -304,8 +385,13 @@ impl SessionBuilder {
             dual_stream: dual,
             envelope: MultiChipPower::at(self.corner.arch, v, chips, first.k),
         };
-        let session =
-            NetworkSession::spawn(self.cfg, self.engine, self.workers, self.policy, self.specs);
+        let session = NetworkSession::spawn_plan(
+            self.cfg,
+            self.engine,
+            self.workers,
+            self.policy,
+            plan.clone(),
+        );
         let (tx, rx) = channel::<Job>();
         let dispatcher = std::thread::spawn(move || dispatcher_loop(session, rx, ctx));
         Ok(Yodann {
@@ -314,8 +400,7 @@ impl SessionBuilder {
             in_flight: Arc::new(AtomicUsize::new(0)),
             next_id: 0,
             max_in_flight,
-            n_in,
-            geom,
+            plan: Arc::new(plan),
             engine: self.engine,
             policy: self.policy,
             workers: self.workers,
@@ -377,8 +462,7 @@ pub struct Yodann {
     in_flight: Arc<AtomicUsize>,
     next_id: u64,
     max_in_flight: usize,
-    n_in: usize,
-    geom: Vec<LayerGeom>,
+    plan: Arc<CompiledGraph>,
     engine: EngineKind,
     policy: ShardPolicy,
     workers: usize,
@@ -406,9 +490,9 @@ impl Yodann {
         self.workers
     }
 
-    /// Layers in the network.
+    /// Conv layers in the network plan.
     pub fn n_layers(&self) -> usize {
-        self.geom.len()
+        self.plan.convs.len()
     }
 
     /// Operating corner the telemetry is priced at.
@@ -426,39 +510,21 @@ impl Yodann {
         self.max_in_flight
     }
 
-    /// Validate a frame against the layer chain without running it: the
-    /// checks [`Yodann::submit`] performs, available for admission
-    /// control.
+    /// Validate a frame against the compiled network plan without
+    /// running it: the checks [`Yodann::submit`] performs, available
+    /// for admission control. The walk
+    /// ([`CompiledGraph::walk_shapes`]) carries (c, h, w) through every
+    /// conv segment and host-op interlude — valid-mode layers that run
+    /// out of pixels mid-network come back as typed
+    /// [`YodannError::NoOutputRows`] (per layer), graph joins whose
+    /// branches disagree as [`YodannError::GraphShapeMismatch`];
+    /// pre-redesign both were a worker panic (debug) or a usize wrap
+    /// (release).
     pub fn validate_frame(&self, frame: &Image) -> Result<(), YodannError> {
         if frame.c == 0 || frame.h == 0 || frame.w == 0 {
             return Err(YodannError::EmptyFrame { c: frame.c, h: frame.h, w: frame.w });
         }
-        if frame.c != self.n_in {
-            return Err(YodannError::FrameChannelMismatch { got: frame.c, expected: self.n_in });
-        }
-        // Walk the chain's geometry: valid-mode layers shrink the map and
-        // can run out of pixels mid-network; pre-redesign that was a
-        // worker panic (debug) or a usize wrap (release).
-        let (mut h, mut w) = (frame.h, frame.w);
-        for (li, g) in self.geom.iter().enumerate() {
-            if !g.zero_pad {
-                if h < g.k {
-                    return Err(YodannError::NoOutputRows { k: g.k, axis: "height", size: h }
-                        .at_layer(li));
-                }
-                if w < g.k {
-                    return Err(YodannError::NoOutputRows { k: g.k, axis: "width", size: w }
-                        .at_layer(li));
-                }
-                h = h - g.k + 1;
-                w = w - g.k + 1;
-            }
-            if g.maxpool2 && h >= 2 && w >= 2 {
-                h /= 2;
-                w /= 2;
-            }
-        }
-        Ok(())
+        self.plan.walk_shapes(frame.c, frame.h, frame.w).map(|_| ())
     }
 
     /// Submit one frame for inference, **without blocking**: the frame
@@ -626,6 +692,72 @@ mod tests {
             .workers(1)
             .build();
         assert!(ok.is_ok(), "{:?}", ok.err());
+    }
+
+    #[test]
+    fn graph_sessions_build_and_validate_eagerly() {
+        use crate::model::graph::NetworkBuilder;
+        // A residual graph builds into a serving session.
+        let mut g = Gen::new(21);
+        let mut b = NetworkBuilder::new("res", 3);
+        let x = b.input();
+        let main = b.conv("c1", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let proj = b.conv("p", x, true, Weights::seeded(&mut g, 4, 3, 1));
+        let sum = b.add("add", &[main, proj]);
+        let graph = b.build(sum);
+        let mut sess =
+            SessionBuilder::new().graph(&graph).workers(2).build().expect("graph builds");
+        assert_eq!(sess.n_layers(), 2);
+        let r = sess.submit(Image::zeros(3, 6, 6)).unwrap().wait().unwrap();
+        assert_eq!((r.output.c, r.output.h, r.output.w), (4, 6, 6));
+        // A graph that fails to compile defers its typed error to build.
+        let mut g = Gen::new(22);
+        let mut b = NetworkBuilder::new("bad", 3);
+        let x = b.input();
+        let c = b.conv("c1", x, true, Weights::seeded(&mut g, 4, 5, 3)); // wants 5 channels
+        let bad = b.build(c);
+        let e = SessionBuilder::new().graph(&bad).build().unwrap_err();
+        assert!(matches!(&e, YodannError::AtNode { node, inner }
+            if node == "c1"
+                && matches!(**inner, YodannError::ChannelChainMismatch { prev_out: 3, n_in: 5 })));
+    }
+
+    #[test]
+    fn weights_override_is_validated_and_applied() {
+        // Supplying too few weight sets is a typed arity error.
+        let e = SessionBuilder::new()
+            .layers(vec![spec(3, 3, 4, true, 31), spec(3, 4, 2, true, 32)])
+            .weights(vec![])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, YodannError::WeightsArity { given: 0, layers: 2 });
+        // A geometry mismatch names the layer.
+        let mut g = Gen::new(33);
+        let wrong = Weights::seeded(&mut g, 4, 3, 5); // k5 where the layer is k3
+        let e = SessionBuilder::new()
+            .layers(vec![spec(3, 3, 4, true, 31)])
+            .weights(vec![wrong])
+            .build()
+            .unwrap_err();
+        assert!(matches!(&e, YodannError::AtLayer { layer: 0, inner }
+            if matches!(**inner, YodannError::InvalidConfig { .. })));
+        // Matching weights actually land: an all-+1 1×1 kernel with
+        // identity scale makes the layer the per-pixel channel sum.
+        let w = Weights::new(
+            Arc::new(BinaryKernels::all_plus(1, 2, 1)),
+            Arc::new(ScaleBias::identity(1)),
+        );
+        let mut sess = SessionBuilder::new()
+            .layers(vec![spec(1, 2, 1, true, 34)])
+            .weights(vec![w])
+            .workers(1)
+            .build()
+            .unwrap();
+        let mut frame = Image::zeros(2, 1, 1);
+        *frame.at_mut(0, 0, 0) = 100;
+        *frame.at_mut(1, 0, 0) = 23;
+        let r = sess.submit(frame).unwrap().wait().unwrap();
+        assert_eq!(r.output.at(0, 0, 0), 123);
     }
 
     #[test]

@@ -32,6 +32,17 @@
 //!   worker run per-frame; smaller batches shard each frame across the
 //!   whole pool (`workers × 1` stripes).
 //!
+//! Since the graph-IR redesign the session no longer walks a flat layer
+//! chain: it **interprets a compiled step program**
+//! ([`CompiledGraph`]) of conv segments and host-op interludes
+//! (quantized ReLU, 2×2 max-pool, stride-2 subsample, residual add,
+//! channel concat) over a slot-addressed value store — which is what
+//! lets AlexNet's parallel 11×11 split and ResNet's shortcut graphs run
+//! through the same worker pool, raster packing and sharding machinery
+//! as a chain. Flat [`SessionLayerSpec`] chains lower into the same
+//! program (one conv step per layer plus its ReLU/pool interludes), so
+//! the historical surface is a shim with byte-identical outputs.
+//!
 //! The per-layer numerical pipeline is exactly the executor's:
 //! plan → engine blocks → off-chip wide accumulation → final α/β
 //! (Algorithm 1 line 37), and the i64 stitch reduction is
@@ -53,6 +64,7 @@ use crate::engine::{
 };
 use crate::fixedpoint::Q2_9;
 use crate::hw::{ChipConfig, ChipStats};
+use crate::model::graph::{compute_free_after, CompiledGraph, PlanConv, PlanStep};
 use crate::model::Network;
 use crate::testkit::Gen;
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -136,11 +148,98 @@ impl SessionLayerSpec {
     }
 }
 
-/// Internal per-layer state: the spec plus the session-wide packed
-/// kernel words (packed only for engines that consume them).
+/// Internal per-conv-layer state: the lowered conv plus the
+/// session-wide packed kernel words (packed only for engines that
+/// consume them).
 struct SessionLayer {
-    spec: SessionLayerSpec,
+    conv: PlanConv,
     packed: Option<Arc<PackedKernels>>,
+}
+
+/// The executable form of a network inside a session: the
+/// [`CompiledGraph`] step program with every conv layer's kernels
+/// packed once for the session's engine kind. Shared (`Arc`) by every
+/// worker.
+struct SessionPlan {
+    convs: Vec<SessionLayer>,
+    steps: Vec<PlanStep>,
+    n_slots: usize,
+    input_slot: usize,
+    output_slot: usize,
+    free_after: Vec<Vec<usize>>,
+}
+
+impl SessionPlan {
+    fn from_compiled(kind: EngineKind, cg: CompiledGraph) -> SessionPlan {
+        let convs = cg
+            .convs
+            .into_iter()
+            .map(|conv| {
+                let packed =
+                    kind.wants_packed().then(|| Arc::new(PackedKernels::pack(&conv.kernels)));
+                SessionLayer { conv, packed }
+            })
+            .collect();
+        SessionPlan {
+            convs,
+            steps: cg.steps,
+            n_slots: cg.n_slots,
+            input_slot: cg.input_slot,
+            output_slot: cg.output_slot,
+            free_after: cg.free_after,
+        }
+    }
+}
+
+/// Lower a flat chain of [`SessionLayerSpec`]s into the step program
+/// the session interprets: per layer one conv step plus its optional
+/// ReLU / max-pool interludes, outputs in fresh slots. This is the shim
+/// that keeps the historical chain surface byte-identical — the
+/// interludes run in exactly the order the pre-graph session applied
+/// them.
+pub(crate) fn chain_compiled(specs: &[SessionLayerSpec]) -> CompiledGraph {
+    let mut convs = Vec::with_capacity(specs.len());
+    let mut steps: Vec<PlanStep> = Vec::new();
+    let mut step_labels: Vec<String> = Vec::new();
+    let mut slot = 0usize;
+    let mut next = 1usize;
+    for (i, s) in specs.iter().enumerate() {
+        convs.push(PlanConv {
+            k: s.k,
+            zero_pad: s.zero_pad,
+            kernels: Arc::clone(&s.kernels),
+            scale_bias: Arc::clone(&s.scale_bias),
+            label: format!("conv{i}"),
+        });
+        steps.push(PlanStep::Conv { conv: i, src: slot, dst: next });
+        step_labels.push(format!("conv{i}"));
+        slot = next;
+        next += 1;
+        if s.relu {
+            steps.push(PlanStep::Relu { src: slot, dst: next });
+            step_labels.push(format!("relu{i}"));
+            slot = next;
+            next += 1;
+        }
+        if s.maxpool2 {
+            steps.push(PlanStep::MaxPool2 { src: slot, dst: next });
+            step_labels.push(format!("maxpool{i}"));
+            slot = next;
+            next += 1;
+        }
+    }
+    let free_after = compute_free_after(&steps, next, slot);
+    CompiledGraph {
+        name: "chain".into(),
+        n_in: specs[0].kernels.n_in,
+        convs,
+        steps,
+        step_labels,
+        n_slots: next,
+        input_slot: 0,
+        output_slot: slot,
+        free_after,
+    }
 }
 
 /// Owned, `Arc`-shared view of the layer currently being sharded across
@@ -203,7 +302,7 @@ pub struct NetworkSession {
     tx: Option<Sender<Task>>,
     rx_out: Receiver<Reply>,
     handles: Vec<JoinHandle<()>>,
-    layers: Arc<Vec<SessionLayer>>,
+    plan: Arc<SessionPlan>,
     workers: usize,
     engine: EngineKind,
     policy: ShardPolicy,
@@ -240,12 +339,11 @@ impl NetworkSession {
         NetworkSession::spawn(cfg, kind, workers, policy, specs)
     }
 
-    /// Build a session: validates the layer chain (panicking on bad
-    /// specs — the [`crate::api::SessionBuilder`] validates the same
-    /// conditions eagerly into typed errors first), packs every layer's
-    /// kernels once, and spins up `workers` threads each owning one
-    /// engine of `kind`. `policy` picks the batch schedule; outputs are
-    /// bit-identical under every policy.
+    /// Build a session from a layer chain: validates it (panicking on
+    /// bad specs — the [`crate::api::SessionBuilder`] validates the
+    /// same conditions eagerly into typed errors first), lowers it into
+    /// the step program, and spawns the pool. `policy` picks the batch
+    /// schedule; outputs are bit-identical under every policy.
     pub(crate) fn spawn(
         cfg: ChipConfig,
         kind: EngineKind,
@@ -269,18 +367,26 @@ impl NetworkSession {
                 );
             }
         }
-        let n_in = specs[0].kernels.n_in;
+        NetworkSession::spawn_plan(cfg, kind, workers, policy, chain_compiled(&specs))
+    }
+
+    /// Build a session from a compiled network plan (a lowered
+    /// [`NetworkGraph`](crate::model::graph::NetworkGraph) or a chain
+    /// shim): packs every conv layer's kernels once for the engine
+    /// kind, and spins up `workers` threads each owning one engine of
+    /// `kind`, all interpreting the same `Arc`-shared step program.
+    pub(crate) fn spawn_plan(
+        cfg: ChipConfig,
+        kind: EngineKind,
+        workers: usize,
+        policy: ShardPolicy,
+        compiled: CompiledGraph,
+    ) -> NetworkSession {
+        assert!(!compiled.convs.is_empty(), "session needs at least one conv layer");
+        let n_in = compiled.n_in;
         // Pack once per session, only when the engine consumes the packed
         // form (the cycle-accurate engine materializes jobs instead).
-        let layers: Vec<SessionLayer> = specs
-            .into_iter()
-            .map(|spec| {
-                let packed =
-                    kind.wants_packed().then(|| Arc::new(PackedKernels::pack(&spec.kernels)));
-                SessionLayer { spec, packed }
-            })
-            .collect();
-        let layers = Arc::new(layers);
+        let plan = Arc::new(SessionPlan::from_compiled(kind, compiled));
         let workers = workers.max(1);
         let (tx, rx_in) = channel::<Task>();
         let rx_in = Arc::new(Mutex::new(rx_in));
@@ -289,9 +395,9 @@ impl NetworkSession {
         for _ in 0..workers {
             let rx = Arc::clone(&rx_in);
             let tx_out = tx_out.clone();
-            let layers = Arc::clone(&layers);
+            let plan = Arc::clone(&plan);
             handles.push(std::thread::spawn(move || {
-                worker_loop(cfg, kind, &rx, &tx_out, &layers);
+                worker_loop(cfg, kind, &rx, &tx_out, &plan);
             }));
         }
         NetworkSession {
@@ -299,7 +405,7 @@ impl NetworkSession {
             tx: Some(tx),
             rx_out,
             handles,
-            layers,
+            plan,
             workers,
             engine: kind,
             policy,
@@ -331,9 +437,9 @@ impl NetworkSession {
         self.policy = policy;
     }
 
-    /// Layers in the network.
+    /// Conv layers in the network plan.
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        self.plan.convs.len()
     }
 
     /// Sharded-schedule raster packs that had to grow the caller-side
@@ -425,102 +531,169 @@ impl NetworkSession {
             .collect()
     }
 
-    /// Carry one frame through every layer, fanning each layer's shards
-    /// out across the pool: raster pack (shared, caller-side scratch) →
-    /// shard plans → pool fan-out → wide stitch reduction → final α/β →
-    /// ReLU / max-pool. Identical numerics to the per-frame path.
+    /// Carry one frame through the step program, fanning each conv
+    /// step's shards out across the pool (raster pack into shared,
+    /// caller-side scratch → shard plans → pool fan-out → wide stitch
+    /// reduction → final α/β) and computing the host-op interludes
+    /// (ReLU / pools / subsample / add / concat) inline. Identical
+    /// numerics to the per-frame path.
     fn run_frame_sharded(&mut self, fidx: usize, frame: Image, grid: ShardGrid) -> TracedFrame {
-        let layers = Arc::clone(&self.layers);
-        let mut acc = std::mem::take(&mut self.shard_acc);
+        let plan = Arc::clone(&self.plan);
         let mut frame_stats = ChipStats::default();
-        let mut x = Arc::new(frame);
-        for (li, layer) in layers.iter().enumerate() {
-            let spec = &layer.spec;
-            assert_eq!(
-                x.c, spec.kernels.n_in,
-                "layer {li}: frame has {} channels, kernels expect {}",
-                x.c, spec.kernels.n_in
-            );
-            let n_out = spec.kernels.n_out;
-            check_plan_geometry(&self.cfg, spec.k, spec.zero_pad, x.h);
-            check_width_geometry(spec.zero_pad, spec.k, x.w);
-            let (out_h, out_w) = if spec.zero_pad {
-                (x.h, x.w)
-            } else {
-                (x.h - spec.k + 1, x.w - spec.k + 1)
+        let mut slots: Vec<Option<Arc<Image>>> = (0..plan.n_slots).map(|_| None).collect();
+        slots[plan.input_slot] = Some(Arc::new(frame));
+        for (si, step) in plan.steps.iter().enumerate() {
+            let out: Arc<Image> = match step {
+                PlanStep::Conv { conv, src, .. } => {
+                    let x = Arc::clone(slots[*src].as_ref().expect("topological order"));
+                    let y = self.run_conv_sharded(
+                        fidx,
+                        *conv,
+                        &plan.convs[*conv],
+                        x,
+                        grid,
+                        &mut frame_stats,
+                    );
+                    Arc::new(y)
+                }
+                PlanStep::Relu { src, .. } => {
+                    // Steal the Arc on the source's last use so the
+                    // unwrap mutates in place (zero-copy, like the
+                    // pre-graph epilogue); clone only on fan-out.
+                    let arc = if plan.free_after[si].contains(src) {
+                        slots[*src].take().expect("topological order")
+                    } else {
+                        Arc::clone(slots[*src].as_ref().expect("topological order"))
+                    };
+                    let mut y = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+                    relu_inplace(&mut y);
+                    Arc::new(y)
+                }
+                PlanStep::MaxPool2 { src, .. } => {
+                    Arc::new(maybe_maxpool2(slots[*src].as_ref().expect("topological order")))
+                }
+                PlanStep::Subsample2 { src, .. } => {
+                    Arc::new(subsample2(slots[*src].as_ref().expect("topological order")))
+                }
+                PlanStep::Add { srcs, .. } => {
+                    let imgs: Vec<&Image> = srcs
+                        .iter()
+                        .map(|&s| &**slots[s].as_ref().expect("topological order"))
+                        .collect();
+                    Arc::new(add_wide_saturating(&imgs))
+                }
+                PlanStep::Concat { srcs, .. } => {
+                    let imgs: Vec<&Image> = srcs
+                        .iter()
+                        .map(|&s| &**slots[s].as_ref().expect("topological order"))
+                        .collect();
+                    Arc::new(concat_channels(&imgs))
+                }
             };
-            // Pack this layer's activations once into the caller-side
-            // reusable scratch; every shard reads it through the Arc.
-            // Packing happens *in place* so a panic mid-pack (e.g. the
-            // Q2.9 range debug_assert) leaves the scratch owned by the
-            // session instead of dropped with the unwind.
-            let raster = self.engine.wants_raster().then(|| {
-                let r = self.shard_raster.get_or_insert_with(BitplaneRaster::new);
-                r.pack(&x, spec.k, spec.zero_pad);
-                Arc::new(std::mem::take(r))
-            });
-            let shards = plan_layer_shards(grid, out_h, n_out);
-            let sl = Arc::new(ShardLayer {
-                k: spec.k,
-                zero_pad: spec.zero_pad,
-                input: Arc::clone(&x),
-                kernels: Arc::clone(&spec.kernels),
-                packed: layer.packed.clone(),
-                raster: raster.clone(),
-                scale_bias: Arc::clone(&spec.scale_bias),
-            });
-            let tx = self.tx.as_ref().expect("session already shut down");
-            for s in &shards {
-                let plans = shard_block_plans(&self.cfg, spec.k, spec.zero_pad, x.c, x.h, s);
-                tx.send(Task::Shard { shard: s.index, plans, layer: Arc::clone(&sl) })
-                    .expect("worker pool died");
+            slots[step.dst()] = Some(out);
+            for &f in &plan.free_after[si] {
+                slots[f] = None;
             }
-            acc.clear();
-            acc.resize(n_out * out_h * out_w, 0);
-            let mut single_in_block = true;
-            let mut first_err: Option<String> = None;
-            for _ in 0..shards.len() {
-                match self.rx_out.recv().expect("worker pool died") {
-                    Reply::Shard(_, Ok(results)) => {
-                        for (plan, r) in &results {
-                            frame_stats.merge(&r.stats);
-                            if plan.in_blocks > 1 {
-                                single_in_block = false;
-                            }
-                            reduce_block(
-                                &mut acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output,
-                            );
-                        }
-                    }
-                    Reply::Shard(s, Err(e)) => {
-                        if first_err.is_none() {
-                            first_err = Some(format!("shard {s}: {e}"));
-                        }
-                    }
-                    Reply::Frame(..) => unreachable!("frame reply during a sharded layer"),
-                }
-            }
-            // Reclaim the raster scratch: workers drop their ShardLayer
-            // Arc before replying, so after the last reply the caller's
-            // `sl` is the only owner and the unwraps below are
-            // deterministic.
-            drop(sl);
-            if let Some(arc) = raster {
-                if let Ok(r) = Arc::try_unwrap(arc) {
-                    self.shard_raster = Some(r);
-                }
-            }
-            if let Some(e) = first_err {
-                self.shard_acc = acc;
-                panic!("frame {fidx}, sharded layer {li} failed in a session worker: {e}");
-            }
-            x = Arc::new(finalize_layer(spec, &acc, single_in_block, out_h, out_w));
         }
-        self.shard_acc = acc;
+        let out = slots[plan.output_slot].take().expect("plan writes its output");
         TracedFrame {
-            output: Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone()),
+            output: Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()),
             stats: frame_stats,
         }
+    }
+
+    /// One sharded conv step: the layer's output striped across `grid`,
+    /// every shard resolving its halo against one shared caller-side
+    /// raster, stitched back through the executor's wide reduction.
+    fn run_conv_sharded(
+        &mut self,
+        fidx: usize,
+        li: usize,
+        layer: &SessionLayer,
+        x: Arc<Image>,
+        grid: ShardGrid,
+        frame_stats: &mut ChipStats,
+    ) -> Image {
+        let spec = &layer.conv;
+        assert_eq!(
+            x.c, spec.kernels.n_in,
+            "layer {li}: frame has {} channels, kernels expect {}",
+            x.c, spec.kernels.n_in
+        );
+        let n_out = spec.kernels.n_out;
+        check_plan_geometry(&self.cfg, spec.k, spec.zero_pad, x.h);
+        check_width_geometry(spec.zero_pad, spec.k, x.w);
+        let (out_h, out_w) =
+            if spec.zero_pad { (x.h, x.w) } else { (x.h - spec.k + 1, x.w - spec.k + 1) };
+        // Pack this layer's activations once into the caller-side
+        // reusable scratch; every shard reads it through the Arc.
+        // Packing happens *in place* so a panic mid-pack (e.g. the
+        // Q2.9 range debug_assert) leaves the scratch owned by the
+        // session instead of dropped with the unwind.
+        let raster = self.engine.wants_raster().then(|| {
+            let r = self.shard_raster.get_or_insert_with(BitplaneRaster::new);
+            r.pack(&x, spec.k, spec.zero_pad);
+            Arc::new(std::mem::take(r))
+        });
+        let shards = plan_layer_shards(grid, out_h, n_out);
+        let sl = Arc::new(ShardLayer {
+            k: spec.k,
+            zero_pad: spec.zero_pad,
+            input: Arc::clone(&x),
+            kernels: Arc::clone(&spec.kernels),
+            packed: layer.packed.clone(),
+            raster: raster.clone(),
+            scale_bias: Arc::clone(&spec.scale_bias),
+        });
+        let tx = self.tx.as_ref().expect("session already shut down");
+        for s in &shards {
+            let plans = shard_block_plans(&self.cfg, spec.k, spec.zero_pad, x.c, x.h, s);
+            tx.send(Task::Shard { shard: s.index, plans, layer: Arc::clone(&sl) })
+                .expect("worker pool died");
+        }
+        let mut acc = std::mem::take(&mut self.shard_acc);
+        acc.clear();
+        acc.resize(n_out * out_h * out_w, 0);
+        let mut single_in_block = true;
+        let mut first_err: Option<String> = None;
+        for _ in 0..shards.len() {
+            match self.rx_out.recv().expect("worker pool died") {
+                Reply::Shard(_, Ok(results)) => {
+                    for (plan, r) in &results {
+                        frame_stats.merge(&r.stats);
+                        if plan.in_blocks > 1 {
+                            single_in_block = false;
+                        }
+                        reduce_block(
+                            &mut acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output,
+                        );
+                    }
+                }
+                Reply::Shard(s, Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(format!("shard {s}: {e}"));
+                    }
+                }
+                Reply::Frame(..) => unreachable!("frame reply during a sharded layer"),
+            }
+        }
+        // Reclaim the raster scratch: workers drop their ShardLayer
+        // Arc before replying, so after the last reply the caller's
+        // `sl` is the only owner and the unwraps below are
+        // deterministic.
+        drop(sl);
+        if let Some(arc) = raster {
+            if let Ok(r) = Arc::try_unwrap(arc) {
+                self.shard_raster = Some(r);
+            }
+        }
+        if let Some(e) = first_err {
+            self.shard_acc = acc;
+            panic!("frame {fidx}, sharded layer {li} failed in a session worker: {e}");
+        }
+        let y = finalize_output(&acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w);
+        self.shard_acc = acc;
+        y
     }
 }
 
@@ -542,7 +715,7 @@ fn worker_loop(
     kind: EngineKind,
     rx: &Mutex<Receiver<Task>>,
     tx_out: &Sender<Reply>,
-    layers: &[SessionLayer],
+    plan: &SessionPlan,
 ) {
     let mut engine = kind.build(cfg);
     let mut acc: Vec<i64> = Vec::new();
@@ -565,7 +738,7 @@ fn worker_loop(
         match task {
             Task::Frame(idx, frame) => {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_frame_inner(&cfg, &mut *engine, layers, frame, &mut acc, &mut raster)
+                    run_frame_inner(&cfg, &mut *engine, plan, frame, &mut acc, &mut raster)
                 }))
                 .map_err(panic_message);
                 if out.is_err() {
@@ -599,97 +772,195 @@ fn worker_loop(
     }
 }
 
-/// Carry one frame through every layer on one engine: per layer,
-/// raster pack (engines that want one) → plan → blocks → wide reduction
-/// (reusing `acc`) → final α/β → ReLU / max-pool. Identical numerics to
-/// `run_layer_engine`, minus the clones; the frame's activity ledger is
-/// merged across every block of every layer.
+/// Carry one frame through the step program on one engine: conv steps
+/// run raster pack (engines that want one) → plan → blocks → wide
+/// reduction (reusing `acc`) → final α/β; host-op interludes compute in
+/// place over the slot store. Identical numerics to `run_layer_engine`
+/// plus the host composition; the frame's activity ledger is merged
+/// across every block of every conv step.
 fn run_frame_inner(
     cfg: &ChipConfig,
     engine: &mut dyn ConvEngine,
-    layers: &[SessionLayer],
+    plan: &SessionPlan,
     frame: Image,
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
 ) -> TracedFrame {
     let mut stats = ChipStats::default();
-    let mut x = frame;
-    for (li, layer) in layers.iter().enumerate() {
-        let spec = &layer.spec;
-        assert_eq!(
-            x.c, spec.kernels.n_in,
-            "layer {li}: frame has {} channels, kernels expect {}",
-            x.c, spec.kernels.n_in
-        );
-        let n_out = spec.kernels.n_out;
-        // Plan first: plan_layer's geometry guard fires before the
-        // output shape math can underflow (valid-mode h < k); the width
-        // guard covers the out_w mirror.
-        let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
-        check_width_geometry(spec.zero_pad, spec.k, x.w);
-        let (out_h, out_w) = if spec.zero_pad {
-            (x.h, x.w)
-        } else {
-            (x.h - spec.k + 1, x.w - spec.k + 1)
-        };
-        // Pack this layer's activations once into the worker's reusable
-        // raster scratch; every block of the layer then slices windows
-        // out of it by shifts.
-        let wants_raster = engine.wants_raster();
-        if wants_raster {
-            raster.pack(&x, spec.k, spec.zero_pad);
-        }
-        let data = LayerData {
-            k: spec.k,
-            zero_pad: spec.zero_pad,
-            input: &x,
-            kernels: &spec.kernels,
-            packed: layer.packed.as_deref(),
-            raster: wants_raster.then_some(&*raster),
-            scale_bias: &spec.scale_bias,
-        };
-        acc.clear();
-        acc.resize(n_out * out_h * out_w, 0);
-        let mut single_in_block = true;
-        for plan in &plans {
-            let r = engine.run_plan(&data, plan);
-            stats.merge(&r.stats);
-            if plan.in_blocks > 1 {
-                single_in_block = false;
+    let mut slots: Vec<Option<Image>> = (0..plan.n_slots).map(|_| None).collect();
+    slots[plan.input_slot] = Some(frame);
+    for (si, step) in plan.steps.iter().enumerate() {
+        let out = match step {
+            PlanStep::Conv { conv, src, .. } => {
+                let x = slots[*src].as_ref().expect("topological order");
+                run_conv_layer(cfg, engine, *conv, &plan.convs[*conv], x, acc, raster, &mut stats)
             }
-            reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
+            PlanStep::Relu { src, .. } => {
+                // When this step is the source's last use (always, for
+                // the chain shim) steal the map and ReLU in place —
+                // the historical zero-copy behavior; cloning is only
+                // needed for graphs that fan the value out further.
+                let mut y = if plan.free_after[si].contains(src) {
+                    slots[*src].take().expect("topological order")
+                } else {
+                    slots[*src].clone().expect("topological order")
+                };
+                relu_inplace(&mut y);
+                y
+            }
+            PlanStep::MaxPool2 { src, .. } => {
+                maybe_maxpool2(slots[*src].as_ref().expect("topological order"))
+            }
+            PlanStep::Subsample2 { src, .. } => {
+                subsample2(slots[*src].as_ref().expect("topological order"))
+            }
+            PlanStep::Add { srcs, .. } => {
+                let imgs: Vec<&Image> =
+                    srcs.iter().map(|&s| slots[s].as_ref().expect("topological order")).collect();
+                add_wide_saturating(&imgs)
+            }
+            PlanStep::Concat { srcs, .. } => {
+                let imgs: Vec<&Image> =
+                    srcs.iter().map(|&s| slots[s].as_ref().expect("topological order")).collect();
+                concat_channels(&imgs)
+            }
+        };
+        slots[step.dst()] = Some(out);
+        for &f in &plan.free_after[si] {
+            slots[f] = None;
         }
-        x = finalize_layer(spec, acc, single_in_block, out_h, out_w);
     }
-    TracedFrame { output: x, stats }
+    TracedFrame {
+        output: slots[plan.output_slot].take().expect("plan writes its output"),
+        stats,
+    }
 }
 
-/// The shared inter-layer epilogue of both schedules: final α/β over the
-/// reduced wide accumulator, then the layer's quantized ReLU and 2×2
-/// max-pool. One copy keeps the per-frame and per-shard paths
-/// bit-identical by construction.
-fn finalize_layer(
-    spec: &SessionLayerSpec,
-    acc: &[i64],
-    single_in_block: bool,
-    out_h: usize,
-    out_w: usize,
+/// One conv step on one engine: plan → blocks → wide reduction → final
+/// α/β, reusing the worker's accumulator and raster scratch.
+#[allow(clippy::too_many_arguments)] // the worker's whole scratch set, threaded explicitly
+fn run_conv_layer(
+    cfg: &ChipConfig,
+    engine: &mut dyn ConvEngine,
+    li: usize,
+    layer: &SessionLayer,
+    x: &Image,
+    acc: &mut Vec<i64>,
+    raster: &mut BitplaneRaster,
+    stats: &mut ChipStats,
 ) -> Image {
-    let mut y = finalize_output(
-        acc,
-        single_in_block,
-        &spec.scale_bias,
-        spec.kernels.n_out,
-        out_h,
-        out_w,
+    let spec = &layer.conv;
+    assert_eq!(
+        x.c, spec.kernels.n_in,
+        "layer {li}: frame has {} channels, kernels expect {}",
+        x.c, spec.kernels.n_in
     );
-    if spec.relu {
-        y.data.iter_mut().for_each(|v| *v = (*v).max(0));
+    let n_out = spec.kernels.n_out;
+    // Plan first: plan_layer's geometry guard fires before the
+    // output shape math can underflow (valid-mode h < k); the width
+    // guard covers the out_w mirror.
+    let plans = plan_layer(cfg, spec.k, spec.zero_pad, x.c, n_out, x.h);
+    check_width_geometry(spec.zero_pad, spec.k, x.w);
+    let (out_h, out_w) =
+        if spec.zero_pad { (x.h, x.w) } else { (x.h - spec.k + 1, x.w - spec.k + 1) };
+    // Pack this layer's activations once into the worker's reusable
+    // raster scratch; every block of the layer then slices windows
+    // out of it by shifts.
+    let wants_raster = engine.wants_raster();
+    if wants_raster {
+        raster.pack(x, spec.k, spec.zero_pad);
     }
-    if spec.maxpool2 && y.h >= 2 && y.w >= 2 {
-        y = maxpool2(&y);
+    let data = LayerData {
+        k: spec.k,
+        zero_pad: spec.zero_pad,
+        input: x,
+        kernels: &spec.kernels,
+        packed: layer.packed.as_deref(),
+        raster: wants_raster.then_some(&*raster),
+        scale_bias: &spec.scale_bias,
+    };
+    acc.clear();
+    acc.resize(n_out * out_h * out_w, 0);
+    let mut single_in_block = true;
+    for plan in &plans {
+        let r = engine.run_plan(&data, plan);
+        stats.merge(&r.stats);
+        if plan.in_blocks > 1 {
+            single_in_block = false;
+        }
+        reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
     }
-    y
+    finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w)
+}
+
+/// Quantized ReLU (`max(0, ·)` on raw Q2.9), the host interlude between
+/// accelerator layers.
+fn relu_inplace(img: &mut Image) {
+    img.data.iter_mut().for_each(|v| *v = (*v).max(0));
+}
+
+/// The 2×2 max-pool interlude: identity when the map is smaller than
+/// 2×2 (matching the chain shim's historical behavior and the shape
+/// walk in [`CompiledGraph::walk_shapes`]).
+fn maybe_maxpool2(img: &Image) -> Image {
+    if img.h >= 2 && img.w >= 2 {
+        maxpool2(img)
+    } else {
+        img.clone()
+    }
+}
+
+/// Stride-2 subsample: keep the pixels at even coordinates — how a
+/// stride-2 convolution runs on the stride-less accelerator (computed
+/// at stride 1, subsampled off-chip).
+fn subsample2(img: &Image) -> Image {
+    let mut out = Image::zeros(img.c, img.h.div_ceil(2), img.w.div_ceil(2));
+    for c in 0..img.c {
+        for y in 0..out.h {
+            for x in 0..out.w {
+                *out.at_mut(c, y, x) = img.at(c, 2 * y, 2 * x);
+            }
+        }
+    }
+    out
+}
+
+/// Residual add: wide integer sum of every branch, saturated once to
+/// Q2.9 — host accumulators are not the chip's 12-bit datapath, so the
+/// only quantization is the final writeback.
+fn add_wide_saturating(imgs: &[&Image]) -> Image {
+    let first = imgs[0];
+    let mut out = first.clone();
+    for img in &imgs[1..] {
+        assert_eq!(
+            (img.c, img.h, img.w),
+            (first.c, first.h, first.w),
+            "residual-add branches must agree in shape"
+        );
+        for (o, v) in out.data.iter_mut().zip(img.data.iter()) {
+            *o += *v;
+        }
+    }
+    out.data.iter_mut().for_each(|v| *v = Q2_9.saturate(*v));
+    out
+}
+
+/// Channel-wise concatenation of branches with identical H×W.
+fn concat_channels(imgs: &[&Image]) -> Image {
+    let (h, w) = (imgs[0].h, imgs[0].w);
+    let c_total = imgs.iter().map(|i| i.c).sum();
+    let mut out = Image::zeros(c_total, h, w);
+    let mut base = 0;
+    for img in imgs {
+        assert_eq!((img.h, img.w), (h, w), "concat branches must agree on HxW");
+        for c in 0..img.c {
+            for y in 0..h {
+                out.row_mut(base + c, y).copy_from_slice(img.row(c, y));
+            }
+        }
+        base += img.c;
+    }
+    out
 }
 
 /// Best-effort panic payload → message (shared with the serving

@@ -27,8 +27,12 @@
 //!   (accounting vs throughput).
 //! * [`power`] — analytic voltage/frequency/power/area models calibrated to
 //!   the paper's reported corners (Table I/II, Figs. 6, 11, 12).
-//! * [`model`] — CNN layer/network descriptors (all networks of Table III)
-//!   and the paper's throughput-efficiency analytics (Eqs. 6–11).
+//! * [`model`] — CNN layer/network descriptors (all networks of Table III),
+//!   the paper's throughput-efficiency analytics (Eqs. 6–11), and the
+//!   graph-based network IR ([`model::graph`]): a typed DAG of conv nodes
+//!   and host ops (ReLU, pools, stride-2 subsample, residual add, concat)
+//!   with a validating `compile()` lowering — how AlexNet's 11×11 split
+//!   and ResNet's shortcut topologies actually run.
 //! * [`coordinator`] — the L3 off-chip orchestration: channel blocking,
 //!   vertical image tiling, streaming, off-chip partial-sum accumulation,
 //!   multi-chip sharded execution (`ShardGrid` stripes × channel groups

@@ -15,7 +15,7 @@
 
 use std::time::Instant;
 
-use yodann::api::{SessionBuilder, YodannError};
+use yodann::api::{SessionBuilder, Yodann, YodannError};
 use yodann::bench::{merge_json, validate_records, JsonRecord};
 use yodann::cli::Args;
 #[cfg(feature = "golden")]
@@ -23,7 +23,7 @@ use yodann::coordinator::check_block;
 use yodann::coordinator::{metrics::sim_metrics, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::EngineKind;
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
-use yodann::model::{evaluate_network, networks, Corner};
+use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph};
 use yodann::power::{ArchId, CorePowerModel};
 use yodann::report::{figures, paper, table::fmt, tables};
 use yodann::testkit::Gen;
@@ -94,14 +94,26 @@ fn print_help() {
          \x20                             shard-scaling records into BENCH_engines.json.\n\
          \x20                             Cycle-accurate runs also merge per-frame\n\
          \x20                             telemetry records (id, cycles, energy, policy;\n\
-         \x20                             first 8 frames) into BENCH_engines.json\n\
-         \x20 networks                    list the networks of Tables III–V"
+         \x20                             first 8 frames) into BENCH_engines.json.\n\
+         \x20                             Non-chain networks (alexnet, resnet18,\n\
+         \x20                             resnet34) run through their graph encodings\n\
+         \x20                             (§IV-D 11x11 split, residual shortcuts).\n\
+         \x20 networks                    list the networks of Tables III–V and flag\n\
+         \x20                             which are runnable (chain/graph) vs\n\
+         \x20                             descriptor-only"
     );
 }
 
 fn corner_of(args: &Args) -> Result<Corner, String> {
     let v = args.get_f64("v", 0.6)?;
     Ok(Corner { arch: ArchId::Bin32Multi, v })
+}
+
+/// Network lookup whose failure echoes every accepted id (the network
+/// analog of the engine parser's `EngineKind::ACCEPTED` echo).
+fn lookup_network(id: &str) -> Result<Network, String> {
+    networks::network(id)
+        .ok_or_else(|| YodannError::UnknownNetwork { given: id.to_string() }.to_string())
 }
 
 fn cmd_info() -> Result<(), String> {
@@ -155,6 +167,7 @@ fn cmd_table(args: &Args) -> Result<(), String> {
         "2" => tables::table2(),
         "3" => {
             let net = args.get("net", "bc-cifar10").to_string();
+            lookup_network(&net)?;
             tables::table3(&net, corner_of(args)?)
         }
         "4" => tables::table45(Corner::energy_optimal()),
@@ -255,7 +268,7 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let id = args.require("net")?;
-    let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
+    let net = lookup_network(id)?;
     let corner = corner_of(args)?;
     let e = evaluate_network(&net, corner);
     println!("{} @{:.2} V ({}):", net.name, corner.v, corner.arch.name());
@@ -375,6 +388,14 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The network model a throughput run executes: a flat chain (the
+/// historical path) or a compiled graph encoding for the non-chain
+/// networks (alexnet, resnet18, resnet34).
+enum NetModel {
+    Chain(Vec<SessionLayerSpec>),
+    Graph(NetworkGraph),
+}
+
 /// Batch synthetic frames through the serving facade (`yodann::api::Yodann`)
 /// on one or both engines: the end-to-end throughput A/B. With more than one
 /// engine selected (`--engine both`, or `--engine all` which adds the
@@ -387,7 +408,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 /// per-frame telemetry (frame id, cycles, energy, policy) there.
 fn cmd_throughput(args: &Args) -> Result<(), String> {
     let id = args.get("net", "scene-labeling");
-    let net = networks::network(id).ok_or_else(|| format!("unknown network {id}"))?;
+    let net = lookup_network(id)?;
     let n_frames = args.get_usize("frames", 8)?.max(1);
     let workers = args.get_usize(
         "workers",
@@ -422,39 +443,52 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         })?],
     };
 
-    let specs = SessionLayerSpec::synthetic_network(&net, seed)?;
+    // Chain networks run the historical spec path (byte-identical);
+    // non-chain networks fall through to their graph encoding, which is
+    // what turns alexnet/resnet18/resnet34 from descriptor rows into
+    // runnable workloads.
+    let model = match SessionLayerSpec::synthetic_network(&net, seed) {
+        Ok(specs) => NetModel::Chain(specs),
+        Err(e) => match networks::graph_network(id, seed) {
+            Some(g) => NetModel::Graph(g),
+            None => return Err(e.into()),
+        },
+    };
+    // First-conv metadata drives the frame generator, the shard-grid
+    // clamp and the printed envelope, whichever path lowered the model.
+    let (n_convs, c0, first_k, first_pad, first_n_out, model_note) = match &model {
+        NetModel::Chain(specs) => {
+            let f = &specs[0];
+            (specs.len(), f.kernels.n_in, f.k, f.zero_pad, f.kernels.n_out, "chain")
+        }
+        NetModel::Graph(g) => {
+            let cg = g.compile().map_err(|e| e.to_string())?;
+            let f = &cg.convs[0];
+            (cg.convs.len(), cg.n_in, f.k, f.zero_pad, f.kernels.n_out, "graph encoding")
+        }
+    };
     let h = ((net.img.0 as f64 * scale).round() as usize).max(16);
     let w = ((net.img.1 as f64 * scale).round() as usize).max(16);
-    let c0 = specs[0].kernels.n_in;
     let mut g = Gen::new(seed ^ 0xF00D);
     let frames: Vec<Image> = (0..n_frames).map(|_| synthetic_scene(&mut g, c0, h, w)).collect();
 
     println!(
-        "{} ({} conv layers, seeded binary weights), {} frames of {}x{}x{}, {} workers:",
-        net.name,
-        specs.len(),
-        n_frames,
-        c0,
-        h,
-        w,
-        workers
+        "{} ({} conv layers, {model_note}, seeded binary weights), {} frames of {}x{}x{}, {} \
+         workers:",
+        net.name, n_convs, n_frames, c0, h, w, workers
     );
     let cfg = ChipConfig::yodann();
     // Clamp the requested grid to layer 1's output space: axes beyond
     // it can never materialize as chips, and the printed envelope plus
     // the merged shard-scaling records must describe the grid that
     // actually runs.
-    let out_h0 = if specs[0].zero_pad { h } else { h + 1 - specs[0].k };
+    let out_h0 = if first_pad { h } else { h + 1 - first_k };
     let shards = shards.map(|g| {
-        let eff = ShardGrid::new(
-            g.stripes.min(out_h0),
-            g.out_groups.min(specs[0].kernels.n_out),
-        );
+        let eff = ShardGrid::new(g.stripes.min(out_h0), g.out_groups.min(first_n_out));
         if eff != g {
             println!(
-                "  note: --shards {g} clamped to {eff} (layer 1 outputs {out_h0} rows x {} \
-                 channels)",
-                specs[0].kernels.n_out
+                "  note: --shards {g} clamped to {eff} (layer 1 outputs {out_h0} rows x \
+                 {first_n_out} channels)"
             );
         }
         eff
@@ -464,8 +498,8 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         // concurrently, and stripe neighbours re-exchange the k−1 halo
         // rows of the first layer's input every frame.
         let envelope =
-            yodann::power::MultiChipPower::at(ArchId::Bin32Multi, 0.6, grid.chips(), specs[0].k);
-        let halo = yodann::power::halo_exchange_words(grid.stripes, specs[0].k, w, c0);
+            yodann::power::MultiChipPower::at(ArchId::Bin32Multi, 0.6, grid.chips(), first_k);
+        let halo = yodann::power::halo_exchange_words(grid.stripes, first_k, w, c0);
         println!(
             "  shard grid {grid}: {} chips, {:.1} mW device envelope @0.6 V, \
              {halo} halo words/frame (layer 1)",
@@ -475,15 +509,24 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
     }
     let mut runs: Vec<(EngineKind, Vec<Image>, f64)> = Vec::new();
     let mut merged_records: Vec<JsonRecord> = Vec::new();
-    for kind in kinds {
-        let mut sess = SessionBuilder::new()
+    // One builder per (engine, policy) leg, whichever path lowered the
+    // model: chains go through the historical `layers`, graphs through
+    // `graph` — the facade behind both is identical.
+    let make_session = |kind: EngineKind, policy: ShardPolicy| -> Result<Yodann, String> {
+        let b = SessionBuilder::new()
             .chip(cfg)
-            .layers(specs.clone())
             .engine(kind)
             .workers(workers)
-            .shard_policy(ShardPolicy::PerFrame)
-            .max_in_flight(n_frames)
-            .build()?;
+            .shard_policy(policy)
+            .max_in_flight(n_frames);
+        let b = match &model {
+            NetModel::Chain(specs) => b.layers(specs.clone()),
+            NetModel::Graph(g) => b.graph(g),
+        };
+        Ok(b.build()?)
+    };
+    for kind in kinds {
+        let mut sess = make_session(kind, ShardPolicy::PerFrame)?;
         let t0 = Instant::now();
         let results = sess.run_batch(frames.clone())?;
         let dt = t0.elapsed().as_secs_f64();
@@ -528,14 +571,7 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         }
         let out: Vec<Image> = results.into_iter().map(|r| r.output).collect();
         if let Some(grid) = shards {
-            let mut sh = SessionBuilder::new()
-                .chip(cfg)
-                .layers(specs.clone())
-                .engine(kind)
-                .workers(workers)
-                .shard_policy(ShardPolicy::PerShard(grid))
-                .max_in_flight(n_frames)
-                .build()?;
+            let mut sh = make_session(kind, ShardPolicy::PerShard(grid))?;
             let t0 = Instant::now();
             let results_sh = sh.run_batch(frames.clone())?;
             let dt_sh = t0.elapsed().as_secs_f64();
@@ -598,24 +634,33 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// How a network executes: as a session chain, as a compiled graph
+/// (AlexNet's split, ResNet's shortcuts), or not at all (a Table-III
+/// op-count descriptor only). Descriptor-level checks only — no
+/// weights are materialized for a listing.
+fn exec_kind(n: &Network) -> &'static str {
+    if networks::is_simple_chain(n) {
+        "runnable (chain)"
+    } else if networks::has_graph(n.id) {
+        "runnable (graph)"
+    } else {
+        "descriptor-only"
+    }
+}
+
 fn cmd_networks() -> Result<(), String> {
-    println!("{:<14} {:<14} {:>10} {:>8}", "id", "name", "img", "GOp");
-    for n in networks::all_networks() {
+    println!("{:<14} {:<14} {:>10} {:>8}  {:<16}", "id", "name", "img", "GOp", "exec");
+    let mut nets = networks::all_networks();
+    nets.push(networks::scene_labeling());
+    for n in &nets {
         println!(
-            "{:<14} {:<14} {:>10} {:>8.2}",
+            "{:<14} {:<14} {:>10} {:>8.2}  {:<16}",
             n.id,
             n.name,
             format!("{}x{}", n.img.0, n.img.1),
-            n.conv_ops() as f64 / 1e9
+            n.conv_ops() as f64 / 1e9,
+            exec_kind(n)
         );
     }
-    let sl = networks::scene_labeling();
-    println!(
-        "{:<14} {:<14} {:>10} {:>8.2}",
-        sl.id,
-        sl.name,
-        "240x320",
-        sl.conv_ops() as f64 / 1e9
-    );
     Ok(())
 }

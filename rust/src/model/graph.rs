@@ -1,0 +1,825 @@
+//! Graph-based network IR: describe a CNN as a typed DAG, compile it
+//! into an executable plan.
+//!
+//! The chain-only `SessionLayerSpec` list cannot express the topologies
+//! the paper evaluates: AlexNet's first layer is decomposed into
+//! parallel 2×(6×6) + 2×(5×5) kernel groups whose partial sums
+//! recombine off-chip (§IV-D), and ResNet-18/34 need residual adds and
+//! stride-2 subsampling. This module is the model-side fix:
+//!
+//! * [`NetworkBuilder`] — grow a [`NetworkGraph`] front-to-back: conv
+//!   nodes carry caller-supplied or seeded [`Weights`] (not
+//!   random-only), host nodes cover everything YodaNN leaves to the
+//!   host — quantized ReLU, 2×2 max-pool, stride-2 subsample, residual
+//!   [`GraphOp::Add`] and branch [`GraphOp::Concat`];
+//! * [`NetworkGraph::compile`] — validate the whole graph (channel
+//!   typing, join arity, reachability) into typed
+//!   [`YodannError`]s, then lower it to a [`CompiledGraph`]: conv
+//!   segments plus host-op interludes over a slot-addressed value
+//!   store, with per-step free lists so intermediates die as early as
+//!   possible;
+//! * [`CompiledGraph::walk_shapes`] — walk one frame's (c, h, w)
+//!   through every step, reporting valid-mode underflow and
+//!   branch-shape conflicts as typed errors **before** the frame enters
+//!   a session queue.
+//!
+//! Execution reuses the session machinery unchanged: the coordinator's
+//! `NetworkSession` interprets [`PlanStep`]s, running conv steps
+//! through the same per-layer raster packing, block planning, sharding
+//! and telemetry paths a chain network uses (a chain is just the
+//! degenerate graph with one step per layer). Faithful graph encodings
+//! of the paper's non-chain networks live in
+//! [`networks`](super::networks) (`alexnet_graph`, `resnet18_graph`,
+//! `resnet34_graph`).
+
+use std::sync::Arc;
+
+use crate::api::YodannError;
+use crate::fixedpoint::Q2_9;
+use crate::testkit::Gen;
+use crate::workload::{BinaryKernels, ScaleBias};
+
+/// One conv node's parameters: the kernel set plus its per-output
+/// scale/bias, `Arc`-shared so a graph, its compiled plan and every
+/// session worker reference one copy.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    /// Binary kernel set (`n_out × n_in` kernels of `k × k` bits).
+    pub kernels: Arc<BinaryKernels>,
+    /// Per-output-channel α/β (batch-norm folding), arity-checked
+    /// against `kernels.n_out` at [`NetworkGraph::compile`].
+    pub scale_bias: Arc<ScaleBias>,
+}
+
+impl Weights {
+    /// Caller-supplied weights (e.g. trained BinaryConnect kernels).
+    pub fn new(kernels: Arc<BinaryKernels>, scale_bias: Arc<ScaleBias>) -> Weights {
+        Weights { kernels, scale_bias }
+    }
+
+    /// Seeded synthetic weights: random binary kernels and the same
+    /// small range-preserving α/β the chain path's `synthetic_network`
+    /// uses, so deep graphs keep activations inside Q2.9.
+    pub fn seeded(g: &mut Gen, n_out: usize, n_in: usize, k: usize) -> Weights {
+        Weights::seeded_scaled(g, n_out, n_in, k, 0.05, 0.01)
+    }
+
+    /// Seeded weights with explicit uniform α/β — e.g. bias-free
+    /// partial convolutions whose outputs recombine off-chip through a
+    /// residual [`GraphOp::Add`].
+    pub fn seeded_scaled(
+        g: &mut Gen,
+        n_out: usize,
+        n_in: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+    ) -> Weights {
+        Weights {
+            kernels: Arc::new(BinaryKernels::random(g, n_out, n_in, k)),
+            scale_bias: Arc::new(ScaleBias {
+                alpha: vec![Q2_9.from_f64(alpha); n_out],
+                beta: vec![Q2_9.from_f64(beta); n_out],
+            }),
+        }
+    }
+}
+
+/// Handle to a node of the graph being built (opaque; only valid for
+/// the [`NetworkBuilder`] that issued it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeId(usize);
+
+/// The operation a graph node performs.
+#[derive(Debug, Clone)]
+pub enum GraphOp {
+    /// The graph's input feature map (always node 0, created by
+    /// [`NetworkBuilder::new`]).
+    Input {
+        /// Input channels.
+        c: usize,
+    },
+    /// A convolution on the accelerator (`k` is `weights.kernels.k`).
+    Conv {
+        /// Zero-padded (H×W-preserving) convolution.
+        zero_pad: bool,
+        /// Kernels and scale/bias.
+        weights: Weights,
+    },
+    /// Quantized ReLU (`max(0, ·)` on raw Q2.9), on the host.
+    Relu,
+    /// 2×2 stride-2 max-pool (odd trailing rows/columns dropped), on
+    /// the host.
+    MaxPool2,
+    /// Stride-2 subsample (keep every other pixel, starting at 0) — how
+    /// strided convolutions run on a stride-less accelerator: compute
+    /// at stride 1, subsample off-chip (the paper's op accounting does
+    /// the same).
+    Subsample2,
+    /// Element-wise residual add of ≥ 2 branches: wide integer sum,
+    /// saturated once to Q2.9 (host arithmetic).
+    Add,
+    /// Channel-wise concatenation of ≥ 2 branches.
+    Concat,
+}
+
+/// One node: its operation, label (used in error messages) and inputs.
+#[derive(Debug, Clone)]
+pub struct GraphNode {
+    /// Label for diagnostics ([`YodannError::AtNode`] tags).
+    pub label: String,
+    /// The operation.
+    pub op: GraphOp,
+    /// Input nodes (always earlier in the build order, so the graph is
+    /// a DAG by construction).
+    pub inputs: Vec<NodeId>,
+}
+
+/// Builder for a [`NetworkGraph`]: nodes are appended front-to-back,
+/// every method returns the new node's [`NodeId`] for wiring.
+///
+/// The builder itself never fails — structural and typing problems
+/// (channel mismatches, bad join arity, disconnected nodes) are
+/// reported as typed [`YodannError`]s by [`NetworkGraph::compile`],
+/// which is also where [`crate::api::SessionBuilder::graph`] sends
+/// them. [`NodeId`]s are only meaningful to the builder that issued
+/// them: a foreign id panics when it is out of range, and an in-range
+/// one silently names this builder's node of the same index — don't
+/// mix builders.
+#[derive(Debug, Clone)]
+pub struct NetworkBuilder {
+    name: String,
+    nodes: Vec<GraphNode>,
+}
+
+impl NetworkBuilder {
+    /// Start a graph taking `input_channels`-channel frames.
+    pub fn new(name: impl Into<String>, input_channels: usize) -> NetworkBuilder {
+        NetworkBuilder {
+            name: name.into(),
+            nodes: vec![GraphNode {
+                label: "input".into(),
+                op: GraphOp::Input { c: input_channels },
+                inputs: Vec::new(),
+            }],
+        }
+    }
+
+    /// The graph's input node.
+    pub fn input(&self) -> NodeId {
+        NodeId(0)
+    }
+
+    fn push(&mut self, label: String, op: GraphOp, inputs: Vec<NodeId>) -> NodeId {
+        for id in &inputs {
+            assert!(id.0 < self.nodes.len(), "NodeId from a different NetworkBuilder");
+        }
+        self.nodes.push(GraphNode { label, op, inputs });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Add a convolution node (`k` comes from `weights.kernels.k`).
+    pub fn conv(&mut self, label: &str, src: NodeId, zero_pad: bool, weights: Weights) -> NodeId {
+        self.push(label.to_string(), GraphOp::Conv { zero_pad, weights }, vec![src])
+    }
+
+    /// Add a quantized-ReLU node.
+    pub fn relu(&mut self, src: NodeId) -> NodeId {
+        let label = format!("relu#{}", self.nodes.len());
+        self.push(label, GraphOp::Relu, vec![src])
+    }
+
+    /// Add a 2×2 stride-2 max-pool node.
+    pub fn maxpool2(&mut self, src: NodeId) -> NodeId {
+        let label = format!("maxpool#{}", self.nodes.len());
+        self.push(label, GraphOp::MaxPool2, vec![src])
+    }
+
+    /// Add a stride-2 subsample node.
+    pub fn subsample2(&mut self, src: NodeId) -> NodeId {
+        let label = format!("subsample#{}", self.nodes.len());
+        self.push(label, GraphOp::Subsample2, vec![src])
+    }
+
+    /// Add a residual-add node joining `srcs` (≥ 2 branches of
+    /// identical shape).
+    pub fn add(&mut self, label: &str, srcs: &[NodeId]) -> NodeId {
+        self.push(label.to_string(), GraphOp::Add, srcs.to_vec())
+    }
+
+    /// Add a channel-concat node joining `srcs` (≥ 2 branches of
+    /// identical H×W).
+    pub fn concat(&mut self, label: &str, srcs: &[NodeId]) -> NodeId {
+        self.push(label.to_string(), GraphOp::Concat, srcs.to_vec())
+    }
+
+    /// Finish the graph, designating `output` as the network's output.
+    pub fn build(self, output: NodeId) -> NetworkGraph {
+        assert!(output.0 < self.nodes.len(), "NodeId from a different NetworkBuilder");
+        NetworkGraph { name: self.name, nodes: self.nodes, output }
+    }
+}
+
+/// A CNN as a typed DAG of conv nodes and host ops. Built by
+/// [`NetworkBuilder`], validated and lowered by
+/// [`NetworkGraph::compile`], run by
+/// [`crate::api::SessionBuilder::graph`].
+///
+/// ```
+/// use yodann::model::graph::{NetworkBuilder, Weights};
+/// use yodann::testkit::Gen;
+///
+/// // A toy residual block: conv → relu → conv, added to a 1×1
+/// // projection of the input, then ReLU.
+/// let mut g = Gen::new(7);
+/// let mut b = NetworkBuilder::new("toy-residual", 3);
+/// let x = b.input();
+/// let main = b.conv("conv1", x, true, Weights::seeded(&mut g, 8, 3, 3));
+/// let main = b.relu(main);
+/// let main = b.conv("conv2", main, true, Weights::seeded(&mut g, 8, 8, 3));
+/// let proj = b.conv("proj", x, true, Weights::seeded(&mut g, 8, 3, 1));
+/// let sum = b.add("residual", &[main, proj]);
+/// let out = b.relu(sum);
+/// let graph = b.build(out);
+///
+/// let plan = graph.compile().expect("a well-typed graph");
+/// assert_eq!(plan.convs.len(), 3);
+/// assert_eq!(plan.walk_shapes(3, 16, 16).unwrap(), (8, 16, 16));
+/// ```
+#[derive(Debug, Clone)]
+pub struct NetworkGraph {
+    /// Network name (used by [`YodannError::NoConvLayers`] and reports).
+    pub name: String,
+    nodes: Vec<GraphNode>,
+    output: NodeId,
+}
+
+impl NetworkGraph {
+    /// All nodes, in build order (node 0 is the input).
+    pub fn nodes(&self) -> &[GraphNode] {
+        &self.nodes
+    }
+
+    /// The designated output node.
+    pub fn output(&self) -> NodeId {
+        self.output
+    }
+
+    /// Validate the graph end-to-end and lower it into an executable
+    /// [`CompiledGraph`].
+    ///
+    /// Checks, all reported as typed [`YodannError`]s (conv-node
+    /// failures tagged [`YodannError::AtNode`]):
+    ///
+    /// * conv kernel size in 1..=7 and scale/bias arity matching the
+    ///   kernel set;
+    /// * channel typing along every edge (conv input channels, add
+    ///   branches agreeing, concat summing);
+    /// * join arity (add/concat need ≥ 2 inputs);
+    /// * every node on a path to the output
+    ///   ([`YodannError::GraphDisconnected`] otherwise);
+    /// * at least one conv node ([`YodannError::NoConvLayers`]).
+    ///
+    /// Frame-dependent geometry (valid-mode h < k, branch H×W
+    /// conflicts) is checked per frame by
+    /// [`CompiledGraph::walk_shapes`].
+    pub fn compile(&self) -> Result<CompiledGraph, YodannError> {
+        // Pass 1: structural checks + channel inference, in build order
+        // (inputs always precede their consumers, so the graph is a DAG
+        // and build order is a topological order).
+        let mut out_c: Vec<usize> = Vec::with_capacity(self.nodes.len());
+        for (i, n) in self.nodes.iter().enumerate() {
+            for id in &n.inputs {
+                if id.0 >= i {
+                    return Err(YodannError::InvalidConfig {
+                        what: format!(
+                            "graph node '{}' references node #{} at or after itself (#{i})",
+                            n.label, id.0
+                        ),
+                    });
+                }
+            }
+            let c = match &n.op {
+                GraphOp::Input { c } => {
+                    if i != 0 {
+                        return Err(YodannError::InvalidConfig {
+                            what: format!("graph has a second input node '{}'", n.label),
+                        });
+                    }
+                    *c
+                }
+                GraphOp::Conv { weights, .. } => {
+                    let k = weights.kernels.k;
+                    if !(1..=7).contains(&k) {
+                        return Err(YodannError::UnsupportedKernel { k }.at_node(&n.label));
+                    }
+                    if weights.scale_bias.alpha.len() != weights.kernels.n_out {
+                        return Err(YodannError::ScaleBiasArity {
+                            alphas: weights.scale_bias.alpha.len(),
+                            n_out: weights.kernels.n_out,
+                        }
+                        .at_node(&n.label));
+                    }
+                    let src_c = out_c[n.inputs[0].0];
+                    if src_c != weights.kernels.n_in {
+                        return Err(YodannError::ChannelChainMismatch {
+                            prev_out: src_c,
+                            n_in: weights.kernels.n_in,
+                        }
+                        .at_node(&n.label));
+                    }
+                    weights.kernels.n_out
+                }
+                GraphOp::Relu | GraphOp::MaxPool2 | GraphOp::Subsample2 => out_c[n.inputs[0].0],
+                GraphOp::Add => {
+                    if n.inputs.len() < 2 {
+                        return Err(YodannError::GraphArity {
+                            node: n.label.clone(),
+                            op: "add",
+                            inputs: n.inputs.len(),
+                        });
+                    }
+                    let c0 = out_c[n.inputs[0].0];
+                    for id in &n.inputs[1..] {
+                        if out_c[id.0] != c0 {
+                            return Err(YodannError::GraphChannelMismatch {
+                                node: n.label.clone(),
+                                a: c0,
+                                b: out_c[id.0],
+                            });
+                        }
+                    }
+                    c0
+                }
+                GraphOp::Concat => {
+                    if n.inputs.len() < 2 {
+                        return Err(YodannError::GraphArity {
+                            node: n.label.clone(),
+                            op: "concat",
+                            inputs: n.inputs.len(),
+                        });
+                    }
+                    n.inputs.iter().map(|id| out_c[id.0]).sum()
+                }
+            };
+            out_c.push(c);
+        }
+
+        // Pass 2: every node must sit on a path to the output.
+        let mut reach = vec![false; self.nodes.len()];
+        let mut stack = vec![self.output.0];
+        while let Some(p) = stack.pop() {
+            if !reach[p] {
+                reach[p] = true;
+                stack.extend(self.nodes[p].inputs.iter().map(|id| id.0));
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !reach[i] {
+                return Err(YodannError::GraphDisconnected { node: n.label.clone() });
+            }
+        }
+
+        // Pass 3: lower. One value slot per node (node index = slot),
+        // conv nodes extracted into the conv table the session packs
+        // kernels for.
+        let mut convs: Vec<PlanConv> = Vec::new();
+        let mut steps: Vec<PlanStep> = Vec::new();
+        let mut step_labels: Vec<String> = Vec::new();
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            let srcs: Vec<usize> = n.inputs.iter().map(|id| id.0).collect();
+            let step = match &n.op {
+                GraphOp::Input { .. } => unreachable!("checked in pass 1"),
+                GraphOp::Conv { zero_pad, weights } => {
+                    convs.push(PlanConv {
+                        k: weights.kernels.k,
+                        zero_pad: *zero_pad,
+                        kernels: Arc::clone(&weights.kernels),
+                        scale_bias: Arc::clone(&weights.scale_bias),
+                        label: n.label.clone(),
+                    });
+                    PlanStep::Conv { conv: convs.len() - 1, src: srcs[0], dst: i }
+                }
+                GraphOp::Relu => PlanStep::Relu { src: srcs[0], dst: i },
+                GraphOp::MaxPool2 => PlanStep::MaxPool2 { src: srcs[0], dst: i },
+                GraphOp::Subsample2 => PlanStep::Subsample2 { src: srcs[0], dst: i },
+                GraphOp::Add => PlanStep::Add { srcs, dst: i },
+                GraphOp::Concat => PlanStep::Concat { srcs, dst: i },
+            };
+            steps.push(step);
+            step_labels.push(n.label.clone());
+        }
+        if convs.is_empty() {
+            return Err(YodannError::NoConvLayers { net: self.name.clone() });
+        }
+        let n_slots = self.nodes.len();
+        let output_slot = self.output.0;
+        let free_after = compute_free_after(&steps, n_slots, output_slot);
+        Ok(CompiledGraph {
+            name: self.name.clone(),
+            n_in: out_c[0],
+            convs,
+            steps,
+            step_labels,
+            n_slots,
+            input_slot: 0,
+            output_slot,
+            free_after,
+        })
+    }
+}
+
+/// One lowered convolution layer: what a session packs kernels for and
+/// fans out across engines/shards.
+#[derive(Debug, Clone)]
+pub struct PlanConv {
+    /// Kernel size (1..=7, validated at compile).
+    pub k: usize,
+    /// Zero-padded convolution.
+    pub zero_pad: bool,
+    /// Kernel set, shared across workers and frames.
+    pub kernels: Arc<BinaryKernels>,
+    /// Per-output-channel scale/bias, shared.
+    pub scale_bias: Arc<ScaleBias>,
+    /// Originating graph-node label (diagnostics).
+    pub label: String,
+}
+
+/// One step of a compiled network: a conv segment or a host-op
+/// interlude, reading and writing value slots.
+#[derive(Debug, Clone)]
+pub enum PlanStep {
+    /// Run conv layer `conv` (index into [`CompiledGraph::convs`]) on
+    /// slot `src`, writing slot `dst`.
+    Conv {
+        /// Index into [`CompiledGraph::convs`].
+        conv: usize,
+        /// Input slot.
+        src: usize,
+        /// Output slot.
+        dst: usize,
+    },
+    /// Quantized ReLU interlude.
+    Relu {
+        /// Input slot.
+        src: usize,
+        /// Output slot.
+        dst: usize,
+    },
+    /// 2×2 stride-2 max-pool interlude (identity when h or w < 2).
+    MaxPool2 {
+        /// Input slot.
+        src: usize,
+        /// Output slot.
+        dst: usize,
+    },
+    /// Stride-2 subsample interlude.
+    Subsample2 {
+        /// Input slot.
+        src: usize,
+        /// Output slot.
+        dst: usize,
+    },
+    /// Residual add of `srcs` (wide sum, one Q2.9 saturation).
+    Add {
+        /// Input slots.
+        srcs: Vec<usize>,
+        /// Output slot.
+        dst: usize,
+    },
+    /// Channel-wise concat of `srcs`.
+    Concat {
+        /// Input slots.
+        srcs: Vec<usize>,
+        /// Output slot.
+        dst: usize,
+    },
+}
+
+impl PlanStep {
+    /// The slot this step writes.
+    pub fn dst(&self) -> usize {
+        match self {
+            PlanStep::Conv { dst, .. }
+            | PlanStep::Relu { dst, .. }
+            | PlanStep::MaxPool2 { dst, .. }
+            | PlanStep::Subsample2 { dst, .. }
+            | PlanStep::Add { dst, .. }
+            | PlanStep::Concat { dst, .. } => *dst,
+        }
+    }
+
+    /// The slots this step reads (with multiplicity).
+    pub fn srcs(&self) -> Vec<usize> {
+        match self {
+            PlanStep::Conv { src, .. }
+            | PlanStep::Relu { src, .. }
+            | PlanStep::MaxPool2 { src, .. }
+            | PlanStep::Subsample2 { src, .. } => vec![*src],
+            PlanStep::Add { srcs, .. } | PlanStep::Concat { srcs, .. } => srcs.clone(),
+        }
+    }
+}
+
+/// For each step, the slots whose last read is that step (and which are
+/// not the output) — what an interpreter frees to keep at most the live
+/// frontier of the DAG in memory.
+pub(crate) fn compute_free_after(
+    steps: &[PlanStep],
+    n_slots: usize,
+    output_slot: usize,
+) -> Vec<Vec<usize>> {
+    let mut last_use = vec![usize::MAX; n_slots];
+    for (i, s) in steps.iter().enumerate() {
+        for src in s.srcs() {
+            last_use[src] = i;
+        }
+    }
+    let mut free: Vec<Vec<usize>> = vec![Vec::new(); steps.len()];
+    for (slot, &lu) in last_use.iter().enumerate() {
+        if lu != usize::MAX && slot != output_slot {
+            free[lu].push(slot);
+        }
+    }
+    free
+}
+
+/// A validated, lowered network: conv segments + host-op interludes
+/// over a slot-addressed value store. Produced by
+/// [`NetworkGraph::compile`] (and, internally, by the session's chain
+/// lowering so flat [`SessionLayerSpec`] networks run through the same
+/// interpreter).
+///
+/// [`SessionLayerSpec`]: crate::coordinator::SessionLayerSpec
+#[derive(Debug, Clone)]
+pub struct CompiledGraph {
+    /// Network name.
+    pub name: String,
+    /// Channels the input frame must carry.
+    pub n_in: usize,
+    /// The conv layers, in step order.
+    pub convs: Vec<PlanConv>,
+    /// The step program, in topological order.
+    pub steps: Vec<PlanStep>,
+    /// Graph-node label per step (diagnostics).
+    pub step_labels: Vec<String>,
+    /// Value slots an interpreter allocates.
+    pub n_slots: usize,
+    /// Slot holding the input frame.
+    pub input_slot: usize,
+    /// Slot holding the network output after the last step.
+    pub output_slot: usize,
+    /// Per-step free lists (see [`compute_free_after`]).
+    pub free_after: Vec<Vec<usize>>,
+}
+
+impl CompiledGraph {
+    /// Walk a frame's (c, h, w) through every step without running it:
+    /// the typed pre-flight the serving facade performs at `submit`.
+    /// Conv geometry failures come back tagged with the conv's layer
+    /// index ([`YodannError::AtLayer`], matching the chain path);
+    /// branch-shape conflicts name the join node
+    /// ([`YodannError::GraphShapeMismatch`]). Returns the output shape.
+    pub fn walk_shapes(
+        &self,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> Result<(usize, usize, usize), YodannError> {
+        if c != self.n_in {
+            return Err(YodannError::FrameChannelMismatch { got: c, expected: self.n_in });
+        }
+        let mut shapes: Vec<Option<(usize, usize, usize)>> = vec![None; self.n_slots];
+        shapes[self.input_slot] = Some((c, h, w));
+        let get = |shapes: &[Option<(usize, usize, usize)>], s: usize| {
+            shapes[s].expect("steps are topologically ordered")
+        };
+        for (si, step) in self.steps.iter().enumerate() {
+            let out = match step {
+                PlanStep::Conv { conv, src, .. } => {
+                    let (_, sh, sw) = get(&shapes, *src);
+                    let pc = &self.convs[*conv];
+                    if !pc.zero_pad {
+                        if sh < pc.k {
+                            return Err(YodannError::NoOutputRows {
+                                k: pc.k,
+                                axis: "height",
+                                size: sh,
+                            }
+                            .at_layer(*conv));
+                        }
+                        if sw < pc.k {
+                            return Err(YodannError::NoOutputRows {
+                                k: pc.k,
+                                axis: "width",
+                                size: sw,
+                            }
+                            .at_layer(*conv));
+                        }
+                    }
+                    let (oh, ow) =
+                        if pc.zero_pad { (sh, sw) } else { (sh - pc.k + 1, sw - pc.k + 1) };
+                    (pc.kernels.n_out, oh, ow)
+                }
+                PlanStep::Relu { src, .. } => get(&shapes, *src),
+                PlanStep::MaxPool2 { src, .. } => {
+                    let (sc, sh, sw) = get(&shapes, *src);
+                    if sh >= 2 && sw >= 2 {
+                        (sc, sh / 2, sw / 2)
+                    } else {
+                        (sc, sh, sw)
+                    }
+                }
+                PlanStep::Subsample2 { src, .. } => {
+                    let (sc, sh, sw) = get(&shapes, *src);
+                    (sc, sh.div_ceil(2), sw.div_ceil(2))
+                }
+                PlanStep::Add { srcs, .. } => {
+                    let s0 = get(&shapes, srcs[0]);
+                    for &s in &srcs[1..] {
+                        let si_shape = get(&shapes, s);
+                        if si_shape != s0 {
+                            return Err(YodannError::GraphShapeMismatch {
+                                node: self.step_labels[si].clone(),
+                                a: s0,
+                                b: si_shape,
+                            });
+                        }
+                    }
+                    s0
+                }
+                PlanStep::Concat { srcs, .. } => {
+                    let (c0, h0, w0) = get(&shapes, srcs[0]);
+                    let mut csum = 0;
+                    for &s in srcs {
+                        let (sc, sh, sw) = get(&shapes, s);
+                        if (sh, sw) != (h0, w0) {
+                            return Err(YodannError::GraphShapeMismatch {
+                                node: self.step_labels[si].clone(),
+                                a: (c0, h0, w0),
+                                b: (sc, sh, sw),
+                            });
+                        }
+                        csum += sc;
+                    }
+                    (csum, h0, w0)
+                }
+            };
+            shapes[step.dst()] = Some(out);
+        }
+        Ok(shapes[self.output_slot].expect("the output slot is written by the last use of it"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_graph() -> NetworkGraph {
+        let mut g = Gen::new(7);
+        let mut b = NetworkBuilder::new("toy", 3);
+        let x = b.input();
+        let main = b.conv("conv1", x, true, Weights::seeded(&mut g, 8, 3, 3));
+        let main = b.relu(main);
+        let main = b.conv("conv2", main, true, Weights::seeded(&mut g, 8, 8, 3));
+        let proj = b.conv("proj", x, true, Weights::seeded(&mut g, 8, 3, 1));
+        let sum = b.add("residual", &[main, proj]);
+        let out = b.relu(sum);
+        b.build(out)
+    }
+
+    #[test]
+    fn residual_graph_compiles_and_walks() {
+        let plan = toy_graph().compile().unwrap();
+        assert_eq!(plan.convs.len(), 3);
+        assert_eq!(plan.n_in, 3);
+        assert_eq!(plan.steps.len(), 6);
+        assert_eq!(plan.walk_shapes(3, 16, 12).unwrap(), (8, 16, 12));
+        // Channel mismatch at the door.
+        let e = plan.walk_shapes(4, 16, 12).unwrap_err();
+        assert_eq!(e, YodannError::FrameChannelMismatch { got: 4, expected: 3 });
+    }
+
+    #[test]
+    fn free_lists_release_everything_but_the_output() {
+        let plan = toy_graph().compile().unwrap();
+        let freed: usize = plan.free_after.iter().map(|f| f.len()).sum();
+        // Every slot except the output is freed exactly once.
+        assert_eq!(freed, plan.n_slots - 1);
+        assert!(plan.free_after.iter().flatten().all(|&s| s != plan.output_slot));
+    }
+
+    #[test]
+    fn channel_typing_is_validated_at_the_offending_node() {
+        let mut g = Gen::new(1);
+        let mut b = NetworkBuilder::new("bad", 3);
+        let x = b.input();
+        // conv expects 4 input channels, gets 3.
+        let c = b.conv("conv1", x, true, Weights::seeded(&mut g, 8, 4, 3));
+        let e = b.build(c).compile().unwrap_err();
+        assert!(
+            matches!(&e, YodannError::AtNode { node, inner }
+                if node == "conv1"
+                    && matches!(**inner, YodannError::ChannelChainMismatch { prev_out: 3, n_in: 4 })),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn join_arity_and_channel_conflicts_are_typed() {
+        let mut g = Gen::new(2);
+        let mut b = NetworkBuilder::new("joins", 3);
+        let x = b.input();
+        let a = b.conv("a", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let sum = b.add("lonely", &[a]);
+        let e = b.build(sum).compile().unwrap_err();
+        assert_eq!(e, YodannError::GraphArity { node: "lonely".into(), op: "add", inputs: 1 });
+        // Add of 4- and 6-channel branches.
+        let mut b = NetworkBuilder::new("joins2", 3);
+        let x = b.input();
+        let a = b.conv("a", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let b6 = b.conv("b", x, true, Weights::seeded(&mut g, 6, 3, 3));
+        let bad = b.add("join", &[a, b6]);
+        let e = b.build(bad).compile().unwrap_err();
+        assert_eq!(e, YodannError::GraphChannelMismatch { node: "join".into(), a: 4, b: 6 });
+    }
+
+    #[test]
+    fn disconnected_nodes_and_convless_graphs_are_rejected() {
+        let mut g = Gen::new(3);
+        let mut b = NetworkBuilder::new("dead", 3);
+        let x = b.input();
+        let used = b.conv("used", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        b.conv("dead-branch", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let e = b.build(used).compile().unwrap_err();
+        assert_eq!(e, YodannError::GraphDisconnected { node: "dead-branch".into() });
+
+        let mut b = NetworkBuilder::new("no-convs", 3);
+        let x = b.input();
+        let r = b.relu(x);
+        let e = b.build(r).compile().unwrap_err();
+        assert_eq!(e, YodannError::NoConvLayers { net: "no-convs".into() });
+    }
+
+    #[test]
+    fn bad_kernel_and_scale_arity_are_tagged_with_the_node() {
+        let mut g = Gen::new(4);
+        let mut b = NetworkBuilder::new("badk", 3);
+        let x = b.input();
+        let c = b.conv("conv9", x, true, Weights::seeded(&mut g, 4, 3, 9));
+        let e = b.build(c).compile().unwrap_err();
+        assert!(matches!(&e, YodannError::AtNode { node, inner }
+            if node == "conv9" && matches!(**inner, YodannError::UnsupportedKernel { k: 9 })));
+
+        let mut g = Gen::new(5);
+        let mut b = NetworkBuilder::new("badsb", 3);
+        let x = b.input();
+        let w = Weights::new(
+            Arc::new(BinaryKernels::random(&mut g, 4, 3, 3)),
+            Arc::new(ScaleBias::identity(2)), // 2 != 4
+        );
+        let c = b.conv("convsb", x, true, w);
+        let e = b.build(c).compile().unwrap_err();
+        assert!(matches!(&e, YodannError::AtNode { node, inner }
+            if node == "convsb"
+                && matches!(**inner, YodannError::ScaleBiasArity { alphas: 2, n_out: 4 })));
+    }
+
+    #[test]
+    fn walk_reports_valid_mode_underflow_and_branch_conflicts() {
+        let mut g = Gen::new(6);
+        let mut b = NetworkBuilder::new("shapes", 2);
+        let x = b.input();
+        // Valid-mode k=5 shrinks by 4; identity branch does not.
+        let shrunk = b.conv("valid5", x, false, Weights::seeded(&mut g, 2, 2, 5));
+        let ident = b.conv("ident", x, true, Weights::seeded(&mut g, 2, 2, 1));
+        let sum = b.add("join", &[shrunk, ident]);
+        let plan = b.build(sum).compile().unwrap();
+        // Frame too small for the valid conv: typed NoOutputRows at layer 0.
+        let e = plan.walk_shapes(2, 3, 9).unwrap_err();
+        assert!(matches!(&e, YodannError::AtLayer { layer: 0, inner }
+            if matches!(**inner, YodannError::NoOutputRows { k: 5, axis: "height", size: 3 })));
+        // Large enough frame: the join's branches disagree on H×W.
+        let e = plan.walk_shapes(2, 9, 9).unwrap_err();
+        assert!(
+            matches!(&e, YodannError::GraphShapeMismatch { node, a: (2, 5, 5), b: (2, 9, 9) }
+                if node == "join"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn subsample_and_pool_shapes_walk_like_the_host_ops() {
+        let mut g = Gen::new(8);
+        let mut b = NetworkBuilder::new("downs", 3);
+        let x = b.input();
+        let c = b.conv("c", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let s = b.subsample2(c);
+        let p = b.maxpool2(s);
+        let plan = b.build(p).compile().unwrap();
+        // 11 → ceil(11/2) = 6 → pool 3.
+        assert_eq!(plan.walk_shapes(3, 11, 11).unwrap(), (4, 3, 3));
+        // Pool is the identity below 2×2.
+        assert_eq!(plan.walk_shapes(3, 2, 2).unwrap(), (4, 1, 1));
+    }
+}

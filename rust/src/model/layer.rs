@@ -1,5 +1,7 @@
 //! Layer descriptors and operation counting (paper Eq. 7).
 
+use crate::api::YodannError;
+
 /// How a kernel size maps onto the SoP hardware (§III-E, Fig. 9).
 ///
 /// Each SoP unit has 50 binary operators; it natively computes either one
@@ -68,21 +70,45 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
-    /// Output width (Eq. 7's `w_in − h_k + 1` without zero-padding).
-    pub fn out_w(&self) -> usize {
+    /// Output (height, width) as a typed result: a valid-mode
+    /// (non-padded) layer smaller than its kernel has no output pixels
+    /// and reports [`YodannError::NoOutputRows`] instead of wrapping
+    /// `w − k + 1` around `usize` in release builds (debug builds used
+    /// to panic on the bare subtraction, with no geometry in the
+    /// message).
+    pub fn try_out_hw(&self) -> Result<(usize, usize), YodannError> {
+        if !self.zero_pad {
+            if self.h < self.k {
+                return Err(YodannError::NoOutputRows { k: self.k, axis: "height", size: self.h });
+            }
+            if self.w < self.k {
+                return Err(YodannError::NoOutputRows { k: self.k, axis: "width", size: self.w });
+            }
+        }
         if self.zero_pad {
-            self.w
+            Ok((self.h, self.w))
         } else {
-            self.w - self.k + 1
+            Ok((self.h - self.k + 1, self.w - self.k + 1))
         }
     }
 
-    /// Output height.
+    /// Output width (Eq. 7's `w_in − h_k + 1` without zero-padding).
+    /// Panics with the typed geometry error on impossible layers — use
+    /// [`ConvLayer::try_out_hw`] to handle them as data.
+    pub fn out_w(&self) -> usize {
+        match self.try_out_hw() {
+            Ok((_, w)) => w,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Output height. Panics with the typed geometry error on
+    /// impossible layers — use [`ConvLayer::try_out_hw`] to handle them
+    /// as data.
     pub fn out_h(&self) -> usize {
-        if self.zero_pad {
-            self.h
-        } else {
-            self.h - self.k + 1
+        match self.try_out_hw() {
+            Ok((h, _)) => h,
+            Err(e) => panic!("{e}"),
         }
     }
 
@@ -218,6 +244,39 @@ mod tests {
         assert_eq!(l.out_w(), 26);
         assert_eq!(l.out_h(), 26);
         assert_eq!(l.ops(), 2 * 8 * 8 * 49 * 26 * 26);
+    }
+
+    #[test]
+    fn thin_valid_layers_report_typed_geometry_instead_of_wrapping() {
+        // Regression: w < k (or h < k) on an unpadded layer used to
+        // compute `w − k + 1` directly — a debug panic with no context,
+        // a near-2⁶⁴ wrap in release. Now: typed data via try_out_hw.
+        let l = conv(5, 3, 12, 2, 2, false); // w = 3 < k = 5
+        assert_eq!(
+            l.try_out_hw().unwrap_err(),
+            YodannError::NoOutputRows { k: 5, axis: "width", size: 3 }
+        );
+        let l = conv(7, 12, 4, 2, 2, false); // h = 4 < k = 7
+        assert_eq!(
+            l.try_out_hw().unwrap_err(),
+            YodannError::NoOutputRows { k: 7, axis: "height", size: 4 }
+        );
+        // Zero-padded thin layers are fine (the halo supplies the rows).
+        let l = conv(7, 3, 3, 2, 2, true);
+        assert_eq!(l.try_out_hw().unwrap(), (3, 3));
+        assert_eq!(l.out_w(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no output rows")]
+    fn out_w_panics_with_the_typed_geometry_error() {
+        conv(5, 3, 12, 2, 2, false).out_w();
+    }
+
+    #[test]
+    #[should_panic(expected = "no output rows")]
+    fn out_h_panics_with_the_typed_geometry_error() {
+        conv(7, 12, 4, 2, 2, false).out_h();
     }
 
     #[test]

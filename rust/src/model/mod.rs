@@ -4,15 +4,23 @@
 //!   operation-count formula (paper Eq. 7).
 //! * [`networks`] — every network evaluated in the paper's Table III
 //!   (BinaryConnect Cifar-10 / SVHN, AlexNet with the 11×11 kernel split,
-//!   ResNet-18/34, VGG-13/19), encoded from the table.
+//!   ResNet-18/34, VGG-13/19), encoded from the table — plus runnable
+//!   **graph encodings** of the non-chain networks (AlexNet's parallel
+//!   split, ResNet's residual shortcuts).
+//! * [`graph`] — the graph-based network IR: [`graph::NetworkBuilder`] /
+//!   [`graph::NetworkGraph`] (typed DAG of conv nodes and host ops) and
+//!   [`graph::NetworkGraph::compile`], the validating lowering pass that
+//!   produces the executable [`graph::CompiledGraph`] sessions run.
 //! * [`efficiency`] — the throughput-efficiency model of §IV-A
 //!   (Eqs. 8–11: tiling, channel idling, border effects) and the
 //!   per-layer/per-network evaluation engine behind Tables III–V.
 
 pub mod efficiency;
+pub mod graph;
 pub mod layer;
 pub mod networks;
 
 pub use efficiency::{evaluate_layer, evaluate_network, Corner, LayerEval, NetworkEval};
+pub use graph::{CompiledGraph, NetworkBuilder, NetworkGraph, Weights};
 pub use layer::{ops_per_layer, ConvLayer, KernelMode, Layer};
 pub use networks::{all_networks, network, Network};
