@@ -9,6 +9,12 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== tier-1 again with the SIMD vector paths force-disabled =="
+# The same suite with YODANN_FORCE_SCALAR=1: the functional-simd engine
+# must fall back to its portable-scalar loop and stay bit-identical, so
+# both sides of the runtime dispatch are pinned on every CI run.
+YODANN_FORCE_SCALAR=1 cargo test -q
+
 echo "== cargo build --examples (every non-golden example; quickstart needs --features golden) =="
 cargo build --examples
 
@@ -45,6 +51,9 @@ if cargo fmt --version >/dev/null 2>&1; then
 else
     echo "rustfmt unavailable; skipping"
 fi
+
+echo "== CLI smoke: SIMD engine + row-band schedule through yodann throughput =="
+cargo run --release -- throughput --engine simd --frames 2 --workers 2 --bands 2
 
 echo "== fast engine A/B bench (writes BENCH_engines.json) =="
 YODANN_BENCH_FAST=1 cargo bench --bench engines

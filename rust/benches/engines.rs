@@ -8,12 +8,16 @@
 //! are asserted bit-identical before any timing, and the results are
 //! written to `BENCH_engines.json` (name, ns/iter, frames/s) so the perf
 //! trajectory is trackable across PRs (the `speedup/raster-vs-pr1`
-//! record is the raster refactor's headline number).
+//! record is the raster refactor's headline number, and
+//! `speedup/simd-vs-raster` the SIMD engine's). The
+//! `batch-matrix/<engine>/w<workers>/batch<N>` records sweep batch size
+//! × engine × worker count so the latency-vs-throughput crossover of
+//! the row-band schedule is pinned in the same file.
 
 use yodann::api::SessionBuilder;
 use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
-use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
+use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional, FunctionalSimd};
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::model::networks;
 use yodann::testkit::Gen;
@@ -86,6 +90,39 @@ fn main() {
     records.push(JsonRecord::from_stats(&sp));
     records.push(JsonRecord::ratio("speedup/raster-vs-pr1", raster_speedup));
 
+    // The SIMD engine's A/B: runtime-dispatched vector window extract +
+    // grouped popcount vs the scalar raster engine, same layout either
+    // side — the tentpole's headline number. The forced-scalar leg pins
+    // the dispatch overhead (it should track `functional-raster` within
+    // noise, since the inner loop is byte-for-byte the same).
+    let mut simd = FunctionalSimd::new();
+    let mut simd_scalar = FunctionalSimd::forced_scalar();
+    assert_eq!(
+        fun.run_block(&job).output,
+        simd.run_block(&job).output,
+        "simd and raster functional diverge"
+    );
+    assert_eq!(
+        fun.run_block(&job).output,
+        simd_scalar.run_block(&job).output,
+        "forced-scalar simd and raster functional diverge"
+    );
+    println!(
+        "== simd ({}) vs scalar raster (functional engine, k=3) ==",
+        simd.isa_name()
+    );
+    let sv = b.bench("functional-simd/k3_32to64_16x16", || {
+        black_box(simd.run_block(&job));
+    });
+    let ss = b.bench("functional-simd-scalar/k3_32to64_16x16", || {
+        black_box(simd_scalar.run_block(&job));
+    });
+    let simd_speedup = sr.mean.as_secs_f64() / sv.mean.as_secs_f64();
+    println!("  -> simd ({}) speedup over scalar raster: {simd_speedup:.2}x\n", simd.isa_name());
+    records.push(JsonRecord::from_stats(&sv));
+    records.push(JsonRecord::from_stats(&ss));
+    records.push(JsonRecord::ratio("speedup/simd-vs-raster", simd_speedup));
+
     // End-to-end batched traffic through the serving facade: the
     // scene-labeling chain (the paper's power-simulation workload) at
     // reduced frame size, one batch per worker-pool fan-out. The
@@ -102,9 +139,13 @@ fn main() {
     let frames: Vec<Image> =
         (0..n_frames).map(|_| synthetic_scene(&mut g, 3, 24, 32)).collect();
     let mut session_outputs: Vec<Vec<Image>> = Vec::new();
-    for kind in
-        [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow]
-    {
+    for kind in [
+        EngineKind::CycleAccurate,
+        EngineKind::Functional,
+        EngineKind::FunctionalPerWindow,
+        EngineKind::FunctionalSimd,
+        EngineKind::FunctionalSimdScalar,
+    ] {
         #[allow(deprecated)] // the old-vs-new differential needs the old path
         let legacy = {
             let mut old = NetworkSession::new(cfg, kind, 4, specs.clone());
@@ -161,6 +202,8 @@ fn main() {
         ShardPolicy::PerShard(ShardGrid::striped(2)),
         ShardPolicy::PerShard(ShardGrid::striped(4)),
         ShardPolicy::PerShard(ShardGrid::new(2, 2)),
+        ShardPolicy::RowBands(2),
+        ShardPolicy::RowBands(0),
     ];
     let mut per_frame_s = None;
     let mut shard_outputs: Vec<Vec<Image>> = Vec::new();
@@ -191,9 +234,9 @@ fn main() {
         records.push(JsonRecord::with_frames(&s, shard_frames.len() as f64));
         match policy {
             ShardPolicy::PerFrame => per_frame_s = Some(s.mean.as_secs_f64()),
-            ShardPolicy::PerShard(grid) => {
+            ShardPolicy::PerShard(_) | ShardPolicy::RowBands(_) => {
                 let ratio = per_frame_s.expect("per-frame measured first") / s.mean.as_secs_f64();
-                records.push(JsonRecord::ratio(&format!("shard-scaling/speedup-{grid}"), ratio));
+                records.push(JsonRecord::ratio(&format!("shard-scaling/speedup-{policy}"), ratio));
             }
             ShardPolicy::Auto => {}
         }
@@ -202,6 +245,50 @@ fn main() {
         assert_eq!(&shard_outputs[0], other, "shard policies diverge");
     }
     println!("shard-policy outputs bit-identical across grids");
+
+    // The batch-size × engine × worker-count throughput matrix — a
+    // log-log sweep (1, 2, 4, 8 frames × 1, 2, 4 workers) under the
+    // Auto schedule, which row-bands the batch=1 column across the pool
+    // and stripes larger batches. Records land as
+    // `batch-matrix/<engine>/w<workers>/batch<N>` with frames/s, so the
+    // latency-vs-throughput crossover (where within-frame banding stops
+    // paying and per-frame batching takes over) is trackable across PRs.
+    println!("== batch x engine x worker throughput matrix (scene-labeling chain) ==");
+    let matrix_pool: Vec<Image> = {
+        let mut mg = Gen::new(0xBA7);
+        (0..8).map(|_| synthetic_scene(&mut mg, 3, 16, 20)).collect()
+    };
+    let matrix_kinds =
+        [EngineKind::Functional, EngineKind::FunctionalSimd, EngineKind::FunctionalSimdScalar];
+    for kind in matrix_kinds {
+        for workers in [1usize, 2, 4] {
+            let mut sess = SessionBuilder::new()
+                .chip(cfg)
+                .layers(specs.clone())
+                .engine(kind)
+                .workers(workers)
+                .shard_policy(ShardPolicy::Auto)
+                .max_in_flight(matrix_pool.len())
+                .build()
+                .expect("a valid serving session");
+            for batch in [1usize, 2, 4, 8] {
+                let batch_frames: Vec<Image> = matrix_pool[..batch].to_vec();
+                let s = b.bench(
+                    &format!("batch-matrix/{}/w{workers}/batch{batch}", kind.name()),
+                    || {
+                        black_box(sess.run_batch(batch_frames.clone()).expect("batch runs"));
+                    },
+                );
+                println!(
+                    "  {:<24} w{workers} batch{batch}: {:>9.2} frames/s",
+                    kind.name(),
+                    batch as f64 / s.mean.as_secs_f64()
+                );
+                records.push(JsonRecord::with_frames(&s, batch as f64));
+            }
+        }
+    }
+    println!();
 
     // Graph-IR serving: ResNet-18's residual topology (width/4, scaled
     // frames) through the facade's graph path — the record that tracks

@@ -377,6 +377,15 @@ impl SessionBuilder {
             // Auto stripes small batches across the whole pool: price
             // that worst case.
             ShardPolicy::Auto => self.workers,
+            // Row-bands fans one frame across `n` band workers (0 = the
+            // whole pool), each modeling a chip against the shared raster.
+            ShardPolicy::RowBands(n) => {
+                if n == 0 {
+                    self.workers
+                } else {
+                    n
+                }
+            }
         };
         let ctx = TelemetryCtx {
             engine: self.engine,

@@ -28,9 +28,15 @@
 //!   [`BitplaneRaster`] (packed once into caller-side reusable scratch,
 //!   shared via `Arc` — no activation copies), and the caller stitches
 //!   stripes through the executor's wide-precision reduction.
+//! * **[`ShardPolicy::RowBands`]** — within-frame row-band parallelism,
+//!   unconditionally: every conv's output rows split into `n` horizontal
+//!   bands (`n × 1` stripes, `RowBands(0)` = one band per worker) fanned
+//!   across the pool against the one shared layer raster — the explicit
+//!   latency schedule for batch=1 traffic, with no batch-size heuristic
+//!   in the way.
 //! * **[`ShardPolicy::Auto`]** — batches with at least one frame per
 //!   worker run per-frame; smaller batches shard each frame across the
-//!   whole pool (`workers × 1` stripes).
+//!   whole pool (`workers × 1` stripes — i.e. `RowBands(0)`).
 //!
 //! Since the graph-IR redesign the session no longer walks a flat layer
 //! chain: it **interprets a compiled step program**
@@ -482,6 +488,16 @@ impl NetworkSession {
         match self.policy {
             ShardPolicy::PerFrame => self.run_batch_per_frame(frames),
             ShardPolicy::PerShard(grid) => self.run_batch_sharded(frames, grid),
+            // Row-band parallelism is stripe-only sharding: each conv's
+            // output rows split into n bands against the one shared
+            // layer raster (RowBands(0) sizes the bands to the pool).
+            // Auto's small-batch arm below is exactly RowBands(0) — the
+            // explicit policy skips the batch-size heuristic, which is
+            // what latency-bound batch=1 traffic wants.
+            ShardPolicy::RowBands(bands) => {
+                let n = if bands == 0 { self.workers } else { bands };
+                self.run_batch_sharded(frames, ShardGrid::striped(n))
+            }
             ShardPolicy::Auto => {
                 if frames.len() >= self.workers {
                     self.run_batch_per_frame(frames)
@@ -1080,6 +1096,8 @@ mod tests {
                 ShardPolicy::PerShard(ShardGrid::striped(3)),
                 ShardPolicy::PerShard(ShardGrid::new(2, 2)),
                 ShardPolicy::Auto,
+                ShardPolicy::RowBands(0),
+                ShardPolicy::RowBands(2),
             ] {
                 let mut sess =
                     NetworkSession::with_policy(cfg, kind, 3, policy, specs.clone());
@@ -1101,6 +1119,7 @@ mod tests {
             ShardPolicy::PerFrame,
             ShardPolicy::PerShard(ShardGrid::striped(4)),
             ShardPolicy::Auto,
+            ShardPolicy::RowBands(3),
         ];
         for policy in policies {
             let mut base =

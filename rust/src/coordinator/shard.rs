@@ -105,16 +105,33 @@ pub enum ShardPolicy {
     /// [`ShardPolicy::PerFrame`]; smaller batches shard each frame
     /// across the idle workers (`workers × 1` stripes).
     Auto,
+    /// Within-frame row-band parallelism, unconditionally: every frame's
+    /// conv layers split their output rows into `n` horizontal bands
+    /// (`n × 1` stripes) fanned across the worker pool against the one
+    /// shared layer raster. `RowBands(0)` sizes the bands to the pool.
+    /// This is the latency schedule for batch=1 traffic — the same
+    /// stripe mechanics as [`ShardPolicy::PerShard`], without the
+    /// channel-group axis and without waiting for `Auto`'s batch-size
+    /// heuristic.
+    RowBands(usize),
 }
 
 impl ShardPolicy {
     /// Parse the CLI spelling, case-insensitively: `per-frame`, `auto`,
-    /// `per-shard:NxM` (or a bare grid `NxM`).
+    /// `row-bands[:N]`, `per-shard:NxM` (or a bare grid `NxM`).
     pub fn parse(s: &str) -> Option<ShardPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "per-frame" | "frame" => Some(ShardPolicy::PerFrame),
             "auto" => Some(ShardPolicy::Auto),
+            "row-bands" | "bands" | "rows" => Some(ShardPolicy::RowBands(0)),
             other => {
+                if let Some(n) = other.strip_prefix("row-bands:") {
+                    let bands: usize = n.trim().parse().ok()?;
+                    if bands == 0 {
+                        return None;
+                    }
+                    return Some(ShardPolicy::RowBands(bands));
+                }
                 let g = other.strip_prefix("per-shard:").unwrap_or(other);
                 ShardGrid::parse(g).map(ShardPolicy::PerShard)
             }
@@ -129,6 +146,8 @@ impl std::fmt::Display for ShardPolicy {
             ShardPolicy::PerFrame => "per-frame".to_string(),
             ShardPolicy::PerShard(g) => format!("per-shard:{g}"),
             ShardPolicy::Auto => "auto".to_string(),
+            ShardPolicy::RowBands(0) => "row-bands".to_string(),
+            ShardPolicy::RowBands(n) => format!("row-bands:{n}"),
         };
         f.pad(&s)
     }
@@ -340,6 +359,13 @@ mod tests {
             ShardPolicy::parse("4"),
             Some(ShardPolicy::PerShard(ShardGrid::striped(4)))
         );
+        assert_eq!(ShardPolicy::parse("row-bands"), Some(ShardPolicy::RowBands(0)));
+        assert_eq!(ShardPolicy::parse("Row-Bands"), Some(ShardPolicy::RowBands(0)));
+        assert_eq!(ShardPolicy::parse("bands"), Some(ShardPolicy::RowBands(0)));
+        assert_eq!(ShardPolicy::parse("row-bands:3"), Some(ShardPolicy::RowBands(3)));
+        assert_eq!(ShardPolicy::parse("row-bands:0"), None);
+        assert_eq!(ShardPolicy::RowBands(0).to_string(), "row-bands");
+        assert_eq!(ShardPolicy::RowBands(3).to_string(), "row-bands:3");
         assert_eq!(ShardPolicy::parse("bogus"), None);
     }
 

@@ -69,10 +69,12 @@
 pub mod cycle;
 pub mod functional;
 pub mod raster;
+pub mod simd;
 
 pub use cycle::CycleAccurate;
 pub use functional::{Functional, PackedKernels};
 pub use raster::BitplaneRaster;
+pub use simd::FunctionalSimd;
 
 use crate::hw::{BlockJob, ChipConfig, ChipStats};
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -263,26 +265,42 @@ pub enum EngineKind {
     /// The PR-1 functional baseline that repacks every window bit by
     /// bit — kept only for measured A/B against the raster path.
     FunctionalPerWindow,
+    /// The functional raster path with SIMD inner loops
+    /// (runtime-detected AVX2/NEON, portable-scalar fallback) — see
+    /// [`simd::FunctionalSimd`].
+    FunctionalSimd,
+    /// [`simd::FunctionalSimd`] pinned to its portable scalar loop —
+    /// kept in the matrix so the fallback is conformance-tested on
+    /// SIMD-capable hosts too.
+    FunctionalSimdScalar,
 }
 
 impl EngineKind {
     /// Every engine kind, in report order — one axis of the
     /// engine × shard conformance matrix (`rust/tests/conformance.rs`).
-    pub const ALL: [EngineKind; 3] =
-        [EngineKind::CycleAccurate, EngineKind::Functional, EngineKind::FunctionalPerWindow];
+    pub const ALL: [EngineKind; 5] = [
+        EngineKind::CycleAccurate,
+        EngineKind::Functional,
+        EngineKind::FunctionalPerWindow,
+        EngineKind::FunctionalSimd,
+        EngineKind::FunctionalSimdScalar,
+    ];
 
     /// Whether engines of this kind consume [`LayerData::packed`] — the
     /// static mirror of [`ConvEngine::wants_packed`], for callers that
     /// pack shared state before any engine instance exists (sessions,
     /// the shard executor).
     pub fn wants_packed(self) -> bool {
-        matches!(self, EngineKind::Functional | EngineKind::FunctionalPerWindow)
+        !matches!(self, EngineKind::CycleAccurate)
     }
 
     /// Whether engines of this kind consume [`LayerData::raster`] — the
     /// static mirror of [`ConvEngine::wants_raster`].
     pub fn wants_raster(self) -> bool {
-        matches!(self, EngineKind::Functional)
+        matches!(
+            self,
+            EngineKind::Functional | EngineKind::FunctionalSimd | EngineKind::FunctionalSimdScalar
+        )
     }
 
     /// Engine name as printed in reports.
@@ -291,11 +309,15 @@ impl EngineKind {
             EngineKind::CycleAccurate => "cycle-accurate",
             EngineKind::Functional => "functional",
             EngineKind::FunctionalPerWindow => "functional-pr1",
+            EngineKind::FunctionalSimd => "functional-simd",
+            EngineKind::FunctionalSimdScalar => "functional-simd-scalar",
         }
     }
 
     /// Every spelling [`EngineKind::parse`] accepts, for error messages
     /// (`yodann throughput --engine` echoes this list on a bad value).
+    /// Drift-pinned against [`EngineKind::ALL`] by
+    /// `accepted_and_parse_stay_in_sync_with_all`.
     pub const ACCEPTED: &'static [&'static str] = &[
         "cycle",
         "cycle-accurate",
@@ -307,6 +329,10 @@ impl EngineKind {
         "functional-pr1",
         "per-window",
         "pr1",
+        "functional-simd",
+        "simd",
+        "functional-simd-scalar",
+        "simd-scalar",
     ];
 
     /// Parse a CLI spelling, case-insensitively.
@@ -315,6 +341,8 @@ impl EngineKind {
             "cycle" | "cycle-accurate" | "sim" => Some(EngineKind::CycleAccurate),
             "functional" | "fast" | "popcount" | "raster" => Some(EngineKind::Functional),
             "functional-pr1" | "per-window" | "pr1" => Some(EngineKind::FunctionalPerWindow),
+            "functional-simd" | "simd" => Some(EngineKind::FunctionalSimd),
+            "functional-simd-scalar" | "simd-scalar" => Some(EngineKind::FunctionalSimdScalar),
             _ => None,
         }
     }
@@ -325,6 +353,8 @@ impl EngineKind {
             EngineKind::CycleAccurate => Box::new(CycleAccurate::new(cfg)),
             EngineKind::Functional => Box::new(Functional::new()),
             EngineKind::FunctionalPerWindow => Box::new(Functional::per_window()),
+            EngineKind::FunctionalSimd => Box::new(FunctionalSimd::new()),
+            EngineKind::FunctionalSimdScalar => Box::new(FunctionalSimd::forced_scalar()),
         }
     }
 }
@@ -346,9 +376,39 @@ mod tests {
             EngineKind::parse("functional-pr1"),
             Some(EngineKind::FunctionalPerWindow)
         );
+        assert_eq!(EngineKind::parse("simd"), Some(EngineKind::FunctionalSimd));
+        assert_eq!(EngineKind::parse("simd-scalar"), Some(EngineKind::FunctionalSimdScalar));
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Functional.name(), "functional");
         assert_eq!(EngineKind::FunctionalPerWindow.name(), "functional-pr1");
+        assert_eq!(EngineKind::FunctionalSimd.name(), "functional-simd");
+        assert_eq!(EngineKind::FunctionalSimdScalar.name(), "functional-simd-scalar");
+    }
+
+    #[test]
+    fn accepted_and_parse_stay_in_sync_with_all() {
+        // The drift pin: adding an engine to ALL without teaching parse,
+        // name and ACCEPTED about it must fail here — otherwise CLI
+        // help, the UnknownEngine error text and the bench matrix
+        // silently desync.
+        for kind in EngineKind::ALL {
+            assert_eq!(
+                EngineKind::parse(kind.name()),
+                Some(kind),
+                "ALL member '{}' does not round-trip through parse",
+                kind.name()
+            );
+            assert!(
+                EngineKind::ACCEPTED.contains(&kind.name()),
+                "ALL member '{}' missing from ACCEPTED",
+                kind.name()
+            );
+        }
+        // And every accepted spelling must land on a member of ALL.
+        for &s in EngineKind::ACCEPTED {
+            let kind = EngineKind::parse(s).expect("ACCEPTED spelling parses");
+            assert!(EngineKind::ALL.contains(&kind), "'{s}' parses to a kind outside ALL");
+        }
     }
 
     #[test]

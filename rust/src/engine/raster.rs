@@ -210,6 +210,23 @@ impl BitplaneRaster {
         sum_u
     }
 
+    /// Raw geometry + buffer view for engines that re-implement the
+    /// window extract with wider loads (the SIMD engine assembles 4–8
+    /// plane words per lane op from the same layout). The guard word per
+    /// plane row is part of the contract: `words[p + 1]` is always in
+    /// bounds for any in-window extract position `p`.
+    #[inline]
+    pub(crate) fn raw_parts(&self) -> RasterParts<'_> {
+        RasterParts {
+            k: self.k,
+            ph: self.ph,
+            pw: self.pw,
+            stride: self.stride,
+            words: &self.words,
+            usums: &self.usums,
+        }
+    }
+
     /// Kernel size this raster was packed for.
     pub fn k(&self) -> usize {
         self.k
@@ -231,6 +248,22 @@ impl BitplaneRaster {
     pub fn reallocs(&self) -> u64 {
         self.reallocs
     }
+}
+
+/// Borrowed raw view of a packed raster: the geometry and buffers the
+/// [`BitplaneRaster::window`] extract walks, exposed crate-internally so
+/// the SIMD engine can run the identical extract with vector loads.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RasterParts<'a> {
+    pub k: usize,
+    pub ph: usize,
+    pub pw: usize,
+    pub stride: usize,
+    /// Plane words: `[(c·ph + y)·PLANES + b] · stride`, one guard word
+    /// per plane row.
+    pub words: &'a [u64],
+    /// Prefix sums of `u`: `[(c·ph + y)] · (pw + 1)`.
+    pub usums: &'a [i64],
 }
 
 #[cfg(test)]

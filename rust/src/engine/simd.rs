@@ -1,0 +1,766 @@
+//! `FunctionalSimd`: the functional popcount datapath with the two hot
+//! inner loops vectorized via `std::arch` — windows assembled 4 bitplane
+//! words per lane op on AVX2 (2 on NEON), and the grouped-popcount dot
+//! evaluated 4 output channels per lane op (2 on NEON).
+//!
+//! The engine reuses the exact [`BitplaneRaster`] layout — packing is
+//! unchanged, only the window-extract + dot inner loop of
+//! [`super::Functional`]'s raster path vectorizes. Every operation is
+//! exact integer arithmetic (shifts, masks, popcounts, adds), so the
+//! vector paths are **bit-identical** to the scalar fallback and to
+//! [`super::Functional`]/[`super::CycleAccurate`] by construction; the
+//! conformance fuzzer pins this across ~100 geometries per run.
+//!
+//! Dispatch is decided **once at engine construction**, at runtime:
+//!
+//! * x86-64 with AVX2 (detected via
+//!   `std::arch::is_x86_feature_detected!`) → 256-bit lanes,
+//! * aarch64 → NEON (mandatory on that architecture) → 128-bit lanes,
+//! * anything else, or `YODANN_FORCE_SCALAR=1` in the environment, or
+//!   [`FunctionalSimd::forced_scalar`] → the portable scalar loop
+//!   (identical to `Functional`'s, kept so every platform runs the same
+//!   numbers and CI can exercise the fallback on SIMD-capable hosts).
+//!
+//! There is deliberately **no compile-time dispatch**: the crate builds
+//! without `target-cpu=native` (see `.cargo/config.toml`), and the only
+//! thing that decides which inner loop runs is the `Isa` picked here.
+//!
+//! AVX2 has no 64-bit popcount instruction; the dot loop uses the
+//! classic nibble-LUT scheme (two `PSHUFB` table lookups for per-byte
+//! counts, `PSADBW` against zero to sum each u64 lane). NEON uses
+//! `CNT` + the widening pairwise-add chain. Both produce the same exact
+//! per-lane popcount as `u64::count_ones`.
+
+use super::functional::PackedKernels;
+use super::raster::{BitplaneRaster, OFFSET, PLANES};
+use super::{BlockPlan, ConvEngine, EngineOutput, LayerData};
+use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+use crate::hw::{BlockJob, ChipStats};
+use crate::workload::Image;
+
+/// Lane ISA for the vector inner loops, decided once per engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Isa {
+    /// Portable scalar loops — the forced fallback, and the default on
+    /// architectures without a vector path.
+    Scalar,
+    /// 256-bit AVX2 lanes: 4 plane words / 4 output channels per op.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON lanes: 2 plane words / 2 output channels per op.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// `YODANN_FORCE_SCALAR` set (and not "0") disables the vector paths —
+/// CI runs the whole suite once this way so the fallback cannot rot.
+fn env_forces_scalar() -> bool {
+    std::env::var_os("YODANN_FORCE_SCALAR").is_some_and(|v| v != "0")
+}
+
+impl Isa {
+    #[allow(unreachable_code)] // arch-dependent tail after cfg'd returns
+    fn detect(force_scalar: bool) -> Isa {
+        if force_scalar || env_forces_scalar() {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return Isa::Neon;
+        }
+        Isa::Scalar
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// The SIMD functional engine. Same scratch discipline as
+/// [`super::Functional`]: reusable accumulators and raster, nothing
+/// allocated per block in steady state.
+#[derive(Debug)]
+pub struct FunctionalSimd {
+    accs: Vec<i64>,
+    raster: BitplaneRaster,
+    isa: Isa,
+    forced_scalar: bool,
+}
+
+impl Default for FunctionalSimd {
+    fn default() -> FunctionalSimd {
+        FunctionalSimd::new()
+    }
+}
+
+impl FunctionalSimd {
+    /// New engine with the best lane ISA the host offers (honours
+    /// `YODANN_FORCE_SCALAR`).
+    pub fn new() -> FunctionalSimd {
+        FunctionalSimd::with(false)
+    }
+
+    /// New engine pinned to the portable scalar loop regardless of host
+    /// features — the conformance matrix runs this variant alongside the
+    /// vector one so the fallback is pinned bit-identical automatically.
+    pub fn forced_scalar() -> FunctionalSimd {
+        FunctionalSimd::with(true)
+    }
+
+    fn with(forced_scalar: bool) -> FunctionalSimd {
+        FunctionalSimd {
+            accs: Vec::new(),
+            raster: BitplaneRaster::new(),
+            isa: Isa::detect(forced_scalar),
+            forced_scalar,
+        }
+    }
+
+    /// The lane ISA this engine dispatches to: `"avx2"`, `"neon"` or
+    /// `"scalar"`.
+    pub fn isa_name(&self) -> &'static str {
+        self.isa.name()
+    }
+
+    /// Raster-scratch packs that had to grow a buffer (see
+    /// [`BitplaneRaster::reallocs`]).
+    pub fn raster_reallocs(&self) -> u64 {
+        self.raster.reallocs()
+    }
+
+    /// Tile output shape of a plan (mirrors `Functional::out_dims`).
+    fn out_dims(layer: &LayerData<'_>, plan: &BlockPlan) -> (usize, usize) {
+        let (k, w, tile_h) = (layer.k, layer.input.w, plan.tile_h);
+        if !layer.zero_pad {
+            assert!(
+                tile_h >= k && w >= k,
+                "tile {tile_h}x{w} smaller than kernel {k} (valid mode)"
+            );
+        }
+        if layer.zero_pad {
+            (tile_h, w)
+        } else {
+            (tile_h + 1 - k, w + 1 - k)
+        }
+    }
+
+    fn run_plan_impl(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let k = layer.k;
+        let kk = k * k;
+        let (out_h, out_w) = Self::out_dims(layer, plan);
+        let n_in = plan.in_len;
+        let n_out = plan.out_len;
+        let local;
+        let packed: &PackedKernels = match layer.packed {
+            Some(p) => {
+                debug_assert_eq!(p.k, k);
+                p
+            }
+            None => {
+                local = PackedKernels::pack(layer.kernels);
+                &local
+            }
+        };
+        let identity = plan.in_blocks > 1;
+        let isa = self.isa;
+        // Split-borrow the scratch fields so the raster can be packed
+        // mutably and then read while `accs` is written.
+        let FunctionalSimd { accs, raster: scratch, .. } = self;
+        // (c_base, row0) map plan-local (channel, window row) into raster
+        // coordinates, exactly like the Functional engine.
+        let (raster, c_base, row0): (&BitplaneRaster, usize, usize) = match layer.raster {
+            Some(r) => {
+                debug_assert_eq!(r.k(), k);
+                (r, plan.in_base, plan.clip0)
+            }
+            None => {
+                scratch.pack_view(
+                    layer.input,
+                    k,
+                    layer.zero_pad,
+                    plan.in_base,
+                    plan.in_len,
+                    plan.clip0,
+                    plan.tile_h,
+                );
+                (&*scratch, 0, 0)
+            }
+        };
+        let m = packed.planes_per_group();
+        // Per-sub-plane fold multipliers (see Functional::run_plan_raster).
+        let mut fold = [0u64; PLANES];
+        for (t, f) in fold[..m].iter_mut().enumerate() {
+            let copies = 1usize << t;
+            for cpy in 0..copies {
+                *f |= 1u64 << ((copies - 1 + cpy) * kk);
+            }
+        }
+        let mut out = Image::zeros(n_out, out_h, out_w);
+        accs.clear();
+        accs.resize(n_out, 0);
+        match isa {
+            Isa::Scalar => conv_scalar(
+                raster, c_base, row0, layer, plan, packed, identity, &fold, &mut out, accs,
+            ),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // SAFETY: Isa::Avx2 is only selected after
+                // is_x86_feature_detected!("avx2") returned true.
+                unsafe {
+                    avx2::conv(
+                        raster.raw_parts(),
+                        c_base,
+                        row0,
+                        layer,
+                        plan,
+                        packed,
+                        identity,
+                        &fold,
+                        &mut out,
+                        accs,
+                    )
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                // SAFETY: NEON is mandatory on aarch64.
+                unsafe {
+                    neon::conv(
+                        raster.raw_parts(),
+                        c_base,
+                        row0,
+                        layer,
+                        plan,
+                        packed,
+                        identity,
+                        &fold,
+                        &mut out,
+                        accs,
+                    )
+                }
+            }
+        }
+        let stats = ChipStats {
+            useful_ops: 2 * kk as u64 * (n_in * n_out) as u64 * (out_h * out_w) as u64,
+            ..Default::default()
+        };
+        EngineOutput { output: out, stats }
+    }
+}
+
+/// The portable fallback: byte-for-byte the Functional engine's raster
+/// hot loop, via [`BitplaneRaster::window`]. Kept as a free function so
+/// the vector paths and this one share the identical caller.
+#[allow(clippy::too_many_arguments)] // one flat hot-loop context, mirrors the vector paths
+fn conv_scalar(
+    raster: &BitplaneRaster,
+    c_base: usize,
+    row0: usize,
+    layer: &LayerData<'_>,
+    plan: &BlockPlan,
+    packed: &PackedKernels,
+    identity: bool,
+    fold: &[u64; PLANES],
+    out: &mut Image,
+    accs: &mut [i64],
+) {
+    let (out_h, out_w) = (out.h, out.w);
+    let n_in = plan.in_len;
+    let n_out = plan.out_len;
+    let m = packed.planes_per_group();
+    let groups = PLANES / m;
+    let mut planes = [0u64; PLANES];
+    let mut gwords = [0u64; PLANES];
+    for y in 0..out_h {
+        for x in 0..out_w {
+            accs.iter_mut().for_each(|a| *a = 0);
+            for i in 0..n_in {
+                let sum_u = raster.window(c_base + i, row0 + y, x, &mut planes);
+                if m == 1 {
+                    gwords = planes;
+                } else {
+                    for (g, gw) in gwords[..groups].iter_mut().enumerate() {
+                        let mut acc = 0u64;
+                        for (t, &u) in planes[g * m..g * m + m].iter().enumerate() {
+                            acc |= u * fold[t];
+                        }
+                        *gw = acc;
+                    }
+                }
+                let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                let signs = packed.sign_slice(plan.in_base + i, plan.out_base, n_out);
+                for (o, acc) in accs.iter_mut().enumerate() {
+                    let rep = reps[o];
+                    let mut dot2: i64 = 0;
+                    for (g, &gw) in gwords[..groups].iter().enumerate() {
+                        dot2 += ((gw & rep).count_ones() as i64) << (m * g);
+                    }
+                    let sop = 2 * dot2 - sum_u - OFFSET * signs[o];
+                    *acc = sat_add(Q7_9, *acc, sop);
+                }
+            }
+            for (o, &acc) in accs.iter().enumerate() {
+                let (alpha, beta) = if identity {
+                    (512, 0)
+                } else {
+                    (
+                        layer.scale_bias.alpha[plan.out_base + o],
+                        layer.scale_bias.beta[plan.out_base + o],
+                    )
+                };
+                *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::super::functional::PackedKernels;
+    use super::super::raster::{RasterParts, OFFSET, PLANES};
+    use super::super::{BlockPlan, LayerData};
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    use crate::workload::Image;
+
+    /// Per-64-bit-lane popcount (AVX2 has no `VPOPCNTQ`): nibble-LUT
+    /// byte counts via two `PSHUFB` lookups, summed into each u64 lane
+    /// by `PSADBW` against zero. Exact: equals `u64::count_ones` per
+    /// lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// The AVX2 hot loop: same iteration order and saturation points as
+    /// the scalar path, with the window extract processing 4 plane words
+    /// per lane op and the dot 4 output channels per lane op.
+    #[allow(clippy::too_many_arguments)] // one flat hot-loop context
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn conv(
+        parts: RasterParts<'_>,
+        c_base: usize,
+        row0: usize,
+        layer: &LayerData<'_>,
+        plan: &BlockPlan,
+        packed: &PackedKernels,
+        identity: bool,
+        fold: &[u64; PLANES],
+        out: &mut Image,
+        accs: &mut [i64],
+    ) {
+        let k = parts.k;
+        let (out_h, out_w) = (out.h, out.w);
+        let n_in = plan.in_len;
+        let n_out = plan.out_len;
+        let m = packed.planes_per_group();
+        let groups = PLANES / m;
+        let stride = parts.stride;
+        let words = parts.words;
+        let usums = parts.usums;
+        let maskv = _mm256_set1_epi64x(((1u64 << k) - 1) as i64);
+        let mut planes = [0u64; PLANES];
+        let mut gwords = [0u64; PLANES];
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                let wi = x >> 6;
+                // Variable AVX2 shifts yield 0 for counts >= 64, so the
+                // (lo >> sh) | (hi << (64 - sh)) extract needs no sh == 0
+                // branch — unlike the scalar path, where << 64 is UB.
+                let shr = _mm_cvtsi32_si128((x & 63) as i32);
+                let shl = _mm_cvtsi32_si128((64 - (x & 63)) as i32);
+                for i in 0..n_in {
+                    let mut pv = [_mm256_setzero_si256(); PLANES / 4];
+                    let mut sum_u = 0i64;
+                    for dy in 0..k {
+                        let row = (c_base + i) * parts.ph + row0 + y + dy;
+                        let ubase = row * (parts.pw + 1);
+                        sum_u += usums[ubase + x + k] - usums[ubase + x];
+                        let wbase = row * PLANES * stride + wi;
+                        let jshift = _mm_cvtsi32_si128((dy * k) as i32);
+                        for (q, acc) in pv.iter_mut().enumerate() {
+                            let b0 = wbase + 4 * q * stride;
+                            // 4 plane rows per lane op; the raster's
+                            // guard word makes the +1 loads in-bounds.
+                            let lo = _mm256_set_epi64x(
+                                words[b0 + 3 * stride] as i64,
+                                words[b0 + 2 * stride] as i64,
+                                words[b0 + stride] as i64,
+                                words[b0] as i64,
+                            );
+                            let hi = _mm256_set_epi64x(
+                                words[b0 + 3 * stride + 1] as i64,
+                                words[b0 + 2 * stride + 1] as i64,
+                                words[b0 + stride + 1] as i64,
+                                words[b0 + 1] as i64,
+                            );
+                            let bits = _mm256_or_si256(
+                                _mm256_srl_epi64(lo, shr),
+                                _mm256_sll_epi64(hi, shl),
+                            );
+                            let bits = _mm256_and_si256(bits, maskv);
+                            *acc = _mm256_or_si256(*acc, _mm256_sll_epi64(bits, jshift));
+                        }
+                    }
+                    for (q, &v) in pv.iter().enumerate() {
+                        _mm256_storeu_si256(planes.as_mut_ptr().add(4 * q) as *mut __m256i, v);
+                    }
+                    // Fold stays scalar: cross-lane, and at most 12
+                    // multiplies per (window, input channel).
+                    if m == 1 {
+                        gwords = planes;
+                    } else {
+                        for (g, gw) in gwords[..groups].iter_mut().enumerate() {
+                            let mut acc = 0u64;
+                            for (t, &u) in planes[g * m..g * m + m].iter().enumerate() {
+                                acc |= u * fold[t];
+                            }
+                            *gw = acc;
+                        }
+                    }
+                    let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                    let signs = packed.sign_slice(plan.in_base + i, plan.out_base, n_out);
+                    let mut o = 0usize;
+                    while o + 4 <= n_out {
+                        let mut dot2v = _mm256_setzero_si256();
+                        for (g, &gw) in gwords[..groups].iter().enumerate() {
+                            let repv =
+                                _mm256_loadu_si256(reps.as_ptr().add(o) as *const __m256i);
+                            let pc =
+                                popcnt_epi64(_mm256_and_si256(_mm256_set1_epi64x(gw as i64), repv));
+                            dot2v = _mm256_add_epi64(
+                                dot2v,
+                                _mm256_sll_epi64(pc, _mm_cvtsi32_si128((m * g) as i32)),
+                            );
+                        }
+                        let mut d = [0i64; 4];
+                        _mm256_storeu_si256(d.as_mut_ptr() as *mut __m256i, dot2v);
+                        for (l, &dot2) in d.iter().enumerate() {
+                            let sop = 2 * dot2 - sum_u - OFFSET * signs[o + l];
+                            accs[o + l] = sat_add(Q7_9, accs[o + l], sop);
+                        }
+                        o += 4;
+                    }
+                    while o < n_out {
+                        let rep = reps[o];
+                        let mut dot2: i64 = 0;
+                        for (g, &gw) in gwords[..groups].iter().enumerate() {
+                            dot2 += ((gw & rep).count_ones() as i64) << (m * g);
+                        }
+                        let sop = 2 * dot2 - sum_u - OFFSET * signs[o];
+                        accs[o] = sat_add(Q7_9, accs[o], sop);
+                        o += 1;
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::super::functional::PackedKernels;
+    use super::super::raster::{RasterParts, OFFSET, PLANES};
+    use super::super::{BlockPlan, LayerData};
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    use crate::workload::Image;
+
+    /// Per-64-bit-lane popcount: `CNT` byte counts widened pairwise up
+    /// to u64. Exact: equals `u64::count_ones` per lane.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn popcnt_u64x2(v: uint64x2_t) -> uint64x2_t {
+        vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v)))))
+    }
+
+    /// The NEON hot loop: same iteration order and saturation points as
+    /// the scalar path, 2 plane words / 2 output channels per lane op.
+    #[allow(clippy::too_many_arguments)] // one flat hot-loop context
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn conv(
+        parts: RasterParts<'_>,
+        c_base: usize,
+        row0: usize,
+        layer: &LayerData<'_>,
+        plan: &BlockPlan,
+        packed: &PackedKernels,
+        identity: bool,
+        fold: &[u64; PLANES],
+        out: &mut Image,
+        accs: &mut [i64],
+    ) {
+        let k = parts.k;
+        let (out_h, out_w) = (out.h, out.w);
+        let n_in = plan.in_len;
+        let n_out = plan.out_len;
+        let m = packed.planes_per_group();
+        let groups = PLANES / m;
+        let stride = parts.stride;
+        let words = parts.words;
+        let usums = parts.usums;
+        let maskv = vdupq_n_u64((1u64 << k) - 1);
+        let mut planes = [0u64; PLANES];
+        let mut gwords = [0u64; PLANES];
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                let wi = x >> 6;
+                // USHL with a negative count shifts right; out-of-range
+                // counts (sh = 0 -> left shift by 64) yield 0, so the
+                // extract needs no sh == 0 branch.
+                let shr = vdupq_n_s64(-((x & 63) as i64));
+                let shl = vdupq_n_s64(64 - (x & 63) as i64);
+                for i in 0..n_in {
+                    let mut pv = [vdupq_n_u64(0); PLANES / 2];
+                    let mut sum_u = 0i64;
+                    for dy in 0..k {
+                        let row = (c_base + i) * parts.ph + row0 + y + dy;
+                        let ubase = row * (parts.pw + 1);
+                        sum_u += usums[ubase + x + k] - usums[ubase + x];
+                        let wbase = row * PLANES * stride + wi;
+                        let jshift = vdupq_n_s64((dy * k) as i64);
+                        for (q, acc) in pv.iter_mut().enumerate() {
+                            let b0 = wbase + 2 * q * stride;
+                            // 2 plane rows per lane op; the raster's
+                            // guard word makes the +1 loads in-bounds.
+                            let lo_pair = [words[b0], words[b0 + stride]];
+                            let hi_pair = [words[b0 + 1], words[b0 + stride + 1]];
+                            let lo = vld1q_u64(lo_pair.as_ptr());
+                            let hi = vld1q_u64(hi_pair.as_ptr());
+                            let bits =
+                                vorrq_u64(vshlq_u64(lo, shr), vshlq_u64(hi, shl));
+                            let bits = vandq_u64(bits, maskv);
+                            *acc = vorrq_u64(*acc, vshlq_u64(bits, jshift));
+                        }
+                    }
+                    for (q, &v) in pv.iter().enumerate() {
+                        vst1q_u64(planes.as_mut_ptr().add(2 * q), v);
+                    }
+                    // Fold stays scalar: cross-lane, and at most 12
+                    // multiplies per (window, input channel).
+                    if m == 1 {
+                        gwords = planes;
+                    } else {
+                        for (g, gw) in gwords[..groups].iter_mut().enumerate() {
+                            let mut acc = 0u64;
+                            for (t, &u) in planes[g * m..g * m + m].iter().enumerate() {
+                                acc |= u * fold[t];
+                            }
+                            *gw = acc;
+                        }
+                    }
+                    let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                    let signs = packed.sign_slice(plan.in_base + i, plan.out_base, n_out);
+                    let mut o = 0usize;
+                    while o + 2 <= n_out {
+                        let mut dot2v = vdupq_n_u64(0);
+                        for (g, &gw) in gwords[..groups].iter().enumerate() {
+                            let repv = vld1q_u64(reps.as_ptr().add(o));
+                            let pc = popcnt_u64x2(vandq_u64(vdupq_n_u64(gw), repv));
+                            dot2v = vaddq_u64(dot2v, vshlq_u64(pc, vdupq_n_s64((m * g) as i64)));
+                        }
+                        let d = [
+                            vgetq_lane_u64::<0>(dot2v) as i64,
+                            vgetq_lane_u64::<1>(dot2v) as i64,
+                        ];
+                        for (l, &dot2) in d.iter().enumerate() {
+                            let sop = 2 * dot2 - sum_u - OFFSET * signs[o + l];
+                            accs[o + l] = sat_add(Q7_9, accs[o + l], sop);
+                        }
+                        o += 2;
+                    }
+                    while o < n_out {
+                        let rep = reps[o];
+                        let mut dot2: i64 = 0;
+                        for (g, &gw) in gwords[..groups].iter().enumerate() {
+                            dot2 += ((gw & rep).count_ones() as i64) << (m * g);
+                        }
+                        let sop = 2 * dot2 - sum_u - OFFSET * signs[o];
+                        accs[o] = sat_add(Q7_9, accs[o], sop);
+                        o += 1;
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+impl ConvEngine for FunctionalSimd {
+    fn name(&self) -> &'static str {
+        if self.forced_scalar {
+            "functional-simd-scalar"
+        } else {
+            "functional-simd"
+        }
+    }
+
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    fn wants_raster(&self) -> bool {
+        true
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        let layer = LayerData {
+            k: job.k,
+            zero_pad: job.zero_pad,
+            input: &job.image,
+            kernels: &job.kernels,
+            packed: None,
+            raster: None,
+            scale_bias: &job.scale_bias,
+        };
+        let plan =
+            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
+        self.run_plan(&layer, &plan)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        self.run_plan_impl(layer, plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Functional;
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, BinaryKernels, ScaleBias};
+
+    fn job(
+        k: usize,
+        n_in: usize,
+        n_out: usize,
+        h: usize,
+        w: usize,
+        zp: bool,
+        amp: f64,
+        seed: u64,
+    ) -> BlockJob {
+        let mut g = Gen::new(seed);
+        BlockJob {
+            k,
+            zero_pad: zp,
+            image: random_image(&mut g, n_in, h, w, amp),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(&mut g, n_out),
+        }
+    }
+
+    #[test]
+    fn matches_functional_every_kernel_size() {
+        // n_out = 6 exercises both the vector dot (4-lane / 2-lane) and
+        // its scalar tail on every ISA.
+        for k in 1..=7usize {
+            for zp in [true, false] {
+                if !zp && k == 1 {
+                    continue;
+                }
+                let j = job(k, 3, 6, 11, 9, zp, 0.05, 500 + k as u64);
+                let want = Functional::new().run_block(&j).output;
+                assert_eq!(
+                    FunctionalSimd::new().run_block(&j).output,
+                    want,
+                    "k={k} zp={zp} vector"
+                );
+                assert_eq!(
+                    FunctionalSimd::forced_scalar().run_block(&j).output,
+                    want,
+                    "k={k} zp={zp} forced-scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn word_boundary_windows_match() {
+        // Widths whose windows straddle the first and second u64 word
+        // boundary — the shift-pair extract's edge cases.
+        for w in [63usize, 64, 65, 66, 127, 130] {
+            let j = job(3, 2, 5, 6, w, true, 0.3, 900 + w as u64);
+            let want = Functional::new().run_block(&j).output;
+            assert_eq!(FunctionalSimd::new().run_block(&j).output, want, "w={w} vector");
+            assert_eq!(
+                FunctionalSimd::forced_scalar().run_block(&j).output,
+                want,
+                "w={w} forced-scalar"
+            );
+        }
+    }
+
+    #[test]
+    fn saturating_regime_matches() {
+        // Full-amplitude, many channels: Q7.9 saturation fires and the
+        // per-input-channel saturation order must agree exactly.
+        let j = job(3, 16, 9, 10, 10, true, 1.0, 77);
+        let want = Functional::new().run_block(&j).output;
+        assert_eq!(FunctionalSimd::new().run_block(&j).output, want);
+        assert_eq!(FunctionalSimd::forced_scalar().run_block(&j).output, want);
+    }
+
+    #[test]
+    fn names_and_isa_report() {
+        assert_eq!(FunctionalSimd::new().name(), "functional-simd");
+        let s = FunctionalSimd::forced_scalar();
+        assert_eq!(s.name(), "functional-simd-scalar");
+        assert_eq!(s.isa_name(), "scalar");
+    }
+
+    #[test]
+    fn useful_ops_match_functional() {
+        let j = job(3, 2, 4, 6, 5, true, 0.05, 3);
+        let simd = FunctionalSimd::new().run_block(&j);
+        let fun = Functional::new().run_block(&j);
+        assert_eq!(simd.stats.useful_ops, fun.stats.useful_ops);
+        assert_eq!(simd.stats.cycles.total(), 0);
+    }
+}

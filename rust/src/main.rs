@@ -31,7 +31,7 @@ use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, Scal
 
 const VALUE_KEYS: &[&str] = &[
     "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
-    "engine", "scale", "shards",
+    "engine", "scale", "shards", "bands",
 ];
 
 fn main() {
@@ -81,11 +81,17 @@ fn print_help() {
          \x20 figure <2|6|11|12|13>       regenerate a paper figure's data series\n\
          \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
          \x20 throughput [--net scene-labeling] [--frames 8]\n\
-         \x20            [--engine both|all|functional|functional-pr1|cycle]\n\
-         \x20            [--workers N] [--scale 0.25] [--seed 42] [--shards NxM]\n\
+         \x20            [--engine both|all|functional|functional-pr1|simd|simd-scalar|cycle]\n\
+         \x20            [--workers N] [--scale 0.25] [--seed 42] [--shards NxM] [--bands N]\n\
          \x20                             batch synthetic frames through a NetworkSession\n\
          \x20                             and report frames/s per engine (A/B + equality;\n\
-         \x20                             'all' includes the PR-1 per-window baseline).\n\
+         \x20                             'all' adds the PR-1 per-window baseline and the\n\
+         \x20                             SIMD engine in vector + forced-scalar form).\n\
+         \x20                             --bands N runs every engine again under the\n\
+         \x20                             within-frame row-band schedule (N bands, 0 = one\n\
+         \x20                             per worker), checks bit-identity against the\n\
+         \x20                             per-frame run, and merges the scaling records\n\
+         \x20                             into BENCH_engines.json.\n\
          \x20                             --shards N (row stripes) or NxM (x output-channel\n\
          \x20                             groups) also runs every engine on the multi-chip\n\
          \x20                             per-shard schedule, checks bit-identity against\n\
@@ -399,11 +405,13 @@ enum NetModel {
 /// Batch synthetic frames through the serving facade (`yodann::api::Yodann`)
 /// on one or both engines: the end-to-end throughput A/B. With more than one
 /// engine selected (`--engine both`, or `--engine all` which adds the
-/// PR-1 per-window functional baseline) every engine's outputs are also
+/// PR-1 per-window functional baseline and the SIMD engine in vector +
+/// forced-scalar form) every engine's outputs are also
 /// checked for bit-identity against the first. With `--shards NxM`
 /// every engine additionally runs the multi-chip per-shard schedule on
-/// that grid, bit-identity against the per-frame run is enforced, and
-/// the measured shard-scaling records are merged into
+/// that grid, and with `--bands N` the within-frame row-band schedule;
+/// in both cases bit-identity against the per-frame run is enforced and
+/// the measured scaling records are merged into
 /// `BENCH_engines.json`. The cycle-accurate engine's run also lands its
 /// per-frame telemetry (frame id, cycles, energy, policy) there.
 fn cmd_throughput(args: &Args) -> Result<(), String> {
@@ -426,13 +434,25 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
                 .ok_or_else(|| format!("--shards '{s}' is not N or NxM (stripes x groups)"))?,
         ),
     };
+    let bands: Option<usize> = match args.options.get("bands") {
+        None => None,
+        Some(s) => Some(
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--bands '{s}' is not a band count (0 = one per worker)"))?,
+        ),
+    };
     let kinds: Vec<EngineKind> = match args.get("engine", "both").to_ascii_lowercase().as_str() {
         "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
-        // The raster-refactor A/B: new functional vs the PR-1 per-window
-        // packing baseline, plus the cycle simulator for reference.
+        // The full A/B field: the raster functional engine, the PR-1
+        // per-window packing baseline, the SIMD engine (runtime-detected
+        // vector path and forced-scalar control), plus the cycle
+        // simulator for reference.
         "all" => vec![
             EngineKind::Functional,
             EngineKind::FunctionalPerWindow,
+            EngineKind::FunctionalSimd,
+            EngineKind::FunctionalSimdScalar,
             EngineKind::CycleAccurate,
         ],
         other => vec![EngineKind::parse(other).ok_or_else(|| {
@@ -603,6 +623,39 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             merged_records.push(JsonRecord::ratio(
                 &format!("shard-scaling/cli/{}/speedup-{grid}", kind.name()),
                 dt / dt_sh,
+            ));
+        }
+        if let Some(n) = bands {
+            // The within-frame row-band schedule: the same batch with
+            // every frame's output rows fanned across the pool.
+            let policy = ShardPolicy::RowBands(n);
+            let mut rb = make_session(kind, policy)?;
+            let t0 = Instant::now();
+            let results_rb = rb.run_batch(frames.clone())?;
+            let dt_rb = t0.elapsed().as_secs_f64();
+            let out_rb: Vec<Image> = results_rb.into_iter().map(|r| r.output).collect();
+            if out_rb != out {
+                return Err(format!(
+                    "row-band outputs diverge from per-frame on {} — this is a bug",
+                    kind.name()
+                ));
+            }
+            println!(
+                "  {:<16} {:>8.3} s  ->  {:>8.2} frames/s  ({policy}, bit-identical, \
+                 {:.2}x vs per-frame)",
+                kind.name(),
+                dt_rb,
+                n_frames as f64 / dt_rb,
+                dt / dt_rb
+            );
+            merged_records.push(JsonRecord {
+                name: format!("row-band/cli/{}/{policy}/batch{n_frames}", kind.name()),
+                ns_per_iter: dt_rb * 1e9,
+                frames_per_s: Some(n_frames as f64 / dt_rb),
+            });
+            merged_records.push(JsonRecord::ratio(
+                &format!("row-band/cli/{}/speedup-{policy}", kind.name()),
+                dt / dt_rb,
             ));
         }
         runs.push((kind, out, dt));

@@ -119,19 +119,23 @@ fn prop_engine_shard_matrix_is_bit_identical() {
 fn table_iii_network_sessions_conform_across_policies() {
     // Every Table-III chain network (plus the scene-labeling power
     // workload) through a NetworkSession under every ShardPolicy: all
-    // schedules bit-identical, and the two functional engines
-    // bit-identical to each other on the full chain. The cycle-accurate
+    // schedules bit-identical, and every functional-family engine
+    // (per-window, raster, SIMD, SIMD-forced-scalar) bit-identical to
+    // each other on the full chain. The cycle-accurate
     // engine runs each network's first layer only — its full equality
     // with the functional engines is pinned at block granularity by the
     // fuzzer above (and by `engine_equivalence.rs`); a debug-mode cycle
     // simulation of the 512-channel VGG chains would dominate tier-1.
     let cfg = ChipConfig::yodann();
-    // The three ShardPolicy variants; the per-shard grid shards both
-    // axes (row stripes × output-channel groups).
+    // Every ShardPolicy variant; the per-shard grid shards both axes
+    // (row stripes × output-channel groups), row-bands splits each
+    // frame's output rows across the pool.
     let policies = [
         ShardPolicy::PerFrame,
         ShardPolicy::PerShard(ShardGrid::new(2, 2)),
         ShardPolicy::Auto,
+        ShardPolicy::RowBands(0),
+        ShardPolicy::RowBands(2),
     ];
     let mut nets = networks::all_networks();
     nets.push(networks::scene_labeling());
@@ -179,8 +183,9 @@ fn table_iii_network_sessions_conform_across_policies() {
             }
         }
         let (ka, oa) = &functional_outs[0];
-        let (kb, ob) = &functional_outs[1];
-        assert_eq!(oa, ob, "{} vs {} diverge on {}", ka.name(), kb.name(), net.id);
+        for (kb, ob) in &functional_outs[1..] {
+            assert_eq!(oa, ob, "{} vs {} diverge on {}", ka.name(), kb.name(), net.id);
+        }
     }
     assert!(chains >= 5, "only {chains} Table-III chains exercised — matrix too thin");
 }
@@ -267,6 +272,89 @@ fn sharded_executor_agrees_with_sessions_under_per_shard() {
     }
 }
 
+#[test]
+fn prop_row_band_schedule_stitches_bit_identically() {
+    use std::sync::Arc;
+    // The tentpole's stitching obligation: the within-frame row-band
+    // schedule must reproduce the sequential per-frame path exactly on
+    // batch = 1 traffic. h_max is shrunk so frames span several
+    // vertical tile blocks, and the band counts straddle the block
+    // count (fewer bands than blocks, equal, more bands than output
+    // rows), across every kernel halo shape — on the raster engine and
+    // both SIMD paths, whose k-halo overlap reads are what the stitch
+    // has to get right.
+    property("row-band stitching", 0x0B0B5, 40, |g| {
+        let mut cfg = ChipConfig::tiny(4);
+        let k = *g.choose(&[1usize, 2, 3, 5, 7]);
+        // h_max stays small (several blocks per frame) but >= k so the
+        // plan geometry guard admits every kernel size drawn above.
+        let h_max = g.range(k.max(4) + 1, k.max(4) + 5);
+        cfg.image_mem_rows = 4 * h_max;
+        let zero_pad = g.bool();
+        let h = g.range(k.max(2), 3 * h_max + 2); // spans 1..=4 blocks
+        let w = g.range(k.max(2), 9);
+        let n_in = g.range(1, 6);
+        let mid = g.range(1, 8);
+        let n_out = g.range(1, 8);
+        let k2 = *g.choose(&[1usize, 3]);
+        // Two layers so bands stitch through an intermediate map too.
+        let specs = vec![
+            SessionLayerSpec {
+                k,
+                zero_pad,
+                kernels: Arc::new(BinaryKernels::random(g, mid, n_in, k)),
+                scale_bias: Arc::new(ScaleBias::random(g, mid)),
+                relu: g.bool(),
+                maxpool2: false,
+            },
+            SessionLayerSpec {
+                k: k2,
+                zero_pad: true,
+                kernels: Arc::new(BinaryKernels::random(g, n_out, mid, k2)),
+                scale_bias: Arc::new(ScaleBias::random(g, n_out)),
+                relu: false,
+                maxpool2: false,
+            },
+        ];
+        let frame = random_image(g, n_in, h, w, 0.3);
+        let workers = g.range(1, 4);
+        let kinds =
+            [EngineKind::Functional, EngineKind::FunctionalSimd, EngineKind::FunctionalSimdScalar];
+        for kind in kinds {
+            let want = facade_batch(
+                cfg,
+                kind,
+                workers,
+                ShardPolicy::PerFrame,
+                &specs,
+                std::slice::from_ref(&frame),
+            )
+            .pop()
+            .unwrap();
+            for bands in [0usize, 1, 3, 8] {
+                let got = facade_batch(
+                    cfg,
+                    kind,
+                    workers,
+                    ShardPolicy::RowBands(bands),
+                    &specs,
+                    std::slice::from_ref(&frame),
+                )
+                .pop()
+                .unwrap();
+                assert_eq!(
+                    got,
+                    want,
+                    "row-bands({bands}) diverges from per-frame: {} k={k}/{k2} \
+                     pad={zero_pad} {n_in}->{mid}->{n_out} {h}x{w} h_max={h_max} \
+                     workers={workers}",
+                    kind.name()
+                );
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------------
 // Graph-IR conformance: graphs with residual adds, branch concats and
 // the paper's non-chain networks, checked bit-identically against a
@@ -339,11 +427,12 @@ fn ref_concat(a: &Image, b: &Image) -> Image {
     out
 }
 
-const GRAPH_POLICIES: [ShardPolicy; 4] = [
+const GRAPH_POLICIES: [ShardPolicy; 5] = [
     ShardPolicy::PerFrame,
     ShardPolicy::PerShard(ShardGrid { stripes: 3, out_groups: 1 }),
     ShardPolicy::PerShard(ShardGrid { stripes: 2, out_groups: 2 }),
     ShardPolicy::Auto,
+    ShardPolicy::RowBands(2),
 ];
 
 #[test]
@@ -497,6 +586,7 @@ fn facade_is_bit_identical_to_the_pre_redesign_session() {
         ShardPolicy::PerShard(ShardGrid::striped(3)),
         ShardPolicy::PerShard(ShardGrid::new(2, 2)),
         ShardPolicy::Auto,
+        ShardPolicy::RowBands(3),
     ];
     for net in [networks::bc_cifar10(), networks::bc_svhn()] {
         let mut specs =

@@ -6,7 +6,8 @@
 //! worker count, saturating and non-saturating amplitudes — and batched
 //! inference through the serving facade (`yodann::api::Yodann`) must
 //! match the layer-by-layer executor for every engine kind (including
-//! the PR-1 per-window baseline kept for A/B benches).
+//! the PR-1 per-window baseline kept for A/B benches and the SIMD
+//! engine in both its runtime-dispatched and forced-scalar forms).
 
 use std::sync::Arc;
 
@@ -68,13 +69,26 @@ fn prop_engines_identical_on_random_blocked_tiled_layers() {
         let workers = g.range(1, 4);
         let cyc = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::CycleAccurate);
         let fun = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Functional);
-        let pr1 =
-            run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::FunctionalPerWindow);
         assert_eq!(
             cyc.output, fun.output,
             "k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} amp={amplitude}"
         );
-        assert_eq!(cyc.output, pr1.output, "per-window baseline diverges");
+        // Every other kind — the PR-1 per-window baseline and both SIMD
+        // paths (runtime-dispatched vector, forced-scalar) — against the
+        // cycle-accurate reference.
+        for kind in EngineKind::ALL {
+            if matches!(kind, EngineKind::CycleAccurate | EngineKind::Functional) {
+                continue;
+            }
+            let alt = run_layer_engine(&wl, &cfg, ExecOptions { workers }, kind);
+            assert_eq!(
+                cyc.output,
+                alt.output,
+                "{} diverges: k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} \
+                 amp={amplitude}",
+                kind.name()
+            );
+        }
         assert_eq!(cyc.blocks, fun.blocks);
         assert_eq!(cyc.offchip_adds, fun.offchip_adds);
     });
@@ -172,11 +186,7 @@ fn session_batch_equals_layerwise_executor() {
         })
         .collect();
 
-    for kind in [
-        EngineKind::CycleAccurate,
-        EngineKind::Functional,
-        EngineKind::FunctionalPerWindow,
-    ] {
+    for kind in EngineKind::ALL {
         let mut sess = SessionBuilder::new()
             .chip(cfg)
             .layers(specs.clone())
