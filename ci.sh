@@ -15,6 +15,14 @@ echo "== tier-1 again with the SIMD vector paths force-disabled =="
 # both sides of the runtime dispatch are pinned on every CI run.
 YODANN_FORCE_SCALAR=1 cargo test -q
 
+echo "== tier-1 a third time with fault injection armed from the environment =="
+# YODANN_FAULT_SEED arms a session-default FaultPlan at SMOKE_BER through
+# SessionBuilder::build's env fallback. The whole suite must still pass:
+# tests that need determinism opt out with an explicit
+# FaultPlan::disabled(), everything else must survive the occasional
+# detected-and-retried flip.
+YODANN_FAULT_SEED=7 cargo test -q
+
 echo "== cargo build --examples (every non-golden example; quickstart needs --features golden) =="
 cargo build --examples
 
@@ -29,6 +37,9 @@ cargo run --release --example resnet_graph
 echo "== cargo test --release -q (release-mode overflow/wrap behavior) =="
 cargo test --release -q
 
+# Note: src/fault and src/api additionally carry
+# #![deny(clippy::unwrap_used, clippy::expect_used)] outside tests — the
+# fault-handling layers themselves must not panic.
 echo "== cargo clippy --all-targets -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
@@ -54,6 +65,9 @@ fi
 
 echo "== CLI smoke: SIMD engine + row-band schedule through yodann throughput =="
 cargo run --release -- throughput --engine simd --frames 2 --workers 2 --bands 2
+
+echo "== CLI smoke: near-threshold fault sweep through yodann faults =="
+cargo run --release -- faults --net bc-cifar10 --corner 0.6 --frames 2
 
 echo "== fast engine A/B bench (writes BENCH_engines.json) =="
 YODANN_BENCH_FAST=1 cargo bench --bench engines

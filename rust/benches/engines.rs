@@ -18,6 +18,7 @@ use yodann::api::SessionBuilder;
 use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional, FunctionalSimd};
+use yodann::fault::FaultPlan;
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::model::networks;
 use yodann::testkit::Gen;
@@ -189,6 +190,54 @@ fn main() {
         assert_eq!(&session_outputs[0], other, "session engines diverge");
     }
     println!("session outputs bit-identical across engines (and to the deprecated path)");
+
+    // The fault subsystem's off-path contract: a session with an
+    // armed-but-disabled FaultPlan must serve bit-identical frames and
+    // must not tax the hot path — the checksum seal/verify machinery
+    // only engages when a plan actually injects. `fault/disabled-overhead`
+    // pins that ratio (~1.0) in the evidence file across PRs.
+    println!("== fault-injection off-path overhead (disabled plan, functional engine) ==");
+    let mut fault_sessions: Vec<_> = [None, Some(FaultPlan::disabled())]
+        .into_iter()
+        .map(|plan| {
+            let mut builder = SessionBuilder::new()
+                .chip(cfg)
+                .layers(specs.clone())
+                .engine(EngineKind::Functional)
+                .workers(4)
+                .shard_policy(ShardPolicy::PerFrame)
+                .max_in_flight(n_frames);
+            if let Some(plan) = plan {
+                builder = builder.fault_plan(plan);
+            }
+            builder.build().expect("a valid serving session")
+        })
+        .collect();
+    let fault_outputs: Vec<Vec<Image>> = fault_sessions
+        .iter_mut()
+        .map(|sess| {
+            sess.run_batch(frames.clone())
+                .expect("batch runs")
+                .into_iter()
+                .map(|r| r.output)
+                .collect()
+        })
+        .collect();
+    assert_eq!(
+        fault_outputs[0], fault_outputs[1],
+        "a disabled fault plan must leave the serving path bit-identical"
+    );
+    let s_clean = b.bench(&format!("fault/no-plan/batch{n_frames}"), || {
+        black_box(fault_sessions[0].run_batch(frames.clone()).expect("batch runs"));
+    });
+    let s_armed = b.bench(&format!("fault/disabled-plan/batch{n_frames}"), || {
+        black_box(fault_sessions[1].run_batch(frames.clone()).expect("batch runs"));
+    });
+    let fault_overhead = s_armed.mean.as_secs_f64() / s_clean.mean.as_secs_f64();
+    println!("  -> disabled-plan overhead: {fault_overhead:.3}x (target ~1.0)\n");
+    records.push(JsonRecord::with_frames(&s_clean, n_frames as f64));
+    records.push(JsonRecord::with_frames(&s_armed, n_frames as f64));
+    records.push(JsonRecord::ratio("fault/disabled-overhead", fault_overhead));
 
     // Intra-frame shard scaling: the same batch under the per-frame
     // schedule vs per-shard grids of growing stripe count, functional

@@ -13,6 +13,7 @@
 //! [`SessionLayerSpec::synthetic_network`]: crate::coordinator::SessionLayerSpec::synthetic_network
 
 use crate::engine::EngineKind;
+use crate::fault::FaultSite;
 
 /// Everything the serving API can refuse to do, as data.
 ///
@@ -188,6 +189,41 @@ pub enum YodannError {
         /// Best-effort panic payload.
         message: String,
     },
+    /// A worker thread panicked (or was lost) computing this frame. The
+    /// supervisor catches the unwind, fails *only this frame*, respawns
+    /// the worker, and keeps serving subsequent frames.
+    WorkerPanicked {
+        /// The failed frame's ticket id (batch index on the deprecated
+        /// session surface).
+        frame: u64,
+        /// The sharded conv layer that was running, if the loss happened
+        /// mid-shard-reduction rather than in a whole-frame worker.
+        layer: Option<usize>,
+        /// Best-effort panic payload.
+        message: String,
+    },
+    /// An injected (or real) memory fault was detected by checksum and
+    /// persisted through the one repack retry the containment policy
+    /// allows — the frame (or session build, for weight memory) is
+    /// refused rather than silently corrupted.
+    FaultDetected {
+        /// The affected frame's ticket id; `None` for weight-memory
+        /// faults caught at session build, before any frame exists.
+        frame: Option<u64>,
+        /// The 0-based conv layer whose memory failed verification.
+        layer: usize,
+        /// Which memory the fault lives in.
+        site: FaultSite,
+    },
+    /// A [`FrameTicket::wait_timeout`](super::FrameTicket::wait_timeout)
+    /// deadline elapsed before the frame finished. The frame is still in
+    /// flight and the ticket stays redeemable.
+    DeadlineExceeded {
+        /// The ticket id of the frame that missed its deadline.
+        frame: u64,
+        /// The elapsed deadline, in milliseconds.
+        timeout_ms: u64,
+    },
     /// A layer-scoped error, tagged with the 0-based layer index.
     AtLayer {
         /// Layer index in the chain.
@@ -223,6 +259,25 @@ impl YodannError {
                 YodannError::AtNode { node: node.to_string(), inner }
             }
             other => YodannError::AtNode { node: node.to_string(), inner: Box::new(other) },
+        }
+    }
+
+    /// Re-tag a per-frame error with the ticket id the caller knows it
+    /// by (the session layer indexes frames by batch slot; the facade
+    /// hands out monotonically increasing ticket ids).
+    pub fn with_frame_id(self, id: u64) -> YodannError {
+        match self {
+            YodannError::Worker { message, .. } => YodannError::Worker { frame: id, message },
+            YodannError::WorkerPanicked { layer, message, .. } => {
+                YodannError::WorkerPanicked { frame: id, layer, message }
+            }
+            YodannError::FaultDetected { frame: Some(_), layer, site } => {
+                YodannError::FaultDetected { frame: Some(id), layer, site }
+            }
+            YodannError::DeadlineExceeded { timeout_ms, .. } => {
+                YodannError::DeadlineExceeded { frame: id, timeout_ms }
+            }
+            other => other,
         }
     }
 }
@@ -311,6 +366,30 @@ impl std::fmt::Display for YodannError {
             YodannError::Worker { frame, message } => {
                 write!(f, "frame {frame} failed in a session worker: {message}")
             }
+            // The two WorkerPanicked texts reproduce the pre-supervision
+            // panic messages verbatim, so call sites that matched on the
+            // panic text keep matching on the Display form.
+            YodannError::WorkerPanicked { frame, layer: None, message } => {
+                write!(f, "frame {frame} failed in a session worker: {message}")
+            }
+            YodannError::WorkerPanicked { frame, layer: Some(li), message } => {
+                write!(f, "frame {frame}, sharded layer {li} failed in a session worker: {message}")
+            }
+            YodannError::FaultDetected { frame: Some(fr), layer, site } => write!(
+                f,
+                "frame {fr}: uncorrectable {site} fault at conv layer {layer} (detected by \
+                 checksum, persisted through one repack retry)"
+            ),
+            YodannError::FaultDetected { frame: None, layer, site } => write!(
+                f,
+                "uncorrectable {site} fault in conv layer {layer}'s packed weights (detected \
+                 at session build, persisted through one repack retry)"
+            ),
+            YodannError::DeadlineExceeded { frame, timeout_ms } => write!(
+                f,
+                "frame {frame} missed its {timeout_ms} ms deadline (still in flight; the \
+                 ticket stays redeemable)"
+            ),
             YodannError::AtLayer { layer, inner } => write!(f, "layer {layer}: {inner}"),
             YodannError::AtNode { node, inner } => write!(f, "node '{node}': {inner}"),
         }
@@ -388,5 +467,36 @@ mod tests {
         let e = YodannError::SessionClosed;
         let s: String = e.clone().into();
         assert_eq!(s, e.to_string());
+    }
+
+    #[test]
+    fn worker_panicked_keeps_the_historical_panic_texts() {
+        // The deprecated run_frame/run_batch shims re-panic with these
+        // Display forms, so pre-supervision panic-text matches survive.
+        let e = YodannError::WorkerPanicked { frame: 2, layer: None, message: "boom".into() };
+        assert_eq!(e.to_string(), "frame 2 failed in a session worker: boom");
+        let e = YodannError::WorkerPanicked { frame: 2, layer: Some(1), message: "boom".into() };
+        assert_eq!(e.to_string(), "frame 2, sharded layer 1 failed in a session worker: boom");
+    }
+
+    #[test]
+    fn with_frame_id_retags_per_frame_variants_only() {
+        let e = YodannError::WorkerPanicked { frame: 0, layer: Some(3), message: "x".into() }
+            .with_frame_id(41);
+        assert!(matches!(e, YodannError::WorkerPanicked { frame: 41, layer: Some(3), .. }));
+        let e = YodannError::FaultDetected {
+            frame: Some(0),
+            layer: 1,
+            site: FaultSite::ImageMemory,
+        }
+        .with_frame_id(41);
+        assert!(matches!(e, YodannError::FaultDetected { frame: Some(41), .. }));
+        // Build-time weight faults have no frame and stay that way.
+        let e = YodannError::FaultDetected { frame: None, layer: 1, site: FaultSite::WeightMemory }
+            .with_frame_id(41);
+        assert!(matches!(e, YodannError::FaultDetected { frame: None, .. }));
+        assert!(e.to_string().contains("weight-memory"), "{e}");
+        let e = YodannError::SessionClosed.with_frame_id(41);
+        assert!(matches!(e, YodannError::SessionClosed));
     }
 }

@@ -30,6 +30,19 @@
 //! [`NetworkSession`] worker pool — outputs are **bit-identical** to the
 //! deprecated `run_batch` path for every engine kind and shard policy
 //! (`rust/tests/conformance.rs` proves it differentially).
+//!
+//! Serving is **supervised**: a frame that panics a worker, trips an
+//! injected fault ([`SessionBuilder::fault_plan`]) or loses its worker
+//! thread fails *alone* — its ticket redeems the typed error
+//! ([`YodannError::WorkerPanicked`], [`YodannError::FaultDetected`])
+//! while the pool respawns and the session keeps admitting frames; and
+//! [`FrameTicket::wait_timeout`] turns a missed frame deadline into
+//! [`YodannError::DeadlineExceeded`] without forfeiting the result.
+
+// The serving surface must never take down the caller: unwinding is
+// reserved for the worker pool (where it is caught and typed), so the
+// api modules ban unwrap/expect outright in non-test code.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 mod error;
 mod ticket;
@@ -50,6 +63,7 @@ use crate::coordinator::metrics::sim_metrics;
 use crate::coordinator::session::{chain_compiled, panic_message, TracedFrame};
 use crate::coordinator::{NetworkSession, SessionLayerSpec, ShardPolicy};
 use crate::engine::EngineKind;
+use crate::fault::FaultPlan;
 use crate::hw::ChipConfig;
 use crate::model::graph::{CompiledGraph, NetworkGraph, Weights};
 use crate::model::{Corner, Network};
@@ -93,6 +107,7 @@ impl TelemetryCtx {
                 host_seconds,
                 metrics,
                 envelope: self.envelope,
+                fault: traced.fault,
             },
         }
     }
@@ -126,6 +141,7 @@ pub struct SessionBuilder {
     specs: Vec<SessionLayerSpec>,
     graph: Option<CompiledGraph>,
     weights: Option<Vec<Weights>>,
+    fault: Option<FaultPlan>,
     deferred_err: Option<YodannError>,
 }
 
@@ -149,6 +165,7 @@ impl SessionBuilder {
             specs: Vec::new(),
             graph: None,
             weights: None,
+            fault: None,
             deferred_err: None,
         }
     }
@@ -260,6 +277,16 @@ impl SessionBuilder {
     /// full, [`Yodann::submit`] reports [`YodannError::Backpressure`].
     pub fn max_in_flight(mut self, n: usize) -> SessionBuilder {
         self.max_in_flight = Some(n);
+        self
+    }
+
+    /// Arm a [`FaultPlan`] on the session: seeded bit flips in image
+    /// memory, packed weights and halo-exchange rows, checksum
+    /// detection, and the panic/kill containment drills. Sessions that
+    /// set no plan inherit the environment arm (`YODANN_FAULT_SEED`);
+    /// pass [`FaultPlan::disabled`] to opt out of both.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> SessionBuilder {
+        self.fault = Some(plan);
         self
     }
 
@@ -394,13 +421,17 @@ impl SessionBuilder {
             dual_stream: dual,
             envelope: MultiChipPower::at(self.corner.arch, v, chips, first.k),
         };
+        // Weight-memory faults inject as the kernels are packed, so an
+        // uncorrectable detection surfaces here as a typed build error.
+        let fault = self.fault.or_else(FaultPlan::from_env);
         let session = NetworkSession::spawn_plan(
             self.cfg,
             self.engine,
             self.workers,
             self.policy,
             plan.clone(),
-        );
+            fault,
+        )?;
         let (tx, rx) = channel::<Job>();
         let dispatcher = std::thread::spawn(move || dispatcher_loop(session, rx, ctx));
         Ok(Yodann {
@@ -613,10 +644,13 @@ impl Drop for Yodann {
 /// every job already queued and hands them to the session as one batch,
 /// so a burst of submissions fans across the whole worker pool exactly
 /// like the pre-redesign `run_batch` (a frame-at-a-time dispatcher
-/// would serialize the pool under the per-frame schedule). A batch that
-/// panics a worker (an engine bug — geometry is validated before
-/// queueing) is converted to [`YodannError::Worker`] on each of its
-/// tickets; the session and the dispatcher survive for later frames.
+/// would serialize the pool under the per-frame schedule). Failures are
+/// contained per frame: the session hands back a typed error in the
+/// failed frame's slot (worker panic, injected loss, detected fault) and
+/// only that ticket redeems the error, retagged with its ticket id. A
+/// panic that escapes the session itself (a coordinator bug) is
+/// converted to [`YodannError::Worker`] on each of the batch's tickets;
+/// the dispatcher survives for later frames either way.
 fn dispatcher_loop(mut session: NetworkSession, rx: Receiver<Job>, ctx: TelemetryCtx) {
     while let Ok(first) = rx.recv() {
         let mut jobs = vec![first];
@@ -641,8 +675,14 @@ fn dispatcher_loop(mut session: NetworkSession, rx: Receiver<Job>, ctx: Telemetr
         // A dropped ticket is fine — its result is simply discarded.
         match out {
             Ok(batch) => {
-                for ((traced, &id), reply) in batch.into_iter().zip(&ids).zip(&replies) {
-                    let _ = reply.send(Ok(ctx.frame_result(id, traced, host_each)));
+                for ((res, &id), reply) in batch.into_iter().zip(&ids).zip(&replies) {
+                    let msg = match res {
+                        Ok(traced) => Ok(ctx.frame_result(id, traced, host_each)),
+                        // The session reports errors under its own batch
+                        // index; the ticket speaks frame ids.
+                        Err(e) => Err(e.with_frame_id(id)),
+                    };
+                    let _ = reply.send(msg);
                 }
             }
             Err(p) => {

@@ -10,13 +10,15 @@
 //! multi-chip power-envelope snapshot — no side-channel accessors.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::YodannError;
 use crate::coordinator::metrics::SimMetrics;
 use crate::coordinator::ShardPolicy;
 use crate::engine::EngineKind;
+use crate::fault::FaultReport;
 use crate::hw::ChipStats;
 use crate::model::Corner;
 use crate::power::MultiChipPower;
@@ -59,6 +61,10 @@ pub struct FrameTelemetry {
     /// Aggregate power envelope of the chip grid the schedule implies
     /// (1 chip per-frame, `stripes × out_groups` per-shard).
     pub envelope: MultiChipPower,
+    /// What fault injection did to this frame (all-zero when no plan is
+    /// armed): surviving bit flips per site, checksum detections and
+    /// repack retries, session-lifetime weight faults folded in.
+    pub fault: FaultReport,
 }
 
 impl FrameTelemetry {
@@ -181,8 +187,79 @@ impl FrameTicket {
         r
     }
 
+    /// Block for at most `timeout` — the serving loop's frame deadline.
+    ///
+    /// A deadline miss returns [`YodannError::DeadlineExceeded`] but
+    /// does **not** consume the ticket: the frame is still in flight,
+    /// its in-flight slot stays occupied, and a later
+    /// `wait`/`wait_timeout`/`poll` still redeems the result. A dead
+    /// dispatcher maps to [`YodannError::SessionClosed`]
+    /// deterministically.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<FrameResult, YodannError> {
+        if let Some(r) = self.done.take() {
+            self.slot = None;
+            return r;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.slot = None;
+                r
+            }
+            Err(RecvTimeoutError::Timeout) => Err(YodannError::DeadlineExceeded {
+                frame: self.id,
+                timeout_ms: timeout.as_millis() as u64,
+            }),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.slot = None;
+                Err(YodannError::SessionClosed)
+            }
+        }
+    }
+
     fn finish(&mut self, r: Result<FrameResult, YodannError>) {
         self.done = Some(r);
         self.slot = None; // release the in-flight slot exactly once
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn ticket(rx: Receiver<Result<FrameResult, YodannError>>) -> FrameTicket {
+        FrameTicket { id: 9, rx, done: None, slot: None }
+    }
+
+    #[test]
+    fn wait_timeout_reports_deadline_then_still_delivers() {
+        let (tx, rx) = channel();
+        let mut t = ticket(rx);
+        let e = t.wait_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(
+            matches!(e, YodannError::DeadlineExceeded { frame: 9, timeout_ms: 10 }),
+            "{e}"
+        );
+        assert!(e.to_string().contains("missed its 10 ms deadline"), "{e}");
+        // The ticket stays redeemable: a late result still comes through.
+        tx.send(Err(YodannError::Worker { frame: 9, message: "late".into() })).unwrap();
+        let late = t.wait_timeout(Duration::from_millis(100)).unwrap_err();
+        assert!(matches!(late, YodannError::Worker { frame: 9, .. }), "{late}");
+    }
+
+    #[test]
+    fn dead_dispatcher_maps_to_session_closed_deterministically() {
+        let (tx, rx) = channel();
+        drop(tx);
+        let mut t = ticket(rx);
+        let e = t.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        assert!(matches!(e, YodannError::SessionClosed), "{e}");
+
+        let (tx2, rx2) = channel::<Result<FrameResult, YodannError>>();
+        drop(tx2);
+        let mut t2 = ticket(rx2);
+        assert!(t2.poll(), "disconnect is a terminal, immediately ready state");
+        let e2 = t2.wait().unwrap_err();
+        assert!(matches!(e2, YodannError::SessionClosed), "{e2}");
     }
 }

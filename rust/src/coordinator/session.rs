@@ -57,14 +57,16 @@
 //! engine kind and every policy (`rust/tests/conformance.rs` fuzzes the
 //! whole matrix).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::blocks::{check_plan_geometry, check_width_geometry, plan_layer};
 use super::executor::{finalize_output, reduce_block};
 use super::shard::{plan_layer_shards, shard_block_plans, ShardGrid, ShardPolicy};
 use crate::api::YodannError;
+use crate::fault::{FaultPlan, FaultReport, FaultSite};
 use crate::engine::{
     BitplaneRaster, BlockPlan, ConvEngine, EngineKind, EngineOutput, LayerData, PackedKernels,
 };
@@ -173,27 +175,66 @@ struct SessionPlan {
     input_slot: usize,
     output_slot: usize,
     free_after: Vec<Vec<usize>>,
+    /// The armed fault-injection plan, if any (shared by every worker —
+    /// the plan's own seeding makes injection independent of which
+    /// worker runs a frame).
+    fault: Option<FaultPlan>,
+    /// Weight-memory faults injected at pack time. Weights are written
+    /// once and stay resident, so these are session-lifetime: every
+    /// frame that computes with them inherits this report.
+    weight_faults: FaultReport,
 }
 
 impl SessionPlan {
-    fn from_compiled(kind: EngineKind, cg: CompiledGraph) -> SessionPlan {
-        let convs = cg
-            .convs
-            .into_iter()
-            .map(|conv| {
-                let packed =
-                    kind.wants_packed().then(|| Arc::new(PackedKernels::pack(&conv.kernels)));
-                SessionLayer { conv, packed }
-            })
-            .collect();
-        SessionPlan {
+    /// Pack every conv layer's kernels for the engine kind, running the
+    /// weight-memory leg of the fault plan as the bits are written: a
+    /// detected corruption repacks once at the guard-banded retry rate;
+    /// corruption that persists refuses the whole session
+    /// ([`YodannError::FaultDetected`] with no frame — no frame exists
+    /// yet).
+    fn from_compiled(
+        kind: EngineKind,
+        cg: CompiledGraph,
+        fault: Option<FaultPlan>,
+    ) -> Result<SessionPlan, YodannError> {
+        let mut weight_faults = FaultReport::default();
+        let mut convs = Vec::with_capacity(cg.convs.len());
+        for (li, conv) in cg.convs.into_iter().enumerate() {
+            let packed = if kind.wants_packed() {
+                let mut pk = PackedKernels::pack(&conv.kernels);
+                if let Some(f) = fault.as_ref().filter(|f| f.injects_weights()) {
+                    let mut flips = f.corrupt_weights(&mut pk, li as u64, 0);
+                    if f.detects() && !pk.verify() {
+                        weight_faults.detected += 1;
+                        weight_faults.retries += 1;
+                        pk = PackedKernels::pack(&conv.kernels);
+                        flips = f.corrupt_weights(&mut pk, li as u64, 1);
+                        if !pk.verify() {
+                            return Err(YodannError::FaultDetected {
+                                frame: None,
+                                layer: li,
+                                site: FaultSite::WeightMemory,
+                            });
+                        }
+                    }
+                    weight_faults.weight_flips += flips;
+                }
+                Some(Arc::new(pk))
+            } else {
+                None
+            };
+            convs.push(SessionLayer { conv, packed });
+        }
+        Ok(SessionPlan {
             convs,
             steps: cg.steps,
             n_slots: cg.n_slots,
             input_slot: cg.input_slot,
             output_slot: cg.output_slot,
             free_after: cg.free_after,
-        }
+            fault,
+            weight_faults,
+        })
     }
 }
 
@@ -276,10 +317,13 @@ impl ShardLayer {
 }
 
 /// A unit of pool work: one whole frame (per-frame schedule) or one
-/// shard of one layer (per-shard schedule).
+/// shard of one layer (per-shard schedule). Shard tasks carry a
+/// monotonically increasing `job` tag so the coordinator can discard
+/// stale replies from a layer that was abandoned mid-drain (a frame
+/// that failed after some of its shards were already in flight).
 enum Task {
     Frame(usize, Image),
-    Shard { shard: usize, plans: Vec<BlockPlan>, layer: Arc<ShardLayer> },
+    Shard { job: usize, shard: usize, plans: Vec<BlockPlan>, layer: Arc<ShardLayer> },
 }
 
 /// One fully processed frame: the output image plus the merged activity
@@ -294,25 +338,43 @@ pub(crate) struct TracedFrame {
     pub(crate) output: Image,
     /// Merged per-frame activity ledger.
     pub(crate) stats: ChipStats,
+    /// What fault injection did to this frame (session-lifetime
+    /// weight-memory faults folded in).
+    pub(crate) fault: FaultReport,
 }
 
-/// A worker's reply to one [`Task`].
+/// A worker's reply to one [`Task`]. Shard replies echo their task's
+/// `job` tag (first field) so stale replies are droppable.
 enum Reply {
-    Frame(usize, Result<TracedFrame, String>),
-    Shard(usize, Result<Vec<(BlockPlan, EngineOutput)>, String>),
+    Frame(usize, Result<TracedFrame, YodannError>),
+    Shard(usize, usize, Result<Vec<(BlockPlan, EngineOutput)>, String>),
 }
+
+/// How often a blocked batch drain sweeps for dead workers. Workers die
+/// only through an injected loss (panics are caught), so the sweep is a
+/// liveness backstop: it lets the supervisor respawn mid-batch instead
+/// of stranding queued frames behind a lost thread.
+const WORKER_SWEEP: Duration = Duration::from_millis(25);
 
 /// A persistent multi-frame inference session over one network.
 pub struct NetworkSession {
     cfg: ChipConfig,
     tx: Option<Sender<Task>>,
     rx_out: Receiver<Reply>,
+    /// Shared task-queue end and reply-channel sender, kept so the
+    /// supervisor can respawn a lost worker with the same wiring.
+    rx_in: Arc<Mutex<Receiver<Task>>>,
+    tx_out: Sender<Reply>,
     handles: Vec<JoinHandle<()>>,
     plan: Arc<SessionPlan>,
     workers: usize,
     engine: EngineKind,
     policy: ShardPolicy,
     n_in: usize,
+    /// Monotonic shard-job tag (see [`Task::Shard`]).
+    shard_job: usize,
+    /// Workers the supervisor has replaced after a loss.
+    respawns: u64,
     /// Caller-side scratch for the sharded schedule: the per-layer
     /// raster every shard reads (swapped out while a layer is in
     /// flight, reclaimed through `Arc::try_unwrap` afterwards) and the
@@ -373,52 +435,90 @@ impl NetworkSession {
                 );
             }
         }
-        NetworkSession::spawn_plan(cfg, kind, workers, policy, chain_compiled(&specs))
+        match NetworkSession::spawn_plan(cfg, kind, workers, policy, chain_compiled(&specs), None)
+        {
+            Ok(s) => s,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Build a session from a compiled network plan (a lowered
     /// [`NetworkGraph`](crate::model::graph::NetworkGraph) or a chain
     /// shim): packs every conv layer's kernels once for the engine
-    /// kind, and spins up `workers` threads each owning one engine of
-    /// `kind`, all interpreting the same `Arc`-shared step program.
+    /// kind (running the fault plan's weight-memory leg as the bits are
+    /// written), and spins up `workers` threads each owning one engine
+    /// of `kind`, all interpreting the same `Arc`-shared step program.
     pub(crate) fn spawn_plan(
         cfg: ChipConfig,
         kind: EngineKind,
         workers: usize,
         policy: ShardPolicy,
         compiled: CompiledGraph,
-    ) -> NetworkSession {
+        fault: Option<FaultPlan>,
+    ) -> Result<NetworkSession, YodannError> {
         assert!(!compiled.convs.is_empty(), "session needs at least one conv layer");
         let n_in = compiled.n_in;
         // Pack once per session, only when the engine consumes the packed
         // form (the cycle-accurate engine materializes jobs instead).
-        let plan = Arc::new(SessionPlan::from_compiled(kind, compiled));
+        let plan = Arc::new(SessionPlan::from_compiled(kind, compiled, fault)?);
         let workers = workers.max(1);
         let (tx, rx_in) = channel::<Task>();
         let rx_in = Arc::new(Mutex::new(rx_in));
         let (tx_out, rx_out) = channel::<Reply>();
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let rx = Arc::clone(&rx_in);
-            let tx_out = tx_out.clone();
-            let plan = Arc::clone(&plan);
-            handles.push(std::thread::spawn(move || {
-                worker_loop(cfg, kind, &rx, &tx_out, &plan);
-            }));
+            handles.push(spawn_worker(cfg, kind, &rx_in, &tx_out, &plan));
         }
-        NetworkSession {
+        Ok(NetworkSession {
             cfg,
             tx: Some(tx),
             rx_out,
+            rx_in,
+            tx_out,
             handles,
             plan,
             workers,
             engine: kind,
             policy,
             n_in,
+            shard_job: 0,
+            respawns: 0,
             shard_raster: Some(BitplaneRaster::new()),
             shard_acc: Vec::new(),
+        })
+    }
+
+    /// Supervisor sweep: join workers whose threads have exited (only an
+    /// injected worker loss does — panics are caught in the loop) and
+    /// respawn replacements so the pool keeps its configured width.
+    fn ensure_workers(&mut self) {
+        if self.tx.is_none() {
+            return;
         }
+        let handles = std::mem::take(&mut self.handles);
+        let mut alive = Vec::with_capacity(handles.len());
+        for h in handles {
+            if h.is_finished() {
+                let _ = h.join();
+                self.respawns += 1;
+                alive.push(spawn_worker(
+                    self.cfg,
+                    self.engine,
+                    &self.rx_in,
+                    &self.tx_out,
+                    &self.plan,
+                ));
+            } else {
+                alive.push(h);
+            }
+        }
+        self.handles = alive;
+    }
+
+    /// Workers the supervisor has replaced after a loss (0 in healthy
+    /// sessions).
+    pub fn worker_respawns(&self) -> u64 {
+        self.respawns
     }
 
     /// Worker threads in the pool.
@@ -460,24 +560,42 @@ impl NetworkSession {
     /// Run one frame through the whole network.
     #[deprecated(note = "submit through `yodann::api::Yodann` for tickets and telemetry")]
     pub fn run_frame(&mut self, frame: Image) -> Image {
-        self.run_batch_traced(vec![frame]).pop().unwrap().output
+        #[allow(deprecated)]
+        {
+            self.run_batch(vec![frame]).pop().unwrap()
+        }
     }
 
     /// Run a batch of frames, discarding the per-frame activity ledgers.
+    /// Panics on the first failed frame with the historical panic text
+    /// (the [`YodannError`] Display form reproduces it verbatim); the
+    /// serving facade returns the typed error per frame instead.
     #[deprecated(note = "submit through `yodann::api::Yodann` for tickets and telemetry")]
     pub fn run_batch(&mut self, frames: Vec<Image>) -> Vec<Image> {
-        self.run_batch_traced(frames).into_iter().map(|t| t.output).collect()
+        self.run_batch_traced(frames)
+            .into_iter()
+            .map(|t| match t {
+                Ok(t) => t.output,
+                Err(e) => panic!("{e}"),
+            })
+            .collect()
     }
 
     /// Run a batch of frames under the session's [`ShardPolicy`].
     /// Results come back in input order regardless of the schedule or
-    /// completion order, each carrying its merged activity ledger.
+    /// completion order, each slot carrying its merged activity ledger
+    /// — or the typed error that failed *that frame alone* (a worker
+    /// panic, an injected loss, an uncorrectable detected fault). The
+    /// session survives every per-frame error and keeps serving.
     ///
     /// Panics on frames whose channel count does not match the first
     /// layer (validated up front — a worker dying mid-batch would
     /// otherwise leave the batch waiting forever). The serving facade
     /// validates frames into typed errors before they get here.
-    pub(crate) fn run_batch_traced(&mut self, frames: Vec<Image>) -> Vec<TracedFrame> {
+    pub(crate) fn run_batch_traced(
+        &mut self,
+        frames: Vec<Image>,
+    ) -> Vec<Result<TracedFrame, YodannError>> {
         for (i, f) in frames.iter().enumerate() {
             assert_eq!(
                 f.c, self.n_in,
@@ -485,6 +603,7 @@ impl NetworkSession {
                 f.c, self.n_in
             );
         }
+        self.ensure_workers();
         match self.policy {
             ShardPolicy::PerFrame => self.run_batch_per_frame(frames),
             ShardPolicy::PerShard(grid) => self.run_batch_sharded(frames, grid),
@@ -508,42 +627,66 @@ impl NetworkSession {
         }
     }
 
-    /// The per-frame schedule: frames fan out across the pool.
-    fn run_batch_per_frame(&mut self, frames: Vec<Image>) -> Vec<TracedFrame> {
+    /// The per-frame schedule: frames fan out across the pool; each
+    /// slot resolves to its frame's result or to the typed error that
+    /// failed it. A drain that stalls (a worker lost mid-batch) sweeps
+    /// the supervisor so queued frames land on a respawned worker.
+    fn run_batch_per_frame(&mut self, frames: Vec<Image>) -> Vec<Result<TracedFrame, YodannError>> {
         let n = frames.len();
-        let tx = self.tx.as_ref().expect("session already shut down");
-        for (i, f) in frames.into_iter().enumerate() {
-            tx.send(Task::Frame(i, f)).expect("worker pool died");
-        }
-        let mut out: Vec<Option<TracedFrame>> = (0..n).map(|_| None).collect();
-        let mut first_err: Option<(usize, String)> = None;
-        for _ in 0..n {
-            let (i, res) = match self.rx_out.recv().expect("worker pool died") {
-                Reply::Frame(i, res) => (i, res),
-                Reply::Shard(..) => unreachable!("shard reply during a per-frame batch"),
-            };
-            match res {
-                Ok(traced) => out[i] = Some(traced),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some((i, e));
-                    }
+        let mut out: Vec<Option<Result<TracedFrame, YodannError>>> = (0..n).map(|_| None).collect();
+        let mut sent = 0usize;
+        if let Some(tx) = self.tx.as_ref() {
+            for (i, f) in frames.into_iter().enumerate() {
+                if tx.send(Task::Frame(i, f)).is_err() {
+                    break;
                 }
+                sent += 1;
             }
         }
-        if let Some((i, e)) = first_err {
-            panic!("frame {i} failed in a session worker: {e}");
+        let mut got = 0usize;
+        while got < sent {
+            match self.rx_out.recv_timeout(WORKER_SWEEP) {
+                Ok(Reply::Frame(i, res)) => {
+                    got += 1;
+                    out[i] = Some(res);
+                }
+                // A stale shard reply from a layer abandoned mid-drain.
+                Ok(Reply::Shard(..)) => {}
+                Err(RecvTimeoutError::Timeout) => self.ensure_workers(),
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
         }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        out.into_iter()
+            .map(|o| match o {
+                Some(res) => res,
+                None => Err(YodannError::SessionClosed),
+            })
+            .collect()
     }
 
     /// The per-shard schedule: frames run in order, each layer striped
-    /// across the pool on `grid`.
-    fn run_batch_sharded(&mut self, frames: Vec<Image>, grid: ShardGrid) -> Vec<TracedFrame> {
+    /// across the pool on `grid`. A coordinator-side panic (the Q2.9
+    /// pack assert, a stitch bug) fails only its frame.
+    fn run_batch_sharded(
+        &mut self,
+        frames: Vec<Image>,
+        grid: ShardGrid,
+    ) -> Vec<Result<TracedFrame, YodannError>> {
         frames
             .into_iter()
             .enumerate()
-            .map(|(i, f)| self.run_frame_sharded(i, f, grid))
+            .map(|(i, f)| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.run_frame_sharded(i, f, grid)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(YodannError::WorkerPanicked {
+                        frame: i as u64,
+                        layer: None,
+                        message: panic_message(p),
+                    })
+                })
+            })
             .collect()
     }
 
@@ -553,8 +696,17 @@ impl NetworkSession {
     /// reduction → final α/β) and computing the host-op interludes
     /// (ReLU / pools / subsample / add / concat) inline. Identical
     /// numerics to the per-frame path.
-    fn run_frame_sharded(&mut self, fidx: usize, frame: Image, grid: ShardGrid) -> TracedFrame {
+    fn run_frame_sharded(
+        &mut self,
+        fidx: usize,
+        frame: Image,
+        grid: ShardGrid,
+    ) -> Result<TracedFrame, YodannError> {
         let plan = Arc::clone(&self.plan);
+        if let Some(f) = plan.fault.as_ref() {
+            f.maybe_panic(fidx as u64);
+        }
+        let mut fault_report = plan.weight_faults;
         let mut frame_stats = ChipStats::default();
         let mut slots: Vec<Option<Arc<Image>>> = (0..plan.n_slots).map(|_| None).collect();
         slots[plan.input_slot] = Some(Arc::new(frame));
@@ -569,7 +721,9 @@ impl NetworkSession {
                         x,
                         grid,
                         &mut frame_stats,
-                    );
+                        plan.fault.as_ref(),
+                        &mut fault_report,
+                    )?;
                     Arc::new(y)
                 }
                 PlanStep::Relu { src, .. } => {
@@ -612,15 +766,20 @@ impl NetworkSession {
             }
         }
         let out = slots[plan.output_slot].take().expect("plan writes its output");
-        TracedFrame {
+        Ok(TracedFrame {
             output: Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()),
             stats: frame_stats,
-        }
+            fault: fault_report,
+        })
     }
 
     /// One sharded conv step: the layer's output striped across `grid`,
     /// every shard resolving its halo against one shared caller-side
     /// raster, stitched back through the executor's wide reduction.
+    /// With an armed fault plan the shared raster is sealed, corrupted
+    /// (image words plus the halo rows crossing shard boundaries) and
+    /// verified before the fan-out.
+    #[allow(clippy::too_many_arguments)] // the frame's whole fault + stats context
     fn run_conv_sharded(
         &mut self,
         fidx: usize,
@@ -629,7 +788,9 @@ impl NetworkSession {
         x: Arc<Image>,
         grid: ShardGrid,
         frame_stats: &mut ChipStats,
-    ) -> Image {
+        fault: Option<&FaultPlan>,
+        report: &mut FaultReport,
+    ) -> Result<Image, YodannError> {
         let spec = &layer.conv;
         assert_eq!(
             x.c, spec.kernels.n_in,
@@ -646,11 +807,26 @@ impl NetworkSession {
         // Packing happens *in place* so a panic mid-pack (e.g. the
         // Q2.9 range debug_assert) leaves the scratch owned by the
         // session instead of dropped with the unwind.
-        let raster = self.engine.wants_raster().then(|| {
+        let raster = if self.engine.wants_raster() {
             let r = self.shard_raster.get_or_insert_with(BitplaneRaster::new);
             r.pack(&x, spec.k, spec.zero_pad);
-            Arc::new(std::mem::take(r))
-        });
+            if let Some(f) = fault.filter(|f| f.injects_raster_faults()) {
+                let halo_rows =
+                    halo_exchange_rows(grid, out_h, n_out, spec.k, r.padded_dims().0);
+                inject_raster_faults(
+                    f,
+                    r,
+                    |r| r.pack(&x, spec.k, spec.zero_pad),
+                    fidx,
+                    li,
+                    &halo_rows,
+                    report,
+                )?;
+            }
+            Some(Arc::new(std::mem::take(r)))
+        } else {
+            None
+        };
         let shards = plan_layer_shards(grid, out_h, n_out);
         let sl = Arc::new(ShardLayer {
             k: spec.k,
@@ -661,20 +837,53 @@ impl NetworkSession {
             raster: raster.clone(),
             scale_bias: Arc::clone(&spec.scale_bias),
         });
-        let tx = self.tx.as_ref().expect("session already shut down");
-        for s in &shards {
-            let plans = shard_block_plans(&self.cfg, spec.k, spec.zero_pad, x.c, x.h, s);
-            tx.send(Task::Shard { shard: s.index, plans, layer: Arc::clone(&sl) })
-                .expect("worker pool died");
+        self.shard_job += 1;
+        let job = self.shard_job;
+        let mut sent = 0usize;
+        if let Some(tx) = self.tx.as_ref() {
+            for s in &shards {
+                let plans = shard_block_plans(&self.cfg, spec.k, spec.zero_pad, x.c, x.h, s);
+                if tx
+                    .send(Task::Shard { job, shard: s.index, plans, layer: Arc::clone(&sl) })
+                    .is_err()
+                {
+                    break;
+                }
+                sent += 1;
+            }
         }
         let mut acc = std::mem::take(&mut self.shard_acc);
         acc.clear();
         acc.resize(n_out * out_h * out_w, 0);
         let mut single_in_block = true;
         let mut first_err: Option<String> = None;
-        for _ in 0..shards.len() {
-            match self.rx_out.recv().expect("worker pool died") {
-                Reply::Shard(_, Ok(results)) => {
+        let mut got = 0usize;
+        let mut pool_gone = false;
+        while got < sent {
+            let reply = match self.rx_out.recv_timeout(WORKER_SWEEP) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.ensure_workers();
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    pool_gone = true;
+                    break;
+                }
+            };
+            let (j, s, res) = match reply {
+                Reply::Shard(j, s, res) => (j, s, res),
+                // A stale frame reply (from a per-frame batch that gave
+                // up on a lost worker) — not ours.
+                Reply::Frame(..) => continue,
+            };
+            if j != job {
+                // A stale shard reply from a layer abandoned mid-drain.
+                continue;
+            }
+            got += 1;
+            match res {
+                Ok(results) => {
                     for (plan, r) in &results {
                         frame_stats.merge(&r.stats);
                         if plan.in_blocks > 1 {
@@ -685,12 +894,11 @@ impl NetworkSession {
                         );
                     }
                 }
-                Reply::Shard(s, Err(e)) => {
+                Err(e) => {
                     if first_err.is_none() {
                         first_err = Some(format!("shard {s}: {e}"));
                     }
                 }
-                Reply::Frame(..) => unreachable!("frame reply during a sharded layer"),
             }
         }
         // Reclaim the raster scratch: workers drop their ShardLayer
@@ -705,11 +913,19 @@ impl NetworkSession {
         }
         if let Some(e) = first_err {
             self.shard_acc = acc;
-            panic!("frame {fidx}, sharded layer {li} failed in a session worker: {e}");
+            return Err(YodannError::WorkerPanicked {
+                frame: fidx as u64,
+                layer: Some(li),
+                message: e,
+            });
+        }
+        if pool_gone || sent < shards.len() {
+            self.shard_acc = acc;
+            return Err(YodannError::SessionClosed);
         }
         let y = finalize_output(&acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w);
         self.shard_acc = acc;
-        y
+        Ok(y)
     }
 }
 
@@ -722,6 +938,24 @@ impl Drop for NetworkSession {
             let _ = h.join();
         }
     }
+}
+
+/// Spawn one pool worker wired to the shared task queue and reply
+/// channel — used both at session build and by the supervisor's
+/// mid-flight respawn.
+fn spawn_worker(
+    cfg: ChipConfig,
+    kind: EngineKind,
+    rx_in: &Arc<Mutex<Receiver<Task>>>,
+    tx_out: &Sender<Reply>,
+    plan: &Arc<SessionPlan>,
+) -> JoinHandle<()> {
+    let rx = Arc::clone(rx_in);
+    let tx_out = tx_out.clone();
+    let plan = Arc::clone(plan);
+    std::thread::spawn(move || {
+        worker_loop(cfg, kind, &rx, &tx_out, &plan);
+    })
 }
 
 /// One pool worker: owns an engine plus per-frame scratch, serves both
@@ -742,8 +976,14 @@ fn worker_loop(
     let mut raster = BitplaneRaster::new();
     loop {
         // Take the next task; holding the lock while idle is fine —
-        // exactly one waiter is handed each task.
-        let task = rx.lock().unwrap().recv();
+        // exactly one waiter is handed each task. A sibling that
+        // panicked while holding the lock leaves it poisoned; the queue
+        // itself is still consistent (the lock only guards recv), so
+        // recover the inner receiver instead of wedging the whole pool.
+        let task = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(poisoned) => poisoned.into_inner().recv(),
+        };
         let task = match task {
             Ok(t) => t,
             Err(_) => break, // session dropped
@@ -753,10 +993,34 @@ fn worker_loop(
         // waiting forever on the task's reply.
         match task {
             Task::Frame(idx, frame) => {
+                // An injected worker loss: fail the frame it took down
+                // with it, then exit the thread so the supervisor's
+                // respawn path is exercised end to end.
+                let killed = match plan.fault.as_ref() {
+                    Some(f) => f.take_kill(idx as u64),
+                    None => false,
+                };
+                if killed {
+                    let _ = tx_out.send(Reply::Frame(
+                        idx,
+                        Err(YodannError::WorkerPanicked {
+                            frame: idx as u64,
+                            layer: None,
+                            message: "injected worker loss".into(),
+                        }),
+                    ));
+                    return;
+                }
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_frame_inner(&cfg, &mut *engine, plan, frame, &mut acc, &mut raster)
+                    run_frame_inner(&cfg, &mut *engine, plan, idx, frame, &mut acc, &mut raster)
                 }))
-                .map_err(panic_message);
+                .unwrap_or_else(|p| {
+                    Err(YodannError::WorkerPanicked {
+                        frame: idx as u64,
+                        layer: None,
+                        message: panic_message(p),
+                    })
+                });
                 if out.is_err() {
                     // Engine/scratch state may be mid-frame garbage.
                     engine = kind.build(cfg);
@@ -767,7 +1031,7 @@ fn worker_loop(
                     break;
                 }
             }
-            Task::Shard { shard, plans, layer } => {
+            Task::Shard { job, shard, plans, layer } => {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let data = layer.as_layer_data();
                     plans.iter().map(|p| (*p, engine.run_plan(&data, p))).collect::<Vec<_>>()
@@ -780,12 +1044,80 @@ fn worker_loop(
                 if out.is_err() {
                     engine = kind.build(cfg);
                 }
-                if tx_out.send(Reply::Shard(shard, out)).is_err() {
+                if tx_out.send(Reply::Shard(job, shard, out)).is_err() {
                     break;
                 }
             }
         }
     }
+}
+
+/// Padded raster rows that cross a shard boundary under `grid`: for
+/// every row stripe that does not start at the image top, the k−1 rows
+/// its windows read from the stripe above — the words a chip-to-chip
+/// halo link carries (`power::halo_exchange_words` prices the same
+/// traffic). Channel groups share row stripes, so only `out0 == 0`
+/// shards contribute; indices are padded-raster rows, deduped, clamped.
+fn halo_exchange_rows(
+    grid: ShardGrid,
+    out_h: usize,
+    n_out: usize,
+    k: usize,
+    ph: usize,
+) -> Vec<usize> {
+    let mut rows: Vec<usize> = Vec::new();
+    for s in plan_layer_shards(grid, out_h, n_out) {
+        if s.out0 == 0 && s.row0 > 0 {
+            for dy in 0..k.saturating_sub(1) {
+                let py = s.row0 + dy;
+                if py < ph && !rows.contains(&py) {
+                    rows.push(py);
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// The image-memory / halo-exchange leg of the fault plan, run on a
+/// freshly packed raster: seal (when detecting) → inject both sites →
+/// verify → on detection repack once and re-inject at the guard-banded
+/// retry rate → a second detection refuses the frame. Surviving flips
+/// (all of them, when detection is off) land on `report`.
+fn inject_raster_faults(
+    f: &FaultPlan,
+    raster: &mut BitplaneRaster,
+    mut repack: impl FnMut(&mut BitplaneRaster),
+    fidx: usize,
+    li: usize,
+    halo_rows: &[usize],
+    report: &mut FaultReport,
+) -> Result<(), YodannError> {
+    let (frame, layer) = (fidx as u64, li as u64);
+    if f.detects() {
+        raster.seal();
+    }
+    let mut image_flips = f.corrupt_raster(raster, frame, layer, 0);
+    let mut halo_flips = f.corrupt_halo(raster, halo_rows, frame, layer, 0);
+    if f.detects() && raster.verify().is_some() {
+        report.detected += 1;
+        report.retries += 1;
+        repack(raster);
+        raster.seal();
+        image_flips = f.corrupt_raster(raster, frame, layer, 1);
+        halo_flips = f.corrupt_halo(raster, halo_rows, frame, layer, 1);
+        if raster.verify().is_some() {
+            let site = if halo_flips > 0 {
+                FaultSite::HaloExchange
+            } else {
+                FaultSite::ImageMemory
+            };
+            return Err(YodannError::FaultDetected { frame: Some(frame), layer: li, site });
+        }
+    }
+    report.image_flips += image_flips;
+    report.halo_flips += halo_flips;
+    Ok(())
 }
 
 /// Carry one frame through the step program on one engine: conv steps
@@ -798,10 +1130,15 @@ fn run_frame_inner(
     cfg: &ChipConfig,
     engine: &mut dyn ConvEngine,
     plan: &SessionPlan,
+    fidx: usize,
     frame: Image,
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
-) -> TracedFrame {
+) -> Result<TracedFrame, YodannError> {
+    if let Some(f) = plan.fault.as_ref() {
+        f.maybe_panic(fidx as u64);
+    }
+    let mut fault_report = plan.weight_faults;
     let mut stats = ChipStats::default();
     let mut slots: Vec<Option<Image>> = (0..plan.n_slots).map(|_| None).collect();
     slots[plan.input_slot] = Some(frame);
@@ -809,7 +1146,19 @@ fn run_frame_inner(
         let out = match step {
             PlanStep::Conv { conv, src, .. } => {
                 let x = slots[*src].as_ref().expect("topological order");
-                run_conv_layer(cfg, engine, *conv, &plan.convs[*conv], x, acc, raster, &mut stats)
+                run_conv_layer(
+                    cfg,
+                    engine,
+                    *conv,
+                    &plan.convs[*conv],
+                    x,
+                    acc,
+                    raster,
+                    &mut stats,
+                    plan.fault.as_ref(),
+                    fidx,
+                    &mut fault_report,
+                )?
             }
             PlanStep::Relu { src, .. } => {
                 // When this step is the source's last use (always, for
@@ -846,10 +1195,11 @@ fn run_frame_inner(
             slots[f] = None;
         }
     }
-    TracedFrame {
+    Ok(TracedFrame {
         output: slots[plan.output_slot].take().expect("plan writes its output"),
         stats,
-    }
+        fault: fault_report,
+    })
 }
 
 /// One conv step on one engine: plan → blocks → wide reduction → final
@@ -864,7 +1214,10 @@ fn run_conv_layer(
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
     stats: &mut ChipStats,
-) -> Image {
+    fault: Option<&FaultPlan>,
+    fidx: usize,
+    report: &mut FaultReport,
+) -> Result<Image, YodannError> {
     let spec = &layer.conv;
     assert_eq!(
         x.c, spec.kernels.n_in,
@@ -885,6 +1238,19 @@ fn run_conv_layer(
     let wants_raster = engine.wants_raster();
     if wants_raster {
         raster.pack(x, spec.k, spec.zero_pad);
+        // Per-frame schedule: the raster never crosses a shard
+        // boundary, so only the image-memory site applies here.
+        if let Some(f) = fault.filter(|f| f.injects_raster_faults()) {
+            inject_raster_faults(
+                f,
+                raster,
+                |r| r.pack(x, spec.k, spec.zero_pad),
+                fidx,
+                li,
+                &[],
+                report,
+            )?;
+        }
     }
     let data = LayerData {
         k: spec.k,
@@ -906,7 +1272,7 @@ fn run_conv_layer(
         }
         reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
     }
-    finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w)
+    Ok(finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w))
 }
 
 /// Quantized ReLU (`max(0, ·)` on raw Q2.9), the host interlude between
@@ -1250,5 +1616,74 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.kernels.bits, y.kernels.bits);
         }
+    }
+
+    #[test]
+    fn injected_worker_loss_fails_one_frame_and_respawns() {
+        // The hardest supervisor case: a ONE-worker pool loses its only
+        // thread on frame 0 with frame 1 still queued behind it. The
+        // drain's sweep must respawn mid-batch, frame 0 must come back
+        // as a typed error, frame 1 and every later batch must succeed.
+        let cfg = ChipConfig::tiny(4);
+        let fault = crate::fault::FaultPlan::seeded(1).kill_worker_on_frame(0);
+        let mut sess = NetworkSession::spawn_plan(
+            cfg,
+            EngineKind::Functional,
+            1,
+            ShardPolicy::PerFrame,
+            chain_compiled(&two_layer_specs(90)),
+            Some(fault),
+        )
+        .unwrap();
+        let mut g = Gen::new(9);
+        let frames: Vec<Image> = (0..2).map(|_| synthetic_scene(&mut g, 3, 8, 8)).collect();
+        let out = sess.run_batch_traced(frames.clone());
+        assert!(
+            matches!(out[0], Err(YodannError::WorkerPanicked { frame: 0, .. })),
+            "{:?}",
+            out[0].as_ref().map(|_| ())
+        );
+        assert!(out[1].is_ok(), "{}", out[1].as_ref().err().unwrap());
+        // The kill token is spent; the respawned worker serves on.
+        let again = sess.run_batch_traced(frames);
+        assert!(again.iter().all(|r| r.is_ok()));
+        assert_eq!(sess.worker_respawns(), 1);
+    }
+
+    #[test]
+    fn injected_panic_poisons_nothing_and_pool_survives() {
+        // A panicking frame is caught in the worker loop: only its slot
+        // errors (with the historical panic text preserved in Display),
+        // siblings and later batches are unaffected, and the poisoned
+        // task-queue lock is recovered rather than wedging the pool.
+        let cfg = ChipConfig::tiny(4);
+        let fault = crate::fault::FaultPlan::seeded(2).panic_on_frame(1);
+        let mut sess = NetworkSession::spawn_plan(
+            cfg,
+            EngineKind::Functional,
+            2,
+            ShardPolicy::PerFrame,
+            chain_compiled(&two_layer_specs(91)),
+            Some(fault),
+        )
+        .unwrap();
+        let mut g = Gen::new(11);
+        let frames: Vec<Image> = (0..4).map(|_| synthetic_scene(&mut g, 3, 8, 8)).collect();
+        let out = sess.run_batch_traced(frames);
+        for (i, r) in out.iter().enumerate() {
+            if i == 1 {
+                let e = r.as_ref().err().expect("frame 1 must fail");
+                let text = e.to_string();
+                assert!(text.contains("failed in a session worker"), "{text}");
+                assert!(text.contains("deliberately injected"), "{text}");
+            } else {
+                assert!(r.is_ok(), "frame {i}: {}", r.as_ref().err().unwrap());
+            }
+        }
+        // panic_on_frame keys on the batch index, so a 1-frame batch
+        // (index 0) avoids re-triggering it.
+        let mut g2 = Gen::new(12);
+        let again = sess.run_batch_traced(vec![synthetic_scene(&mut g2, 3, 8, 8)]);
+        assert!(again[0].is_ok());
     }
 }

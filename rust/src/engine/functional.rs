@@ -19,7 +19,7 @@
 //! the A/B baseline for `benches/engines.rs` and the `yodann throughput`
 //! subcommand.
 
-use super::raster::{BitplaneRaster, OFFSET, PLANES};
+use super::raster::{mix64, BitplaneRaster, OFFSET, PLANES};
 use super::{BlockPlan, ConvEngine, EngineOutput, LayerData};
 use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
 use crate::hw::{BlockJob, ChipStats};
@@ -66,6 +66,10 @@ pub struct PackedKernels {
     sign_t: Vec<i64>,
     /// Planes per popcount group (function of k alone).
     m: usize,
+    /// Checksum over the plain weight words, computed at pack time — the
+    /// parity a latch-based filter bank would carry. [`Self::verify`]
+    /// recomputes it; a bit flipped after packing leaves it stale.
+    checksum: u64,
 }
 
 impl PackedKernels {
@@ -102,7 +106,16 @@ impl PackedKernels {
                 sign_t[i * n_out + o] = sign;
             }
         }
-        PackedKernels { k, n_in, n_out, words, sign_sums, rep, sign_t, m }
+        let checksum = Self::checksum_of(&words, n_out, n_in);
+        PackedKernels { k, n_in, n_out, words, sign_sums, rep, sign_t, m, checksum }
+    }
+
+    fn checksum_of(words: &[u64], n_out: usize, n_in: usize) -> u64 {
+        let mut h = mix64(0x9E37_79B9_7F4A_7C15 ^ (n_out * n_in) as u64);
+        for &w in words {
+            h = mix64(h ^ w);
+        }
+        h
     }
 
     /// Packed weight word of kernel (out, in).
@@ -134,6 +147,36 @@ impl PackedKernels {
     #[inline]
     pub fn sign_slice(&self, i: usize, out_base: usize, out_len: usize) -> &[i64] {
         &self.sign_t[i * self.n_out + out_base..][..out_len]
+    }
+
+    /// Whether the weight words still match the pack-time checksum. A
+    /// [`Self::flip_weight_bit`] after packing makes this return false —
+    /// the filter bank's fault-detection hook.
+    pub fn verify(&self) -> bool {
+        Self::checksum_of(&self.words, self.n_out, self.n_in) == self.checksum
+    }
+
+    /// Flip one weight bit of kernel (out, in) — a single-event upset in
+    /// the filter bank's latch array. All derived forms (sign sums,
+    /// replicated words, transposed tables) are updated consistently, so
+    /// every engine variant computes with the *same corrupted weight*;
+    /// only the pack-time checksum is deliberately left stale, which is
+    /// exactly what [`Self::verify`] detects.
+    pub(crate) fn flip_weight_bit(&mut self, o: usize, i: usize, bit: u32) {
+        let kk = self.k * self.k;
+        debug_assert!((bit as usize) < kk, "bit {bit} outside k²={kk}");
+        let idx = o * self.n_in + i;
+        let w = self.words[idx] ^ (1u64 << bit);
+        let sign = 2 * w.count_ones() as i64 - kk as i64;
+        self.words[idx] = w;
+        self.sign_sums[idx] = sign;
+        let fields = (1usize << self.m) - 1;
+        let mut r = 0u64;
+        for f in 0..fields {
+            r |= w << (f * kk);
+        }
+        self.rep[i * self.n_out + o] = r;
+        self.sign_t[i * self.n_out + o] = sign;
     }
 }
 

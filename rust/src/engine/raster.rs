@@ -62,6 +62,11 @@ pub struct BitplaneRaster {
     /// Prefix sums of `u` per padded row: `[(c·ph + y)] · (pw + 1)`.
     usums: Vec<i64>,
     reallocs: u64,
+    /// Per padded-row checksums over the row's plane words, filled by
+    /// [`Self::seal`]. Empty unless the fault-detection path is armed.
+    row_chk: Vec<u64>,
+    /// Whether `row_chk` matches the current `words` contents.
+    sealed: bool,
 }
 
 impl BitplaneRaster {
@@ -107,6 +112,7 @@ impl BitplaneRaster {
         self.pw = pw;
         self.ph = ph;
         self.stride = stride;
+        self.sealed = false;
         let word_len = c_len * ph * PLANES * stride;
         let usum_len = c_len * ph * (pw + 1);
         if word_len > self.words.capacity() || usum_len > self.usums.capacity() {
@@ -248,6 +254,73 @@ impl BitplaneRaster {
     pub fn reallocs(&self) -> u64 {
         self.reallocs
     }
+
+    /// Checksum every padded row's plane words, arming [`Self::verify`].
+    /// Models the parity bits a latch-based image bank would carry: the
+    /// fault path seals right after `pack`, injects, then verifies.
+    pub fn seal(&mut self) {
+        let rows = self.channels * self.ph;
+        let span = PLANES * self.stride;
+        self.row_chk.clear();
+        self.row_chk.resize(rows, 0);
+        for r in 0..rows {
+            let mut h = mix64(r as u64 ^ 0x5EA1);
+            for &w in &self.words[r * span..(r + 1) * span] {
+                h = mix64(h ^ w);
+            }
+            self.row_chk[r] = h;
+        }
+        self.sealed = true;
+    }
+
+    /// First padded row whose plane words no longer match the sealed
+    /// checksum, or `None` if the raster is clean (or never sealed).
+    pub fn verify(&self) -> Option<usize> {
+        if !self.sealed {
+            return None;
+        }
+        let span = PLANES * self.stride;
+        for (r, &chk) in self.row_chk.iter().enumerate() {
+            let mut h = mix64(r as u64 ^ 0x5EA1);
+            for &w in &self.words[r * span..(r + 1) * span] {
+                h = mix64(h ^ w);
+            }
+            if h != chk {
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Total plane words currently packed (the fault injector's address
+    /// space for image-memory upsets).
+    pub(crate) fn words_len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Flip one bit of one plane word — a single-event upset in the
+    /// image bank. Deliberately leaves `usums` untouched: a real upset
+    /// corrupts the stored planes only, so [`Self::window`] returns an
+    /// inconsistent (Σu, planes) pair exactly like silicon would.
+    pub(crate) fn flip_word_bit(&mut self, wi: usize, bit: u32) {
+        self.words[wi] ^= 1u64 << bit;
+    }
+
+    /// Word range holding padded row `py` of packed channel `c` (all 12
+    /// planes) — the rows a halo exchange would retransmit.
+    pub(crate) fn row_word_range(&self, c: usize, py: usize) -> std::ops::Range<usize> {
+        let span = PLANES * self.stride;
+        let base = (c * self.ph + py) * span;
+        base..base + span
+    }
+}
+
+/// The splitmix64 finalizer: a cheap, high-quality 64-bit mixer shared by
+/// the raster/kernel checksums and the fault plan's per-site seeding.
+pub(crate) fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Borrowed raw view of a packed raster: the geometry and buffers the
@@ -323,5 +396,26 @@ mod tests {
         assert_eq!(r.reallocs(), after_first + 1);
         r.pack(&big, 3, true);
         assert_eq!(r.reallocs(), after_first + 1);
+    }
+
+    #[test]
+    fn seal_detects_a_single_flipped_bit_and_repack_clears_it() {
+        let mut g = Gen::new(13);
+        let img = random_image(&mut g, 2, 6, 5, 0.2);
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, 3, true);
+        r.seal();
+        assert_eq!(r.verify(), None, "freshly sealed raster must be clean");
+        r.flip_word_bit(0, 7);
+        assert!(r.verify().is_some(), "flip must trip the row checksum");
+        // Repacking rebuilds the words and disarms the stale seal...
+        r.pack(&img, 3, true);
+        assert_eq!(r.verify(), None);
+        // ...and resealing the repacked contents is clean again.
+        r.seal();
+        assert_eq!(r.verify(), None);
+        // Halo-row word ranges address real words.
+        let range = r.row_word_range(1, 0);
+        assert!(range.end <= r.words_len());
     }
 }

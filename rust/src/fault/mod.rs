@@ -1,0 +1,481 @@
+//! Seeded fault injection + detection for the near-threshold corners.
+//!
+//! YodaNN's 895 µW headline rests on standard-cell latch memories that
+//! keep working at 0.6 V — exactly the regime where single-event upsets
+//! in memories and interconnect stop being negligible (§III-C; BinarEye
+//! and Hyperdrive trade the same margin explicitly). The simulator
+//! prices those corners but, before this module, never modeled what
+//! going there does to the *data*.
+//!
+//! [`FaultPlan`] is a seeded, reproducible injector for the three places
+//! the paper cares about:
+//!
+//! * **image memory** — raster plane words, flipped right after pack;
+//! * **weight memory** — packed filter-bank bits, flipped at session
+//!   build (weights are written once and then resident);
+//! * **halo exchange** — the k−1 raster rows that cross a shard
+//!   boundary, flipped again to model a lossy chip-to-chip link.
+//!
+//! Per-word flip probabilities derive from a voltage-dependent
+//! bit-error-rate model ([`bit_error_rate`], backed by
+//! `VfCurve::bit_error_rate`), so a plan can be armed directly
+//! [`FaultPlan::at_corner`]. Detection is checksum-based
+//! (`BitplaneRaster::seal`/`verify`, `PackedKernels::verify`) with a
+//! detect → retry-once-at-guard-banded-rate → typed-error policy; what
+//! happened to each frame is reported through
+//! [`FaultReport`] on the frame's telemetry.
+//!
+//! Everything is deterministic: the same seed over the same traffic
+//! produces the same flips, the same detections, and the same report —
+//! per (site, frame, layer, attempt), independent of worker scheduling.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::engine::raster::mix64;
+use crate::engine::{BitplaneRaster, PackedKernels};
+use crate::model::Corner;
+use crate::power::CorePowerModel;
+use crate::testkit::Gen;
+
+/// Where an injected (or detected) fault lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Raster plane words in the image bank.
+    ImageMemory,
+    /// Packed filter-bank weight bits.
+    WeightMemory,
+    /// Raster rows crossing a shard boundary.
+    HaloExchange,
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultSite::ImageMemory => "image-memory",
+            FaultSite::WeightMemory => "weight-memory",
+            FaultSite::HaloExchange => "halo-exchange",
+        })
+    }
+}
+
+/// What fault injection did to one frame (plus the session-lifetime
+/// weight-memory faults, folded into every frame that computed with
+/// those weights). Surfaced through `FrameTelemetry::fault`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Bits flipped in image-memory raster words (survivors only: flips
+    /// that a detect+retry repack cleaned up are not counted here).
+    pub image_flips: u32,
+    /// Bits flipped in packed filter-bank weights at session build.
+    pub weight_flips: u32,
+    /// Bits flipped in halo-exchange rows.
+    pub halo_flips: u32,
+    /// Checksum detections (each one triggered a repack retry).
+    pub detected: u32,
+    /// Repack retries performed after a detection.
+    pub retries: u32,
+}
+
+impl FaultReport {
+    /// Total surviving bit flips across all sites.
+    pub fn total_flips(&self) -> u32 {
+        self.image_flips + self.weight_flips + self.halo_flips
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.image_flips += other.image_flips;
+        self.weight_flips += other.weight_flips;
+        self.halo_flips += other.halo_flips;
+        self.detected += other.detected;
+        self.retries += other.retries;
+    }
+}
+
+/// A seeded, reproducible fault-injection plan.
+///
+/// Built with [`FaultPlan::seeded`] (inert until a rate is set via
+/// [`FaultPlan::ber`] or [`FaultPlan::at_corner`]) or
+/// [`FaultPlan::disabled`] (explicit no-injection override, e.g. to beat
+/// a `YODANN_FAULT_SEED` environment arm). Cloning is cheap and clones
+/// share the one-shot worker-kill fuse, so a plan distributed across
+/// worker threads still kills at most one worker.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    ber: f64,
+    detect: bool,
+    image: bool,
+    weights: bool,
+    halo: bool,
+    panic_frame: Option<u64>,
+    kill_frame: Option<u64>,
+    kill_fuse: Arc<AtomicBool>,
+}
+
+/// Injection rate used by the `YODANN_FAULT_SEED` CI smoke arm: low
+/// enough that a double fault (one surviving the retry) is vanishingly
+/// unlikely across the whole suite, high enough that the detect/retry
+/// path actually runs a handful of times.
+const SMOKE_BER: f64 = 1e-9;
+
+const TAG_IMAGE: u64 = 0x1A6E;
+const TAG_WEIGHTS: u64 = 0x2B7F;
+const TAG_HALO: u64 = 0x3C90;
+
+impl FaultPlan {
+    /// A plan with every site enabled and detection on, but a zero
+    /// bit-error rate — inert until [`Self::ber`] or [`Self::at_corner`]
+    /// arms it (or a panic/kill frame is set).
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            ber: 0.0,
+            detect: true,
+            image: true,
+            weights: true,
+            halo: true,
+            panic_frame: None,
+            kill_frame: None,
+            kill_fuse: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// A plan that injects nothing and detects nothing — the explicit
+    /// override for sessions that must stay byte-identical to the
+    /// uninstrumented path even when `YODANN_FAULT_SEED` is set.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            detect: false,
+            image: false,
+            weights: false,
+            halo: false,
+            ..FaultPlan::seeded(0)
+        }
+    }
+
+    /// The plan `YODANN_FAULT_SEED=<seed>` arms on every session that
+    /// did not set an explicit plan: all sites at [`SMOKE_BER`],
+    /// detection on.
+    pub fn from_env() -> Option<FaultPlan> {
+        let raw = std::env::var("YODANN_FAULT_SEED").ok()?;
+        let seed = raw.trim().parse::<u64>().ok()?;
+        Some(FaultPlan::seeded(seed).ber(SMOKE_BER))
+    }
+
+    /// Set the per-bit-access upset probability directly.
+    pub fn ber(mut self, ber: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&ber), "bit-error rate {ber} outside [0, 1]");
+        self.ber = ber;
+        self
+    }
+
+    /// Derive the upset probability from an operating corner via the
+    /// fitted voltage curve (see [`bit_error_rate`]).
+    pub fn at_corner(self, corner: Corner) -> FaultPlan {
+        let ber = bit_error_rate(corner);
+        self.ber(ber)
+    }
+
+    /// Enable/disable checksum detection (off = silent corruption).
+    pub fn detect(mut self, on: bool) -> FaultPlan {
+        self.detect = on;
+        self
+    }
+
+    /// Enable/disable image-memory injection.
+    pub fn image(mut self, on: bool) -> FaultPlan {
+        self.image = on;
+        self
+    }
+
+    /// Enable/disable weight-memory injection.
+    pub fn weights(mut self, on: bool) -> FaultPlan {
+        self.weights = on;
+        self
+    }
+
+    /// Enable/disable halo-exchange injection.
+    pub fn halo(mut self, on: bool) -> FaultPlan {
+        self.halo = on;
+        self
+    }
+
+    /// Panic inside the worker while computing frame `frame` — exercises
+    /// the catch_unwind / poison-recovery containment path.
+    pub fn panic_on_frame(mut self, frame: u64) -> FaultPlan {
+        self.panic_frame = Some(frame);
+        self
+    }
+
+    /// Kill (cleanly exit) the worker thread that picks up frame
+    /// `frame`, once — exercises the supervisor's respawn path.
+    pub fn kill_worker_on_frame(mut self, frame: u64) -> FaultPlan {
+        self.kill_frame = Some(frame);
+        self
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The armed per-bit-access upset probability.
+    pub fn ber_value(&self) -> f64 {
+        self.ber
+    }
+
+    pub(crate) fn detects(&self) -> bool {
+        self.detect
+    }
+
+    pub(crate) fn injects_weights(&self) -> bool {
+        self.weights && self.ber > 0.0
+    }
+
+    pub(crate) fn injects_raster_faults(&self) -> bool {
+        (self.image || self.halo) && self.ber > 0.0
+    }
+
+    /// Panic if this frame is the planned panic frame.
+    pub(crate) fn maybe_panic(&self, frame: u64) {
+        if self.panic_frame == Some(frame) {
+            panic!("deliberately injected worker panic (frame {frame})");
+        }
+    }
+
+    /// True exactly once, for the planned kill frame — the shared fuse
+    /// keeps a respawned worker from dying again on a retry.
+    pub(crate) fn take_kill(&self, frame: u64) -> bool {
+        self.kill_frame == Some(frame) && !self.kill_fuse.swap(true, Ordering::SeqCst)
+    }
+
+    /// Retry attempts inject at a guard-banded rate: the retried pack is
+    /// assumed to run with refreshed margin (slower, checked access), so
+    /// a detected fault usually clears on the second try.
+    fn attempt_ber(&self, attempt: u32) -> f64 {
+        if attempt == 0 {
+            self.ber
+        } else {
+            self.ber / 16.0
+        }
+    }
+
+    /// Deterministic per-(site, frame, layer, attempt) generator:
+    /// independent of worker scheduling, reproducible across runs.
+    fn site_gen(&self, tag: u64, frame: u64, layer: u64, attempt: u32) -> Gen {
+        Gen::new(mix64(mix64(mix64(self.seed ^ tag) ^ frame) ^ layer) ^ attempt as u64)
+    }
+
+    /// Flip image-memory bits across the raster's plane words. Returns
+    /// the number of flips.
+    pub(crate) fn corrupt_raster(
+        &self,
+        raster: &mut BitplaneRaster,
+        frame: u64,
+        layer: u64,
+        attempt: u32,
+    ) -> u32 {
+        if !self.image {
+            return 0;
+        }
+        let p = (64.0 * self.attempt_ber(attempt)).min(1.0);
+        if p <= 0.0 {
+            return 0;
+        }
+        let mut g = self.site_gen(TAG_IMAGE, frame, layer, attempt);
+        let mut flips = 0u32;
+        for wi in 0..raster.words_len() {
+            if g.unit_f64() < p {
+                raster.flip_word_bit(wi, g.below(64) as u32);
+                flips += 1;
+            }
+        }
+        flips
+    }
+
+    /// Flip bits in the halo-exchange rows (padded row indices in
+    /// `rows`, every packed channel) — the words a shard-boundary link
+    /// would retransmit. Returns the number of flips.
+    pub(crate) fn corrupt_halo(
+        &self,
+        raster: &mut BitplaneRaster,
+        rows: &[usize],
+        frame: u64,
+        layer: u64,
+        attempt: u32,
+    ) -> u32 {
+        if !self.halo || rows.is_empty() {
+            return 0;
+        }
+        let p = (64.0 * self.attempt_ber(attempt)).min(1.0);
+        if p <= 0.0 {
+            return 0;
+        }
+        let mut g = self.site_gen(TAG_HALO, frame, layer, attempt);
+        let mut flips = 0u32;
+        for c in 0..raster.channels() {
+            for &py in rows {
+                for wi in raster.row_word_range(c, py) {
+                    if g.unit_f64() < p {
+                        raster.flip_word_bit(wi, g.below(64) as u32);
+                        flips += 1;
+                    }
+                }
+            }
+        }
+        flips
+    }
+
+    /// Flip weight bits across the packed filter bank (one Bernoulli per
+    /// (out, in) pair over its k² bits). Returns the number of flips.
+    pub(crate) fn corrupt_weights(&self, pk: &mut PackedKernels, layer: u64, attempt: u32) -> u32 {
+        if !self.weights {
+            return 0;
+        }
+        let kk = (pk.k * pk.k) as u64;
+        let p = (kk as f64 * self.attempt_ber(attempt)).min(1.0);
+        if p <= 0.0 {
+            return 0;
+        }
+        let mut g = self.site_gen(TAG_WEIGHTS, 0, layer, attempt);
+        let mut flips = 0u32;
+        for o in 0..pk.n_out {
+            for i in 0..pk.n_in {
+                if g.unit_f64() < p {
+                    pk.flip_weight_bit(o, i, g.below(kk) as u32);
+                    flips += 1;
+                }
+            }
+        }
+        flips
+    }
+}
+
+/// Bit-error rate of a corner's memories: the architecture's fitted
+/// voltage curve evaluated at the corner's supply (never panics — out of
+/// range corners saturate, see `VfCurve::bit_error_rate`).
+pub fn bit_error_rate(corner: Corner) -> f64 {
+    CorePowerModel::new(corner.arch).vf.bit_error_rate(corner.v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::random_image;
+
+    fn packed(seed: u64) -> PackedKernels {
+        let mut g = Gen::new(seed);
+        PackedKernels::pack(&crate::workload::BinaryKernels::random(&mut g, 4, 3, 3))
+    }
+
+    #[test]
+    fn same_seed_reproduces_identical_flips() {
+        let mut g = Gen::new(21);
+        let img = random_image(&mut g, 2, 8, 8, 0.2);
+        let plan = FaultPlan::seeded(5).ber(0.02);
+        let mut a = BitplaneRaster::new();
+        let mut b = BitplaneRaster::new();
+        a.pack(&img, 3, true);
+        b.pack(&img, 3, true);
+        let fa = plan.corrupt_raster(&mut a, 7, 1, 0);
+        let fb = plan.clone().corrupt_raster(&mut b, 7, 1, 0);
+        assert_eq!(fa, fb);
+        assert!(fa > 0, "2% word BER over a whole raster should flip something");
+        let mut wa = [0u64; crate::engine::raster::PLANES];
+        let mut wb = [0u64; crate::engine::raster::PLANES];
+        for y in 0..6 {
+            for x in 0..6 {
+                let ua = a.window(0, y, x, &mut wa);
+                let ub = b.window(0, y, x, &mut wb);
+                assert_eq!((wa, ua), (wb, ub), "same seed must corrupt identically");
+            }
+        }
+        // A different frame id draws a different pattern.
+        let mut c = BitplaneRaster::new();
+        c.pack(&img, 3, true);
+        plan.corrupt_raster(&mut c, 8, 1, 0);
+        let differs = (0..6).any(|y| {
+            (0..6).any(|x| {
+                let ua = a.window(0, y, x, &mut wa);
+                let uc = c.window(0, y, x, &mut wb);
+                (wa, ua) != (wb, uc)
+            })
+        });
+        assert!(differs, "different frames should see different upsets");
+    }
+
+    #[test]
+    fn disabled_plan_injects_nothing() {
+        let mut g = Gen::new(22);
+        let img = random_image(&mut g, 2, 8, 8, 0.2);
+        let plan = FaultPlan::disabled();
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, 3, true);
+        r.seal();
+        assert_eq!(plan.corrupt_raster(&mut r, 0, 0, 0), 0);
+        assert_eq!(plan.corrupt_halo(&mut r, &[0, 1], 0, 0, 0), 0);
+        let mut pk = packed(3);
+        assert_eq!(plan.corrupt_weights(&mut pk, 0, 0), 0);
+        assert_eq!(r.verify(), None);
+        assert!(pk.verify());
+        assert!(!plan.injects_raster_faults() && !plan.injects_weights());
+    }
+
+    #[test]
+    fn saturated_ber_hits_every_word_and_checksums_notice() {
+        let mut g = Gen::new(23);
+        let img = random_image(&mut g, 1, 6, 6, 0.2);
+        let plan = FaultPlan::seeded(9).ber(1.0);
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, 3, true);
+        r.seal();
+        let flips = plan.corrupt_raster(&mut r, 0, 0, 0);
+        assert_eq!(flips as usize, r.words_len(), "p=1 must flip every word once");
+        assert!(r.verify().is_some());
+        let mut pk = packed(4);
+        let wflips = plan.corrupt_weights(&mut pk, 0, 0);
+        assert_eq!(wflips as usize, pk.n_out * pk.n_in);
+        assert!(!pk.verify());
+    }
+
+    #[test]
+    fn flipped_weights_stay_consistent_across_forms() {
+        let mut pk = packed(5);
+        let before = pk.word(2, 1);
+        pk.flip_weight_bit(2, 1, 4);
+        let after = pk.word(2, 1);
+        assert_eq!(before ^ after, 1 << 4);
+        assert_eq!(pk.sign_sum(2, 1), 2 * after.count_ones() as i64 - 9);
+        // The replicated/transposed forms see the same corrupted word.
+        assert_eq!(pk.rep_slice(1, 2, 1)[0] & ((1 << 9) - 1), after);
+        assert_eq!(pk.sign_slice(1, 2, 1)[0], pk.sign_sum(2, 1));
+        assert!(!pk.verify());
+    }
+
+    #[test]
+    fn report_merge_and_kill_fuse() {
+        let mut a = FaultReport { image_flips: 1, detected: 1, retries: 1, ..Default::default() };
+        let b = FaultReport { weight_flips: 2, halo_flips: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total_flips(), 6);
+        assert_eq!((a.detected, a.retries), (1, 1));
+
+        let plan = FaultPlan::seeded(1).kill_worker_on_frame(3);
+        let clone = plan.clone();
+        assert!(!plan.take_kill(2));
+        assert!(plan.take_kill(3), "first claim fires");
+        assert!(!clone.take_kill(3), "clones share the one-shot fuse");
+    }
+
+    #[test]
+    fn corner_ber_tracks_supply() {
+        let low = bit_error_rate(Corner { arch: crate::power::ArchId::Bin32Multi, v: 0.6 });
+        let high = bit_error_rate(Corner { arch: crate::power::ArchId::Bin32Multi, v: 1.2 });
+        assert!(low > high, "near-threshold corner must be worse: {low} vs {high}");
+        assert!(high >= 1e-10 && low <= 1e-2);
+    }
+}

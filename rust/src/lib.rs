@@ -43,6 +43,11 @@
 //!   `golden` cargo feature (it needs the offline `xla` crate closure); the
 //!   default build is std-only so the tier-1 verify runs without any
 //!   registry.
+//! * [`fault`] — seeded fault injection + detection for near-threshold
+//!   corners: a reproducible [`fault::FaultPlan`] flips bits in image
+//!   memory, packed weights and halo-exchange rows at a
+//!   voltage-dependent rate, checksums detect, and a per-frame
+//!   [`fault::FaultReport`] lands on the telemetry.
 //! * [`workload`] — deterministic synthetic workload generators (the
 //!   Stanford-backgrounds stand-in, weight generators).
 //! * [`report`] — paper-reported reference values and table/figure renderers
@@ -64,6 +69,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod fixedpoint;
 pub mod hw;
 pub mod model;

@@ -10,6 +10,7 @@
 //! yodann figure <2|6|11|12|13>        regenerate a paper figure's series
 //! yodann sweep [--points 13]          voltage sweep (Fig. 11 data)
 //! yodann throughput [--net id ...]    batch frames through a NetworkSession (frames/s)
+//! yodann faults [--net id --corner v] fault-injection sweep (detection/corruption vs corner)
 //! yodann networks                     list known networks
 //! ```
 
@@ -22,6 +23,7 @@ use yodann::cli::Args;
 use yodann::coordinator::check_block;
 use yodann::coordinator::{metrics::sim_metrics, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::EngineKind;
+use yodann::fault::{bit_error_rate, FaultPlan};
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph};
 use yodann::power::{ArchId, CorePowerModel};
@@ -31,7 +33,7 @@ use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, Scal
 
 const VALUE_KEYS: &[&str] = &[
     "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
-    "engine", "scale", "shards", "bands",
+    "engine", "scale", "shards", "bands", "corner",
 ];
 
 fn main() {
@@ -57,6 +59,7 @@ fn main() {
         "golden" => cmd_golden(&args),
         "sweep" => cmd_sweep(&args),
         "throughput" => cmd_throughput(&args),
+        "faults" => cmd_faults(&args),
         "networks" => cmd_networks(),
         other => Err(format!("unknown command '{other}' (try --help)")),
     };
@@ -104,6 +107,16 @@ fn print_help() {
          \x20                             Non-chain networks (alexnet, resnet18,\n\
          \x20                             resnet34) run through their graph encodings\n\
          \x20                             (§IV-D 11x11 split, residual shortcuts).\n\
+         \x20 faults [--net bc-cifar10] [--corner 0.6] [--frames 4] [--scale 0.25]\n\
+         \x20        [--workers 2] [--seed 42]\n\
+         \x20                             seeded fault-injection sweep: per corner, derive\n\
+         \x20                             the memory bit-error rate from the voltage curve,\n\
+         \x20                             inject into image memory / packed weights / halo\n\
+         \x20                             rows, and report silent-corruption vs\n\
+         \x20                             detect-and-contain outcomes per frame; records\n\
+         \x20                             (model-ber, corrupted/contained/detected\n\
+         \x20                             fractions) merge into BENCH_engines.json.\n\
+         \x20                             Without --corner, sweeps 0.6/0.8/1.0/1.2 V.\n\
          \x20 networks                    list the networks of Tables III–V and flag\n\
          \x20                             which are runnable (chain/graph) vs\n\
          \x20                             descriptor-only"
@@ -683,6 +696,185 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         let total = merge_json(path, "engines", &merged_records)
             .map_err(|e| format!("merging records into {path}: {e}"))?;
         println!("  merged {} records into {path} ({total} total)", merged_records.len());
+    }
+    Ok(())
+}
+
+/// Push a sweep fraction/ratio record, skipping non-positive values:
+/// the BENCH schema requires ratio records to carry a positive finite
+/// value, and a zero fraction (nothing corrupted at a healthy corner)
+/// is a legitimate sweep outcome, not evidence worth merging.
+fn push_nonzero(records: &mut Vec<JsonRecord>, name: String, value: f64) {
+    if value > 0.0 && value.is_finite() {
+        records.push(JsonRecord { name, ns_per_iter: 0.0, frames_per_s: Some(value) });
+    } else {
+        println!("    note: {name} is zero here — record skipped (schema wants positive ratios)");
+    }
+}
+
+/// Seeded fault-injection sweep: per operating corner, derive the
+/// memory bit-error rate from the architecture's voltage curve, then
+/// measure (a) silent corruption with detection off, (b) the
+/// detect-and-contain path with checksums on — every frame either
+/// matches the clean baseline bit-for-bit or comes back as a typed
+/// [`YodannError::FaultDetected`] — and (c) whether pack-time
+/// weight-memory corruption refuses the session at build. Fractions
+/// merge into `BENCH_engines.json` after schema validation.
+fn cmd_faults(args: &Args) -> Result<(), String> {
+    let id = args.get("net", "bc-cifar10");
+    let net = lookup_network(id)?;
+    let n_frames = args.get_usize("frames", 4)?.max(1);
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let scale = args.get_f64("scale", 0.25)?;
+    if scale.is_nan() || scale <= 0.0 {
+        return Err("--scale must be positive".into());
+    }
+    let seed = args.get_u64("seed", 42)?;
+    let corners: Vec<f64> = match args.options.get("corner") {
+        Some(s) => vec![s
+            .trim()
+            .parse::<f64>()
+            .map_err(|_| format!("--corner '{s}' is not a supply voltage"))?],
+        None => vec![0.6, 0.8, 1.0, 1.2],
+    };
+    let model = match SessionLayerSpec::synthetic_network(&net, seed) {
+        Ok(specs) => NetModel::Chain(specs),
+        Err(e) => match networks::graph_network(id, seed) {
+            Some(g) => NetModel::Graph(g),
+            None => return Err(e.into()),
+        },
+    };
+    let c0 = match &model {
+        NetModel::Chain(specs) => specs[0].kernels.n_in,
+        NetModel::Graph(g) => g.compile().map_err(|e| e.to_string())?.n_in,
+    };
+    let h = ((net.img.0 as f64 * scale).round() as usize).max(16);
+    let w = ((net.img.1 as f64 * scale).round() as usize).max(16);
+    let mut g = Gen::new(seed ^ 0xF00D);
+    let frames: Vec<Image> = (0..n_frames).map(|_| synthetic_scene(&mut g, c0, h, w)).collect();
+
+    // The row-band schedule exercises every injection site (image
+    // memory, halo rows crossing band boundaries, packed weights).
+    // Frames run one per session with a per-frame plan *seed*: that is
+    // what varies the upset draws frame to frame deterministically,
+    // independent of how the dispatcher batches submissions.
+    let make_session = |plan: FaultPlan| -> Result<Yodann, YodannError> {
+        let b = SessionBuilder::new()
+            .engine(EngineKind::Functional)
+            .workers(workers)
+            .shard_policy(ShardPolicy::RowBands(2))
+            .max_in_flight(1)
+            .fault_plan(plan);
+        let b = match &model {
+            NetModel::Chain(specs) => b.layers(specs.clone()),
+            NetModel::Graph(gr) => b.graph(gr),
+        };
+        b.build()
+    };
+    let frame_seed =
+        |i: usize| seed.wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+
+    println!(
+        "{} fault sweep: {n_frames} frames of {c0}x{h}x{w}, row-band schedule, seed {seed}",
+        net.name
+    );
+    // Clean baseline, explicitly disabled — immune to YODANN_FAULT_SEED.
+    let baseline: Vec<Image> = {
+        let mut sess = make_session(FaultPlan::disabled()).map_err(|e| e.to_string())?;
+        let mut out = Vec::with_capacity(n_frames);
+        for f in &frames {
+            let r = sess.submit(f.clone()).and_then(|t| t.wait()).map_err(|e| e.to_string())?;
+            out.push(r.output);
+        }
+        out
+    };
+    let mut records: Vec<JsonRecord> = Vec::new();
+    for &v in &corners {
+        let corner = Corner { arch: ArchId::Bin32Multi, v };
+        let ber = bit_error_rate(corner);
+        println!("  corner {v:.1} V: model memory BER {ber:.3e}");
+        let base = format!("faults/cli/{id}/v{v}");
+        push_nonzero(&mut records, format!("{base}/model-ber"), ber);
+
+        // (a) Silent corruption: inject at the corner's BER, no checksums.
+        let mut corrupted = 0usize;
+        let mut flips_sum = 0u64;
+        for (i, f) in frames.iter().enumerate() {
+            let plan = FaultPlan::seeded(frame_seed(i)).ber(ber).detect(false);
+            let mut sess = make_session(plan).map_err(|e| e.to_string())?;
+            let r = sess.submit(f.clone()).and_then(|t| t.wait()).map_err(|e| e.to_string())?;
+            if r.output != baseline[i] {
+                corrupted += 1;
+            }
+            flips_sum += u64::from(r.telemetry.fault.total_flips());
+        }
+        println!(
+            "    detect off: {corrupted}/{n_frames} frames silently corrupted \
+             ({flips_sum} bit flips landed)"
+        );
+        push_nonzero(
+            &mut records,
+            format!("{base}/corrupted-frames"),
+            corrupted as f64 / n_frames as f64,
+        );
+        push_nonzero(&mut records, format!("{base}/mean-flips"), flips_sum as f64 / n_frames as f64);
+
+        // (b) Detect and contain: frame-path checksums on (weights
+        // probed separately — pack-time faults reject at build).
+        let mut detected = 0usize;
+        let mut clean = 0usize;
+        for (i, f) in frames.iter().enumerate() {
+            let plan = FaultPlan::seeded(frame_seed(i)).ber(ber).weights(false);
+            let mut sess = make_session(plan).map_err(|e| e.to_string())?;
+            match sess.submit(f.clone()).and_then(|t| t.wait()) {
+                Ok(r) => {
+                    if r.output != baseline[i] {
+                        return Err(format!(
+                            "frame {i} passed checksums but diverged from the clean \
+                             baseline — this is a bug"
+                        ));
+                    }
+                    clean += 1;
+                }
+                Err(YodannError::FaultDetected { .. }) => detected += 1,
+                Err(e) => return Err(e.to_string()),
+            }
+        }
+        let contained = clean + detected;
+        println!(
+            "    detect on : {clean} clean, {detected} refused with typed FaultDetected \
+             -> {contained}/{n_frames} contained"
+        );
+        push_nonzero(
+            &mut records,
+            format!("{base}/fault-detected"),
+            detected as f64 / n_frames as f64,
+        );
+        push_nonzero(
+            &mut records,
+            format!("{base}/contained-frames"),
+            contained as f64 / n_frames as f64,
+        );
+
+        // (c) Weight memory: weights pack once at session build, so a
+        // persistent detected corruption refuses the whole session.
+        match make_session(FaultPlan::seeded(seed).ber(ber).image(false).halo(false)) {
+            Err(YodannError::FaultDetected { frame: None, .. }) => {
+                println!("    weights   : uncorrectable pack-time corruption -> session refused");
+                push_nonzero(&mut records, format!("{base}/weights-rejected"), 1.0);
+            }
+            Err(e) => return Err(e.to_string()),
+            Ok(_) => {
+                println!("    weights   : packed weights verified clean (or corrected on retry)");
+            }
+        }
+    }
+    if !records.is_empty() {
+        validate_records(&records).map_err(|e| format!("fault records failed validation: {e}"))?;
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+        let total = merge_json(path, "engines", &records)
+            .map_err(|e| format!("merging records into {path}: {e}"))?;
+        println!("  merged {} records into {path} ({total} total)", records.len());
     }
     Ok(())
 }

@@ -89,6 +89,24 @@ impl VfCurve {
         );
         self.k * (v - self.vt).powf(self.alpha) / v
     }
+
+    /// Memory/interconnect bit-error rate at supply `v` (V).
+    ///
+    /// The standard-cell latch arrays that replace SRAM (§III-C) keep
+    /// working near threshold, but their noise margin shrinks as the
+    /// supply approaches `V_t`; upset rates grow roughly exponentially in
+    /// the lost margin. We model that with the curve's own fitted `vt`:
+    /// nominal supply (`vmax`) sits at a baseline 1e-9 upsets/bit-access,
+    /// and the rate rises by `exp(GAMMA)` as the margin collapses,
+    /// capped at 1e-2. Unlike [`VfCurve::freq`] this never panics —
+    /// fault sweeps deliberately price corners outside the operating
+    /// range, where the clamp saturates the rate instead.
+    pub fn bit_error_rate(&self, v: f64) -> f64 {
+        const BER_NOM: f64 = 1e-9;
+        const GAMMA: f64 = 14.0;
+        let margin = ((v - self.vt) / (self.vmax - self.vt)).clamp(0.0, 1.0);
+        (BER_NOM * (GAMMA * (1.0 - margin)).exp()).min(1e-2)
+    }
 }
 
 #[cfg(test)]
@@ -141,5 +159,25 @@ mod tests {
     fn freq_rejects_out_of_range_voltage() {
         let c = VfCurve::fit3(BIN8, 0.6, 1.2);
         c.freq(0.5);
+    }
+
+    #[test]
+    fn bit_error_rate_grows_toward_threshold() {
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        // Nominal supply sits at the baseline rate.
+        let nominal = c.bit_error_rate(1.2);
+        assert!((nominal - 1e-9).abs() / 1e-9 < 1e-9, "nominal BER = {nominal}");
+        // Near threshold the rate is orders of magnitude worse but bounded.
+        let near = c.bit_error_rate(0.6);
+        assert!(near > 1e-6 && near < 1e-3, "0.6 V BER = {near}");
+        // Monotone non-increasing in supply; never panics below vmin.
+        let mut prev = c.bit_error_rate(0.3);
+        let mut v = 0.31;
+        while v <= 1.3 {
+            let b = c.bit_error_rate(v);
+            assert!(b <= prev + 1e-18, "BER rose at {v} V");
+            prev = b;
+            v += 0.01;
+        }
     }
 }
