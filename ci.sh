@@ -69,6 +69,23 @@ cargo run --release -- throughput --engine simd --frames 2 --workers 2 --bands 2
 echo "== CLI smoke: near-threshold fault sweep through yodann faults =="
 cargo run --release -- faults --net bc-cifar10 --corner 0.6 --frames 2
 
+echo "== CLI smoke: power-aware serving daemon (DVFS governor) =="
+# Burst traffic under a 1 mW core-power budget: the default chain's 7x7
+# envelope on one chip prices under the budget at the 0.6 V rail, so
+# the governor holds it and the daemon must exit 0.
+cargo run --release -- serve --scenario burst --frames 64 --budget-mw 1.0 --seed 7
+# Sustained saturation against a drain-latency SLO: the offered load
+# oversubscribes the 0.6 V rail, so the governor has to leave the
+# energy-optimal corner to keep the queue inside 0.1 ms (and earns its
+# way back down once the input drains).
+cargo run --release -- serve --scenario sustained --frames 64 --slo-ms 0.1 --tick-ms 0.05 --seed 7
+# A budget below the idle floor cannot be held at any corner: the
+# daemon must report the steady-state violation with a non-zero exit.
+if cargo run --release -- serve --scenario burst --frames 16 --budget-mw 0.05 --seed 7; then
+    echo "ERROR: an unholdable power budget must exit non-zero"
+    exit 1
+fi
+
 echo "== fast engine A/B bench (writes BENCH_engines.json) =="
 YODANN_BENCH_FAST=1 cargo bench --bench engines
 

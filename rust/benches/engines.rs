@@ -18,7 +18,8 @@ use yodann::api::SessionBuilder;
 use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional, FunctionalSimd};
-use yodann::fault::FaultPlan;
+use yodann::fault::{FaultPlan, LiveBer};
+use yodann::serve::{self, GovernorAction, GovernorMode, Scenario, ServeConfig};
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::model::networks;
 use yodann::testkit::Gen;
@@ -363,6 +364,113 @@ fn main() {
         gframes.len() as f64 / s.mean.as_secs_f64()
     );
     records.push(JsonRecord::with_frames(&s, gframes.len() as f64));
+
+    // The power-aware serving daemon: every governor scenario, run
+    // twice on fresh sessions and asserted bit-identical (corner trace,
+    // counters, output digest), then recorded as
+    // `serve/<scenario>/...` — wall throughput plus the two governor
+    // health numbers (steady-state power, final corner). The sustained
+    // run must hold its power budget; the thermal run must show the
+    // fault-coupled tug-of-war: the throttled budget forces the corner
+    // down, the near-threshold bit-error rate bites, and the measured
+    // fault rate pulls the corner back up.
+    println!("== power-aware serving: DVFS governor scenarios (serve::run) ==");
+    let serve_once = |scenario: Scenario, mode: GovernorMode| {
+        let (dial, plan) = if scenario.couples_faults() {
+            let d = LiveBer::new(0.0);
+            let p = FaultPlan::seeded(0xD1A1).live_ber(&d);
+            (Some(d), p)
+        } else {
+            (None, FaultPlan::disabled())
+        };
+        let mut sess = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(EngineKind::Functional)
+            .workers(2)
+            .shard_policy(ShardPolicy::PerFrame)
+            .max_in_flight(8)
+            .fault_plan(plan)
+            .build()
+            .expect("a valid serving session");
+        // 60 frames: the thermal scenario's 3-per-tick schedule then
+        // spans ticks 0..20, well past the throttle tick, so the
+        // fault-coupled phase happens while real frames still flow.
+        let mut scfg = ServeConfig::new(scenario, mode);
+        scfg.total_frames = 60;
+        scfg.tick_s = 1e-4;
+        let mut make = |seed: u64| {
+            let mut g = Gen::new(seed);
+            synthetic_scene(&mut g, 3, 16, 20)
+        };
+        serve::run(&mut sess, dial.as_ref(), &scfg, &mut make, &mut |_| {})
+            .expect("the serve loop runs to completion")
+    };
+    for scenario in Scenario::ALL {
+        let mode = match scenario {
+            Scenario::Burst => GovernorMode::LatencySlo { seconds: 5e-5 },
+            Scenario::Sustained | Scenario::ThermalThrottle => {
+                GovernorMode::PowerBudget { watts: 2e-3 }
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let r = serve_once(scenario, mode);
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            r,
+            serve_once(scenario, mode),
+            "{scenario:?} serve run must be bit-stable across fresh sessions"
+        );
+        match scenario {
+            Scenario::Burst => {
+                assert!(r.max_v > 0.6 + 1e-9, "the burst must ramp the corner off the rail");
+            }
+            Scenario::Sustained => {
+                assert!(!r.budget_violated, "sustained serving must hold its power budget");
+            }
+            Scenario::ThermalThrottle => {
+                assert!(r.min_v < 0.9 - 1e-9, "the throttle must force the corner down");
+                assert!(r.faults_detected > 0, "the near-threshold corners must fault");
+                // The acceptance demo: post-throttle, the measured
+                // fault rate breaches the backoff threshold and the
+                // governor's reliability override steps the supply up
+                // against the collapsed budget.
+                assert!(
+                    r.trace.iter().any(|t| t.tick > Scenario::THROTTLE_AFTER_TICKS
+                        && t.fault_rate > 0.05
+                        && t.action == GovernorAction::StepUp),
+                    "fault pressure must pull the corner back up post-throttle"
+                );
+            }
+        }
+        println!(
+            "  {:<10} {:>3} ticks, {:>2}/60 served, corner {:.3} -> {:.3} V \
+             (visited [{:.3}, {:.3}]), mean {:.3} mW, {} faults, {} misses",
+            scenario.name(),
+            r.trace.len(),
+            r.frames_served,
+            r.trace.first().map_or(0.0, |t| t.v),
+            r.final_v,
+            r.min_v,
+            r.max_v,
+            r.mean_power_w * 1e3,
+            r.faults_detected,
+            r.deadline_misses,
+        );
+        let served = r.frames_served.max(1) as f64;
+        records.push(JsonRecord {
+            name: format!("serve/{}/run", scenario.name()),
+            ns_per_iter: wall * 1e9 / served,
+            frames_per_s: Some(served / wall.max(1e-9)),
+        });
+        records.push(JsonRecord::ratio(
+            &format!("serve/{}/mean-power-mw", scenario.name()),
+            r.mean_power_w * 1e3,
+        ));
+        records
+            .push(JsonRecord::ratio(&format!("serve/{}/final-corner-v", scenario.name()), r.final_v));
+    }
+    println!();
 
     // Anchor at the workspace root regardless of cargo's bench cwd, so
     // the checked-in evidence file is the one that gets refreshed. The

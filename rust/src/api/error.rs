@@ -169,6 +169,21 @@ pub enum YodannError {
         /// What was wrong, spelled out.
         what: String,
     },
+    /// A supply voltage outside the fitted V–f curve's operating range —
+    /// the hardware does not run there (SRAM fails below 0.8 V, standard
+    /// cells below 0.6 V, §III-C). The typed sibling of the panicking
+    /// [`VfCurve::freq`](crate::power::VfCurve::freq) boundary assert,
+    /// returned by [`VfCurve::try_freq`](crate::power::VfCurve::try_freq)
+    /// and by runtime corner swaps so a DVFS governor stepping the corner
+    /// (or float accumulation at the boundary) cannot crash serving.
+    SupplyOutOfRange {
+        /// The requested supply (V).
+        v: f64,
+        /// Lowest valid supply (V).
+        vmin: f64,
+        /// Highest valid supply (V).
+        vmax: f64,
+    },
     /// Backpressure: the bounded in-flight queue is full. Wait on (or
     /// drop) an outstanding [`FrameTicket`](super::FrameTicket), then
     /// resubmit.
@@ -357,6 +372,10 @@ impl std::fmt::Display for YodannError {
                  layers"
             ),
             YodannError::InvalidConfig { what } => write!(f, "invalid configuration: {what}"),
+            YodannError::SupplyOutOfRange { v, vmin, vmax } => write!(
+                f,
+                "supply {v} V outside operating range [{vmin}, {vmax}] V"
+            ),
             YodannError::Backpressure { in_flight, limit } => write!(
                 f,
                 "in-flight queue full ({in_flight}/{limit}); wait on an outstanding ticket \

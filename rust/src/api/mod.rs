@@ -54,7 +54,7 @@ use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -78,21 +78,49 @@ struct Job {
     reply: Sender<Result<FrameResult, YodannError>>,
 }
 
+/// The corner-dependent half of frame pricing, shared between the
+/// facade (which can swap the corner at runtime, [`Yodann::set_corner`])
+/// and the dispatcher (which prices each finished frame). The session's
+/// compute plan is corner-agnostic — only this state changes on a DVFS
+/// step, which is why re-pricing never rebuilds the session.
+#[derive(Debug)]
+struct Pricing {
+    corner: Corner,
+    envelope: MultiChipPower,
+    /// The kernel size the envelope is priced at — the most
+    /// power-hungry mode across the network's conv layers (held fixed
+    /// across corner swaps; the mode ratios are voltage-independent).
+    envelope_k: usize,
+    /// Concurrent chips the envelope prices (fixed by the shard policy).
+    chips: usize,
+}
+
+/// Lock the shared pricing state, recovering from poisoning — pricing
+/// is plain-old-data, so a panic mid-update cannot leave it torn.
+fn lock_pricing(p: &Mutex<Pricing>) -> std::sync::MutexGuard<'_, Pricing> {
+    p.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Everything the dispatcher needs to price a finished frame.
 struct TelemetryCtx {
     engine: EngineKind,
     policy: ShardPolicy,
-    corner: Corner,
     dual_stream: bool,
-    envelope: MultiChipPower,
+    pricing: Arc<Mutex<Pricing>>,
 }
 
 impl TelemetryCtx {
     fn frame_result(&self, id: u64, traced: TracedFrame, host_seconds: f64) -> FrameResult {
+        // Frames are priced at the corner in force when they complete —
+        // a runtime corner swap re-prices everything after it.
+        let (corner, envelope) = {
+            let p = lock_pricing(&self.pricing);
+            (p.corner, p.envelope)
+        };
         let cycles = traced.stats.cycles.total();
         let ops = traced.stats.useful_ops;
-        let metrics = (cycles > 0)
-            .then(|| sim_metrics(&traced.stats, self.corner.arch, self.corner.v, self.dual_stream));
+        let metrics =
+            (cycles > 0).then(|| sim_metrics(&traced.stats, corner.arch, corner.v, self.dual_stream));
         FrameResult {
             frame_id: id,
             output: traced.output,
@@ -100,13 +128,13 @@ impl TelemetryCtx {
                 frame_id: id,
                 engine: self.engine,
                 policy: self.policy,
-                corner: self.corner,
+                corner,
                 stats: traced.stats,
                 ops,
                 cycles,
                 host_seconds,
                 metrics,
-                envelope: self.envelope,
+                envelope,
                 fault: traced.fault,
             },
         }
@@ -404,22 +432,46 @@ impl SessionBuilder {
             // Auto stripes small batches across the whole pool: price
             // that worst case.
             ShardPolicy::Auto => self.workers,
-            // Row-bands fans one frame across `n` band workers (0 = the
-            // whole pool), each modeling a chip against the shared raster.
+            // Row-bands fans one frame across band workers (0 = the
+            // whole pool), each modeling a chip against the shared
+            // raster — but never more chips than the pool can actually
+            // run concurrently, however many bands were requested.
             ShardPolicy::RowBands(n) => {
                 if n == 0 {
                     self.workers
                 } else {
-                    n
+                    n.min(self.workers)
                 }
             }
         };
+        // Price the whole-session envelope at the most power-hungry
+        // kernel mode across the chain — not the first layer's. On the
+        // multi-kernel architectures the 5×5 slot mode out-prices even
+        // native 7×7 (MODE_RATIO_SLOT5 > 1), so "worst case" is decided
+        // by the priced power, not by raw kernel size.
+        let mut envelope_k = first.k;
+        let mut envelope = MultiChipPower::at(self.corner.arch, v, chips, envelope_k);
+        for c in plan.convs.iter().skip(1) {
+            if c.k == envelope_k {
+                continue;
+            }
+            let cand = MultiChipPower::at(self.corner.arch, v, chips, c.k);
+            if cand.total_w() > envelope.total_w() {
+                envelope = cand;
+                envelope_k = c.k;
+            }
+        }
+        let pricing = Arc::new(Mutex::new(Pricing {
+            corner: self.corner,
+            envelope,
+            envelope_k,
+            chips,
+        }));
         let ctx = TelemetryCtx {
             engine: self.engine,
             policy: self.policy,
-            corner: self.corner,
             dual_stream: dual,
-            envelope: MultiChipPower::at(self.corner.arch, v, chips, first.k),
+            pricing: Arc::clone(&pricing),
         };
         // Weight-memory faults inject as the kernels are packed, so an
         // uncorrectable detection surfaces here as a typed build error.
@@ -444,7 +496,7 @@ impl SessionBuilder {
             engine: self.engine,
             policy: self.policy,
             workers: self.workers,
-            corner: self.corner,
+            pricing,
         })
     }
 }
@@ -506,7 +558,7 @@ pub struct Yodann {
     engine: EngineKind,
     policy: ShardPolicy,
     workers: usize,
-    corner: Corner,
+    pricing: Arc<Mutex<Pricing>>,
 }
 
 impl Yodann {
@@ -535,9 +587,55 @@ impl Yodann {
         self.plan.convs.len()
     }
 
-    /// Operating corner the telemetry is priced at.
+    /// Operating corner the telemetry is currently priced at.
     pub fn corner(&self) -> Corner {
-        self.corner
+        lock_pricing(&self.pricing).corner
+    }
+
+    /// The whole-session power envelope frames are currently priced
+    /// against — the most power-hungry kernel mode across the chain, at
+    /// [`Yodann::corner`], over [`Yodann::envelope_chips`] chips.
+    pub fn envelope(&self) -> MultiChipPower {
+        lock_pricing(&self.pricing).envelope
+    }
+
+    /// The kernel size the envelope is priced at: the conv layer whose
+    /// slot mode draws the most power (on multi-kernel architectures the
+    /// 5×5 mode out-prices native 7×7, so this is not simply `max(k)`).
+    pub fn envelope_kernel(&self) -> usize {
+        lock_pricing(&self.pricing).envelope_k
+    }
+
+    /// Concurrent chips the envelope prices — the shard policy's chip
+    /// count, clamped to the worker pool for row-band schedules.
+    pub fn envelope_chips(&self) -> usize {
+        lock_pricing(&self.pricing).chips
+    }
+
+    /// Move the session's operating corner at runtime — the DVFS hook.
+    ///
+    /// Re-prices telemetry (corner-tagged `SimMetrics`, the
+    /// [`MultiChipPower`] envelope) for every frame completing after the
+    /// swap **without rebuilding the session**: the compute plan, packed
+    /// weights, worker pool and in-flight tickets are all
+    /// corner-agnostic, so outputs are bit-identical across corners and
+    /// only the pricing changes. Frames already in flight are priced at
+    /// the corner in force when they complete.
+    ///
+    /// Errors with [`YodannError::SupplyOutOfRange`] when the supply is
+    /// off the architecture's operating range — the same boundary
+    /// [`SessionBuilder::build`] enforces, as a typed error instead of a
+    /// deferred panic, so a governor stepping the corner cannot crash
+    /// serving.
+    pub fn set_corner(&self, corner: Corner) -> Result<(), YodannError> {
+        let (v_lo, v_hi) = (corner.arch.v_min(), calib::V_NOM);
+        if !(v_lo - 1e-9..=v_hi + 1e-9).contains(&corner.v) {
+            return Err(YodannError::SupplyOutOfRange { v: corner.v, vmin: v_lo, vmax: v_hi });
+        }
+        let mut p = lock_pricing(&self.pricing);
+        p.corner = corner;
+        p.envelope = MultiChipPower::at(corner.arch, corner.v, p.chips, p.envelope_k);
+        Ok(())
     }
 
     /// Frames currently in flight (submitted, result not yet retrieved).
@@ -853,6 +951,102 @@ mod tests {
         assert_eq!(t3.id(), 2);
         drop(t1);
         assert!(t3.wait().is_ok());
+    }
+
+    #[test]
+    fn envelope_prices_the_worst_case_kernel_mode() {
+        // Regression: the envelope used to be priced at `first.k`, so a
+        // heterogeneous chain (AlexNet 11→5→3, ResNet 7→3) reported the
+        // first layer's power for the whole session. A k3→k5 chain must
+        // price at the 5×5 slot mode — identical to a homogeneous-k5
+        // chain — not at the cheap leading 3×3 mode.
+        let mixed = SessionBuilder::new()
+            .layers(vec![spec(3, 3, 4, true, 41), spec(5, 4, 2, true, 42)])
+            .workers(1)
+            .build()
+            .unwrap();
+        let homo = SessionBuilder::new()
+            .layers(vec![spec(5, 3, 4, true, 43), spec(5, 4, 2, true, 44)])
+            .workers(1)
+            .build()
+            .unwrap();
+        assert_eq!(mixed.envelope_kernel(), 5);
+        assert_eq!(mixed.envelope().core_w_each, homo.envelope().core_w_each);
+        // Pre-fix behavior: priced at first.k == 3 — strictly cheaper.
+        let c = mixed.corner();
+        let k3 = MultiChipPower::at(c.arch, c.v, 1, 3);
+        assert!(
+            mixed.envelope().core_w_each > k3.core_w_each,
+            "worst-case mode must out-price the first layer's 3x3 mode"
+        );
+        // And "worst case" is decided by priced power, not raw k: on the
+        // multi-kernel chip a k5 layer beats a k7 one.
+        let with_k7 = SessionBuilder::new()
+            .layers(vec![spec(7, 3, 4, true, 45), spec(5, 4, 2, true, 46)])
+            .workers(1)
+            .build()
+            .unwrap();
+        assert_eq!(with_k7.envelope_kernel(), 5);
+    }
+
+    #[test]
+    fn row_band_pricing_clamps_to_the_worker_pool() {
+        // Regression: RowBands(n) used to price `n` chips verbatim even
+        // when n dwarfs the worker pool — an envelope claiming more
+        // concurrent chips than can ever run.
+        let s = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 51)])
+            .workers(2)
+            .shard_policy(ShardPolicy::RowBands(64))
+            .build()
+            .unwrap();
+        assert_eq!(s.envelope().chips, 2);
+        assert_eq!(s.envelope_chips(), 2);
+        // Fewer bands than workers still price the requested bands.
+        let s = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 52)])
+            .workers(4)
+            .shard_policy(ShardPolicy::RowBands(3))
+            .build()
+            .unwrap();
+        assert_eq!(s.envelope().chips, 3);
+        // RowBands(0) = one band per worker, as before.
+        let s = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 53)])
+            .workers(2)
+            .shard_policy(ShardPolicy::RowBands(0))
+            .build()
+            .unwrap();
+        assert_eq!(s.envelope().chips, 2);
+    }
+
+    #[test]
+    fn runtime_corner_swap_reprices_without_rebuilding() {
+        let mut s = SessionBuilder::new()
+            .layers(vec![spec(3, 2, 2, true, 61)])
+            .workers(1)
+            .build()
+            .unwrap();
+        let mut g = Gen::new(62);
+        let frame = crate::workload::random_image(&mut g, 2, 6, 6, 0.1);
+        let r0 = s.submit(frame.clone()).unwrap().wait().unwrap();
+        assert!((r0.telemetry.corner.v - 0.6).abs() < 1e-12);
+        let p0 = s.envelope().total_w();
+        // Swap to the throughput-optimal corner: telemetry re-prices,
+        // outputs stay bit-identical — no session rebuild.
+        s.set_corner(Corner::throughput_optimal()).unwrap();
+        assert!((s.corner().v - 1.2).abs() < 1e-12);
+        assert!(s.envelope().total_w() > p0);
+        let r1 = s.submit(frame).unwrap().wait().unwrap();
+        assert!((r1.telemetry.corner.v - 1.2).abs() < 1e-12);
+        assert!(r1.telemetry.envelope.total_w() > p0);
+        assert_eq!(r0.output, r1.output);
+        // An off-curve supply is a typed error and leaves pricing as-is.
+        let e = s
+            .set_corner(Corner { arch: crate::power::ArchId::Bin32Multi, v: 0.3 })
+            .unwrap_err();
+        assert!(matches!(e, YodannError::SupplyOutOfRange { .. }));
+        assert!((s.corner().v - 1.2).abs() < 1e-12);
     }
 
     #[test]

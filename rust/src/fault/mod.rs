@@ -31,7 +31,7 @@
 
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::engine::raster::mix64;
@@ -107,6 +107,7 @@ impl FaultReport {
 pub struct FaultPlan {
     seed: u64,
     ber: f64,
+    live: Option<LiveBer>,
     detect: bool,
     image: bool,
     weights: bool,
@@ -114,6 +115,38 @@ pub struct FaultPlan {
     panic_frame: Option<u64>,
     kill_frame: Option<u64>,
     kill_fuse: Arc<AtomicBool>,
+}
+
+/// A runtime-adjustable bit-error-rate dial shared with a [`FaultPlan`]
+/// via [`FaultPlan::live_ber`] — the serve governor's fault hook. As the
+/// DVFS governor steps the simulated corner, it moves this dial (e.g. to
+/// [`bit_error_rate`] at the new corner) and the injection rate follows
+/// **without rebuilding the session**: the plan's seed, sites and
+/// detection policy stay fixed, only the per-bit upset probability
+/// floats. Injection stays deterministic as long as the dial moves at
+/// deterministic points in the traffic (the serve loop moves it only at
+/// tick boundaries, between fully-drained batches).
+#[derive(Debug, Clone)]
+pub struct LiveBer(Arc<AtomicU64>);
+
+impl LiveBer {
+    /// A dial starting at `ber` upsets per bit-access.
+    pub fn new(ber: f64) -> LiveBer {
+        let dial = LiveBer(Arc::new(AtomicU64::new(0)));
+        dial.set(ber);
+        dial
+    }
+
+    /// Move the dial. Panics outside `[0, 1]`, like [`FaultPlan::ber`].
+    pub fn set(&self, ber: f64) {
+        assert!((0.0..=1.0).contains(&ber), "bit-error rate {ber} outside [0, 1]");
+        self.0.store(ber.to_bits(), Ordering::SeqCst);
+    }
+
+    /// The dial's current rate.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::SeqCst))
+    }
 }
 
 /// Injection rate used by the `YODANN_FAULT_SEED` CI smoke arm: low
@@ -134,6 +167,7 @@ impl FaultPlan {
         FaultPlan {
             seed,
             ber: 0.0,
+            live: None,
             detect: true,
             image: true,
             weights: true,
@@ -180,6 +214,15 @@ impl FaultPlan {
         self.ber(ber)
     }
 
+    /// Attach a runtime [`LiveBer`] dial: while attached, the dial's
+    /// current rate **overrides** the plan's static [`FaultPlan::ber`]
+    /// for every subsequent injection (weight faults already injected at
+    /// session build keep whatever rate was in force then).
+    pub fn live_ber(mut self, dial: &LiveBer) -> FaultPlan {
+        self.live = Some(dial.clone());
+        self
+    }
+
     /// Enable/disable checksum detection (off = silent corruption).
     pub fn detect(mut self, on: bool) -> FaultPlan {
         self.detect = on;
@@ -223,9 +266,16 @@ impl FaultPlan {
         self.seed
     }
 
-    /// The armed per-bit-access upset probability.
+    /// The armed per-bit-access upset probability (the [`LiveBer`]
+    /// dial's current rate when one is attached).
     pub fn ber_value(&self) -> f64 {
-        self.ber
+        self.current_ber()
+    }
+
+    /// The rate in force right now: the live dial when attached,
+    /// otherwise the static rate.
+    fn current_ber(&self) -> f64 {
+        self.live.as_ref().map_or(self.ber, LiveBer::get)
     }
 
     pub(crate) fn detects(&self) -> bool {
@@ -233,11 +283,11 @@ impl FaultPlan {
     }
 
     pub(crate) fn injects_weights(&self) -> bool {
-        self.weights && self.ber > 0.0
+        self.weights && self.current_ber() > 0.0
     }
 
     pub(crate) fn injects_raster_faults(&self) -> bool {
-        (self.image || self.halo) && self.ber > 0.0
+        (self.image || self.halo) && self.current_ber() > 0.0
     }
 
     /// Panic if this frame is the planned panic frame.
@@ -257,10 +307,11 @@ impl FaultPlan {
     /// assumed to run with refreshed margin (slower, checked access), so
     /// a detected fault usually clears on the second try.
     fn attempt_ber(&self, attempt: u32) -> f64 {
+        let ber = self.current_ber();
         if attempt == 0 {
-            self.ber
+            ber
         } else {
-            self.ber / 16.0
+            ber / 16.0
         }
     }
 
@@ -406,6 +457,32 @@ mod tests {
             })
         });
         assert!(differs, "different frames should see different upsets");
+    }
+
+    #[test]
+    fn live_ber_dial_overrides_the_static_rate() {
+        let dial = LiveBer::new(0.0);
+        let plan = FaultPlan::seeded(9).ber(0.02).live_ber(&dial);
+        // Dial at zero: the static 2% rate is overridden — nothing flips.
+        assert_eq!(plan.ber_value(), 0.0);
+        assert!(!plan.injects_raster_faults());
+        let mut g = Gen::new(24);
+        let img = random_image(&mut g, 2, 8, 8, 0.2);
+        let mut r = BitplaneRaster::new();
+        r.pack(&img, 3, true);
+        assert_eq!(plan.corrupt_raster(&mut r, 0, 0, 0), 0);
+        // Dial raised: clones of the plan (already distributed to
+        // workers) see the new rate through the shared handle, and the
+        // flips stay seed-deterministic at the dialed rate.
+        let worker_clone = plan.clone();
+        dial.set(0.5);
+        assert_eq!(worker_clone.ber_value(), 0.5);
+        assert!(worker_clone.injects_raster_faults());
+        let flips = worker_clone.corrupt_raster(&mut r, 0, 0, 0);
+        assert!(flips > 0, "a 50% word BER must flip something");
+        let mut r2 = BitplaneRaster::new();
+        r2.pack(&img, 3, true);
+        assert_eq!(plan.corrupt_raster(&mut r2, 0, 0, 0), flips);
     }
 
     #[test]

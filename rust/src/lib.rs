@@ -48,6 +48,12 @@
 //!   memory, packed weights and halo-exchange rows at a
 //!   voltage-dependent rate, checksums detect, and a per-frame
 //!   [`fault::FaultReport`] lands on the telemetry.
+//! * [`serve`] — power-aware serving on top of the facade: a DVFS
+//!   governor stepping the simulated corner each control tick against a
+//!   power budget or a latency SLO, priority-class admission control
+//!   over the existing backpressure, and seeded load scenarios (burst /
+//!   sustained saturation / thermal throttle) — every run bit-stable
+//!   for a given seed, no wall clock anywhere in the control law.
 //! * [`workload`] — deterministic synthetic workload generators (the
 //!   Stanford-backgrounds stand-in, weight generators).
 //! * [`report`] — paper-reported reference values and table/figure renderers
@@ -77,6 +83,7 @@ pub mod power;
 pub mod report;
 #[cfg(feature = "golden")]
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod workload;
 

@@ -11,9 +11,11 @@
 //! yodann sweep [--points 13]          voltage sweep (Fig. 11 data)
 //! yodann throughput [--net id ...]    batch frames through a NetworkSession (frames/s)
 //! yodann faults [--net id --corner v] fault-injection sweep (detection/corruption vs corner)
+//! yodann serve --scenario burst --budget-mw 1.0   power-aware serving daemon (DVFS governor)
 //! yodann networks                     list known networks
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use yodann::api::{SessionBuilder, Yodann, YodannError};
@@ -23,17 +25,19 @@ use yodann::cli::Args;
 use yodann::coordinator::check_block;
 use yodann::coordinator::{metrics::sim_metrics, SessionLayerSpec, ShardGrid, ShardPolicy};
 use yodann::engine::EngineKind;
-use yodann::fault::{bit_error_rate, FaultPlan};
+use yodann::fault::{bit_error_rate, FaultPlan, LiveBer};
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph};
 use yodann::power::{ArchId, CorePowerModel};
 use yodann::report::{figures, paper, table::fmt, tables};
+use yodann::serve::{self, GovernorConfig, GovernorMode, Scenario, ServeConfig, TickTrace};
 use yodann::testkit::Gen;
 use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
 
 const VALUE_KEYS: &[&str] = &[
     "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
-    "engine", "scale", "shards", "bands", "corner",
+    "engine", "scale", "shards", "bands", "corner", "scenario", "budget-mw", "slo-ms", "tick-ms",
+    "v-start", "depth",
 ];
 
 fn main() {
@@ -60,6 +64,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "throughput" => cmd_throughput(&args),
         "faults" => cmd_faults(&args),
+        "serve" => cmd_serve(&args),
         "networks" => cmd_networks(),
         other => Err(format!("unknown command '{other}' (try --help)")),
     };
@@ -117,6 +122,21 @@ fn print_help() {
          \x20                             (model-ber, corrupted/contained/detected\n\
          \x20                             fractions) merge into BENCH_engines.json.\n\
          \x20                             Without --corner, sweeps 0.6/0.8/1.0/1.2 V.\n\
+         \x20 serve --scenario burst|sustained|thermal (--budget-mw P | --slo-ms L)\n\
+         \x20       [--frames 64] [--seed 7] [--tick-ms 0.5] [--v-start V]\n\
+         \x20       [--net id] [--h 24] [--w 24] [--workers 2] [--depth 8]\n\
+         \x20                             power-aware serving daemon: a DVFS governor\n\
+         \x20                             steps the simulated corner each control tick\n\
+         \x20                             against a core-power budget (--budget-mw) or a\n\
+         \x20                             drain-latency SLO (--slo-ms), with priority\n\
+         \x20                             admission over the bounded queue and, on the\n\
+         \x20                             thermal scenario, the live fault dial coupled\n\
+         \x20                             to the corner. Prints a per-tick readout,\n\
+         \x20                             merges serve records into BENCH_engines.json,\n\
+         \x20                             and exits non-zero when the steady-state power\n\
+         \x20                             budget was violated. Same seed => identical\n\
+         \x20                             corner trace and output digest (no wall clock\n\
+         \x20                             in the control law).\n\
          \x20 networks                    list the networks of Tables III–V and flag\n\
          \x20                             which are runnable (chain/graph) vs\n\
          \x20                             descriptor-only"
@@ -875,6 +895,218 @@ fn cmd_faults(args: &Args) -> Result<(), String> {
         let total = merge_json(path, "engines", &records)
             .map_err(|e| format!("merging records into {path}: {e}"))?;
         println!("  merged {} records into {path} ({total} total)", records.len());
+    }
+    Ok(())
+}
+
+/// The power-aware serving daemon: a `serve::run` loop over a live
+/// session, with the DVFS governor steering the simulated corner
+/// against `--budget-mw` (core power, the paper's 895 µW axis) or
+/// `--slo-ms` (queue-drain latency). Prints a per-tick readout, merges
+/// `serve/cli/<scenario>/...` records into `BENCH_engines.json`, and
+/// exits non-zero when the steady-state budget was violated — the CI
+/// contract. The default workload is a heterogeneous k7→k3 chain on
+/// one chip (`ShardPolicy::PerFrame`), so the session envelope prices
+/// the native 7×7 mode and a 1 mW budget is holdable at 0.6 V.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let scenario_raw = args.get("scenario", "burst");
+    let scenario = Scenario::parse(scenario_raw).ok_or_else(|| {
+        format!("unknown scenario '{scenario_raw}' (accepted: burst, sustained, thermal)")
+    })?;
+    let budget_mw = match args.options.get("budget-mw") {
+        Some(s) => Some(
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("--budget-mw '{s}' is not a number"))?,
+        ),
+        None => None,
+    };
+    let slo_ms = match args.options.get("slo-ms") {
+        Some(s) => Some(
+            s.trim().parse::<f64>().map_err(|_| format!("--slo-ms '{s}' is not a number"))?,
+        ),
+        None => None,
+    };
+    let mode = match (budget_mw, slo_ms) {
+        (Some(b), None) if b > 0.0 => GovernorMode::PowerBudget { watts: b * 1e-3 },
+        (None, Some(s)) if s > 0.0 => GovernorMode::LatencySlo { seconds: s * 1e-3 },
+        (Some(_), None) => return Err("--budget-mw must be positive".into()),
+        (None, Some(_)) => return Err("--slo-ms must be positive".into()),
+        _ => {
+            return Err(
+                "pass exactly one of --budget-mw (core power, mW) or --slo-ms (drain \
+                 latency, ms)"
+                    .into(),
+            )
+        }
+    };
+    let frames = args.get_usize("frames", 64)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let depth = args.get_usize("depth", 8)?.max(1);
+    let tick_ms = args.get_f64("tick-ms", 0.5)?;
+    if !(tick_ms > 0.0 && tick_ms.is_finite()) {
+        return Err("--tick-ms must be positive".into());
+    }
+    let v_start = args.get_f64("v-start", scenario.default_v_start())?;
+    let h = args.get_usize("h", 24)?.max(8);
+    let w = args.get_usize("w", 24)?.max(8);
+
+    // The workload: a --net chain/graph, or the built-in heterogeneous
+    // k7 -> k3 demo chain (whose envelope prices the 7x7 mode).
+    let model: NetModel = match args.options.get("net") {
+        Some(id) => match SessionLayerSpec::synthetic_network(&lookup_network(id)?, seed) {
+            Ok(specs) => NetModel::Chain(specs),
+            Err(e) => match networks::graph_network(id, seed) {
+                Some(gr) => NetModel::Graph(gr),
+                None => return Err(e.into()),
+            },
+        },
+        None => {
+            let mut g = Gen::new(seed ^ 0x5E4E);
+            NetModel::Chain(vec![
+                SessionLayerSpec {
+                    k: 7,
+                    zero_pad: true,
+                    kernels: Arc::new(BinaryKernels::random(&mut g, 4, 2, 7)),
+                    scale_bias: Arc::new(ScaleBias::identity(4)),
+                    relu: false,
+                    maxpool2: false,
+                },
+                SessionLayerSpec {
+                    k: 3,
+                    zero_pad: true,
+                    kernels: Arc::new(BinaryKernels::random(&mut g, 2, 4, 3)),
+                    scale_bias: Arc::new(ScaleBias::identity(2)),
+                    relu: false,
+                    maxpool2: false,
+                },
+            ])
+        }
+    };
+    let c0 = match &model {
+        NetModel::Chain(specs) => specs[0].kernels.n_in,
+        NetModel::Graph(gr) => gr.compile().map_err(|e| e.to_string())?.n_in,
+    };
+
+    // Fault coupling is per scenario: only thermal throttling arms the
+    // live dial (starting at 0, so weight packing at build is clean);
+    // the other scenarios explicitly disable injection so their traces
+    // isolate the budget/SLO control laws.
+    let dial = scenario.couples_faults().then(|| LiveBer::new(0.0));
+    let plan = match &dial {
+        Some(d) => FaultPlan::seeded(seed).live_ber(d),
+        None => FaultPlan::disabled(),
+    };
+    let b = SessionBuilder::new()
+        .engine(EngineKind::Functional)
+        .workers(workers)
+        .shard_policy(ShardPolicy::PerFrame)
+        .max_in_flight(depth)
+        .fault_plan(plan);
+    let b = match &model {
+        NetModel::Chain(specs) => b.layers(specs.clone()),
+        NetModel::Graph(gr) => b.graph(gr),
+    };
+    let mut session = b.build().map_err(|e| e.to_string())?;
+
+    let cfg = ServeConfig {
+        scenario,
+        mode,
+        governor: GovernorConfig { v_start, ..GovernorConfig::default() },
+        total_frames: frames,
+        seed,
+        tick_s: tick_ms * 1e-3,
+        warmup_ticks: 8,
+        max_ticks: 100_000,
+    };
+    println!(
+        "serve: {} scenario | {} | {frames} frames of {c0}x{h}x{w} | tick {tick_ms} ms | \
+         v_start {v_start} V | workers {workers}, depth {depth}, seed {seed}",
+        scenario.name(),
+        match mode {
+            GovernorMode::PowerBudget { watts } =>
+                format!("core-power budget {:.3} mW", watts * 1e3),
+            GovernorMode::LatencySlo { seconds } =>
+                format!("drain-latency SLO {:.3} ms", seconds * 1e3),
+        }
+    );
+    let mut make = |fseed: u64| {
+        let mut g = Gen::new(fseed);
+        synthetic_scene(&mut g, c0, h, w)
+    };
+    let budget_txt =
+        |b: f64| if b.is_finite() { format!("{:.3}", b * 1e3) } else { "-".to_string() };
+    let mut on_tick = |t: &TickTrace| {
+        println!(
+            "  tick {:>4} [{}] v={:.3}V f={:>6.1}MHz P={:>7.3}mW budget={}mW util={:>5.1}% \
+             q={:>7.3}ms adm={}/{} shed={}L/{}H faults={} miss={}",
+            t.tick,
+            t.action.glyph(),
+            t.v,
+            t.freq_hz / 1e6,
+            t.power_w * 1e3,
+            budget_txt(t.budget_w),
+            t.util * 100.0,
+            t.queue_s * 1e3,
+            t.admitted,
+            t.offered,
+            t.shed_low,
+            t.shed_high,
+            t.faults,
+            t.deadline_misses,
+        );
+    };
+    let t0 = Instant::now();
+    let report = serve::run(&mut session, dial.as_ref(), &cfg, &mut make, &mut on_tick)
+        .map_err(|e| e.to_string())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("summary:");
+    println!(
+        "  {} ticks; served {}/{} frames ({} low + {} high shed, {} fault-refused, {} \
+         deadline misses)",
+        report.trace.len(),
+        report.frames_served,
+        frames,
+        report.shed_low,
+        report.shed_high,
+        report.faults_detected,
+        report.deadline_misses
+    );
+    println!(
+        "  corner: start {v_start:.3} V, final {:.3} V, visited [{:.3}, {:.3}] V",
+        report.final_v, report.min_v, report.max_v
+    );
+    println!(
+        "  power : steady-state mean {:.3} mW core, energy {:.3} uJ (simulated)",
+        report.mean_power_w * 1e3,
+        report.energy_j * 1e6
+    );
+    println!("  output digest {:#018x} (same seed => same digest + corner trace)", report.output_digest);
+
+    let base = format!("serve/cli/{}", scenario.name());
+    let served = report.frames_served.max(1) as f64;
+    let mut records = vec![JsonRecord {
+        name: format!("{base}/run"),
+        ns_per_iter: wall * 1e9 / served,
+        frames_per_s: Some(served / wall.max(1e-9)),
+    }];
+    push_nonzero(&mut records, format!("{base}/mean-power-mw"), report.mean_power_w * 1e3);
+    push_nonzero(&mut records, format!("{base}/final-corner-v"), report.final_v);
+    push_nonzero(&mut records, format!("{base}/energy-uj"), report.energy_j * 1e6);
+    validate_records(&records).map_err(|e| format!("serve records failed validation: {e}"))?;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+    let total = merge_json(path, "engines", &records)
+        .map_err(|e| format!("merging records into {path}: {e}"))?;
+    println!("  merged {} records into {path} ({total} total)", records.len());
+
+    if report.budget_violated {
+        return Err(format!(
+            "steady-state power budget violated: post-warmup core power exceeded the \
+             effective budget (mean {:.3} mW)",
+            report.mean_power_w * 1e3
+        ));
     }
     Ok(())
 }

@@ -90,6 +90,34 @@ impl VfCurve {
         self.k * (v - self.vt).powf(self.alpha) / v
     }
 
+    /// Typed sibling of [`VfCurve::freq`]: the maximum clock frequency
+    /// (Hz) at supply `v` (V), or
+    /// [`YodannError::SupplyOutOfRange`] instead of a panic when `v`
+    /// falls off the curve. Serving paths (the DVFS governor, runtime
+    /// corner swaps) route through this so a bad step — or float
+    /// accumulation at the boundary — surfaces as a typed error rather
+    /// than crashing the daemon; the analytic models keep the panicking
+    /// [`VfCurve::freq`], whose boundary assert stays pinned by test.
+    pub fn try_freq(&self, v: f64) -> Result<f64, crate::api::YodannError> {
+        if !(self.vmin - 1e-9..=self.vmax + 1e-9).contains(&v) {
+            return Err(crate::api::YodannError::SupplyOutOfRange {
+                v,
+                vmin: self.vmin,
+                vmax: self.vmax,
+            });
+        }
+        Ok(self.k * (v - self.vt).powf(self.alpha) / v)
+    }
+
+    /// Safe corner stepping: `v + dv` clamped to the curve's valid
+    /// `[vmin, vmax]` range. A governor that only moves its supply
+    /// through `step_supply` can never leave the operating region, so
+    /// every voltage it quotes is valid for [`VfCurve::try_freq`] and
+    /// the power models.
+    pub fn step_supply(&self, v: f64, dv: f64) -> f64 {
+        (v + dv).clamp(self.vmin, self.vmax)
+    }
+
     /// Memory/interconnect bit-error rate at supply `v` (V).
     ///
     /// The standard-cell latch arrays that replace SRAM (§III-C) keep
@@ -159,6 +187,39 @@ mod tests {
     fn freq_rejects_out_of_range_voltage() {
         let c = VfCurve::fit3(BIN8, 0.6, 1.2);
         c.freq(0.5);
+    }
+
+    #[test]
+    fn try_freq_is_typed_where_freq_panics() {
+        use crate::api::YodannError;
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        // In range: agrees exactly with the panicking path.
+        for v in [0.6, 0.8, 1.0, 1.2] {
+            assert_eq!(c.try_freq(v).unwrap(), c.freq(v));
+        }
+        // Out of range: a typed error carrying the bounds, not a panic.
+        let e = c.try_freq(0.5).unwrap_err();
+        assert_eq!(e, YodannError::SupplyOutOfRange { v: 0.5, vmin: 0.6, vmax: 1.2 });
+        assert!(c.try_freq(1.3).is_err());
+        // The boundary tolerance matches freq's (float accumulation at
+        // the rail must not error).
+        assert!(c.try_freq(0.6 - 1e-10).is_ok());
+        assert!(c.try_freq(1.2 + 1e-10).is_ok());
+    }
+
+    #[test]
+    fn step_supply_clamps_to_the_operating_range() {
+        let c = VfCurve::fit3(BIN8, 0.6, 1.2);
+        assert_eq!(c.step_supply(0.6, -0.025), 0.6);
+        assert_eq!(c.step_supply(1.2, 0.025), 1.2);
+        let v = c.step_supply(0.8, 0.025);
+        assert!((v - 0.825).abs() < 1e-12);
+        // A stepped voltage is always valid for try_freq.
+        let mut v = 0.6;
+        for _ in 0..100 {
+            v = c.step_supply(v, 0.05);
+            assert!(c.try_freq(v).is_ok());
+        }
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Priority-class admission control over the session's own
+//! backpressure.
+//!
+//! The facade already bounds work: [`Yodann::submit`] refuses frames
+//! with a typed [`YodannError::Backpressure`] once the in-flight queue
+//! is full. Admission control adds exactly one policy on top — *order*:
+//! each tick's offered requests are submitted high-priority first, so
+//! whatever capacity the queue has goes to the latency-sensitive class
+//! and the typed refusals land on best-effort traffic first. No second
+//! queue, no counters of its own; the session's bound stays the single
+//! source of truth.
+
+use super::load::{FrameRequest, Priority};
+use crate::api::{FrameTicket, Yodann, YodannError};
+use crate::workload::Image;
+
+/// One request that made it into the session this tick.
+#[derive(Debug)]
+pub struct Admitted {
+    /// The request's admission class.
+    pub priority: Priority,
+    /// The request's frame seed.
+    pub seed: u64,
+    /// The live claim on the frame's result.
+    pub ticket: FrameTicket,
+}
+
+/// One request the session refused this tick.
+#[derive(Debug)]
+pub struct Refusal {
+    /// The request's admission class.
+    pub priority: Priority,
+    /// The request's frame seed.
+    pub seed: u64,
+    /// Why it was refused — [`YodannError::Backpressure`] when the
+    /// in-flight queue was full, or any frame-validation error.
+    pub error: YodannError,
+}
+
+/// Submit one tick's requests, high-priority class first.
+///
+/// `make_frame` synthesizes the frame for a request's seed (admission
+/// owns ordering, not frame contents). Within a class, submission
+/// order is the offered order, so the whole outcome is deterministic
+/// for a deterministic schedule. Returns the admitted tickets and the
+/// typed refusals; the caller decides whether a refusal is shedding
+/// (backpressure) or a hard error.
+pub fn admit(
+    session: &mut Yodann,
+    requests: Vec<FrameRequest>,
+    make_frame: &mut dyn FnMut(u64) -> Image,
+) -> (Vec<Admitted>, Vec<Refusal>) {
+    let mut admitted = Vec::new();
+    let mut refused = Vec::new();
+    let (high, low): (Vec<FrameRequest>, Vec<FrameRequest>) =
+        requests.into_iter().partition(|r| r.priority == Priority::High);
+    for r in high.into_iter().chain(low) {
+        match session.submit(make_frame(r.seed)) {
+            Ok(ticket) => {
+                admitted.push(Admitted { priority: r.priority, seed: r.seed, ticket })
+            }
+            Err(error) => refused.push(Refusal { priority: r.priority, seed: r.seed, error }),
+        }
+    }
+    (admitted, refused)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionBuilder;
+    use crate::coordinator::SessionLayerSpec;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, BinaryKernels, ScaleBias};
+    use std::sync::Arc;
+
+    fn session(depth: usize) -> Yodann {
+        let mut g = Gen::new(13);
+        let layer = SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::new(BinaryKernels::random(&mut g, 2, 2, 3)),
+            scale_bias: Arc::new(ScaleBias::identity(2)),
+            relu: false,
+            maxpool2: false,
+        };
+        SessionBuilder::new()
+            .layers(vec![layer])
+            .workers(1)
+            .max_in_flight(depth)
+            .fault_plan(crate::fault::FaultPlan::disabled())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn high_priority_is_admitted_before_low_is_shed() {
+        let mut s = session(2);
+        let req = |p, seed| FrameRequest { priority: p, seed };
+        let offered = vec![
+            req(Priority::Low, 1),
+            req(Priority::High, 2),
+            req(Priority::Low, 3),
+            req(Priority::High, 4),
+            req(Priority::High, 5),
+        ];
+        let mut make = |seed: u64| {
+            let mut g = Gen::new(seed);
+            random_image(&mut g, 2, 6, 6, 0.05)
+        };
+        let (admitted, refused) = admit(&mut s, offered, &mut make);
+        // Two slots: both go to the high class, in offered order.
+        assert_eq!(admitted.len(), 2);
+        assert!(admitted.iter().all(|a| a.priority == Priority::High));
+        assert_eq!(admitted[0].seed, 2);
+        assert_eq!(admitted[1].seed, 4);
+        // The shed set: the overflow high frame and both lows, every
+        // refusal typed as backpressure.
+        assert_eq!(refused.len(), 3);
+        assert_eq!(refused.iter().filter(|r| r.priority == Priority::Low).count(), 2);
+        for r in &refused {
+            assert!(
+                matches!(r.error, YodannError::Backpressure { limit: 2, .. }),
+                "{:?}",
+                r.error
+            );
+        }
+        // Draining the admitted tickets restores capacity.
+        for a in admitted {
+            a.ticket.wait().unwrap();
+        }
+        let (adm2, ref2) = admit(&mut s, vec![req(Priority::Low, 9)], &mut make);
+        assert_eq!((adm2.len(), ref2.len()), (1, 0));
+    }
+
+    #[test]
+    fn validation_failures_are_refusals_not_panics() {
+        let mut s = session(4);
+        let offered = vec![FrameRequest { priority: Priority::High, seed: 1 }];
+        // A frame with the wrong channel count: refused, typed.
+        let (admitted, refused) =
+            admit(&mut s, offered, &mut |_| Image::zeros(3, 6, 6));
+        assert!(admitted.is_empty());
+        assert!(matches!(
+            refused[0].error,
+            YodannError::FrameChannelMismatch { got: 3, expected: 2 }
+        ));
+    }
+}

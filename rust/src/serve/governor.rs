@@ -1,0 +1,399 @@
+//! The DVFS governor: one corner step per control tick, from simulated
+//! observations only.
+//!
+//! The governor owns a supply voltage on the session architecture's
+//! fitted V–f curve and moves it one [`GovernorConfig::v_step`] at a
+//! time through [`VfCurve::step_supply`] — so it can never leave the
+//! operating range — reading frequencies only through the typed
+//! [`VfCurve::try_freq`] — so a bad corner surfaces as
+//! [`YodannError::SupplyOutOfRange`] instead of a panic. The control
+//! law sees a per-tick [`Observation`] of *simulated* quantities
+//! (modeled power, queue drain time, measured fault and deadline-miss
+//! rates); no wall clock enters anywhere, which is why a serve trace is
+//! bit-stable across runs and hosts.
+//!
+//! [`VfCurve::step_supply`]: crate::power::VfCurve::step_supply
+//! [`VfCurve::try_freq`]: crate::power::VfCurve::try_freq
+
+use crate::api::{Yodann, YodannError};
+use crate::model::Corner;
+use crate::power::CorePowerModel;
+
+/// What the governor optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GovernorMode {
+    /// Hold steady-state core power at or under a budget (W), stepping
+    /// up only when there is both backlog pressure and budget headroom
+    /// at the next corner, and drifting down toward the energy-optimal
+    /// rail when the load allows.
+    PowerBudget {
+        /// Core-power budget (W) — the paper's headline axis (the
+        /// 895 µW figure is core power at 0.6 V), pads excluded.
+        watts: f64,
+    },
+    /// Hold the queue-drain latency at or under a service-level
+    /// objective (s), stepping up whenever the backlog would take
+    /// longer than the SLO to drain and back down when the *predicted*
+    /// drain at the lower corner leaves comfortable headroom.
+    LatencySlo {
+        /// Target drain latency (simulated seconds).
+        seconds: f64,
+    },
+}
+
+/// Fraction of the SLO the predicted drain must stay under before the
+/// latency governor steps down — hysteresis against corner flapping.
+const SLO_HEADROOM: f64 = 0.7;
+
+/// Tunables of the control law.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GovernorConfig {
+    /// Supply voltage (V) the governor starts at.
+    pub v_start: f64,
+    /// Corner step size (V) per control tick.
+    pub v_step: f64,
+    /// Fault-rate threshold (fraction of the tick's frames refused with
+    /// a detected, uncorrectable fault) above which the governor steps
+    /// the supply *up* regardless of mode — reliability buys margin
+    /// before power or latency are consulted.
+    pub fault_backoff: f64,
+    /// Deadline-miss-rate threshold with the same override semantics.
+    pub deadline_backoff: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> GovernorConfig {
+        GovernorConfig {
+            v_start: 0.6,
+            v_step: 0.025,
+            fault_backoff: 0.05,
+            deadline_backoff: 0.25,
+        }
+    }
+}
+
+/// One control tick's simulated inputs to [`Governor::tick`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Modeled core power (W) the tick ran at.
+    pub power_w: f64,
+    /// Simulated time (s) to drain everything pending this tick.
+    pub drain_s: f64,
+    /// The control period (simulated seconds per tick).
+    pub tick_s: f64,
+    /// Fraction of this tick's frames refused with a detected fault.
+    pub fault_rate: f64,
+    /// Fraction of this tick's frames that missed the latency SLO.
+    pub deadline_rate: f64,
+    /// Whether pending work exceeds one tick of capacity.
+    pub backlog_growing: bool,
+    /// Scenario budget multiplier in force (thermal throttling).
+    pub budget_scale: f64,
+}
+
+/// What the governor did on a tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GovernorAction {
+    /// Kept the corner.
+    Hold,
+    /// Raised the supply one step.
+    StepUp,
+    /// Lowered the supply one step.
+    StepDown,
+}
+
+impl GovernorAction {
+    /// One-character trace glyph (`-` / `+` / `v`).
+    pub fn glyph(self) -> char {
+        match self {
+            GovernorAction::Hold => '-',
+            GovernorAction::StepUp => '+',
+            GovernorAction::StepDown => 'v',
+        }
+    }
+}
+
+/// The per-session DVFS governor.
+///
+/// Built against a live [`Yodann`] session: the governor adopts the
+/// session's architecture and prices power at the session's own
+/// worst-case envelope (its [`Yodann::envelope_kernel`] mode over
+/// [`Yodann::envelope_chips`] chips), so the corner it steers is priced
+/// exactly like the telemetry the session reports.
+#[derive(Debug)]
+pub struct Governor {
+    mode: GovernorMode,
+    cfg: GovernorConfig,
+    model: CorePowerModel,
+    chips: usize,
+    k: usize,
+    v: f64,
+}
+
+impl Governor {
+    /// A governor for `session`, starting at `cfg.v_start`. Errors with
+    /// [`YodannError::SupplyOutOfRange`] when the start corner is off
+    /// the architecture's curve.
+    pub fn new(
+        session: &Yodann,
+        mode: GovernorMode,
+        cfg: GovernorConfig,
+    ) -> Result<Governor, YodannError> {
+        let corner = session.corner();
+        let model = CorePowerModel::new(corner.arch);
+        model.vf.try_freq(cfg.v_start)?;
+        Ok(Governor {
+            mode,
+            cfg,
+            model,
+            chips: session.envelope_chips(),
+            k: session.envelope_kernel(),
+            v: cfg.v_start,
+        })
+    }
+
+    /// The current supply voltage (V).
+    pub fn supply(&self) -> f64 {
+        self.v
+    }
+
+    /// The current operating corner, for [`Yodann::set_corner`].
+    pub fn corner(&self) -> Corner {
+        Corner { arch: self.model.arch, v: self.v }
+    }
+
+    /// What the governor optimizes for.
+    pub fn mode(&self) -> GovernorMode {
+        self.mode
+    }
+
+    /// Clock frequency (Hz) at the current corner, through the typed
+    /// curve lookup.
+    pub fn freq_hz(&self) -> Result<f64, YodannError> {
+        self.model.vf.try_freq(self.v)
+    }
+
+    /// Memory bit-error rate at the current corner — what the serve
+    /// loop feeds the [`LiveBer`](crate::fault::LiveBer) dial on
+    /// fault-coupled scenarios.
+    pub fn ber(&self) -> f64 {
+        self.model.vf.bit_error_rate(self.v)
+    }
+
+    /// Modeled core power (W) of the session at supply `v` and
+    /// utilization `util`: the envelope mode over the envelope chips,
+    /// derated by the paper's workload activity factor
+    /// ([`CorePowerModel::p_real`]). `v` is clamped to the curve.
+    pub fn core_power_w(&self, v: f64, util: f64) -> f64 {
+        let v = self.model.vf.step_supply(v, 0.0);
+        self.chips as f64 * self.model.p_core(v, self.k) * CorePowerModel::p_real(util.clamp(0.0, 1.0))
+    }
+
+    /// Aggregate peak service rate (Op/s) at supply `v` — the queue
+    /// model's drain rate. `v` is clamped to the curve.
+    pub fn theta(&self, v: f64) -> f64 {
+        let v = self.model.vf.step_supply(v, 0.0);
+        self.chips as f64 * self.model.theta_peak(v, self.k)
+    }
+
+    /// Run one control step and return what was done. The supply only
+    /// ever moves by `±v_step` through the curve's clamped stepper, and
+    /// the new corner is re-validated through the typed frequency
+    /// lookup before it is reported.
+    pub fn tick(&mut self, obs: &Observation) -> Result<GovernorAction, YodannError> {
+        let action = self.decide(obs);
+        match action {
+            GovernorAction::StepUp => self.v = self.model.vf.step_supply(self.v, self.cfg.v_step),
+            GovernorAction::StepDown => {
+                self.v = self.model.vf.step_supply(self.v, -self.cfg.v_step)
+            }
+            GovernorAction::Hold => {}
+        }
+        self.freq_hz()?;
+        Ok(action)
+    }
+
+    fn decide(&self, obs: &Observation) -> GovernorAction {
+        let vf = &self.model.vf;
+        let up = vf.step_supply(self.v, self.cfg.v_step);
+        let down = vf.step_supply(self.v, -self.cfg.v_step);
+        // Reliability first: a breached fault or deadline rate buys
+        // supply margin before power or latency are consulted — a
+        // violated budget is reported, a corrupted stream is not served.
+        if obs.fault_rate > self.cfg.fault_backoff || obs.deadline_rate > self.cfg.deadline_backoff
+        {
+            return if up > self.v { GovernorAction::StepUp } else { GovernorAction::Hold };
+        }
+        match self.mode {
+            GovernorMode::PowerBudget { watts } => {
+                let budget = watts * obs.budget_scale;
+                if obs.power_w > budget && down < self.v {
+                    GovernorAction::StepDown
+                } else if obs.backlog_growing {
+                    // Chase the backlog only while the next corner
+                    // still fits the budget at full utilization.
+                    if up > self.v && self.core_power_w(up, 1.0) <= budget {
+                        GovernorAction::StepUp
+                    } else {
+                        GovernorAction::Hold
+                    }
+                } else if down < self.v && obs.drain_s <= obs.tick_s {
+                    // Keeping up comfortably: drift toward the
+                    // energy-optimal rail.
+                    GovernorAction::StepDown
+                } else {
+                    GovernorAction::Hold
+                }
+            }
+            GovernorMode::LatencySlo { seconds } => {
+                if obs.drain_s > seconds {
+                    if up > self.v {
+                        GovernorAction::StepUp
+                    } else {
+                        GovernorAction::Hold
+                    }
+                } else if down < self.v {
+                    // Predicted drain at the lower corner: pending work
+                    // rescales by the throughput ratio.
+                    let predicted = obs.drain_s * self.theta(self.v) / self.theta(down);
+                    if predicted < seconds * SLO_HEADROOM {
+                        GovernorAction::StepDown
+                    } else {
+                        GovernorAction::Hold
+                    }
+                } else {
+                    GovernorAction::Hold
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionBuilder;
+    use crate::coordinator::SessionLayerSpec;
+    use crate::testkit::Gen;
+    use crate::workload::{BinaryKernels, ScaleBias};
+    use std::sync::Arc;
+
+    fn session() -> Yodann {
+        let mut g = Gen::new(9);
+        let layer = SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::new(BinaryKernels::random(&mut g, 2, 2, 3)),
+            scale_bias: Arc::new(ScaleBias::identity(2)),
+            relu: false,
+            maxpool2: false,
+        };
+        SessionBuilder::new().layers(vec![layer]).workers(1).build().unwrap()
+    }
+
+    fn quiet(power_w: f64) -> Observation {
+        Observation {
+            power_w,
+            drain_s: 0.0,
+            tick_s: 1e-3,
+            fault_rate: 0.0,
+            deadline_rate: 0.0,
+            backlog_growing: false,
+            budget_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn power_governor_steps_down_when_over_budget_and_clamps_at_the_rail() {
+        let s = session();
+        let cfg = GovernorConfig { v_start: 0.7, ..GovernorConfig::default() };
+        let mut g =
+            Governor::new(&s, GovernorMode::PowerBudget { watts: 1e-4 }, cfg).unwrap();
+        // Way over budget: must descend, one step per tick, to vmin.
+        for _ in 0..10 {
+            let p = g.core_power_w(g.supply(), 1.0);
+            g.tick(&quiet(p)).unwrap();
+        }
+        assert!((g.supply() - 0.6).abs() < 1e-12, "v = {}", g.supply());
+        // At the rail it holds rather than erroring.
+        let p = g.core_power_w(0.6, 1.0);
+        assert_eq!(g.tick(&quiet(p)).unwrap(), GovernorAction::Hold);
+    }
+
+    #[test]
+    fn power_governor_chases_backlog_only_within_budget() {
+        let s = session();
+        let mut g = Governor::new(
+            &s,
+            GovernorMode::PowerBudget { watts: 1.0 }, // generous: full range fits
+            GovernorConfig::default(),
+        )
+        .unwrap();
+        let mut obs = quiet(g.core_power_w(0.6, 1.0));
+        obs.backlog_growing = true;
+        obs.drain_s = 10.0 * obs.tick_s;
+        assert_eq!(g.tick(&obs).unwrap(), GovernorAction::StepUp);
+        assert!(g.supply() > 0.6);
+        // A tight budget pins the corner even under backlog.
+        let mut tight = Governor::new(
+            &s,
+            GovernorMode::PowerBudget { watts: 1e-6 },
+            GovernorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(tight.tick(&obs).unwrap(), GovernorAction::Hold);
+        assert!((tight.supply() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_pressure_overrides_the_budget() {
+        let s = session();
+        let mut g = Governor::new(
+            &s,
+            GovernorMode::PowerBudget { watts: 1e-6 }, // impossible budget
+            GovernorConfig::default(),
+        )
+        .unwrap();
+        let mut obs = quiet(1.0); // massively over budget...
+        obs.fault_rate = 0.5; // ...but the output stream is corrupting
+        assert_eq!(g.tick(&obs).unwrap(), GovernorAction::StepUp);
+        assert!(g.supply() > 0.6, "reliability must out-rank the budget");
+    }
+
+    #[test]
+    fn slo_governor_ramps_up_under_backlog_and_back_down_when_idle() {
+        let s = session();
+        let mode = GovernorMode::LatencySlo { seconds: 1e-3 };
+        let mut g = Governor::new(&s, mode, GovernorConfig::default()).unwrap();
+        let mut obs = quiet(0.0);
+        obs.drain_s = 5e-3; // 5× the SLO
+        for _ in 0..4 {
+            assert_eq!(g.tick(&obs).unwrap(), GovernorAction::StepUp);
+        }
+        let peak = g.supply();
+        assert!(peak > 0.69, "v = {peak}");
+        // Idle again: predicted drain at the lower corner is ~0.
+        obs.drain_s = 1e-6;
+        while g.tick(&obs).unwrap() == GovernorAction::StepDown {}
+        assert!((g.supply() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn governor_rejects_an_off_curve_start() {
+        let s = session();
+        let cfg = GovernorConfig { v_start: 0.4, ..GovernorConfig::default() };
+        let e = Governor::new(&s, GovernorMode::PowerBudget { watts: 1.0 }, cfg).unwrap_err();
+        assert!(matches!(e, YodannError::SupplyOutOfRange { .. }));
+    }
+
+    #[test]
+    fn trace_glyphs_are_distinct() {
+        let gl: Vec<char> =
+            [GovernorAction::Hold, GovernorAction::StepUp, GovernorAction::StepDown]
+                .iter()
+                .map(|a| a.glyph())
+                .collect();
+        assert_eq!(gl.len(), 3);
+        assert!(gl.iter().collect::<std::collections::HashSet<_>>().len() == 3);
+    }
+}

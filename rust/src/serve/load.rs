@@ -1,0 +1,263 @@
+//! Seeded load generators for the serving daemon's scenarios.
+//!
+//! A scenario is a deterministic offered-load schedule: given the same
+//! seed and frame budget, [`LoadGen::next_tick`] emits the exact same
+//! sequence of [`FrameRequest`]s — priorities, frame seeds, burst
+//! phases — on every run. That determinism is what makes the whole
+//! serve trace bit-stable: the governor only ever reacts to simulated
+//! quantities derived from this schedule, never to wall-clock arrival
+//! times.
+
+use crate::testkit::Gen;
+
+/// Admission priority class of one offered frame.
+///
+/// Admission control ([`super::admission::admit`]) submits `High`
+/// requests before `Low` ones each tick, so when the session's bounded
+/// in-flight queue fills, the typed
+/// [`Backpressure`](crate::api::YodannError::Backpressure) refusals land
+/// on the low class first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic: admitted first, shed last.
+    High,
+    /// Best-effort traffic: first to be shed under backpressure.
+    Low,
+}
+
+/// One frame the load generator offers to the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameRequest {
+    /// Admission class.
+    pub priority: Priority,
+    /// Seed the serving loop synthesizes the frame's pixels from — part
+    /// of the schedule, so frame *contents* are reproducible too.
+    pub seed: u64,
+}
+
+/// The serving daemon's built-in offered-load scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// A light base load with periodic bursts: one high-priority frame
+    /// per tick, plus [`Scenario::BURST_SIZE`] mostly-low-priority
+    /// extras on a seeded phase every [`Scenario::BURST_PERIOD`] ticks.
+    /// Exercises SLO recovery and priority shedding.
+    Burst,
+    /// Steady oversubscription: [`Scenario::SUSTAINED_RATE`] frames per
+    /// tick, mixed priority — more than the energy-optimal corner can
+    /// serve, so the governor must hold a higher corner (or shed).
+    Sustained,
+    /// Moderate steady load whose *power budget* collapses mid-run
+    /// (see [`Scenario::budget_scale`]): the governor is forced down
+    /// toward the near-threshold rail, the bit-error rate climbs, and
+    /// the measured fault rate pushes it back up — the
+    /// reliability-versus-power tug-of-war.
+    ThermalThrottle,
+}
+
+impl Scenario {
+    /// Every scenario, in CLI/bench order.
+    pub const ALL: [Scenario; 3] = [Scenario::Burst, Scenario::Sustained, Scenario::ThermalThrottle];
+
+    /// Extra frames offered on a burst tick.
+    pub const BURST_SIZE: usize = 8;
+    /// Ticks between bursts.
+    pub const BURST_PERIOD: u64 = 8;
+    /// Frames offered per tick under sustained saturation.
+    pub const SUSTAINED_RATE: usize = 6;
+    /// Frames offered per tick under thermal throttling.
+    pub const THERMAL_RATE: usize = 3;
+    /// Tick at which the thermal scenario's budget collapses.
+    pub const THROTTLE_AFTER_TICKS: u64 = 12;
+    /// Budget multiplier after the collapse.
+    pub const THROTTLE_SCALE: f64 = 0.35;
+
+    /// CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Burst => "burst",
+            Scenario::Sustained => "sustained",
+            Scenario::ThermalThrottle => "thermal",
+        }
+    }
+
+    /// Parse a CLI spelling ([`Scenario::name`]).
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.name() == s)
+    }
+
+    /// Power-budget multiplier in force at `tick` — the thermal
+    /// scenario's simulated enclosure throttling. `1.0` everywhere for
+    /// the other scenarios, and for latency-SLO serving (which has no
+    /// budget to scale).
+    pub fn budget_scale(self, tick: u64) -> f64 {
+        match self {
+            Scenario::ThermalThrottle if tick >= Scenario::THROTTLE_AFTER_TICKS => {
+                Scenario::THROTTLE_SCALE
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Whether the scenario couples the live bit-error-rate dial to the
+    /// governor's corner ([`crate::fault::LiveBer`]). Only the thermal
+    /// scenario does — burst and sustained runs stay fault-free so
+    /// their traces isolate the budget/SLO control laws.
+    pub fn couples_faults(self) -> bool {
+        matches!(self, Scenario::ThermalThrottle)
+    }
+
+    /// The governor's default starting supply (V) for this scenario:
+    /// the energy-optimal rail for burst/sustained (the governor earns
+    /// its way up), a mid-range corner for thermal throttling (so the
+    /// collapse has somewhere to push down from).
+    pub fn default_v_start(self) -> f64 {
+        match self {
+            Scenario::Burst | Scenario::Sustained => 0.6,
+            Scenario::ThermalThrottle => 0.9,
+        }
+    }
+}
+
+/// Deterministic per-tick request emitter for one [`Scenario`].
+///
+/// Emits until `total_frames` requests have been offered, then returns
+/// empty batches ([`LoadGen::exhausted`] turns true). All randomness
+/// (burst phase, priority mix) comes from one seeded [`Gen`] advanced
+/// in a fixed order, so the schedule is a pure function of
+/// `(scenario, total_frames, seed)`.
+#[derive(Debug)]
+pub struct LoadGen {
+    scenario: Scenario,
+    total_frames: usize,
+    emitted: usize,
+    tick: u64,
+    burst_phase: u64,
+    seed: u64,
+    gen: Gen,
+}
+
+impl LoadGen {
+    /// A generator offering `total_frames` frames under `scenario`.
+    pub fn new(scenario: Scenario, total_frames: usize, seed: u64) -> LoadGen {
+        let mut gen = Gen::new(seed ^ 0x5E27_E0AD);
+        let burst_phase = gen.below(Scenario::BURST_PERIOD);
+        LoadGen { scenario, total_frames, emitted: 0, tick: 0, burst_phase, seed, gen }
+    }
+
+    /// Whether the whole frame budget has been offered.
+    pub fn exhausted(&self) -> bool {
+        self.emitted >= self.total_frames
+    }
+
+    /// Requests already offered across all ticks.
+    pub fn offered(&self) -> usize {
+        self.emitted
+    }
+
+    /// The requests offered on the next tick (empty once exhausted).
+    pub fn next_tick(&mut self) -> Vec<FrameRequest> {
+        let tick = self.tick;
+        self.tick += 1;
+        let mut out = Vec::new();
+        match self.scenario {
+            Scenario::Burst => {
+                self.push(&mut out, Priority::High);
+                if tick % Scenario::BURST_PERIOD == self.burst_phase {
+                    for _ in 0..Scenario::BURST_SIZE {
+                        // Bursts are mostly best-effort: 1-in-4 high.
+                        let p = if self.gen.below(4) == 0 { Priority::High } else { Priority::Low };
+                        self.push(&mut out, p);
+                    }
+                }
+            }
+            Scenario::Sustained => {
+                for _ in 0..Scenario::SUSTAINED_RATE {
+                    let p = if self.gen.below(3) == 0 { Priority::Low } else { Priority::High };
+                    self.push(&mut out, p);
+                }
+            }
+            Scenario::ThermalThrottle => {
+                for _ in 0..Scenario::THERMAL_RATE {
+                    let p = if self.gen.below(3) == 0 { Priority::Low } else { Priority::High };
+                    self.push(&mut out, p);
+                }
+            }
+        }
+        out
+    }
+
+    fn push(&mut self, out: &mut Vec<FrameRequest>, priority: Priority) {
+        if self.emitted >= self.total_frames {
+            return;
+        }
+        // The same golden-ratio stride the CLI uses for per-frame seeds.
+        let seed =
+            self.seed.wrapping_add((self.emitted as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        out.push(FrameRequest { priority, seed });
+        self.emitted += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(scenario: Scenario, frames: usize, seed: u64) -> Vec<Vec<FrameRequest>> {
+        let mut lg = LoadGen::new(scenario, frames, seed);
+        let mut ticks = Vec::new();
+        while !lg.exhausted() {
+            ticks.push(lg.next_tick());
+        }
+        ticks
+    }
+
+    #[test]
+    fn schedules_are_reproducible_and_bounded() {
+        for scenario in Scenario::ALL {
+            let a = drain(scenario, 40, 7);
+            let b = drain(scenario, 40, 7);
+            assert_eq!(a, b, "{scenario:?} schedule must be seed-deterministic");
+            let n: usize = a.iter().map(Vec::len).sum();
+            assert_eq!(n, 40, "{scenario:?} offers exactly the frame budget");
+            // Frame seeds are unique across the run.
+            let mut seeds: Vec<u64> = a.iter().flatten().map(|r| r.seed).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            assert_eq!(seeds.len(), 40);
+            // A different seed moves the schedule.
+            assert_ne!(drain(scenario, 40, 8), a, "{scenario:?} must react to the seed");
+        }
+    }
+
+    #[test]
+    fn burst_ticks_carry_the_extra_frames() {
+        let ticks = drain(Scenario::Burst, 64, 3);
+        let burst_ticks = ticks.iter().filter(|t| t.len() > 1).count();
+        assert!(burst_ticks >= 2, "64 frames must span several bursts");
+        for t in &ticks {
+            assert!(t.len() == 1 || t.len() == 1 + Scenario::BURST_SIZE || ticks.last() == Some(t));
+        }
+        // Bursts skew low-priority; the base load is all high.
+        let low = ticks.iter().flatten().filter(|r| r.priority == Priority::Low).count();
+        assert!(low > 0, "bursts must offer sheddable traffic");
+    }
+
+    #[test]
+    fn thermal_budget_collapses_after_the_throttle_tick() {
+        let s = Scenario::ThermalThrottle;
+        assert_eq!(s.budget_scale(0), 1.0);
+        assert_eq!(s.budget_scale(Scenario::THROTTLE_AFTER_TICKS - 1), 1.0);
+        assert_eq!(s.budget_scale(Scenario::THROTTLE_AFTER_TICKS), Scenario::THROTTLE_SCALE);
+        assert_eq!(Scenario::Burst.budget_scale(10_000), 1.0);
+        assert!(s.couples_faults() && !Scenario::Burst.couples_faults());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::parse("quantum"), None);
+    }
+}

@@ -1,0 +1,460 @@
+//! Power-aware serving: a DVFS governor steering the simulated
+//! operating corner against power, latency and fault budgets.
+//!
+//! YodaNN's whole value proposition is an *operating range* — 895 µW of
+//! core power at 0.6 V up to 1.51 TOp/s at 1.2 V — but everything below
+//! this module evaluates one fixed corner per session. `serve` closes
+//! the loop: a long-running serving daemon ([`run`]) that moves the
+//! corner **at runtime**, trading supply voltage against offered load,
+//! a core-power budget or a latency SLO, and the measured fault rate of
+//! the near-threshold corners.
+//!
+//! Structure:
+//!
+//! * [`load`] — seeded offered-load scenarios (burst, sustained
+//!   saturation, thermal throttle) emitting per-tick [`FrameRequest`]s;
+//! * [`admission`] — priority-class admission over the session's own
+//!   bounded queue: high class submitted first, typed
+//!   [`Backpressure`](crate::api::YodannError::Backpressure) refusals
+//!   shed the low class first;
+//! * [`governor`] — the per-tick control law, stepping the supply
+//!   through [`VfCurve::step_supply`] and validating every corner with
+//!   the typed [`VfCurve::try_freq`];
+//! * this module — the tick loop: admit → run → observe → step →
+//!   re-price, with a [`TickTrace`] row per tick and a [`ServeReport`]
+//!   at the end.
+//!
+//! **Determinism.** Time in the control loop is *simulated*: each tick
+//! spans [`ServeConfig::tick_s`] simulated seconds, frames cost
+//! `ops / Θ(v)` at the governor's corner, the queue carries over in
+//! operations, and deadline misses are computed from simulated
+//! completion times. The host's wall clock never enters, so the same
+//! seed produces the identical corner trace, shed counts and output
+//! digest on any machine. The corner swap itself is
+//! [`Yodann::set_corner`] — re-pricing without rebuilding the session —
+//! and on fault-coupled scenarios the governor moves the session's
+//! [`LiveBer`] dial only at tick boundaries, keeping injection
+//! deterministic too.
+//!
+//! [`VfCurve::step_supply`]: crate::power::VfCurve::step_supply
+//! [`VfCurve::try_freq`]: crate::power::VfCurve::try_freq
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod admission;
+pub mod governor;
+pub mod load;
+
+pub use admission::{admit, Admitted, Refusal};
+pub use governor::{Governor, GovernorAction, GovernorConfig, GovernorMode, Observation};
+pub use load::{FrameRequest, LoadGen, Priority, Scenario};
+
+use crate::api::{Yodann, YodannError};
+use crate::engine::raster::mix64;
+use crate::fault::LiveBer;
+use crate::workload::Image;
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// Offered-load scenario.
+    pub scenario: Scenario,
+    /// What the governor optimizes for.
+    pub mode: GovernorMode,
+    /// Control-law tunables.
+    pub governor: GovernorConfig,
+    /// Total frames the scenario offers before the run winds down.
+    pub total_frames: usize,
+    /// Seed for the load schedule and the synthesized frames.
+    pub seed: u64,
+    /// Simulated seconds per control tick.
+    pub tick_s: f64,
+    /// Leading ticks excluded from the steady-state budget check and
+    /// the mean-power roll-up (the governor is still converging there).
+    pub warmup_ticks: usize,
+    /// Hard cap on control ticks (runaway-backlog backstop).
+    pub max_ticks: u64,
+}
+
+impl ServeConfig {
+    /// Defaults for `scenario` under `mode`: the scenario's own start
+    /// corner, a 0.5 ms control tick, 64 frames, seed 7, 8 warmup
+    /// ticks.
+    pub fn new(scenario: Scenario, mode: GovernorMode) -> ServeConfig {
+        ServeConfig {
+            scenario,
+            mode,
+            governor: GovernorConfig {
+                v_start: scenario.default_v_start(),
+                ..GovernorConfig::default()
+            },
+            total_frames: 64,
+            seed: 7,
+            tick_s: 5e-4,
+            warmup_ticks: 8,
+            max_ticks: 10_000,
+        }
+    }
+}
+
+/// One control tick of the serve trace — every field simulated, so two
+/// runs with the same seed produce `PartialEq`-identical rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TickTrace {
+    /// Tick index.
+    pub tick: u64,
+    /// Supply voltage (V) the tick ran at.
+    pub v: f64,
+    /// Clock frequency (Hz) at that corner.
+    pub freq_hz: f64,
+    /// Modeled core power (W) of the tick.
+    pub power_w: f64,
+    /// Effective power budget (W) in force — scenario-scaled;
+    /// `f64::INFINITY` under latency-SLO serving.
+    pub budget_w: f64,
+    /// Utilization of the tick (busy fraction, 0..=1).
+    pub util: f64,
+    /// Simulated seconds of backlog carried into the next tick.
+    pub queue_s: f64,
+    /// Simulated seconds to drain everything pending this tick.
+    pub drain_s: f64,
+    /// Frames offered by the scenario.
+    pub offered: u32,
+    /// Frames admitted into the session.
+    pub admitted: u32,
+    /// Low-priority frames shed by backpressure.
+    pub shed_low: u32,
+    /// High-priority frames shed by backpressure.
+    pub shed_high: u32,
+    /// Frames refused with a detected, uncorrectable fault.
+    pub faults: u32,
+    /// Frames whose simulated completion missed the latency SLO.
+    pub deadline_misses: u32,
+    /// Fault rate over the tick's completed frames.
+    pub fault_rate: f64,
+    /// What the governor did at the end of the tick.
+    pub action: GovernorAction,
+}
+
+/// What one serving run did, end to end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Scenario that generated the load.
+    pub scenario: Scenario,
+    /// Governor mode the run served under.
+    pub mode: GovernorMode,
+    /// Per-tick trace, in order.
+    pub trace: Vec<TickTrace>,
+    /// Frames served to completion.
+    pub frames_served: u64,
+    /// Low-priority frames shed across the run.
+    pub shed_low: u64,
+    /// High-priority frames shed across the run.
+    pub shed_high: u64,
+    /// Frames refused with a detected fault across the run.
+    pub faults_detected: u64,
+    /// Deadline misses across the run.
+    pub deadline_misses: u64,
+    /// Simulated core energy of the run (J).
+    pub energy_j: f64,
+    /// Mean core power over the post-warmup ticks (W).
+    pub mean_power_w: f64,
+    /// Supply voltage when the run ended (V).
+    pub final_v: f64,
+    /// Lowest supply the governor visited (V).
+    pub min_v: f64,
+    /// Highest supply the governor visited (V).
+    pub max_v: f64,
+    /// Order-sensitive digest of every served frame's output pixels —
+    /// bit-identical across runs of the same seed.
+    pub output_digest: u64,
+    /// Whether any post-warmup tick exceeded its effective power
+    /// budget (always `false` under latency-SLO serving).
+    pub budget_violated: bool,
+}
+
+/// Whether an error is a detected-fault refusal (at any nesting depth).
+fn is_fault_detected(e: &YodannError) -> bool {
+    match e {
+        YodannError::FaultDetected { .. } => true,
+        YodannError::AtLayer { inner, .. } | YodannError::AtNode { inner, .. } => {
+            is_fault_detected(inner)
+        }
+        _ => false,
+    }
+}
+
+/// Run one serving session to completion.
+///
+/// Each tick: offer the scenario's requests, admit them high-class
+/// first against the session's bounded queue, run the admitted frames,
+/// fold their outputs into the digest, derive the tick's simulated
+/// observation (power, drain, fault and deadline rates), step the
+/// governor, and re-price the session at the new corner
+/// ([`Yodann::set_corner`] — no rebuild). `dial` is the fault hook: on
+/// fault-coupled scenarios the loop moves it to the corner's bit-error
+/// rate at every tick boundary. `make_frame` synthesizes a frame from a
+/// request seed; `on_tick` observes each appended [`TickTrace`] (the
+/// CLI's live readout).
+///
+/// Errors: an off-curve governor corner
+/// ([`YodannError::SupplyOutOfRange`]), or any frame failure that is
+/// *not* a detected fault or backpressure (those are counted, not
+/// fatal).
+pub fn run(
+    session: &mut Yodann,
+    dial: Option<&LiveBer>,
+    cfg: &ServeConfig,
+    make_frame: &mut dyn FnMut(u64) -> Image,
+    on_tick: &mut dyn FnMut(&TickTrace),
+) -> Result<ServeReport, YodannError> {
+    let mut gov = Governor::new(session, cfg.mode, cfg.governor)?;
+    session.set_corner(gov.corner())?;
+    let mut load = LoadGen::new(cfg.scenario, cfg.total_frames, cfg.seed);
+    let slo = match cfg.mode {
+        GovernorMode::LatencySlo { seconds } => Some(seconds),
+        GovernorMode::PowerBudget { .. } => None,
+    };
+
+    let mut trace: Vec<TickTrace> = Vec::new();
+    let mut queue_ops = 0.0f64;
+    let mut digest = mix64(cfg.seed ^ 0x5E4E_D16E_57A7_E0FF);
+    let (mut frames_served, mut shed_low, mut shed_high) = (0u64, 0u64, 0u64);
+    let (mut faults_total, mut misses_total) = (0u64, 0u64);
+    let mut energy_j = 0.0f64;
+    let mut tick = 0u64;
+
+    loop {
+        if tick >= cfg.max_ticks {
+            break;
+        }
+        let requests = load.next_tick();
+        if requests.is_empty() && load.exhausted() && queue_ops <= 1e-9 {
+            break;
+        }
+        let v = gov.supply();
+        let freq_hz = gov.freq_hz()?;
+        // Fault coupling: the injection rate follows the corner, moved
+        // only here, at the tick boundary, between drained batches.
+        if let Some(d) = dial {
+            d.set(gov.ber());
+        }
+
+        let offered = requests.len() as u32;
+        let (admitted, refused) = admit(session, requests, make_frame);
+        let n_admitted = admitted.len() as u32;
+        let (mut t_shed_low, mut t_shed_high) = (0u32, 0u32);
+        for r in refused {
+            match r.error {
+                YodannError::Backpressure { .. } => match r.priority {
+                    Priority::Low => t_shed_low += 1,
+                    Priority::High => t_shed_high += 1,
+                },
+                // Anything else is a configuration bug, not load.
+                other => return Err(other),
+            }
+        }
+
+        // Drain the tick's admitted frames; fold outputs and faults.
+        let mut service_ops: Vec<u64> = Vec::with_capacity(admitted.len());
+        let mut faults = 0u32;
+        let mut completed = 0u32;
+        for a in admitted {
+            match a.ticket.wait() {
+                Ok(res) => {
+                    completed += 1;
+                    frames_served += 1;
+                    service_ops.push(res.telemetry.ops);
+                    for &px in &res.output.data {
+                        digest = mix64(digest ^ px as u64);
+                    }
+                }
+                Err(e) if is_fault_detected(&e) => {
+                    completed += 1;
+                    faults += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // The simulated queue: service times at the corner's aggregate
+        // peak rate, deadline misses from simulated completion times.
+        let theta = gov.theta(v);
+        let mut misses = 0u32;
+        let mut new_ops = 0.0f64;
+        let mut backlog_ops = queue_ops;
+        for &ops in &service_ops {
+            backlog_ops += ops as f64;
+            new_ops += ops as f64;
+            if let Some(slo) = slo {
+                if backlog_ops / theta > slo {
+                    misses += 1;
+                }
+            }
+        }
+        let pending_ops = queue_ops + new_ops;
+        let drain_s = pending_ops / theta;
+        let util = (drain_s / cfg.tick_s).min(1.0);
+        let power_w = gov.core_power_w(v, util);
+        let budget_scale = cfg.scenario.budget_scale(tick);
+        let budget_w = match cfg.mode {
+            GovernorMode::PowerBudget { watts } => watts * budget_scale,
+            GovernorMode::LatencySlo { .. } => f64::INFINITY,
+        };
+        let denom = completed.max(1) as f64;
+        let fault_rate = f64::from(faults) / denom;
+        let obs = Observation {
+            power_w,
+            drain_s,
+            tick_s: cfg.tick_s,
+            fault_rate,
+            deadline_rate: f64::from(misses) / denom,
+            backlog_growing: drain_s > cfg.tick_s,
+            budget_scale,
+        };
+        let action = gov.tick(&obs)?;
+        // The DVFS step itself: re-price, never rebuild.
+        session.set_corner(gov.corner())?;
+
+        queue_ops = (pending_ops - theta * cfg.tick_s).max(0.0);
+        energy_j += power_w * cfg.tick_s;
+        faults_total += u64::from(faults);
+        misses_total += u64::from(misses);
+        shed_low += u64::from(t_shed_low);
+        shed_high += u64::from(t_shed_high);
+
+        let row = TickTrace {
+            tick,
+            v,
+            freq_hz,
+            power_w,
+            budget_w,
+            util,
+            queue_s: queue_ops / theta,
+            drain_s,
+            offered,
+            admitted: n_admitted,
+            shed_low: t_shed_low,
+            shed_high: t_shed_high,
+            faults,
+            deadline_misses: misses,
+            fault_rate,
+            action,
+        };
+        on_tick(&row);
+        trace.push(row);
+        tick += 1;
+    }
+
+    let steady = trace.iter().skip(cfg.warmup_ticks.min(trace.len().saturating_sub(1)));
+    let mut steady_n = 0usize;
+    let mut steady_power = 0.0f64;
+    let mut budget_violated = false;
+    for row in steady {
+        steady_n += 1;
+        steady_power += row.power_w;
+        if row.power_w > row.budget_w + 1e-12 {
+            budget_violated = true;
+        }
+    }
+    let (mut min_v, mut max_v) = (gov.supply(), gov.supply());
+    for row in &trace {
+        min_v = min_v.min(row.v);
+        max_v = max_v.max(row.v);
+    }
+    Ok(ServeReport {
+        scenario: cfg.scenario,
+        mode: cfg.mode,
+        trace,
+        frames_served,
+        shed_low,
+        shed_high,
+        faults_detected: faults_total,
+        deadline_misses: misses_total,
+        energy_j,
+        mean_power_w: if steady_n > 0 { steady_power / steady_n as f64 } else { 0.0 },
+        final_v: gov.supply(),
+        min_v,
+        max_v,
+        output_digest: digest,
+        budget_violated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionBuilder;
+    use crate::coordinator::SessionLayerSpec;
+    use crate::fault::FaultPlan;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, BinaryKernels, ScaleBias};
+    use std::sync::Arc;
+
+    fn tiny_session() -> Yodann {
+        let mut g = Gen::new(17);
+        let l0 = SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::new(BinaryKernels::random(&mut g, 4, 2, 3)),
+            scale_bias: Arc::new(ScaleBias::identity(4)),
+            relu: false,
+            maxpool2: false,
+        };
+        let l1 = SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::new(BinaryKernels::random(&mut g, 2, 4, 3)),
+            scale_bias: Arc::new(ScaleBias::identity(2)),
+            relu: false,
+            maxpool2: false,
+        };
+        SessionBuilder::new()
+            .layers(vec![l0, l1])
+            .workers(2)
+            .max_in_flight(8)
+            // Beat the YODANN_FAULT_SEED environment arm: these tests
+            // check load accounting, which injection would perturb.
+            .fault_plan(FaultPlan::disabled())
+            .build()
+            .unwrap()
+    }
+
+    fn serve_once(cfg: &ServeConfig) -> ServeReport {
+        let mut session = tiny_session();
+        let mut make = |seed: u64| {
+            let mut g = Gen::new(seed);
+            random_image(&mut g, 2, 8, 8, 0.05)
+        };
+        run(&mut session, None, cfg, &mut make, &mut |_| {}).unwrap()
+    }
+
+    #[test]
+    fn the_loop_terminates_and_serves_every_unshredded_frame() {
+        let mut cfg =
+            ServeConfig::new(Scenario::Burst, GovernorMode::PowerBudget { watts: 1e-3 });
+        cfg.total_frames = 24;
+        cfg.tick_s = 2e-6;
+        let r = serve_once(&cfg);
+        assert_eq!(r.frames_served + r.shed_low + r.shed_high, 24);
+        assert!(r.frames_served > 0);
+        assert!(!r.trace.is_empty());
+        assert!(r.energy_j > 0.0);
+        // Conservation per tick, too.
+        for row in &r.trace {
+            assert_eq!(row.offered, row.admitted + row.shed_low + row.shed_high);
+        }
+    }
+
+    #[test]
+    fn the_max_tick_backstop_caps_a_run_that_cannot_drain() {
+        let mut cfg =
+            ServeConfig::new(Scenario::Sustained, GovernorMode::PowerBudget { watts: 1e-9 });
+        cfg.total_frames = 8;
+        // A tick so short the backlog can never drain at any corner.
+        cfg.tick_s = 1e-12;
+        cfg.max_ticks = 5;
+        let r = serve_once(&cfg);
+        assert_eq!(r.trace.len(), 5);
+    }
+}

@@ -331,7 +331,9 @@ fn prop_row_band_schedule_stitches_bit_identically() {
             )
             .pop()
             .unwrap();
-            for bands in [0usize, 1, 3, 8] {
+            // `h + 8` is degenerate on purpose: more bands than output
+            // rows (and than workers) must clamp, not panic or diverge.
+            for bands in [0usize, 1, 3, 8, h + 8] {
                 let got = facade_batch(
                     cfg,
                     kind,
