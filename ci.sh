@@ -37,14 +37,30 @@ cargo run --release --example resnet_graph
 echo "== cargo test --release -q (release-mode overflow/wrap behavior) =="
 cargo test --release -q
 
-# Note: src/fault and src/api additionally carry
-# #![deny(clippy::unwrap_used, clippy::expect_used)] outside tests — the
-# fault-handling layers themselves must not panic.
+# Note: src/fault, src/api, src/serve and src/coordinator additionally
+# carry #![deny(clippy::unwrap_used, clippy::expect_used)] outside tests
+# — the layers that own threads, locks and fault handling must not panic.
 echo "== cargo clippy --all-targets -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "clippy unavailable; skipping"
+fi
+
+echo "== cargo audit / cargo deny (advisory gates, skipped when not installed) =="
+# The dependency tree is intentionally empty (std-only), so these are
+# cheap; they exist to catch a future dependency slipping in with a
+# known advisory. Both tools need a crate registry, so the growth
+# container (offline) skips them and real CI runs them.
+if command -v cargo-audit >/dev/null 2>&1; then
+    cargo audit
+else
+    echo "cargo-audit unavailable; skipping"
+fi
+if command -v cargo-deny >/dev/null 2>&1; then
+    cargo deny check
+else
+    echo "cargo-deny unavailable; skipping"
 fi
 
 echo "== cargo fmt --check (enforced) =="
@@ -62,6 +78,16 @@ if cargo fmt --version >/dev/null 2>&1; then
 else
     echo "rustfmt unavailable; skipping"
 fi
+
+echo "== CLI smoke: static analyzer over every accepted network =="
+# All four passes (ranges, liveness, contracts, locks) over every
+# networks::ACCEPTED id at its native frame size, sharded-plan proofs
+# included. The command exits non-zero on any error-severity finding,
+# so this leg fails CI if a planner/compiler change breaks a proof.
+# (Saturation *warnings* at full-range input are expected and pass.)
+cargo run --release -- analyze --workers 2
+# The row-band lowering proves through the same gate.
+cargo run --release -- analyze --net bc-cifar10 --bands 3
 
 echo "== CLI smoke: SIMD engine + row-band schedule through yodann throughput =="
 cargo run --release -- throughput --engine simd --frames 2 --workers 2 --bands 2

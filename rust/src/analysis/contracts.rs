@@ -1,0 +1,414 @@
+//! Pass 3 — block/shard geometry proofs.
+//!
+//! The planner (`coordinator::blocks`, `coordinator::shard`) guards its
+//! geometry with runtime panics (`check_plan_geometry`,
+//! `check_width_geometry`) and a valid-mode `h < k` underflow that only
+//! debug builds catch. This pass lifts those guards into static proofs
+//! per conv step of a compiled graph, at a concrete frame geometry:
+//!
+//! * the typed planner preconditions ([`plan_geometry_check`], plus the
+//!   width-axis check) become [`AnalysisFinding`]s instead of panics;
+//! * the **actual** [`BlockPlan`]s the planner emits are then verified
+//!   against the chip contract: tile height within image-memory
+//!   capacity, channel blocks within `n_ch`/stream capacity, every tile
+//!   reading the full input halo its output rows need, and the output
+//!   space covered **exactly once** by valid output rectangles;
+//! * with a shard grid, the same proofs run per [`LayerShard`], plus an
+//!   exact-cover proof of the shard partition itself — the halo-row
+//!   contract multi-chip tiling depends on.
+//!
+//! Everything here re-derives from the planner's own code paths, so a
+//! future planner change that violates the contract fails the analyzer
+//! (and its property tests) rather than a frame at 2 a.m.
+
+use crate::coordinator::blocks::{plan_block_range, plan_geometry_check};
+use crate::coordinator::shard::shard_block_plans;
+use crate::coordinator::{plan_layer_shards, ShardGrid};
+use crate::engine::BlockPlan;
+use crate::hw::ChipConfig;
+use crate::model::graph::{CompiledGraph, PlanStep};
+use crate::model::KernelMode;
+
+use super::{AnalysisFinding, Pass, Severity, StepGeom};
+
+/// Contracts-pass summary.
+#[derive(Debug, Clone, Default)]
+pub struct ContractsSummary {
+    /// Conv steps whose geometry was proved (or refuted).
+    pub convs_checked: usize,
+    /// Block plans verified against the chip contract.
+    pub blocks_checked: usize,
+    /// Layer shards verified (0 when analyzing unsharded plans only).
+    pub shards_checked: usize,
+    /// True when the pass did not run (no frame geometry supplied).
+    pub skipped: bool,
+}
+
+impl ContractsSummary {
+    /// The no-geometry placeholder.
+    pub fn skipped() -> ContractsSummary {
+        ContractsSummary { skipped: true, ..ContractsSummary::default() }
+    }
+}
+
+struct Ctx<'a> {
+    step: usize,
+    label: &'a str,
+    findings: &'a mut Vec<AnalysisFinding>,
+}
+
+impl Ctx<'_> {
+    fn error(&mut self, code: &'static str, detail: String) {
+        self.findings.push(AnalysisFinding {
+            pass: Pass::Contracts,
+            severity: Severity::Error,
+            code,
+            step: Some(self.step),
+            node: self.label.to_string(),
+            detail,
+        });
+    }
+}
+
+/// Run the contracts pass over every conv step with a known input
+/// shape. `grid` adds the sharded-plan proofs.
+pub(crate) fn analyze(
+    graph: &CompiledGraph,
+    cfg: &ChipConfig,
+    geoms: &[StepGeom],
+    grid: Option<&ShardGrid>,
+    findings: &mut Vec<AnalysisFinding>,
+) -> ContractsSummary {
+    let mut summary = ContractsSummary::default();
+    for (si, step) in graph.steps.iter().enumerate() {
+        let PlanStep::Conv { conv, .. } = step else { continue };
+        let Some((_, h, w)) = geoms.get(si).and_then(|g| g.srcs.first().copied().flatten())
+        else {
+            // Upstream geometry already failed; the runtime never
+            // reaches this conv.
+            continue;
+        };
+        let cv = &graph.convs[*conv];
+        let label = graph.step_labels.get(si).map(String::as_str).unwrap_or("");
+        let mut ctx = Ctx { step: si, label, findings };
+        summary.convs_checked += 1;
+
+        // The typed planner preconditions, statically. These are the
+        // exact checks `check_plan_geometry` panics on at runtime.
+        if let Err(e) = plan_geometry_check(cfg, cv.k, cv.zero_pad, h) {
+            ctx.error("geometry", format!("{e}"));
+            continue;
+        }
+        if !cv.zero_pad && w < cv.k {
+            // `check_width_geometry`'s panic, statically: a valid conv
+            // with no output columns.
+            ctx.error(
+                "geometry",
+                format!(
+                    "no output columns: valid-mode k={} against width {w} \
+                     (width-axis underflow)",
+                    cv.k
+                ),
+            );
+            continue;
+        }
+
+        let n_in = cv.kernels.n_in;
+        let n_out = cv.kernels.n_out;
+        let out_h = if cv.zero_pad { h } else { h - cv.k + 1 };
+
+        // Unsharded plans: the whole layer in one partition.
+        let plans = plan_block_range(cfg, cv.k, cv.zero_pad, n_in, h, 0, out_h, 0, n_out);
+        summary.blocks_checked += plans.len();
+        check_plans(&mut ctx, cfg, cv.k, cv.zero_pad, n_in, h, &plans, (0, out_h, 0, n_out));
+
+        // Sharded plans: partition proof, then per-shard block proofs.
+        if let Some(grid) = grid {
+            let shards = plan_layer_shards(*grid, out_h, n_out);
+            check_partition(
+                &mut ctx,
+                out_h,
+                n_out,
+                &shards.iter().map(|s| (s.row0, s.rows, s.out0, s.out_len)).collect::<Vec<_>>(),
+                "shard",
+            );
+            for shard in &shards {
+                let splans = shard_block_plans(cfg, cv.k, cv.zero_pad, n_in, h, shard);
+                summary.blocks_checked += splans.len();
+                check_plans(
+                    &mut ctx,
+                    cfg,
+                    cv.k,
+                    cv.zero_pad,
+                    n_in,
+                    h,
+                    &splans,
+                    (shard.row0, shard.rows, shard.out0, shard.out_len),
+                );
+            }
+            summary.shards_checked += shards.len();
+        }
+    }
+    summary
+}
+
+/// Verify one partition's block plans against the chip contract.
+/// `region` is the `(row0, rows, out0, out_len)` output rectangle the
+/// plans must cover exactly once.
+fn check_plans(
+    ctx: &mut Ctx<'_>,
+    cfg: &ChipConfig,
+    k: usize,
+    zero_pad: bool,
+    n_in: usize,
+    h: usize,
+    plans: &[BlockPlan],
+    region: (usize, usize, usize, usize),
+) {
+    let streams = if cfg.multi_kernel { KernelMode::for_kernel(k).filters_per_sop() } else { 1 };
+    let out_cap = cfg.n_ch * streams;
+    let in_blocks_expected = n_in.div_ceil(cfg.n_ch);
+    let offset = if zero_pad { (k - 1) / 2 } else { 0 };
+
+    for p in plans {
+        // Chip capacity: the image memory must hold the whole tile.
+        if p.tile_h > cfg.h_max() {
+            ctx.error(
+                "chip-capacity-exceeded",
+                format!("tile of {} input rows exceeds h_max {}", p.tile_h, cfg.h_max()),
+            );
+        }
+        if p.rows_valid == 0 {
+            ctx.error("empty-tile", format!("plan contributes no output rows: {p:?}"));
+        }
+        if p.in_len > cfg.n_ch || p.out_len > out_cap {
+            ctx.error(
+                "channel-capacity-exceeded",
+                format!(
+                    "block of {}x{} channels exceeds the {}x{out_cap} chip block",
+                    p.in_len, p.out_len, cfg.n_ch
+                ),
+            );
+        }
+        if p.clip0 + p.tile_h > h {
+            ctx.error(
+                "tile-out-of-image",
+                format!("input tile [{}, {}) leaves the {h}-row image", p.clip0, p.clip0 + p.tile_h),
+            );
+        }
+        if p.in_blocks != in_blocks_expected {
+            ctx.error(
+                "in-block-mismatch",
+                format!(
+                    "plan declares {} input blocks, {} channels need {in_blocks_expected}",
+                    p.in_blocks, n_in
+                ),
+            );
+        }
+        // Halo coverage: the input tile must contain every row the
+        // plan's output rows convolve over (clamped to the image — the
+        // zero-padding injects the rest).
+        let need_lo = (p.row_base as isize - offset as isize).max(0) as usize;
+        let need_hi = (p.row_base + p.rows_valid - 1 - offset + k).min(h);
+        if p.clip0 > need_lo || p.clip0 + p.tile_h < need_hi {
+            ctx.error(
+                "halo-underread",
+                format!(
+                    "output rows [{}, {}) need input rows [{need_lo}, {need_hi}) but the \
+                     tile reads [{}, {})",
+                    p.row_base,
+                    p.row_base + p.rows_valid,
+                    p.clip0,
+                    p.clip0 + p.tile_h
+                ),
+            );
+        }
+    }
+
+    // Exact cover of the output rectangle by the in_block == 0 plans
+    // (the other input blocks retrace the same rectangles for the
+    // off-chip reduction — verified by the in_block census below).
+    let rects: Vec<(usize, usize, usize, usize)> = plans
+        .iter()
+        .filter(|p| p.in_block == 0)
+        .map(|p| (p.row_base, p.rows_valid, p.out_base, p.out_len))
+        .collect();
+    check_partition_region(ctx, region, &rects, "block");
+
+    // Every (output rectangle) must carry the full run of input blocks.
+    use std::collections::HashMap;
+    let mut census: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+    for p in plans {
+        census.entry((p.row_base, p.out_base)).or_default().push(p.in_block);
+    }
+    for ((row_base, out_base), mut blocks) in census {
+        blocks.sort_unstable();
+        let expect: Vec<usize> = (0..in_blocks_expected).collect();
+        if blocks != expect {
+            ctx.error(
+                "in-block-mismatch",
+                format!(
+                    "tile at row {row_base}, channel {out_base} carries input \
+                     blocks {blocks:?}, expected {expect:?}"
+                ),
+            );
+        }
+    }
+}
+
+/// Exact-cover proof of `(out_h, n_out)` by `(row0, rows, out0, out_len)`
+/// rectangles, anchored at the origin.
+fn check_partition(
+    ctx: &mut Ctx<'_>,
+    out_h: usize,
+    n_out: usize,
+    rects: &[(usize, usize, usize, usize)],
+    what: &str,
+) {
+    check_partition_region(ctx, (0, out_h, 0, n_out), rects, what);
+}
+
+/// Exact-cover proof of an arbitrary output rectangle.
+fn check_partition_region(
+    ctx: &mut Ctx<'_>,
+    region: (usize, usize, usize, usize),
+    rects: &[(usize, usize, usize, usize)],
+    what: &str,
+) {
+    let (row0, rows, out0, out_len) = region;
+    if rows == 0 || out_len == 0 {
+        return;
+    }
+    let mut cover = vec![0u8; rows * out_len];
+    for &(r0, rl, o0, ol) in rects {
+        for r in r0..r0 + rl {
+            for o in o0..o0 + ol {
+                if r < row0 || r >= row0 + rows || o < out0 || o >= out0 + out_len {
+                    ctx.error(
+                        "coverage-overrun",
+                        format!(
+                            "{what} rectangle rows [{r0}, {}) x channels [{o0}, {}) \
+                             leaves the output region",
+                            r0 + rl,
+                            o0 + ol
+                        ),
+                    );
+                    return;
+                }
+                cover[(r - row0) * out_len + (o - out0)] += 1;
+            }
+        }
+    }
+    if let Some(idx) = cover.iter().position(|&c| c == 0) {
+        ctx.error(
+            "coverage-gap",
+            format!(
+                "output row {}, channel {} is computed by no {what}",
+                row0 + idx / out_len,
+                out0 + idx % out_len
+            ),
+        );
+    }
+    if let Some(idx) = cover.iter().position(|&c| c > 1) {
+        ctx.error(
+            "coverage-overlap",
+            format!(
+                "output row {}, channel {} is computed by {} {what}s",
+                row0 + idx / out_len,
+                out0 + idx % out_len,
+                cover[idx]
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::step_geometry;
+    use crate::model::graph::{NetworkBuilder, Weights};
+    use crate::testkit::Gen;
+
+    fn conv_graph(k: usize, zero_pad: bool, n_in: usize, n_out: usize) -> CompiledGraph {
+        let mut g = Gen::new(13);
+        let mut b = NetworkBuilder::new("contracts-ut", n_in);
+        let x = b.input();
+        let c = b.conv("conv", x, zero_pad, Weights::seeded(&mut g, n_out, n_in, k));
+        b.build(c).compile().expect("compiles")
+    }
+
+    fn run(
+        graph: &CompiledGraph,
+        cfg: &ChipConfig,
+        shape: (usize, usize),
+        grid: Option<ShardGrid>,
+    ) -> (ContractsSummary, Vec<AnalysisFinding>) {
+        let (geoms, mut findings) = step_geometry(graph, shape);
+        let sum = analyze(graph, cfg, &geoms, grid.as_ref(), &mut findings);
+        (sum, findings)
+    }
+
+    #[test]
+    fn valid_geometries_prove_clean_including_shards() {
+        let cfg = ChipConfig::yodann();
+        // 80 rows forces row tiling (h_max = 32); 70 channels forces
+        // channel blocking; the 3-stripe x 2-group grid adds shards.
+        let g = conv_graph(3, true, 70, 70);
+        let (sum, findings) = run(&g, &cfg, (80, 40), Some(ShardGrid::new(3, 2)));
+        assert!(findings.is_empty(), "clean geometry must prove: {findings:?}");
+        assert_eq!(sum.convs_checked, 1);
+        assert_eq!(sum.shards_checked, 6);
+        assert!(sum.blocks_checked > 6, "tiling must emit plans: {}", sum.blocks_checked);
+    }
+
+    #[test]
+    fn valid_mode_h_under_k_is_refuted_not_panicked() {
+        let cfg = ChipConfig::yodann();
+        let g = conv_graph(5, false, 2, 2);
+        let (sum, findings) = run(&g, &cfg, (3, 16), None);
+        assert_eq!(sum.convs_checked, 1);
+        assert!(
+            findings.iter().any(|f| f.code == "geometry" && f.severity == Severity::Error),
+            "h < k must be a typed finding: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn width_underflow_is_refuted() {
+        let cfg = ChipConfig::yodann();
+        let g = conv_graph(5, false, 2, 2);
+        let (_, findings) = run(&g, &cfg, (16, 3), None);
+        assert!(
+            findings.iter().any(|f| f.code == "geometry" && f.detail.contains("width")),
+            "w < k must be a typed finding: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn chip_capacity_h_max_under_k_is_refuted() {
+        // tiny(1): h_max = 64 / 1 = 64... use a config whose image
+        // memory cannot hold one 7-row window.
+        let cfg = ChipConfig { image_mem_rows: 4, ..ChipConfig::yodann() };
+        assert!(cfg.h_max() < 7);
+        let g = conv_graph(7, true, 2, 2);
+        let (_, findings) = run(&g, &cfg, (16, 16), None);
+        assert!(
+            findings.iter().any(|f| f.code == "geometry"),
+            "h_max < k must be refuted: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn partition_checker_catches_gaps_and_overlaps() {
+        let mut findings = Vec::new();
+        let mut ctx = Ctx { step: 0, label: "ut", findings: &mut findings };
+        // Gap: second row stripe missing.
+        check_partition(&mut ctx, 4, 2, &[(0, 2, 0, 2)], "shard");
+        assert!(ctx.findings.iter().any(|f| f.code == "coverage-gap"));
+        let mut findings = Vec::new();
+        let mut ctx = Ctx { step: 0, label: "ut", findings: &mut findings };
+        // Overlap: stripes share row 1.
+        check_partition(&mut ctx, 3, 1, &[(0, 2, 0, 1), (1, 2, 0, 1)], "shard");
+        assert!(ctx.findings.iter().any(|f| f.code == "coverage-overlap"));
+    }
+}

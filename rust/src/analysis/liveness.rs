@@ -1,0 +1,272 @@
+//! Pass 2 — slot-store lifetime analysis.
+//!
+//! The session interpreters execute the step program over a slot store,
+//! dropping each slot at the step [`compute_free_after`] marks as its
+//! last use. This pass symbolically executes the same program over
+//! abstract slot states (unwritten / live / freed) and proves the
+//! discipline the interpreters rely on:
+//!
+//! * every read hits a live slot (no use-before-def, no use-after-free);
+//! * every free hits a live, non-output slot exactly once
+//!   (no double-free, no freeing the output);
+//! * each slot is written exactly once (single-assignment store);
+//! * at the end, the output is live and everything else was freed
+//!   (no leaked slot — a leak is a dead node the compiler should have
+//!   rejected, and memory the interpreter would hold for the whole
+//!   frame).
+//!
+//! With a frame geometry available it also reports **peak live-slot
+//! memory**: the maximum, over step boundaries, of the summed live
+//! feature-map sizes — the number the report module compares against
+//! the paper's SCM sizing.
+//!
+//! [`compute_free_after`]: crate::model::graph::CompiledGraph
+
+use crate::model::graph::CompiledGraph;
+
+use super::{AnalysisFinding, Pass, Severity, StepGeom};
+
+/// Abstract state of one slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Slot {
+    Unwritten,
+    Live,
+    Freed,
+}
+
+/// Liveness-pass summary.
+#[derive(Debug, Clone, Default)]
+pub struct LivenessSummary {
+    /// Maximum number of simultaneously live slots.
+    pub peak_slots: usize,
+    /// Maximum live feature-map footprint in Q2.9 words (`c·h·w`,
+    /// summed over live slots); `None` without a frame geometry.
+    pub peak_words: Option<usize>,
+    /// Steps executed.
+    pub steps: usize,
+    /// Slots in the store.
+    pub n_slots: usize,
+}
+
+/// Run the liveness pass. `geoms` (when a frame geometry was supplied)
+/// carries per-step slot shapes for the footprint accounting.
+pub(crate) fn analyze(
+    graph: &CompiledGraph,
+    geoms: Option<&[StepGeom]>,
+    findings: &mut Vec<AnalysisFinding>,
+) -> LivenessSummary {
+    let mut slots = vec![Slot::Unwritten; graph.n_slots];
+    let mut words = vec![0usize; graph.n_slots];
+    slots[graph.input_slot] = Slot::Live;
+    if let Some(geoms) = geoms {
+        // The input slot's footprint, before any step runs.
+        if let Some(first) = geoms.first() {
+            if let Some((c, h, w)) = first.srcs.first().copied().flatten() {
+                words[graph.input_slot] = c * h * w;
+            }
+        }
+    }
+    let mut finding = |severity, code, step: usize, node: &str, detail: String| {
+        findings.push(AnalysisFinding {
+            pass: Pass::Liveness,
+            severity,
+            code,
+            step: Some(step),
+            node: node.to_string(),
+            detail,
+        });
+    };
+
+    let mut peak_slots = slots.iter().filter(|&&s| s == Slot::Live).count();
+    let mut peak_words = words.iter().sum::<usize>();
+    let mut shapes_complete = geoms.is_some();
+
+    for (si, step) in graph.steps.iter().enumerate() {
+        let label = graph.step_labels.get(si).cloned().unwrap_or_default();
+        for src in step.srcs() {
+            match slots[src] {
+                Slot::Live => {}
+                Slot::Unwritten => finding(
+                    Severity::Error,
+                    "use-before-def",
+                    si,
+                    &label,
+                    format!("step reads slot {src} before anything wrote it"),
+                ),
+                Slot::Freed => finding(
+                    Severity::Error,
+                    "use-after-free",
+                    si,
+                    &label,
+                    format!("step reads slot {src} after its last-use free"),
+                ),
+            }
+        }
+        let dst = step.dst();
+        match slots[dst] {
+            Slot::Unwritten => {}
+            Slot::Live => finding(
+                Severity::Error,
+                "double-write",
+                si,
+                &label,
+                format!("slot {dst} is written twice — the store is single-assignment"),
+            ),
+            Slot::Freed => finding(
+                Severity::Error,
+                "write-after-free",
+                si,
+                &label,
+                format!("slot {dst} is rewritten after being freed"),
+            ),
+        }
+        slots[dst] = Slot::Live;
+        match geoms.and_then(|g| g.get(si)).and_then(|g| g.dst) {
+            Some((c, h, w)) => words[dst] = c * h * w,
+            None => shapes_complete = false,
+        }
+
+        // Peak is sampled here: destination written, sources still held
+        // (the interpreter drops them only after the step completes).
+        peak_slots = peak_slots.max(slots.iter().filter(|&&s| s == Slot::Live).count());
+        peak_words = peak_words.max(
+            slots
+                .iter()
+                .zip(words.iter())
+                .filter(|(&s, _)| s == Slot::Live)
+                .map(|(_, &w)| w)
+                .sum(),
+        );
+
+        for &f in &graph.free_after[si] {
+            match slots[f] {
+                Slot::Live if f == graph.output_slot => finding(
+                    Severity::Error,
+                    "free-output",
+                    si,
+                    &label,
+                    format!("the output slot {f} must never be freed"),
+                ),
+                Slot::Live => slots[f] = Slot::Freed,
+                Slot::Freed => finding(
+                    Severity::Error,
+                    "double-free",
+                    si,
+                    &label,
+                    format!("slot {f} is freed twice"),
+                ),
+                Slot::Unwritten => finding(
+                    Severity::Error,
+                    "free-unwritten",
+                    si,
+                    &label,
+                    format!("slot {f} is freed before anything wrote it"),
+                ),
+            }
+        }
+    }
+
+    let last = graph.steps.len().saturating_sub(1);
+    if slots[graph.output_slot] != Slot::Live {
+        finding(
+            Severity::Error,
+            "output-missing",
+            last,
+            "",
+            format!("output slot {} is not live when the program ends", graph.output_slot),
+        );
+    }
+    for (s, &state) in slots.iter().enumerate() {
+        if state == Slot::Live && s != graph.output_slot {
+            finding(
+                Severity::Error,
+                "slot-leak",
+                last,
+                "",
+                format!(
+                    "slot {s} is still live when the program ends — a dead \
+                     node the interpreter would hold for the whole frame"
+                ),
+            );
+        }
+    }
+
+    LivenessSummary {
+        peak_slots,
+        peak_words: shapes_complete.then_some(peak_words),
+        steps: graph.steps.len(),
+        n_slots: graph.n_slots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::{NetworkBuilder, PlanStep, Weights};
+    use crate::testkit::Gen;
+
+    fn residual_graph(seed: u64) -> CompiledGraph {
+        let mut g = Gen::new(seed);
+        let mut b = NetworkBuilder::new("live-ut", 2);
+        let x = b.input();
+        let c1 = b.conv("c1", x, true, Weights::seeded(&mut g, 4, 2, 3));
+        let r1 = b.relu(c1);
+        let c2 = b.conv("c2", r1, true, Weights::seeded(&mut g, 4, 4, 3));
+        let a = b.add("res", &[r1, c2]);
+        b.build(a).compile().expect("residual graph compiles")
+    }
+
+    #[test]
+    fn compiled_graphs_are_clean_and_peak_counts_the_residual() {
+        let g = residual_graph(5);
+        let mut findings = Vec::new();
+        let sum = analyze(&g, None, &mut findings);
+        assert!(findings.is_empty(), "compiled graph must be lifetime-clean: {findings:?}");
+        // The residual holds r1 across c2: at least 2 simultaneous maps
+        // plus the destination being written.
+        assert!(sum.peak_slots >= 3, "residual peak: {}", sum.peak_slots);
+        assert_eq!(sum.steps, g.steps.len());
+    }
+
+    #[test]
+    fn peak_words_follow_the_shape_walk() {
+        let g = residual_graph(9);
+        let (geoms, shape_findings) = crate::analysis::step_geometry(&g, (8, 8));
+        assert!(shape_findings.is_empty());
+        let mut findings = Vec::new();
+        let sum = analyze(&g, Some(&geoms), &mut findings);
+        // Input 2×8×8 = 128; r1 and c2 are 4×8×8 = 256 each. Peak is at
+        // the add: r1 + c2 live + the add's 256-word destination.
+        assert_eq!(sum.peak_words, Some(3 * 256));
+    }
+
+    #[test]
+    fn a_corrupted_free_list_is_caught() {
+        let mut g = residual_graph(7);
+        // Free the residual branch right after its first read: the add
+        // step later reads it again — use-after-free.
+        let r1_slot = match g.steps[2] {
+            PlanStep::Conv { src, .. } => src,
+            ref s => panic!("expected c2 conv step, got {s:?}"),
+        };
+        g.free_after[2].push(r1_slot);
+        let mut findings = Vec::new();
+        analyze(&g, None, &mut findings);
+        assert!(
+            findings.iter().any(|f| f.code == "use-after-free"),
+            "corrupted free list must surface: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn a_leaked_slot_is_caught() {
+        let mut g = residual_graph(7);
+        // Drop every free: everything but the output leaks.
+        for f in g.free_after.iter_mut() {
+            f.clear();
+        }
+        let mut findings = Vec::new();
+        analyze(&g, None, &mut findings);
+        assert!(findings.iter().any(|f| f.code == "slot-leak"), "leaks must surface");
+    }
+}

@@ -1,0 +1,139 @@
+//! Pass 4 — concurrency lint: the lock-order registry.
+//!
+//! The crate owns exactly three long-lived mutexes (the session task
+//! queue, the executor's block-plan work queue, and the facade's
+//! pricing state). None of them is ever held while acquiring another —
+//! that absence of nesting is the concurrency invariant the serving
+//! path's deadlock-freedom rests on, and this registry pins it: every
+//! `Mutex` must be listed in [`LOCKS`], every may-hold-while-acquiring
+//! relationship in [`ALLOWED_NESTINGS`], and [`check_lock_order`]
+//! proves the nesting graph acyclic (Kahn's algorithm). A unit test in
+//! this module additionally censuses `Mutex::new` sites across the
+//! source tree, so adding a mutex without registering it fails `cargo
+//! test`, and [`analyze_graph`](super::analyze_graph) runs the cycle
+//! check on every analyzer invocation.
+
+/// Every long-lived `std::sync::Mutex` in the crate, by stable name.
+pub const LOCKS: &[&str] = &[
+    // `coordinator::session`: the worker pool's shared task receiver
+    // (`Arc<Mutex<Receiver<Task>>>`), locked only around `recv`.
+    "coordinator::session::task_queue",
+    // `coordinator::executor::run_plans`: the block-plan work queue the
+    // per-layer worker pool pops from.
+    "coordinator::executor::plan_queue",
+    // `api`: the corner/pricing state re-priced at runtime by
+    // `Yodann::set_corner` and read per frame.
+    "api::pricing",
+];
+
+/// Allowed may-hold-while-acquiring edges `(held, acquired)`.
+///
+/// Deliberately empty: no code path in the crate acquires a mutex while
+/// holding another. Add an edge here (keeping the graph acyclic) before
+/// introducing such a path.
+pub const ALLOWED_NESTINGS: &[(&str, &str)] = &[];
+
+/// Prove the nesting graph acyclic. Returns a total acquisition order
+/// consistent with [`ALLOWED_NESTINGS`], or a description of the cycle.
+pub fn check_lock_order() -> Result<Vec<&'static str>, String> {
+    topo_order(LOCKS, ALLOWED_NESTINGS)
+}
+
+/// Kahn's algorithm over an edge list; `Err` names the cyclic residue.
+fn topo_order(
+    nodes: &[&'static str],
+    edges: &[(&'static str, &'static str)],
+) -> Result<Vec<&'static str>, String> {
+    let idx = |name: &str| nodes.iter().position(|&n| n == name);
+    let mut indegree = vec![0usize; nodes.len()];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for &(held, acquired) in edges {
+        match (idx(held), idx(acquired)) {
+            (Some(h), Some(a)) => {
+                adj[h].push(a);
+                indegree[a] += 1;
+            }
+            _ => {
+                return Err(format!(
+                    "nesting edge ({held}, {acquired}) names an unregistered lock"
+                ))
+            }
+        }
+    }
+    let mut ready: Vec<usize> = (0..nodes.len()).filter(|&i| indegree[i] == 0).collect();
+    let mut order = Vec::with_capacity(nodes.len());
+    while let Some(i) = ready.pop() {
+        order.push(nodes[i]);
+        for &j in &adj[i] {
+            indegree[j] -= 1;
+            if indegree[j] == 0 {
+                ready.push(j);
+            }
+        }
+    }
+    if order.len() == nodes.len() {
+        Ok(order)
+    } else {
+        let cyclic: Vec<&str> =
+            (0..nodes.len()).filter(|&i| indegree[i] > 0).map(|i| nodes[i]).collect();
+        Err(format!("lock-order cycle through {cyclic:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn registry_is_acyclic() {
+        let order = check_lock_order().expect("the registered nesting graph must be acyclic");
+        assert_eq!(order.len(), LOCKS.len());
+    }
+
+    #[test]
+    fn the_checker_detects_cycles() {
+        let nodes = &["a", "b", "c"];
+        let cycle = &[("a", "b"), ("b", "c"), ("c", "a")];
+        assert!(topo_order(nodes, cycle).is_err());
+        let chain = &[("a", "b"), ("b", "c")];
+        assert_eq!(topo_order(nodes, chain).expect("chain is acyclic"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn unregistered_edge_endpoints_are_rejected() {
+        assert!(topo_order(&["a"], &[("a", "ghost")]).is_err());
+    }
+
+    /// Census: every `Mutex::new` site in the source tree must have a
+    /// registry entry. If this fails you added (or removed) a mutex —
+    /// update [`LOCKS`] and, if it can nest, [`ALLOWED_NESTINGS`].
+    #[test]
+    fn every_mutex_in_the_tree_is_registered() {
+        fn count_sites(dir: &Path, total: &mut usize) {
+            for entry in std::fs::read_dir(dir).expect("src dir readable") {
+                let path = entry.expect("dir entry").path();
+                if path.is_dir() {
+                    count_sites(&path, total);
+                } else if path.extension().is_some_and(|e| e == "rs") {
+                    let text = std::fs::read_to_string(&path).expect("source readable");
+                    // Test modules trail their file in this codebase;
+                    // mutexes built by test scaffolding are not
+                    // long-lived locks and stay out of the census.
+                    let non_test = text.split("#[cfg(test)]").next().unwrap_or("");
+                    *total += non_test.matches("Mutex::new(").count();
+                }
+            }
+        }
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let mut sites = 0;
+        count_sites(&src, &mut sites);
+        assert_eq!(
+            sites,
+            LOCKS.len(),
+            "found {sites} `Mutex::new` sites but {} registry entries — \
+             register new mutexes in analysis::locks::LOCKS",
+            LOCKS.len()
+        );
+    }
+}

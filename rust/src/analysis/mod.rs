@@ -1,0 +1,377 @@
+//! Static plan verifier: abstract interpretation of the [`CompiledGraph`]
+//! step program, **without executing a frame**.
+//!
+//! The coordinator's correctness invariants — Q2.9/Q7.9 saturation
+//! behavior, slot-store lifetime discipline, block/shard geometry — are
+//! otherwise only checked at runtime-panic or fuzz time. This module
+//! proves them per compiled network before a session ever runs:
+//!
+//! 1. **Range analysis** ([`range`]) — propagates raw-Q2.9 value
+//!    intervals through every step. Conv bounds come from per-kernel
+//!    popcounts (a binary weight contributes `+pixel` or `−pixel`, so
+//!    `p` plus-bits and `k²−p` minus-bits bound the window sum exactly),
+//!    folded through the bit-exact [`crate::fixedpoint`] scale/bias
+//!    arithmetic. Each conv/add step is classified
+//!    saturation-unreachable / -possible / -certain.
+//! 2. **Slot liveness** ([`liveness`]) — symbolic execution of the
+//!    [`PlanStep`] program over the slot store: proves no
+//!    use-before-def, no use-after-free, no double-free, no leaked
+//!    slot, and reports peak live-slot memory.
+//! 3. **Plan/shard contracts** ([`contracts`]) — lifts the executor's
+//!    runtime geometry panics (`check_plan_geometry`,
+//!    `check_width_geometry`, valid-mode `h < k` underflow) plus halo
+//!    coverage for `ShardGrid` / row-band partitions into static proofs
+//!    over the actual [`crate::engine::BlockPlan`]s the planner emits.
+//! 4. **Concurrency lint** ([`locks`]) — a registry of the crate's
+//!    long-lived mutexes and their allowed nesting order, with a cycle
+//!    check (also pinned as a unit test).
+//!
+//! Entry points: [`analyze_graph`] here, `SessionBuilder::analyze` /
+//! the [`Preflight`] build knob on the serving facade, and the
+//! `yodann analyze` CLI.
+
+use crate::coordinator::{ShardGrid, ShardPolicy};
+use crate::hw::ChipConfig;
+use crate::model::graph::{CompiledGraph, PlanStep};
+
+pub mod contracts;
+pub mod liveness;
+pub mod locks;
+pub mod range;
+
+pub use contracts::ContractsSummary;
+pub use liveness::LivenessSummary;
+pub use range::{Interval, NodeRange, SatVerdict};
+
+/// How bad a finding is. [`Severity::Error`] means the session would
+/// panic, return a typed error, or compute wrong values at runtime;
+/// `yodann analyze` exits non-zero when any error-severity finding
+/// survives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational: a property worth surfacing, not a defect.
+    Info,
+    /// A value-quality hazard (e.g. possible saturation) that cannot
+    /// crash the session.
+    Warning,
+    /// A proof failure: the runtime would panic, refuse, or clip.
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Which analysis pass produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    /// Interval / saturation analysis.
+    Range,
+    /// Slot-store lifetime analysis.
+    Liveness,
+    /// Block/shard geometry proofs.
+    Contracts,
+    /// Lock-order registry check.
+    Locks,
+}
+
+impl std::fmt::Display for Pass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Pass::Range => "range",
+            Pass::Liveness => "liveness",
+            Pass::Contracts => "contracts",
+            Pass::Locks => "locks",
+        })
+    }
+}
+
+/// One typed, machine-readable analyzer finding.
+#[derive(Debug, Clone)]
+pub struct AnalysisFinding {
+    /// The pass that produced it.
+    pub pass: Pass,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Stable machine-readable code (kebab-case), e.g.
+    /// `"saturation-possible"`, `"use-after-free"`, `"halo-underread"`.
+    pub code: &'static str,
+    /// Step index into [`CompiledGraph::steps`], when the finding is
+    /// attached to one step.
+    pub step: Option<usize>,
+    /// The step's label (empty when not step-attached).
+    pub node: String,
+    /// Human-readable detail.
+    pub detail: String,
+}
+
+impl std::fmt::Display for AnalysisFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}/{}", self.severity, self.pass, self.code)?;
+        if let Some(step) = self.step {
+            write!(f, " at step {step}")?;
+        }
+        if !self.node.is_empty() {
+            write!(f, " ({})", self.node)?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// Knobs for one analyzer run.
+#[derive(Debug, Clone)]
+pub struct AnalysisOptions {
+    /// Raw-Q2.9 interval assumed for every input activation. Defaults
+    /// to the full representable range — what the serving facade
+    /// admits.
+    pub input: Interval,
+    /// Frame geometry `(h, w)`. `None` (the preflight default, where
+    /// frame sizes are not yet known) skips the shape-dependent checks:
+    /// the contracts pass and peak-memory accounting.
+    pub shape: Option<(usize, usize)>,
+}
+
+impl Default for AnalysisOptions {
+    fn default() -> AnalysisOptions {
+        AnalysisOptions { input: Interval::full_q29(), shape: None }
+    }
+}
+
+/// `SessionBuilder::build` preflight policy: what to do with analyzer
+/// findings before spawning the session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Preflight {
+    /// Do not run the analyzer at build time (default).
+    #[default]
+    Off,
+    /// Run it and print every finding to stderr; always build.
+    Warn,
+    /// Run it and refuse the build with a typed error if any
+    /// [`Severity::Error`] finding survives.
+    Refuse,
+}
+
+/// Everything one analyzer run produced.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// The analyzed graph's name.
+    pub net: String,
+    /// All findings, in pass order.
+    pub findings: Vec<AnalysisFinding>,
+    /// Per-step interval/saturation verdicts (range pass).
+    pub ranges: Vec<NodeRange>,
+    /// Slot-store lifetime summary (liveness pass).
+    pub liveness: LivenessSummary,
+    /// Geometry-proof summary (contracts pass).
+    pub contracts: ContractsSummary,
+}
+
+impl AnalysisReport {
+    /// Number of findings at exactly `severity`.
+    pub fn count_at(&self, severity: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity == severity).count()
+    }
+
+    /// Whether any [`Severity::Error`] finding survived.
+    pub fn has_errors(&self) -> bool {
+        self.count_at(Severity::Error) > 0
+    }
+
+    /// The worst severity present, if any finding exists.
+    pub fn worst(&self) -> Option<Severity> {
+        self.findings.iter().map(|f| f.severity).max()
+    }
+}
+
+/// Per-step slot shapes `(c, h, w)`: what each step reads and writes
+/// for a given input geometry. `None` marks shapes unknown because an
+/// upstream step already failed its shape check (the runtime would
+/// never reach this step).
+#[derive(Debug, Clone)]
+pub(crate) struct StepGeom {
+    /// Shape of each source slot, in [`PlanStep`] source order.
+    pub srcs: Vec<Option<(usize, usize, usize)>>,
+    /// Shape written to the destination slot.
+    pub dst: Option<(usize, usize, usize)>,
+}
+
+/// Walk the step program's shapes for one input geometry, mirroring
+/// [`CompiledGraph::walk_shapes`] but per-step and finding-typed: shape
+/// mismatches become [`AnalysisFinding`]s instead of one early error.
+/// Geometry failures *inside a conv* (valid-mode `h < k` etc.) are left
+/// to the contracts pass, which re-derives them from the real planner
+/// checks — here they only mark downstream shapes unknown.
+pub(crate) fn step_geometry(
+    graph: &CompiledGraph,
+    shape: (usize, usize),
+) -> (Vec<StepGeom>, Vec<AnalysisFinding>) {
+    let (h, w) = shape;
+    let mut slots: Vec<Option<(usize, usize, usize)>> = vec![None; graph.n_slots];
+    slots[graph.input_slot] = Some((graph.n_in, h, w));
+    let mut geoms = Vec::with_capacity(graph.steps.len());
+    let mut findings = Vec::new();
+    let fail = |step: usize, node: &str, detail: String, findings: &mut Vec<AnalysisFinding>| {
+        findings.push(AnalysisFinding {
+            pass: Pass::Contracts,
+            severity: Severity::Error,
+            code: "shape-mismatch",
+            step: Some(step),
+            node: node.to_string(),
+            detail,
+        });
+    };
+    for (si, step) in graph.steps.iter().enumerate() {
+        let label = graph.step_labels.get(si).cloned().unwrap_or_default();
+        let srcs: Vec<Option<(usize, usize, usize)>> =
+            step.srcs().iter().map(|&s| slots[s]).collect();
+        let dst = match step {
+            PlanStep::Conv { conv, .. } => {
+                let cv = &graph.convs[*conv];
+                match srcs[0] {
+                    Some((c, sh, sw)) if c != cv.kernels.n_in => {
+                        fail(
+                            si,
+                            &label,
+                            format!(
+                                "conv expects {} input channels, slot carries {c} \
+                                 ({sh}x{sw} map)",
+                                cv.kernels.n_in
+                            ),
+                            &mut findings,
+                        );
+                        None
+                    }
+                    Some((_, sh, sw)) => {
+                        let (oh, ow) = if cv.zero_pad {
+                            (Some(sh), Some(sw))
+                        } else {
+                            (sh.checked_sub(cv.k - 1), sw.checked_sub(cv.k - 1))
+                        };
+                        match (oh, ow) {
+                            // Valid-mode h < k or w < k: no output rows.
+                            // The contracts pass reports it via the real
+                            // planner checks; here just stop the walk.
+                            (Some(oh), Some(ow)) if oh > 0 && ow > 0 => {
+                                Some((cv.kernels.n_out, oh, ow))
+                            }
+                            _ => None,
+                        }
+                    }
+                    None => None,
+                }
+            }
+            PlanStep::Relu { .. } => srcs[0],
+            PlanStep::MaxPool2 { .. } => srcs[0].map(|(c, sh, sw)| {
+                if sh >= 2 && sw >= 2 {
+                    (c, sh / 2, sw / 2)
+                } else {
+                    (c, sh, sw)
+                }
+            }),
+            PlanStep::Subsample2 { .. } => {
+                srcs[0].map(|(c, sh, sw)| (c, sh.div_ceil(2), sw.div_ceil(2)))
+            }
+            PlanStep::Add { .. } => match srcs.iter().copied().collect::<Option<Vec<_>>>() {
+                Some(shapes) if !shapes.is_empty() => {
+                    if shapes.iter().any(|&s| s != shapes[0]) {
+                        fail(
+                            si,
+                            &label,
+                            format!("residual-add branches disagree in shape: {shapes:?}"),
+                            &mut findings,
+                        );
+                        None
+                    } else {
+                        Some(shapes[0])
+                    }
+                }
+                _ => None,
+            },
+            PlanStep::Concat { .. } => match srcs.iter().copied().collect::<Option<Vec<_>>>() {
+                Some(shapes) if !shapes.is_empty() => {
+                    let (_, h0, w0) = shapes[0];
+                    if shapes.iter().any(|&(_, sh, sw)| (sh, sw) != (h0, w0)) {
+                        fail(
+                            si,
+                            &label,
+                            format!("concat branches disagree in map size: {shapes:?}"),
+                            &mut findings,
+                        );
+                        None
+                    } else {
+                        Some((shapes.iter().map(|&(c, _, _)| c).sum(), h0, w0))
+                    }
+                }
+                _ => None,
+            },
+        };
+        slots[step.dst()] = dst;
+        geoms.push(StepGeom { srcs, dst });
+    }
+    (geoms, findings)
+}
+
+/// Run all four passes over one compiled graph. `sharding` optionally
+/// carries the session's `(ShardPolicy, workers)` so the contracts pass
+/// proves the *sharded* plans too (`Auto` is analyzed at its batch-1
+/// lowering, a `workers`-stripe grid, like `RowBands(0)`).
+pub fn analyze_graph(
+    graph: &CompiledGraph,
+    cfg: &ChipConfig,
+    sharding: Option<(&ShardPolicy, usize)>,
+    opts: &AnalysisOptions,
+) -> AnalysisReport {
+    let mut findings = Vec::new();
+
+    // Shape walk first: contracts and peak-memory accounting hang off it.
+    let geoms = opts.shape.map(|shape| {
+        let (geoms, shape_findings) = step_geometry(graph, shape);
+        findings.extend(shape_findings);
+        geoms
+    });
+
+    let ranges = range::analyze(graph, opts.input, &mut findings);
+    let liveness = liveness::analyze(graph, geoms.as_deref(), &mut findings);
+    let contracts = match (&geoms, opts.shape) {
+        (Some(geoms), Some(_)) => {
+            let grid = sharding.and_then(|(policy, workers)| resolve_grid(policy, workers));
+            contracts::analyze(graph, cfg, geoms, grid.as_ref(), &mut findings)
+        }
+        _ => ContractsSummary::skipped(),
+    };
+
+    if let Err(cycle) = locks::check_lock_order() {
+        findings.push(AnalysisFinding {
+            pass: Pass::Locks,
+            severity: Severity::Error,
+            code: "lock-order-cycle",
+            step: None,
+            node: String::new(),
+            detail: cycle,
+        });
+    }
+
+    AnalysisReport { net: graph.name.clone(), findings, ranges, liveness, contracts }
+}
+
+/// Lower a [`ShardPolicy`] to the concrete grid the contracts pass
+/// proves, mirroring the session's batch dispatch: `RowBands(0)` and
+/// `Auto` stripe across the worker pool, `PerFrame` needs no shard
+/// proofs (the unsharded plans cover it).
+fn resolve_grid(policy: &ShardPolicy, workers: usize) -> Option<ShardGrid> {
+    match policy {
+        ShardPolicy::PerFrame => None,
+        ShardPolicy::PerShard(grid) => Some(*grid),
+        ShardPolicy::Auto => Some(ShardGrid::striped(workers.max(1))),
+        ShardPolicy::RowBands(bands) => {
+            let n = if *bands == 0 { workers.max(1) } else { *bands };
+            Some(ShardGrid::striped(n))
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Pass 1 — interval range analysis over the step program.
+//!
+//! Every slot carries an interval of raw Q2.9 values. The conv transfer
+//! function is exact where it matters: a binary weight contributes
+//! `+pixel` or `−pixel`, so for an output channel with `p` plus-bits and
+//! `m = k² − p` minus-bits against one input channel whose pixels lie in
+//! `[a, b]`, the per-channel window sum lies in `[p·a − m·b, p·b − m·a]`
+//! — the popcount of the actual kernel row, not a worst case over all
+//! kernels.
+//!
+//! **Why the accumulator test is schedule-independent.** The reference
+//! conv saturates at Q7.9 once per input channel; the blocked executor
+//! accumulates raw partials off-chip and clamps once at the end. Those
+//! two schedules clip *differently* when a partial overshoots, so no
+//! single schedule's interval is sound for the other. The analyzer
+//! instead checks `Σᵢ max(|lᵢ|, |uᵢ|) ≤ Q7.9 max`: every partial sum any
+//! schedule can form is a subset sum of the per-channel terms, so under
+//! that bound **no clamp can engage anywhere** and the exact interval
+//! `[Σ lᵢ, Σ uᵢ]` is sound for every engine and block decomposition.
+//! Otherwise the accumulator widens to the full Q7.9 range (sound: every
+//! schedule's final accumulator is clamped into it) and the step is
+//! flagged `acc-saturation-possible`.
+//!
+//! The scale/bias fold reuses the bit-exact [`crate::fixedpoint`]
+//! arithmetic and is monotone in the accumulator (for either sign of
+//! α), so mapping the interval endpoints is exact. Saturation verdicts
+//! are classified on the *pre-clamp* aligned value — the quantity the
+//! final Q2.9 saturation inspects.
+
+use crate::fixedpoint::{self, Q10_18, Q2_9, Q7_9};
+use crate::model::graph::{CompiledGraph, PlanConv, PlanStep};
+
+use super::{AnalysisFinding, Pass, Severity};
+
+/// A closed interval of raw fixed-point values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Inclusive lower bound.
+    pub lo: i64,
+    /// Inclusive upper bound.
+    pub hi: i64,
+}
+
+impl Interval {
+    /// `[lo, hi]`; panics if empty.
+    pub fn new(lo: i64, hi: i64) -> Interval {
+        assert!(lo <= hi, "empty interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+
+    /// The full representable Q2.9 range.
+    pub fn full_q29() -> Interval {
+        Interval { lo: Q2_9.min_raw(), hi: Q2_9.max_raw() }
+    }
+
+    /// Smallest interval containing both.
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// Whether `v` lies inside.
+    pub fn contains(&self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// Can the final Q2.9 saturation at a step engage?
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SatVerdict {
+    /// Proved: no input in the assumed range can clip.
+    Unreachable,
+    /// Some inputs may clip.
+    Possible,
+    /// Every input clips (the pre-clamp interval lies entirely outside
+    /// Q2.9 on one side).
+    Certain,
+}
+
+impl std::fmt::Display for SatVerdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SatVerdict::Unreachable => "unreachable",
+            SatVerdict::Possible => "possible",
+            SatVerdict::Certain => "certain",
+        })
+    }
+}
+
+/// Range-pass result for one step.
+#[derive(Debug, Clone)]
+pub struct NodeRange {
+    /// Step index into [`CompiledGraph::steps`].
+    pub step: usize,
+    /// The step's label.
+    pub label: String,
+    /// Output-slot interval after the step.
+    pub out: Interval,
+    /// Saturation verdict, for steps that end in a Q2.9 clamp (conv and
+    /// residual add); `None` for clamp-free host ops.
+    pub verdict: Option<SatVerdict>,
+    /// Conv only: whether the Q7.9 accumulator could clip under some
+    /// block schedule (forces the widened accumulator interval).
+    pub acc_saturation: bool,
+}
+
+/// The pre-clamp scale/bias value: [`fixedpoint::scale_bias`] minus its
+/// final Q2.9 saturation, bit-exact otherwise (Q7.9 × Q2.9 product,
+/// Q10.18 wide-sum saturation, truncating re-alignment). Monotone in
+/// `acc` for either sign of `alpha`.
+fn scale_bias_preclamp(acc_q79: i64, alpha_q29: i64, beta_q29: i64) -> i64 {
+    let (_, prod) = fixedpoint::mul(Q7_9, acc_q79, Q2_9, alpha_q29);
+    Q10_18.saturate(prod + (beta_q29 << 9)) >> 9
+}
+
+/// Classify a pre-clamp interval against the Q2.9 range.
+fn classify(pre: Interval) -> SatVerdict {
+    if pre.lo >= Q2_9.min_raw() && pre.hi <= Q2_9.max_raw() {
+        SatVerdict::Unreachable
+    } else if pre.hi < Q2_9.min_raw() || pre.lo > Q2_9.max_raw() {
+        SatVerdict::Certain
+    } else {
+        SatVerdict::Possible
+    }
+}
+
+/// Conv transfer: returns the output interval, the worst per-channel
+/// saturation verdict, and whether any channel's accumulator had to be
+/// widened.
+fn conv_transfer(cv: &PlanConv, input: Interval) -> (Interval, SatVerdict, bool) {
+    // Zero padding injects literal zeros into border windows.
+    let (a, b) = if cv.zero_pad {
+        (input.lo.min(0), input.hi.max(0))
+    } else {
+        (input.lo, input.hi)
+    };
+    let k2 = (cv.k * cv.k) as i64;
+    let kn = &cv.kernels;
+    let sb = &cv.scale_bias;
+    let mut out: Option<Interval> = None;
+    let mut worst = SatVerdict::Unreachable;
+    let mut widened = false;
+    for o in 0..kn.n_out {
+        let (mut sum_lo, mut sum_hi, mut abs_sum) = (0i64, 0i64, 0i64);
+        for i in 0..kn.n_in {
+            let mut p = 0i64;
+            for dy in 0..kn.k {
+                for dx in 0..kn.k {
+                    if kn.bit(o, i, dy, dx) {
+                        p += 1;
+                    }
+                }
+            }
+            let m = k2 - p;
+            let term_lo = p * a - m * b;
+            let term_hi = p * b - m * a;
+            sum_lo += term_lo;
+            sum_hi += term_hi;
+            abs_sum += term_lo.abs().max(term_hi.abs());
+        }
+        let acc = if abs_sum <= Q7_9.max_raw() {
+            Interval { lo: sum_lo, hi: sum_hi }
+        } else {
+            widened = true;
+            Interval { lo: Q7_9.min_raw(), hi: Q7_9.max_raw() }
+        };
+        let e0 = scale_bias_preclamp(acc.lo, sb.alpha[o], sb.beta[o]);
+        let e1 = scale_bias_preclamp(acc.hi, sb.alpha[o], sb.beta[o]);
+        let pre = Interval { lo: e0.min(e1), hi: e0.max(e1) };
+        worst = worst.max(classify(pre));
+        let clamped = Interval { lo: Q2_9.saturate(pre.lo), hi: Q2_9.saturate(pre.hi) };
+        out = Some(match out {
+            Some(acc) => acc.hull(clamped),
+            None => clamped,
+        });
+    }
+    (out.unwrap_or_else(Interval::full_q29), worst, widened)
+}
+
+/// Run the range pass: one [`NodeRange`] per step, findings for every
+/// step where saturation is not proved unreachable.
+pub(crate) fn analyze(
+    graph: &CompiledGraph,
+    input: Interval,
+    findings: &mut Vec<AnalysisFinding>,
+) -> Vec<NodeRange> {
+    let mut slots: Vec<Option<Interval>> = vec![None; graph.n_slots];
+    slots[graph.input_slot] = Some(input);
+    let mut ranges = Vec::with_capacity(graph.steps.len());
+    for (si, step) in graph.steps.iter().enumerate() {
+        let label = graph.step_labels.get(si).cloned().unwrap_or_default();
+        // A missing source interval means the graph is malformed (the
+        // liveness pass reports it); the sound fallback is full range.
+        let src_iv =
+            |s: usize| slots.get(s).copied().flatten().unwrap_or_else(Interval::full_q29);
+        let (out, verdict, acc_sat) = match step {
+            PlanStep::Conv { conv, src, .. } => {
+                let (out, v, widened) = conv_transfer(&graph.convs[*conv], src_iv(*src));
+                (out, Some(v), widened)
+            }
+            PlanStep::Relu { src, .. } => {
+                let iv = src_iv(*src);
+                (Interval { lo: iv.lo.max(0), hi: iv.hi.max(0) }, None, false)
+            }
+            PlanStep::MaxPool2 { src, .. } | PlanStep::Subsample2 { src, .. } => {
+                (src_iv(*src), None, false)
+            }
+            PlanStep::Add { srcs, .. } => {
+                // Wide sum, one Q2.9 saturation (`add_wide_saturating`):
+                // a single monotone clamp, so endpoint mapping is exact.
+                let (lo, hi) = srcs
+                    .iter()
+                    .map(|&s| src_iv(s))
+                    .fold((0i64, 0i64), |(lo, hi), iv| (lo + iv.lo, hi + iv.hi));
+                let pre = Interval { lo, hi };
+                (
+                    Interval { lo: Q2_9.saturate(lo), hi: Q2_9.saturate(hi) },
+                    Some(classify(pre)),
+                    false,
+                )
+            }
+            PlanStep::Concat { srcs, .. } => {
+                let out = srcs
+                    .iter()
+                    .map(|&s| src_iv(s))
+                    .reduce(Interval::hull)
+                    .unwrap_or_else(Interval::full_q29);
+                (out, None, false)
+            }
+        };
+        if acc_sat {
+            findings.push(AnalysisFinding {
+                pass: Pass::Range,
+                severity: Severity::Warning,
+                code: "acc-saturation-possible",
+                step: Some(si),
+                node: label.clone(),
+                detail: format!(
+                    "Q7.9 accumulator may clip under some block schedule; \
+                     widened to [{}, {}]",
+                    Q7_9.min_raw(),
+                    Q7_9.max_raw()
+                ),
+            });
+        }
+        match verdict {
+            Some(SatVerdict::Possible) => findings.push(AnalysisFinding {
+                pass: Pass::Range,
+                severity: Severity::Warning,
+                code: "saturation-possible",
+                step: Some(si),
+                node: label.clone(),
+                detail: format!("Q2.9 output clamp may engage; output interval {out}"),
+            }),
+            Some(SatVerdict::Certain) => findings.push(AnalysisFinding {
+                pass: Pass::Range,
+                severity: Severity::Error,
+                code: "saturation-certain",
+                step: Some(si),
+                node: label.clone(),
+                detail: format!(
+                    "every output value clips at the Q2.9 boundary; \
+                     output interval {out} — the layer computes a constant rail"
+                ),
+            }),
+            Some(SatVerdict::Unreachable) | None => {}
+        }
+        slots[step.dst()] = Some(out);
+        ranges.push(NodeRange { step: si, label, out, verdict, acc_saturation: acc_sat });
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::{NetworkBuilder, Weights};
+    use crate::testkit::Gen;
+
+    fn single_conv(
+        k: usize,
+        zero_pad: bool,
+        n_in: usize,
+        n_out: usize,
+        seed: u64,
+    ) -> CompiledGraph {
+        let mut g = Gen::new(seed);
+        let mut b = NetworkBuilder::new("range-ut", n_in);
+        let x = b.input();
+        let c = b.conv("conv", x, zero_pad, Weights::seeded(&mut g, n_out, n_in, k));
+        b.build(c).compile().expect("single conv compiles")
+    }
+
+    #[test]
+    fn small_inputs_prove_saturation_unreachable() {
+        let g = single_conv(3, false, 2, 4, 7);
+        let mut findings = Vec::new();
+        // ±0.05 in Q2.9: 3×3×2 windows at α = 0.05 cannot reach ±2.
+        let ranges = analyze(&g, Interval::new(-25, 25), &mut findings);
+        assert_eq!(ranges.len(), 1);
+        assert_eq!(ranges[0].verdict, Some(SatVerdict::Unreachable));
+        assert!(!ranges[0].acc_saturation);
+        assert!(findings.is_empty(), "no findings expected: {findings:?}");
+    }
+
+    #[test]
+    fn wide_accumulation_widens_and_warns() {
+        // 64 input channels of full-range pixels overflow Q7.9 on any
+        // schedule's worst case: the accumulator interval must widen.
+        let g = single_conv(3, true, 64, 2, 11);
+        let mut findings = Vec::new();
+        let ranges = analyze(&g, Interval::full_q29(), &mut findings);
+        assert!(ranges[0].acc_saturation);
+        assert!(findings.iter().any(|f| f.code == "acc-saturation-possible"));
+    }
+
+    #[test]
+    fn certain_saturation_is_an_error() {
+        // 1×1 all-plus kernel at α = 1.0 (raw 512) with β at the Q2.9
+        // ceiling: inputs in [1000, 2000] give pre-clamp values in
+        // roughly [3047, 4047] — entirely past the 2047 rail.
+        use crate::workload::{BinaryKernels, ScaleBias};
+        use std::sync::Arc;
+        let kernels = Arc::new(BinaryKernels::all_plus(1, 1, 1));
+        let sb = Arc::new(ScaleBias { alpha: vec![512], beta: vec![Q2_9.max_raw()] });
+        let mut b = NetworkBuilder::new("rail", 1);
+        let x = b.input();
+        let c = b.conv("rail-conv", x, false, Weights::new(kernels, sb));
+        let g = b.build(c).compile().expect("compiles");
+        let mut findings = Vec::new();
+        let ranges = analyze(&g, Interval::new(1000, 2000), &mut findings);
+        assert_eq!(ranges[0].verdict, Some(SatVerdict::Certain));
+        assert_eq!(ranges[0].out, Interval::new(Q2_9.max_raw(), Q2_9.max_raw()));
+        assert!(
+            findings.iter().any(|f| f.code == "saturation-certain"
+                && f.severity == Severity::Error),
+            "certain saturation must be an error finding: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn relu_clamps_lower_bound_and_concat_hulls() {
+        let mut gen = Gen::new(3);
+        let mut b = NetworkBuilder::new("hostops", 1);
+        let x = b.input();
+        let c = b.conv("c", x, true, Weights::seeded(&mut gen, 2, 1, 3));
+        let r = b.relu(c);
+        let j = b.concat("j", &[r, r]);
+        let g = b.build(j).compile().expect("compiles");
+        let mut findings = Vec::new();
+        let ranges = analyze(&g, Interval::new(-100, 100), &mut findings);
+        let relu = &ranges[1];
+        assert!(relu.out.lo >= 0, "relu floor: {:?}", relu.out);
+        let cat = &ranges[2];
+        assert_eq!(cat.out, relu.out, "concat of identical branches is the same interval");
+    }
+}

@@ -50,6 +50,8 @@ mod ticket;
 pub use error::YodannError;
 pub use ticket::{FrameResult, FrameTelemetry, FrameTicket};
 
+pub use crate::analysis::{AnalysisOptions, AnalysisReport, Preflight};
+
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -58,6 +60,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::analysis::{self, Severity};
 use crate::coordinator::blocks::plan_geometry_check;
 use crate::coordinator::metrics::sim_metrics;
 use crate::coordinator::session::{chain_compiled, panic_message, TracedFrame};
@@ -170,6 +173,7 @@ pub struct SessionBuilder {
     graph: Option<CompiledGraph>,
     weights: Option<Vec<Weights>>,
     fault: Option<FaultPlan>,
+    preflight: Preflight,
     deferred_err: Option<YodannError>,
 }
 
@@ -194,6 +198,7 @@ impl SessionBuilder {
             graph: None,
             weights: None,
             fault: None,
+            preflight: Preflight::Off,
             deferred_err: None,
         }
     }
@@ -318,18 +323,49 @@ impl SessionBuilder {
         self
     }
 
-    /// Validate everything and spin up the session (worker pool +
-    /// dispatcher thread). Every failure is a typed [`YodannError`];
-    /// nothing is spawned unless the whole configuration is runnable.
-    pub fn build(self) -> Result<Yodann, YodannError> {
-        if let Some(e) = self.deferred_err {
-            return Err(e);
+    /// What to do with static-analyzer findings at [`build`] time:
+    /// nothing (default), print them to stderr, or refuse the build on
+    /// any error-severity finding. The build-time run analyzes without
+    /// a frame geometry (frame sizes are only known at submission), so
+    /// it covers the range, liveness and lock passes; run
+    /// [`analyze`](Self::analyze) with [`AnalysisOptions::shape`] for
+    /// the geometry contracts too.
+    ///
+    /// [`build`]: Self::build
+    pub fn preflight(mut self, mode: Preflight) -> SessionBuilder {
+        self.preflight = mode;
+        self
+    }
+
+    /// Run the static analyzer over this builder's configuration
+    /// without building (or consuming) anything: the same model
+    /// lowering as [`build`](Self::build) — graph passthrough or chain
+    /// shim, `weights()` override applied — handed to
+    /// [`analysis::analyze_graph`] together with the builder's chip,
+    /// shard policy and worker count.
+    pub fn analyze(&self, opts: &AnalysisOptions) -> Result<AnalysisReport, YodannError> {
+        let plan = self.lowered_plan()?;
+        Ok(analysis::analyze_graph(
+            &plan,
+            &self.cfg,
+            Some((&self.policy, self.workers.max(1))),
+            opts,
+        ))
+    }
+
+    /// Lower the configured model to one compiled plan: a graph was
+    /// compiled (and type-checked) by `graph()`; a chain gets the
+    /// historical eager checks, then the shim lowering; `weights()`
+    /// overrides every conv layer's parameters in plan order —
+    /// caller-supplied (e.g. trained) weights over a seeded topology —
+    /// with the layer geometry re-checked. Shared front half of
+    /// [`build`](Self::build) and [`analyze`](Self::analyze).
+    fn lowered_plan(&self) -> Result<CompiledGraph, YodannError> {
+        if let Some(e) = &self.deferred_err {
+            return Err(e.clone());
         }
-        // Lower the model to one compiled plan: a graph was compiled
-        // (and type-checked) by `graph()`; a chain gets the historical
-        // eager checks here, then the shim lowering.
-        let mut plan: CompiledGraph = match self.graph {
-            Some(cg) => cg,
+        let mut plan: CompiledGraph = match &self.graph {
+            Some(cg) => cg.clone(),
             None => {
                 if self.specs.is_empty() {
                     return Err(YodannError::NoLayers);
@@ -353,10 +389,7 @@ impl SessionBuilder {
                 chain_compiled(&self.specs)
             }
         };
-        // `weights()` overrides every conv layer's parameters in plan
-        // order — caller-supplied (e.g. trained) weights over a seeded
-        // topology — with the layer geometry re-checked.
-        if let Some(ws) = self.weights {
+        if let Some(ws) = &self.weights {
             if ws.len() != plan.convs.len() {
                 return Err(YodannError::WeightsArity {
                     given: ws.len(),
@@ -390,10 +423,18 @@ impl SessionBuilder {
                     }
                     .at_layer(li));
                 }
-                c.kernels = w.kernels;
-                c.scale_bias = w.scale_bias;
+                c.kernels = Arc::clone(&w.kernels);
+                c.scale_bias = Arc::clone(&w.scale_bias);
             }
         }
+        Ok(plan)
+    }
+
+    /// Validate everything and spin up the session (worker pool +
+    /// dispatcher thread). Every failure is a typed [`YodannError`];
+    /// nothing is spawned unless the whole configuration is runnable.
+    pub fn build(self) -> Result<Yodann, YodannError> {
+        let plan = self.lowered_plan()?;
         if self.workers == 0 {
             return Err(YodannError::InvalidConfig {
                 what: "workers must be >= 1 (0 requested)".into(),
@@ -421,6 +462,40 @@ impl SessionBuilder {
             // per-frame height check, which `validate_frame` walks with
             // the real frame at submission time.
             plan_geometry_check(&self.cfg, c.k, true, 1).map_err(|e| e.at_layer(li))?;
+        }
+        // Optional static-analysis preflight (range, liveness, locks —
+        // geometry contracts need a frame shape and run per-submission).
+        if self.preflight != Preflight::Off {
+            let report = analysis::analyze_graph(
+                &plan,
+                &self.cfg,
+                Some((&self.policy, self.workers)),
+                &AnalysisOptions::default(),
+            );
+            match self.preflight {
+                Preflight::Off => {}
+                Preflight::Warn => {
+                    for f in &report.findings {
+                        eprintln!("yodann preflight [{}]: {f}", report.net);
+                    }
+                }
+                Preflight::Refuse => {
+                    if report.has_errors() {
+                        let n = report.count_at(Severity::Error);
+                        let first = report
+                            .findings
+                            .iter()
+                            .find(|f| f.severity == Severity::Error)
+                            .map(|f| f.to_string())
+                            .unwrap_or_default();
+                        return Err(YodannError::InvalidConfig {
+                            what: format!(
+                                "preflight analysis found {n} error finding(s); first: {first}"
+                            ),
+                        });
+                    }
+                }
+            }
         }
         let first = &plan.convs[0];
         let dual = self

@@ -30,7 +30,7 @@ use std::sync::{Arc, Mutex};
 use super::blocks::{check_width_geometry, plan_layer, tile_row_skip, LayerWorkload};
 use crate::engine::{
     BitplaneRaster, BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional,
-    LayerData, PackedKernels,
+    FunctionalSimd, LayerData, PackedKernels,
 };
 use crate::fixedpoint::{scale_bias, Q7_9};
 use crate::hw::{ChipConfig, ChipStats};
@@ -82,6 +82,10 @@ pub fn run_layer_engine(
         EngineKind::CycleAccurate => run_layer(wl, cfg, opts),
         EngineKind::Functional => run_layer_with(wl, cfg, opts, Functional::new),
         EngineKind::FunctionalPerWindow => run_layer_with(wl, cfg, opts, Functional::per_window),
+        EngineKind::FunctionalSimd => run_layer_with(wl, cfg, opts, FunctionalSimd::new),
+        EngineKind::FunctionalSimdScalar => {
+            run_layer_with(wl, cfg, opts, FunctionalSimd::forced_scalar)
+        }
     }
 }
 
@@ -236,16 +240,7 @@ where
             let tx = tx.clone();
             s.spawn(move || {
                 let mut engine = make();
-                loop {
-                    let item = queue.lock().unwrap().pop();
-                    match item {
-                        Some((idx, plan)) => {
-                            let result = engine.run_plan(data, &plan);
-                            tx.send((idx, plan, result)).unwrap();
-                        }
-                        None => break,
-                    }
-                }
+                drain_queue(&mut engine, data, &queue, &tx);
             });
         }
         drop(tx);
@@ -253,6 +248,34 @@ where
     let mut collected: Vec<(usize, BlockPlan, EngineOutput)> = rx.into_iter().collect();
     collected.sort_by_key(|(i, _, _)| *i);
     collected.into_iter().map(|(_, p, r)| (p, r)).collect()
+}
+
+/// One worker's pool loop: pop block plans until the queue drains.
+///
+/// Failure tolerance mirrors the session's worker pool: a poisoned
+/// queue mutex (a sibling panicked mid-`pop` under `catch_unwind`
+/// supervision) is recovered with `into_inner` — the plan list is a
+/// plain `Vec`, valid regardless of where the panic landed — and a
+/// disconnected result channel (the collector is gone) stops the worker
+/// instead of panicking the whole layer.
+fn drain_queue<E: ConvEngine>(
+    engine: &mut E,
+    data: &LayerData<'_>,
+    queue: &Mutex<Vec<(usize, BlockPlan)>>,
+    tx: &mpsc::Sender<(usize, BlockPlan, EngineOutput)>,
+) {
+    loop {
+        let item = queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner).pop();
+        match item {
+            Some((idx, plan)) => {
+                let result = engine.run_plan(data, &plan);
+                if tx.send((idx, plan, result)).is_err() {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +385,43 @@ mod tests {
         let b = run_layer(&w, &cfg, ExecOptions { workers: 4 });
         assert_eq!(a.output, b.output);
         assert_eq!(a.stats.cycles.total(), b.stats.cycles.total());
+    }
+
+    #[test]
+    fn drain_queue_recovers_from_poison_and_disconnect() {
+        let cfg = ChipConfig::tiny(4);
+        let w = wl(3, 4, 4, 8, 8, 99);
+        let data = w.as_layer_data(None);
+        let plan = BlockPlan::whole(w.k, w.zero_pad, 4, 4, w.input.h);
+
+        // Poison the queue mutex the way a panicking sibling under
+        // catch_unwind supervision would.
+        let queue = Arc::new(Mutex::from(vec![(0usize, plan), (1usize, plan)]));
+        {
+            let q = Arc::clone(&queue);
+            let _ = std::thread::spawn(move || {
+                let _guard = q.lock();
+                panic!("poison the plan queue");
+            })
+            .join();
+        }
+        assert!(queue.is_poisoned());
+        let (tx, rx) = mpsc::channel();
+        let mut engine = CycleAccurate::new(cfg);
+        drain_queue(&mut engine, &data, &queue, &tx);
+        drop(tx);
+        // Both plans drained through the poisoned lock, results intact.
+        assert_eq!(rx.into_iter().count(), 2);
+
+        // A disconnected collector must stop the worker, not panic it.
+        let queue = Mutex::from(vec![(0usize, plan)]);
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        drain_queue(&mut engine, &data, &queue, &tx);
+        assert!(
+            queue.lock().unwrap_or_else(std::sync::PoisonError::into_inner).is_empty(),
+            "the worker must consume the queue even with the collector gone"
+        );
     }
 
     #[test]

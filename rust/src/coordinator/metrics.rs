@@ -68,12 +68,12 @@ pub fn sharded_metrics(
     v: f64,
     dual_stream: bool,
 ) -> SimMetrics {
-    assert!(!per_shard.is_empty(), "sharded_metrics needs at least one shard");
-    per_shard
-        .iter()
-        .map(|s| sim_metrics(s, arch, v, dual_stream))
-        .reduce(|a, b| a.merge_parallel(&b))
-        .unwrap()
+    let mut it = per_shard.iter().map(|s| sim_metrics(s, arch, v, dual_stream));
+    let first = match it.next() {
+        Some(m) => m,
+        None => panic!("sharded_metrics needs at least one shard"),
+    };
+    it.fold(first, |a, b| a.merge_parallel(&b))
 }
 
 impl SimMetrics {

@@ -32,6 +32,12 @@
 //!   (Θ, TOp/s/W, FPS, J/frame) for cross-validation against the
 //!   analytic model of [`crate::model::efficiency`].
 
+// The serving path runs through this layer on every frame: like fault/,
+// api/ and serve/, it must not panic on a recoverable condition.
+// Invariant violations that *should* stop the world use explicit
+// panic!/unreachable! with a message, never unwrap/expect.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod blocks;
 pub mod executor;
 #[cfg(feature = "golden")]

@@ -147,11 +147,15 @@ impl SessionLayerSpec {
             // is half of this row's.
             if let Some(next) = convs.get(idx + 1) {
                 if next.h * 2 == c.h {
-                    specs.last_mut().unwrap().maxpool2 = true;
+                    if let Some(last) = specs.last_mut() {
+                        last.maxpool2 = true;
+                    }
                 }
             }
         }
-        specs.last_mut().unwrap().relu = false;
+        if let Some(last) = specs.last_mut() {
+            last.relu = false;
+        }
         Ok(specs)
     }
 }
@@ -561,8 +565,9 @@ impl NetworkSession {
     #[deprecated(note = "submit through `yodann::api::Yodann` for tickets and telemetry")]
     pub fn run_frame(&mut self, frame: Image) -> Image {
         #[allow(deprecated)]
-        {
-            self.run_batch(vec![frame]).pop().unwrap()
+        match self.run_batch(vec![frame]).pop() {
+            Some(out) => out,
+            None => unreachable!("run_batch returns one output per frame"),
         }
     }
 
@@ -713,7 +718,7 @@ impl NetworkSession {
         for (si, step) in plan.steps.iter().enumerate() {
             let out: Arc<Image> = match step {
                 PlanStep::Conv { conv, src, .. } => {
-                    let x = Arc::clone(slots[*src].as_ref().expect("topological order"));
+                    let x = Arc::clone(slot_ref(&slots, *src));
                     let y = self.run_conv_sharded(
                         fidx,
                         *conv,
@@ -731,31 +736,31 @@ impl NetworkSession {
                     // unwrap mutates in place (zero-copy, like the
                     // pre-graph epilogue); clone only on fan-out.
                     let arc = if plan.free_after[si].contains(src) {
-                        slots[*src].take().expect("topological order")
+                        slot_take(&mut slots, *src)
                     } else {
-                        Arc::clone(slots[*src].as_ref().expect("topological order"))
+                        Arc::clone(slot_ref(&slots, *src))
                     };
                     let mut y = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
                     relu_inplace(&mut y);
                     Arc::new(y)
                 }
                 PlanStep::MaxPool2 { src, .. } => {
-                    Arc::new(maybe_maxpool2(slots[*src].as_ref().expect("topological order")))
+                    Arc::new(maybe_maxpool2(slot_ref(&slots, *src)))
                 }
                 PlanStep::Subsample2 { src, .. } => {
-                    Arc::new(subsample2(slots[*src].as_ref().expect("topological order")))
+                    Arc::new(subsample2(slot_ref(&slots, *src)))
                 }
                 PlanStep::Add { srcs, .. } => {
                     let imgs: Vec<&Image> = srcs
                         .iter()
-                        .map(|&s| &**slots[s].as_ref().expect("topological order"))
+                        .map(|&s| &**slot_ref(&slots, s))
                         .collect();
                     Arc::new(add_wide_saturating(&imgs))
                 }
                 PlanStep::Concat { srcs, .. } => {
                     let imgs: Vec<&Image> = srcs
                         .iter()
-                        .map(|&s| &**slots[s].as_ref().expect("topological order"))
+                        .map(|&s| &**slot_ref(&slots, s))
                         .collect();
                     Arc::new(concat_channels(&imgs))
                 }
@@ -765,7 +770,7 @@ impl NetworkSession {
                 slots[f] = None;
             }
         }
-        let out = slots[plan.output_slot].take().expect("plan writes its output");
+        let out = take_output(&mut slots, plan.output_slot);
         Ok(TracedFrame {
             output: Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()),
             stats: frame_stats,
@@ -1145,7 +1150,7 @@ fn run_frame_inner(
     for (si, step) in plan.steps.iter().enumerate() {
         let out = match step {
             PlanStep::Conv { conv, src, .. } => {
-                let x = slots[*src].as_ref().expect("topological order");
+                let x = slot_ref(&slots, *src);
                 run_conv_layer(
                     cfg,
                     engine,
@@ -1166,27 +1171,27 @@ fn run_frame_inner(
                 // the historical zero-copy behavior; cloning is only
                 // needed for graphs that fan the value out further.
                 let mut y = if plan.free_after[si].contains(src) {
-                    slots[*src].take().expect("topological order")
+                    slot_take(&mut slots, *src)
                 } else {
-                    slots[*src].clone().expect("topological order")
+                    slot_ref(&slots, *src).clone()
                 };
                 relu_inplace(&mut y);
                 y
             }
             PlanStep::MaxPool2 { src, .. } => {
-                maybe_maxpool2(slots[*src].as_ref().expect("topological order"))
+                maybe_maxpool2(slot_ref(&slots, *src))
             }
             PlanStep::Subsample2 { src, .. } => {
-                subsample2(slots[*src].as_ref().expect("topological order"))
+                subsample2(slot_ref(&slots, *src))
             }
             PlanStep::Add { srcs, .. } => {
                 let imgs: Vec<&Image> =
-                    srcs.iter().map(|&s| slots[s].as_ref().expect("topological order")).collect();
+                    srcs.iter().map(|&s| slot_ref(&slots, s)).collect();
                 add_wide_saturating(&imgs)
             }
             PlanStep::Concat { srcs, .. } => {
                 let imgs: Vec<&Image> =
-                    srcs.iter().map(|&s| slots[s].as_ref().expect("topological order")).collect();
+                    srcs.iter().map(|&s| slot_ref(&slots, s)).collect();
                 concat_channels(&imgs)
             }
         };
@@ -1196,7 +1201,7 @@ fn run_frame_inner(
         }
     }
     Ok(TracedFrame {
-        output: slots[plan.output_slot].take().expect("plan writes its output"),
+        output: take_output(&mut slots, plan.output_slot),
         stats,
         fault: fault_report,
     })
@@ -1273,6 +1278,35 @@ fn run_conv_layer(
         reduce_block(acc, spec.zero_pad, spec.k, out_h, out_w, plan, &r.output);
     }
     Ok(finalize_output(acc, single_in_block, &spec.scale_bias, n_out, out_h, out_w))
+}
+
+/// Read a live slot of the step interpreters' slot store. The
+/// compiler's topological order guarantees every source is written
+/// before its first read and freed only after its last
+/// (`compute_free_after`); `analysis::liveness` proves the same
+/// discipline statically per graph. A `None` is therefore a plan bug —
+/// the historical panic text is kept.
+fn slot_ref<T>(slots: &[Option<T>], s: usize) -> &T {
+    match slots[s].as_ref() {
+        Some(v) => v,
+        None => panic!("topological order"),
+    }
+}
+
+/// Steal a slot's value on its last use (zero-copy epilogue mutation).
+fn slot_take<T>(slots: &mut [Option<T>], s: usize) -> T {
+    match slots[s].take() {
+        Some(v) => v,
+        None => panic!("topological order"),
+    }
+}
+
+/// Take the finished output slot once the program ends.
+fn take_output<T>(slots: &mut [Option<T>], s: usize) -> T {
+    match slots[s].take() {
+        Some(v) => v,
+        None => panic!("plan writes its output"),
+    }
 }
 
 /// Quantized ReLU (`max(0, ·)` on raw Q2.9), the host interlude between

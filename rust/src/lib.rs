@@ -14,6 +14,12 @@
 //!   per-frame telemetry (cycles, energy, Θ, power envelope) on every
 //!   result. This is the intended front door; the coordinator's session
 //!   API beneath it is deprecated.
+//! * [`analysis`] — the static plan verifier: abstract interpretation of
+//!   a compiled graph's step program (Q2.9 interval/saturation analysis,
+//!   slot-store lifetime proofs, block/shard geometry contracts, a
+//!   lock-order registry) emitting typed findings before a frame runs —
+//!   surfaced as `yodann analyze`, `SessionBuilder::analyze()` and a
+//!   build-time preflight knob.
 //! * [`hw`] — a cycle-accurate, bit-true simulator of the chip: filter bank,
 //!   latch-based SCM image memory (6×8 banks), sliding-window image bank,
 //!   SoP units with multi-kernel support, ChannelSummers, Scale-Bias unit,
@@ -70,6 +76,7 @@
 // style exemption.
 #![allow(clippy::needless_range_loop)]
 
+pub mod analysis;
 pub mod api;
 pub mod bench;
 pub mod cli;

@@ -10,6 +10,7 @@
 //! yodann figure <2|6|11|12|13>        regenerate a paper figure's series
 //! yodann sweep [--points 13]          voltage sweep (Fig. 11 data)
 //! yodann throughput [--net id ...]    batch frames through a NetworkSession (frames/s)
+//! yodann analyze [--net id]           static plan verifier (range/liveness/contracts/locks)
 //! yodann faults [--net id --corner v] fault-injection sweep (detection/corruption vs corner)
 //! yodann serve --scenario burst --budget-mw 1.0   power-aware serving daemon (DVFS governor)
 //! yodann networks                     list known networks
@@ -18,6 +19,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use yodann::analysis::{AnalysisOptions, Interval, SatVerdict, Severity};
 use yodann::api::{SessionBuilder, Yodann, YodannError};
 use yodann::bench::{merge_json, validate_records, JsonRecord};
 use yodann::cli::Args;
@@ -29,7 +31,11 @@ use yodann::fault::{bit_error_rate, FaultPlan, LiveBer};
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
 use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph};
 use yodann::power::{ArchId, CorePowerModel};
-use yodann::report::{figures, paper, table::fmt, tables};
+use yodann::report::{
+    figures, paper,
+    table::{fmt, Table},
+    tables,
+};
 use yodann::serve::{self, GovernorConfig, GovernorMode, Scenario, ServeConfig, TickTrace};
 use yodann::testkit::Gen;
 use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
@@ -63,6 +69,7 @@ fn main() {
         "golden" => cmd_golden(&args),
         "sweep" => cmd_sweep(&args),
         "throughput" => cmd_throughput(&args),
+        "analyze" => cmd_analyze(&args),
         "faults" => cmd_faults(&args),
         "serve" => cmd_serve(&args),
         "networks" => cmd_networks(),
@@ -112,6 +119,19 @@ fn print_help() {
          \x20                             Non-chain networks (alexnet, resnet18,\n\
          \x20                             resnet34) run through their graph encodings\n\
          \x20                             (§IV-D 11x11 split, residual shortcuts).\n\
+         \x20 analyze [--net id] [--shards NxM | --bands N] [--workers 4]\n\
+         \x20         [--h H --w W] [--scale 1.0] [--seed 42]\n\
+         \x20                             static plan verifier: prove range/saturation,\n\
+         \x20                             slot liveness, block/shard geometry contracts and\n\
+         \x20                             the lock-order registry over each network's\n\
+         \x20                             compiled plan without running a frame. Without\n\
+         \x20                             --net, analyzes every accepted network (graphs\n\
+         \x20                             included) at its nominal frame size. Prints a\n\
+         \x20                             findings table plus the SCM-occupancy report\n\
+         \x20                             section (peak live slot-store vs the chip's\n\
+         \x20                             image-memory sizing), merges analysis records\n\
+         \x20                             into BENCH_engines.json, and exits non-zero\n\
+         \x20                             when any error-severity finding survives.\n\
          \x20 faults [--net bc-cifar10] [--corner 0.6] [--frames 4] [--scale 0.25]\n\
          \x20        [--workers 2] [--seed 42]\n\
          \x20                             seeded fault-injection sweep: per corner, derive\n\
@@ -716,6 +736,163 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         let total = merge_json(path, "engines", &merged_records)
             .map_err(|e| format!("merging records into {path}: {e}"))?;
         println!("  merged {} records into {path} ({total} total)", merged_records.len());
+    }
+    Ok(())
+}
+
+/// Static plan verifier: run all four analyzer passes (range/saturation
+/// intervals, slot liveness, block/shard geometry contracts, lock-order
+/// registry) over each network's compiled plan — graphs included —
+/// without executing a frame. Prints per-network summaries, a findings
+/// table, and the SCM-occupancy report section; merges analysis records
+/// into `BENCH_engines.json`; exits non-zero when any error-severity
+/// finding survives.
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
+    let scale = args.get_f64("scale", 1.0)?;
+    if scale.is_nan() || scale <= 0.0 {
+        return Err("--scale must be positive".into());
+    }
+    let shards: Option<ShardGrid> = match args.options.get("shards") {
+        None => None,
+        Some(s) => Some(
+            ShardGrid::parse(s)
+                .ok_or_else(|| format!("--shards '{s}' is not N or NxM (stripes x groups)"))?,
+        ),
+    };
+    let bands: Option<usize> = match args.options.get("bands") {
+        None => None,
+        Some(s) => Some(
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--bands '{s}' is not a band count (0 = one per worker)"))?,
+        ),
+    };
+    if shards.is_some() && bands.is_some() {
+        return Err("--shards and --bands are mutually exclusive".into());
+    }
+    let policy = match (shards, bands) {
+        (Some(grid), _) => ShardPolicy::PerShard(grid),
+        (_, Some(n)) => ShardPolicy::RowBands(n),
+        // The serving default: Auto stripes small batches across the
+        // pool, so the contracts pass proves that grid's plans too.
+        _ => ShardPolicy::Auto,
+    };
+    let ids: Vec<String> = match args.options.get("net") {
+        Some(id) => vec![id.clone()],
+        None => networks::ACCEPTED.iter().map(|s| s.to_string()).collect(),
+    };
+    let cfg = ChipConfig::yodann();
+    println!(
+        "static plan verifier: {} network(s), {policy}, {workers} workers, chip {}x{}",
+        ids.len(),
+        cfg.n_ch,
+        cfg.n_ch
+    );
+    let mut findings_table = Table::new(
+        "Analyzer findings",
+        &["net", "severity", "pass/code", "step", "node", "detail"],
+    );
+    let mut scm_rows: Vec<tables::ScmOccupancyRow> = Vec::new();
+    let mut records: Vec<JsonRecord> = Vec::new();
+    let mut n_errors = 0usize;
+    for id in &ids {
+        let net = lookup_network(id)?;
+        // Same model lowering as `throughput`: chains through the
+        // historical spec path, non-chain networks (alexnet, resnets)
+        // through their graph encodings.
+        let model = match SessionLayerSpec::synthetic_network(&net, seed) {
+            Ok(specs) => NetModel::Chain(specs),
+            Err(e) => match networks::graph_network(id, seed) {
+                Some(g) => NetModel::Graph(g),
+                None => return Err(e.into()),
+            },
+        };
+        let h = args.get_usize("h", ((net.img.0 as f64 * scale).round() as usize).max(16))?;
+        let w = args.get_usize("w", ((net.img.1 as f64 * scale).round() as usize).max(16))?;
+        let b = SessionBuilder::new().chip(cfg).workers(workers).shard_policy(policy);
+        let b = match &model {
+            NetModel::Chain(specs) => b.layers(specs.clone()),
+            NetModel::Graph(g) => b.graph(g),
+        };
+        let report = b
+            .analyze(&AnalysisOptions { input: Interval::full_q29(), shape: Some((h, w)) })
+            .map_err(|e| format!("{id}: {e}"))?;
+        let verdicts = |v: SatVerdict| {
+            report.ranges.iter().filter(|r| r.verdict == Some(v)).count()
+        };
+        println!(
+            "  {id} ({h}x{w}): {} steps, {} convs — saturation unreachable {} / possible {} \
+             / certain {}; contracts: {} blocks, {} shards; findings: {} error, {} warning",
+            report.ranges.len(),
+            report.contracts.convs_checked,
+            verdicts(SatVerdict::Unreachable),
+            verdicts(SatVerdict::Possible),
+            verdicts(SatVerdict::Certain),
+            report.contracts.blocks_checked,
+            report.contracts.shards_checked,
+            report.count_at(Severity::Error),
+            report.count_at(Severity::Warning),
+        );
+        for f in &report.findings {
+            let mut detail = f.detail.clone();
+            if detail.len() > 72 {
+                detail.truncate(69);
+                detail.push_str("...");
+            }
+            findings_table.row(vec![
+                id.to_string(),
+                f.severity.to_string(),
+                format!("{}/{}", f.pass, f.code),
+                f.step.map(|s| s.to_string()).unwrap_or_default(),
+                f.node.clone(),
+                detail,
+            ]);
+        }
+        n_errors += report.count_at(Severity::Error);
+        if let Some(words) = report.liveness.peak_words {
+            scm_rows.push(tables::ScmOccupancyRow {
+                net: id.to_string(),
+                img: (h, w),
+                peak_slots: report.liveness.peak_slots,
+                peak_words: words,
+            });
+            push_nonzero(
+                &mut records,
+                format!("analysis/{id}/peak-slot-kib"),
+                words as f64 * 12.0 / 8.0 / 1024.0,
+            );
+            push_nonzero(
+                &mut records,
+                format!("analysis/{id}/scm-occupancy"),
+                words as f64 / paper::headline::SCM_WORDS as f64,
+            );
+        }
+        push_nonzero(
+            &mut records,
+            format!("analysis/{id}/findings-warning"),
+            report.count_at(Severity::Warning) as f64,
+        );
+    }
+    if findings_table.is_empty() {
+        println!("\nno findings — all proofs passed.");
+    } else {
+        println!("\n{}", findings_table.render());
+    }
+    if !scm_rows.is_empty() {
+        println!("{}", tables::scm_occupancy_table(&cfg, &scm_rows).render());
+    }
+    if !records.is_empty() {
+        validate_records(&records)
+            .map_err(|e| format!("analysis records failed validation: {e}"))?;
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+        let total = merge_json(path, "engines", &records)
+            .map_err(|e| format!("merging records into {path}: {e}"))?;
+        println!("merged {} records into {path} ({total} total)", records.len());
+    }
+    if n_errors > 0 {
+        return Err(format!("{n_errors} error-severity finding(s) — see the table above"));
     }
     Ok(())
 }

@@ -26,6 +26,11 @@ pub mod headline {
     pub const EFF_GAIN_VS_Q29_0V8: f64 = 11.6;
     /// SCM vs SRAM memory power reduction at 1.2 V.
     pub const SCM_VS_SRAM: f64 = 3.25;
+    /// On-chip image-memory capacity per the floorplan (§V): 6 column
+    /// slots × 8 row-groups × 128 rows = 6144 12-bit words — the
+    /// "9.2 kB" SCM bank matrix. (§III's streaming argument needs a 7th
+    /// resident column slot; see [`crate::hw::ChipConfig::mem_columns`].)
+    pub const SCM_WORDS: usize = 6144;
 }
 
 /// A Table I column: fixed-point Q2.9 vs binary at 8×8 channels.

@@ -205,6 +205,57 @@ pub fn table45(corner: Corner) -> Table {
     t
 }
 
+/// One network's peak slot-store footprint, as measured by the static
+/// analyzer's liveness pass (`yodann analyze` assembles these rows).
+#[derive(Debug, Clone)]
+pub struct ScmOccupancyRow {
+    /// Network id.
+    pub net: String,
+    /// Frame geometry analyzed.
+    pub img: (usize, usize),
+    /// Peak number of simultaneously-live activation slots.
+    pub peak_slots: usize,
+    /// Peak live activation words across those slots.
+    pub peak_words: usize,
+}
+
+/// Report section: per-network peak live activation memory (the host
+/// slot store the coordinator holds between layers, proved by the
+/// liveness pass) against the chip's SCM sizing. The on-chip image
+/// memory holds one tile of one layer (`image_mem_rows × mem_columns`
+/// words), so the ratio is the off-chip working set the Eq. 9 tiling
+/// implies the host must carry.
+pub fn scm_occupancy_table(cfg: &crate::hw::ChipConfig, rows: &[ScmOccupancyRow]) -> Table {
+    let chip_words = cfg.image_mem_rows * cfg.mem_columns;
+    // 12-bit Q2.9 words, decimal kB to match the paper's "9.2 kB".
+    let kb = |words: usize| words as f64 * 12.0 / 8.0 / 1000.0;
+    let mut t = Table::new(
+        "SCM occupancy: peak live slot-store vs on-chip image memory (12-bit words)",
+        &["Network", "img", "peak slots", "peak kWords", "peak kB", "x chip SCM", "x paper SCM"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.net.clone(),
+            format!("{}x{}", r.img.0, r.img.1),
+            r.peak_slots.to_string(),
+            fmt(r.peak_words as f64 / 1e3, 1),
+            fmt(kb(r.peak_words), 1),
+            fmt(r.peak_words as f64 / chip_words as f64, 1),
+            fmt(r.peak_words as f64 / paper::headline::SCM_WORDS as f64, 1),
+        ]);
+    }
+    t.note(&format!(
+        "chip SCM: {} rows x {} column slots = {} words ({} kB modeled); paper floorplan: {} words (9.2 kB).",
+        cfg.image_mem_rows,
+        cfg.mem_columns,
+        chip_words,
+        fmt(kb(chip_words), 1),
+        paper::headline::SCM_WORDS,
+    ));
+    t.note("x columns: peak host slot-store words over the named SCM capacity.");
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,5 +355,23 @@ mod tests {
     fn table45_renders_both_corners() {
         assert_eq!(table45(Corner::energy_optimal()).len(), 7);
         assert_eq!(table45(Corner::throughput_optimal()).len(), 7);
+    }
+
+    #[test]
+    fn scm_occupancy_table_prices_the_ratio() {
+        // One row at exactly the paper's SCM capacity: the paper ratio
+        // column must print 1.0 and the kB column the floorplan's 9.2.
+        let rows = vec![ScmOccupancyRow {
+            net: "bc-cifar10".into(),
+            img: (32, 32),
+            peak_slots: 2,
+            peak_words: paper::headline::SCM_WORDS,
+        }];
+        let t = scm_occupancy_table(&crate::hw::ChipConfig::yodann(), &rows);
+        assert_eq!(t.len(), 1);
+        let s = t.render();
+        assert!(s.contains("bc-cifar10"));
+        assert!(s.contains("9.2"), "{s}");
+        assert!(s.contains("1.0"), "{s}");
     }
 }

@@ -1,0 +1,244 @@
+//! Analyzer-vs-runtime agreement: the static passes of
+//! `yodann::analysis` must be *sound* with respect to what the engines
+//! and the serving session actually do.
+//!
+//! * Range soundness — for fuzzed single-conv layers, every output
+//!   pixel produced by **every** engine lies inside the analyzer's
+//!   interval, and an `acc_saturation: false` proof means the
+//!   cycle-accurate ChannelSummers never clip.
+//! * Liveness — every compiled graph the builder can lower (all
+//!   `networks::ACCEPTED` ids plus fuzzer-built DAGs) is
+//!   lifetime-clean: no use-after-free, no leak.
+//! * Contracts — a geometry the analyzer refutes is a frame the
+//!   session refuses; a geometry it proves runs end-to-end, inside the
+//!   analyzer's output bounds.
+
+use std::sync::Arc;
+
+use yodann::analysis::{analyze_graph, AnalysisOptions, Interval, Pass, Severity};
+use yodann::api::SessionBuilder;
+use yodann::coordinator::{run_layer_engine, ExecOptions, LayerWorkload, SessionLayerSpec};
+use yodann::engine::EngineKind;
+use yodann::fixedpoint::Q2_9;
+use yodann::hw::ChipConfig;
+use yodann::model::graph::{NetworkBuilder, Weights};
+use yodann::model::networks;
+use yodann::testkit::{property, Gen};
+use yodann::workload::{random_image, BinaryKernels, Image, ScaleBias};
+
+/// The exact sample interval `random_image` draws from at `amplitude`.
+fn image_interval(amplitude: f64) -> Interval {
+    let hi = ((Q2_9.max_raw() as f64) * amplitude) as i64;
+    Interval::new((-hi).min(-1), hi.max(1))
+}
+
+#[test]
+fn range_analysis_is_sound_for_every_engine() {
+    let cfg = ChipConfig::yodann();
+    property("range-soundness-vs-engines", 0x9a11, 24, |g| {
+        let k = [1usize, 2, 3, 5, 7][g.range_i64(0, 4) as usize];
+        let zero_pad = g.bool();
+        let n_in = g.range_i64(1, 4) as usize;
+        let n_out = g.range_i64(1, 4) as usize;
+        let h = k + g.range_i64(0, 5) as usize;
+        let w = k + g.range_i64(0, 5) as usize;
+        let amp = [0.02, 0.3, 1.0][g.range_i64(0, 2) as usize];
+
+        let kernels = BinaryKernels::random(g, n_out, n_in, k);
+        let sb = ScaleBias::random(g, n_out);
+
+        let mut b = NetworkBuilder::new("range-sound", n_in);
+        let x = b.input();
+        let c = b.conv(
+            "c0",
+            x,
+            zero_pad,
+            Weights::new(Arc::new(kernels.clone()), Arc::new(sb.clone())),
+        );
+        let graph = b.build(c).compile().expect("single conv compiles");
+
+        let opts = AnalysisOptions { input: image_interval(amp), shape: Some((h, w)) };
+        let report = analyze_graph(&graph, &cfg, None, &opts);
+        assert!(
+            !report
+                .findings
+                .iter()
+                .any(|f| f.pass == Pass::Liveness || f.pass == Pass::Contracts),
+            "single conv must be lifetime/geometry clean: {:?}",
+            report.findings
+        );
+        let range = report.ranges.last().expect("conv range computed");
+
+        let wl = LayerWorkload {
+            k,
+            zero_pad,
+            input: random_image(g, n_in, h, w, amp),
+            kernels,
+            scale_bias: sb,
+        };
+        for kind in EngineKind::ALL {
+            let run = run_layer_engine(&wl, &cfg, ExecOptions { workers: 2 }, kind);
+            for &v in &run.output.data {
+                assert!(
+                    range.out.contains(v),
+                    "{kind:?} produced {v} outside the analyzed interval {} \
+                     (k={k}, pad={zero_pad}, {n_in}->{n_out} ch, {h}x{w}, amp={amp})",
+                    range.out
+                );
+            }
+            if !range.acc_saturation {
+                assert_eq!(
+                    run.stats.summer_saturations, 0,
+                    "{kind:?} saturated a summer the analyzer proved clean \
+                     (k={k}, pad={zero_pad}, {n_in}->{n_out} ch, amp={amp})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn every_accepted_network_analyzes_without_errors() {
+    for &id in networks::ACCEPTED {
+        let net = networks::network(id).expect("accepted id resolves");
+        // The CLI's lowering: chain when the network chains, the graph
+        // encoding (AlexNet's kernel split, ResNet shortcuts) otherwise.
+        let builder = match SessionLayerSpec::synthetic_network(&net, 42) {
+            Ok(specs) => SessionBuilder::new().workers(3).layers(specs),
+            Err(_) => {
+                let g = networks::graph_network(id, 42)
+                    .expect("non-chain networks carry a graph encoding");
+                SessionBuilder::new().workers(3).graph(&g)
+            }
+        };
+        let (h, w) = net.img;
+        let opts = AnalysisOptions { input: Interval::full_q29(), shape: Some((h, w)) };
+        let report = builder.analyze(&opts).expect("accepted networks lower");
+        assert!(
+            !report.has_errors(),
+            "{id}: analyzer found errors: {:?}",
+            report
+                .findings
+                .iter()
+                .filter(|f| f.severity == Severity::Error)
+                .collect::<Vec<_>>()
+        );
+        // All four passes actually ran: the default Auto policy lowers
+        // to a worker-stripe grid, so shard proofs are included.
+        assert!(!report.contracts.skipped, "{id}: contracts must run at a known shape");
+        assert!(report.contracts.convs_checked > 0, "{id}: no convs checked");
+        assert!(report.contracts.shards_checked > 0, "{id}: Auto policy must prove shards");
+        assert!(!report.ranges.is_empty(), "{id}: range pass produced nothing");
+        assert!(
+            report.liveness.peak_words.is_some(),
+            "{id}: peak memory needs the completed shape walk"
+        );
+    }
+}
+
+#[test]
+fn fuzzed_dags_are_lifetime_clean() {
+    let cfg = ChipConfig::yodann();
+    property("dag-liveness", 0xda61, 60, |g| {
+        let n_in = 1 + g.range_i64(0, 3) as usize;
+        let mut b = NetworkBuilder::new("fuzz-dag", n_in);
+        let x = b.input();
+        // (node, channels, consumed) — all ops here preserve the map
+        // size (zero-padded convs only), so any two nodes can combine.
+        let mut nodes = vec![(x, n_in, false)];
+        for step in 0..3 + g.range_i64(0, 5) {
+            let i = g.range_i64(0, nodes.len() as i64 - 1) as usize;
+            let (src, src_ch, _) = nodes[i];
+            let node = match g.range_i64(0, 3) {
+                0 => {
+                    let n_out = 1 + g.range_i64(0, 5) as usize;
+                    let k = [1usize, 3, 5][g.range_i64(0, 2) as usize];
+                    let w = Weights::seeded(g, n_out, src_ch, k);
+                    (b.conv(&format!("c{step}"), src, true, w), n_out)
+                }
+                1 => (b.relu(src), src_ch),
+                2 => {
+                    // Residual add needs matching channels; j == i
+                    // (doubling) is a legal degenerate case.
+                    let j = (0..nodes.len())
+                        .filter(|&j| nodes[j].1 == src_ch)
+                        .max()
+                        .unwrap_or(i);
+                    nodes[j].2 = true;
+                    (b.add(&format!("a{step}"), &[src, nodes[j].0]), src_ch)
+                }
+                _ => {
+                    let j = g.range_i64(0, nodes.len() as i64 - 1) as usize;
+                    nodes[j].2 = true;
+                    (b.concat(&format!("k{step}"), &[src, nodes[j].0]), src_ch + nodes[j].1)
+                }
+            };
+            nodes[i].2 = true;
+            nodes.push((node.0, node.1, false));
+        }
+        // Fold every unconsumed node into the output so the graph has
+        // no dead branches (the compiler would reject them).
+        let leaves: Vec<_> = nodes.iter().filter(|n| !n.2).map(|n| n.0).collect();
+        let out = if leaves.len() == 1 { leaves[0] } else { b.concat("out", &leaves) };
+        let graph = b.build(out).compile().expect("fuzzed DAG compiles");
+
+        let report = analyze_graph(&graph, &cfg, None, &AnalysisOptions::default());
+        let lifetime: Vec<_> =
+            report.findings.iter().filter(|f| f.pass == Pass::Liveness).collect();
+        assert!(lifetime.is_empty(), "compiled DAG must be lifetime-clean: {lifetime:?}");
+        assert!(
+            (1..=report.liveness.n_slots).contains(&report.liveness.peak_slots),
+            "peak {} out of range for {} slots",
+            report.liveness.peak_slots,
+            report.liveness.n_slots
+        );
+    });
+}
+
+#[test]
+fn contract_errors_agree_with_the_session() {
+    let mut g = Gen::new(7);
+    let mut b = NetworkBuilder::new("agree", 2);
+    let x = b.input();
+    let c = b.conv("c0", x, false, Weights::seeded(&mut g, 3, 2, 5));
+    let ng = b.build(c);
+
+    // Refuted: a valid-mode k=5 conv has no output rows on a 3-row
+    // frame. The analyzer proves it; the session refuses the frame.
+    let builder = SessionBuilder::new().workers(1).graph(&ng);
+    let opts = AnalysisOptions { input: Interval::full_q29(), shape: Some((3, 16)) };
+    let report = builder.analyze(&opts).expect("graph lowers");
+    assert!(
+        report
+            .findings
+            .iter()
+            .any(|f| f.pass == Pass::Contracts && f.severity == Severity::Error),
+        "h < k must be refuted statically: {:?}",
+        report.findings
+    );
+    let mut session = builder.build().expect("build is frame-shape independent");
+    assert!(
+        session.submit(Image::zeros(2, 3, 16)).is_err(),
+        "the session must refuse the frame the analyzer refuted"
+    );
+    drop(session);
+
+    // Proved: the same net at a workable geometry runs end-to-end, and
+    // the frame's outputs respect the analyzer's interval.
+    let builder = SessionBuilder::new().workers(1).graph(&ng);
+    let opts = AnalysisOptions { input: image_interval(1.0), shape: Some((16, 16)) };
+    let report = builder.analyze(&opts).expect("graph lowers");
+    assert!(
+        !report.findings.iter().any(|f| f.pass == Pass::Contracts),
+        "16x16 must prove clean: {:?}",
+        report.findings
+    );
+    let out_range = report.ranges.last().expect("conv range").out;
+    let mut session = builder.build().expect("proved geometry builds");
+    let results = session
+        .run_batch(vec![random_image(&mut g, 2, 16, 16, 1.0)])
+        .expect("proved geometry runs");
+    for &v in &results[0].output.data {
+        assert!(v >= out_range.lo && v <= out_range.hi, "output {v} escapes {out_range}");
+    }
+}
