@@ -3,6 +3,23 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+echo "== guard: every rust/tests/ file is a [[test]] target in Cargo.toml =="
+# Cargo.toml sets autotests = false (targets are explicit), so a new
+# integration-test file that nobody registers would silently never run.
+# Fail loudly instead.
+missing=0
+for f in rust/tests/*.rs; do
+    name="$(basename "$f" .rs)"
+    if ! grep -Eq "name[[:space:]]*=[[:space:]]*\"$name\"" rust/Cargo.toml; then
+        echo "ERROR: $f has no [[test]] target named \"$name\" in rust/Cargo.toml"
+        missing=1
+    fi
+done
+if [ "$missing" -ne 0 ]; then
+    echo "register the file(s) above as [[test]] targets (autotests = false)"
+    exit 1
+fi
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
@@ -91,6 +108,16 @@ cargo run --release -- analyze --net bc-cifar10 --bands 3
 
 echo "== CLI smoke: SIMD engine + row-band schedule through yodann throughput =="
 cargo run --release -- throughput --engine simd --frames 2 --workers 2 --bands 2
+
+echo "== CLI smoke: XNOR engine family + mixed-precision chain =="
+# The binary-activation family end to end (bit-identity within the
+# family), then the per-layer precision knob: a BWN stem with a binary
+# trunk routed onto the XNOR companion engines.
+cargo run --release -- throughput --engine xnor --frames 2 --workers 2
+cargo run --release -- throughput --engine xnor-all --frames 2 --workers 2
+cargo run --release -- throughput --engine both --frames 2 --workers 2 --precision multi-bit,binary,binary
+# The derived accelerator-generation table renders.
+cargo run --release -- table xnor
 
 echo "== CLI smoke: near-threshold fault sweep through yodann faults =="
 cargo run --release -- faults --net bc-cifar10 --corner 0.6 --frames 2

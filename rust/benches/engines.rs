@@ -17,13 +17,16 @@
 use yodann::api::SessionBuilder;
 use yodann::bench::{black_box, emit_json_strict, Bencher, JsonRecord};
 use yodann::coordinator::{NetworkSession, SessionLayerSpec, ShardGrid, ShardPolicy};
-use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional, FunctionalSimd};
+use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional, FunctionalSimd, Xnor, XnorSimd};
 use yodann::fault::{FaultPlan, LiveBer};
 use yodann::serve::{self, GovernorAction, GovernorMode, Scenario, ServeConfig};
 use yodann::hw::{BlockJob, ChipConfig};
-use yodann::model::networks;
+use yodann::model::{networks, Precision};
+use yodann::power::xnor::{activation_words, ACTIVATION_PLANES_BWN, ACTIVATION_PLANES_XNOR};
 use yodann::testkit::Gen;
-use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, ScaleBias};
+use yodann::workload::{
+    random_image, reference_xnor_conv, synthetic_scene, BinaryKernels, Image, ScaleBias,
+};
 
 fn block(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> BlockJob {
     let mut g = Gen::new(seed);
@@ -125,6 +128,51 @@ fn main() {
     records.push(JsonRecord::from_stats(&ss));
     records.push(JsonRecord::ratio("speedup/simd-vs-raster", simd_speedup));
 
+    // The XNOR family's A/B: binary-activation engines carry one sign
+    // plane per (channel, row) instead of 12 bitplanes, so the window
+    // gather touches 1/12 the words and the SoP is a single
+    // XNOR+popcount. Outputs intentionally differ from the multi-bit
+    // family — they are checked against the naive sign reference
+    // instead (n_in = 32 = one input block, so the blocked reduction
+    // is exact).
+    println!("== xnor (binary activations) vs bitplane raster (k=3) ==");
+    let mut xnor = Xnor::new();
+    let mut xnor_simd = XnorSimd::new();
+    let mut xnor_scalar = XnorSimd::forced_scalar();
+    let want = reference_xnor_conv(&job.image, &job.kernels, &job.scale_bias, job.zero_pad);
+    assert_eq!(xnor.run_block(&job).output, want, "xnor diverges from the sign reference");
+    assert_eq!(xnor_simd.run_block(&job).output, want, "xnor-simd diverges");
+    assert_eq!(xnor_scalar.run_block(&job).output, want, "xnor-simd-scalar diverges");
+    assert_ne!(
+        want,
+        fun.run_block(&job).output,
+        "the precision families must be distinguishable on this workload"
+    );
+    let sx = b.bench("xnor/k3_32to64_16x16", || {
+        black_box(xnor.run_block(&job));
+    });
+    let sxv = b.bench("xnor-simd/k3_32to64_16x16", || {
+        black_box(xnor_simd.run_block(&job));
+    });
+    let xnor_speedup = sr.mean.as_secs_f64() / sx.mean.as_secs_f64();
+    println!("  -> xnor speedup over 12-plane raster: {xnor_speedup:.2}x\n");
+    records.push(JsonRecord::from_stats(&sx));
+    records.push(JsonRecord::from_stats(&sxv));
+    records.push(JsonRecord::ratio("xnor/speedup-vs-raster", xnor_speedup));
+    // The structural half of that win, pinned as its own record: the
+    // activation words the two modes keep resident for this geometry.
+    let words_bwn = activation_words(32, 16, 16, 3, true, ACTIVATION_PLANES_BWN);
+    let words_xnor = activation_words(32, 16, 16, 3, true, ACTIVATION_PLANES_XNOR);
+    println!(
+        "  activation residency 32x16x16 k3: {words_xnor} words (XNOR) vs {words_bwn} (BWN)"
+    );
+    records.push(JsonRecord::ratio("xnor/activation-words-bwn", words_bwn as f64));
+    records.push(JsonRecord::ratio("xnor/activation-words-xnor", words_xnor as f64));
+    records.push(JsonRecord::ratio(
+        "xnor/activation-words-reduction",
+        words_bwn as f64 / words_xnor as f64,
+    ));
+
     // End-to-end batched traffic through the serving facade: the
     // scene-labeling chain (the paper's power-simulation workload) at
     // reduced frame size, one batch per worker-pool fan-out. The
@@ -191,6 +239,51 @@ fn main() {
         assert_eq!(&session_outputs[0], other, "session engines diverge");
     }
     println!("session outputs bit-identical across engines (and to the deprecated path)");
+
+    // Mixed-precision serving: the same chain with a BWN stem and a
+    // binary trunk (layer 1 keeps Q2.9 activations, every later layer
+    // runs on the XNOR companion). The record tracks what the
+    // precision knob buys end-to-end through the facade against the
+    // all-BWN functional run above.
+    println!("== mixed-precision serving (BWN stem -> BNN trunk, scene-labeling chain) ==");
+    let mut mixed_precision = vec![Precision::Binary; specs.len()];
+    mixed_precision[0] = Precision::MultiBit;
+    let mut mixed = SessionBuilder::new()
+        .chip(cfg)
+        .layers(specs.clone())
+        .engine(EngineKind::Functional)
+        .workers(4)
+        .shard_policy(ShardPolicy::PerFrame)
+        .max_in_flight(n_frames)
+        .precision(mixed_precision)
+        .build()
+        .expect("a valid mixed-precision session");
+    // Differs from the all-BWN stream (the trunk really binarized) but
+    // is itself deterministic: two fresh runs must agree bit-for-bit.
+    let mixed_out: Vec<Image> = mixed
+        .run_batch(frames.clone())
+        .expect("mixed batch runs")
+        .into_iter()
+        .map(|r| r.output)
+        .collect();
+    assert_ne!(mixed_out, session_outputs[0], "the binary trunk must actually binarize");
+    let mixed_again: Vec<Image> = mixed
+        .run_batch(frames.clone())
+        .expect("mixed batch reruns")
+        .into_iter()
+        .map(|r| r.output)
+        .collect();
+    assert_eq!(mixed_out, mixed_again, "mixed-precision serving must be deterministic");
+    let sm = b.bench(&format!("session/mixed-precision/batch{n_frames}"), || {
+        black_box(mixed.run_batch(frames.clone()).expect("mixed batch runs"));
+    });
+    println!(
+        "  -> {:.2} frames/s with the binary trunk ({} of {} layers XNOR)\n",
+        n_frames as f64 / sm.mean.as_secs_f64(),
+        specs.len() - 1,
+        specs.len()
+    );
+    records.push(JsonRecord::with_frames(&sm, n_frames as f64));
 
     // The fault subsystem's off-path contract: a session with an
     // armed-but-disabled FaultPlan must serve bit-identical frames and

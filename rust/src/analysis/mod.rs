@@ -266,7 +266,7 @@ pub(crate) fn step_geometry(
                     None => None,
                 }
             }
-            PlanStep::Relu { .. } => srcs[0],
+            PlanStep::Relu { .. } | PlanStep::BatchNormThreshold { .. } => srcs[0],
             PlanStep::MaxPool2 { .. } => srcs[0].map(|(c, sh, sw)| {
                 if sh >= 2 && sw >= 2 {
                     (c, sh / 2, sw / 2)

@@ -27,8 +27,9 @@
 //! are classified on the *pre-clamp* aligned value — the quantity the
 //! final Q2.9 saturation inspects.
 
+use crate::engine::BINARY_ONE;
 use crate::fixedpoint::{self, Q10_18, Q2_9, Q7_9};
-use crate::model::graph::{CompiledGraph, PlanConv, PlanStep};
+use crate::model::graph::{CompiledGraph, PlanConv, PlanStep, Precision};
 
 use super::{AnalysisFinding, Pass, Severity};
 
@@ -200,8 +201,25 @@ pub(crate) fn analyze(
             |s: usize| slots.get(s).copied().flatten().unwrap_or_else(Interval::full_q29);
         let (out, verdict, acc_sat) = match step {
             PlanStep::Conv { conv, src, .. } => {
-                let (out, v, widened) = conv_transfer(&graph.convs[*conv], src_iv(*src));
+                let cv = &graph.convs[*conv];
+                // A binary (XNOR) conv binarizes every input sample to
+                // ±1 (raw ±BINARY_ONE) before the sum-of-products, so
+                // the incoming interval collapses to the binary rails
+                // whatever the source step produced — and zero padding
+                // injects +1, already inside those rails.
+                let iv = if cv.precision == Precision::Binary {
+                    Interval::new(-BINARY_ONE, BINARY_ONE)
+                } else {
+                    src_iv(*src)
+                };
+                let (out, v, widened) = conv_transfer(cv, iv);
                 (out, Some(v), widened)
+            }
+            PlanStep::BatchNormThreshold { src, .. } => {
+                // Exact transfer: every output sample is ±BINARY_ONE
+                // whichever side of its threshold the input lands on.
+                let _ = src_iv(*src);
+                (Interval::new(-BINARY_ONE, BINARY_ONE), None, false)
             }
             PlanStep::Relu { src, .. } => {
                 let iv = src_iv(*src);
@@ -341,6 +359,35 @@ mod tests {
                 && f.severity == Severity::Error),
             "certain saturation must be an error finding: {findings:?}"
         );
+    }
+
+    #[test]
+    fn threshold_and_binary_conv_collapse_to_the_rails() {
+        use std::sync::Arc;
+        let mut gen = Gen::new(13);
+        let mut b = NetworkBuilder::new("bnn-range", 2);
+        let x = b.input();
+        let stem = b.conv("stem", x, true, Weights::seeded(&mut gen, 3, 2, 3));
+        let bnt = b.batch_norm_threshold("bnt", stem, Arc::new(vec![0; 3]));
+        let trunk = b.conv_with_precision(
+            "trunk",
+            bnt,
+            true,
+            Weights::seeded(&mut gen, 2, 3, 3),
+            Precision::Binary,
+        );
+        let g = b.build(trunk).compile().expect("compiles");
+        let mut findings = Vec::new();
+        let ranges = analyze(&g, Interval::new(-25, 25), &mut findings);
+        // The threshold step lands exactly on the binary rails, with no
+        // clamp of its own.
+        assert_eq!(ranges[1].out, Interval::new(-BINARY_ONE, BINARY_ONE));
+        assert_eq!(ranges[1].verdict, None);
+        // The binary conv's transfer saw the rails (not the stem's
+        // small interval): its output is bounded by k²·n_in·512 per
+        // channel folded through α/β — just assert it's a valid Q2.9
+        // interval and that the analysis ran without widening panic.
+        assert!(ranges[2].out.lo >= Q2_9.min_raw() && ranges[2].out.hi <= Q2_9.max_raw());
     }
 
     #[test]

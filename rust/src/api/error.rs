@@ -56,6 +56,24 @@ pub enum YodannError {
         /// Output channels of the kernel set.
         n_out: usize,
     },
+    /// A [`BatchNormThreshold`] node whose per-channel threshold arity
+    /// does not match its source's channel count.
+    ///
+    /// [`BatchNormThreshold`]: crate::model::graph::GraphOp::BatchNormThreshold
+    ThresholdArity {
+        /// Threshold entries provided.
+        thresholds: usize,
+        /// Channels of the source feature map.
+        channels: usize,
+    },
+    /// [`SessionBuilder::precision`](super::SessionBuilder::precision)
+    /// supplied the wrong number of per-layer precision entries.
+    PrecisionArity {
+        /// Precision entries supplied.
+        given: usize,
+        /// Conv layers the network has.
+        layers: usize,
+    },
     /// Consecutive layers disagree on their channel count.
     ChannelChainMismatch {
         /// Channels the previous layer produces.
@@ -317,6 +335,15 @@ impl std::fmt::Display for YodannError {
             YodannError::ScaleBiasArity { alphas, n_out } => write!(
                 f,
                 "scale/bias arity mismatch: {alphas} entries for {n_out} output channels"
+            ),
+            YodannError::ThresholdArity { thresholds, channels } => write!(
+                f,
+                "threshold arity mismatch: {thresholds} entries for {channels} channels"
+            ),
+            YodannError::PrecisionArity { given, layers } => write!(
+                f,
+                "precision() supplied {given} per-layer entries for a network of {layers} conv \
+                 layers"
             ),
             YodannError::ChannelChainMismatch { prev_out, n_in } => write!(
                 f,

@@ -68,7 +68,7 @@ use crate::coordinator::{NetworkSession, SessionLayerSpec, ShardPolicy};
 use crate::engine::EngineKind;
 use crate::fault::FaultPlan;
 use crate::hw::ChipConfig;
-use crate::model::graph::{CompiledGraph, NetworkGraph, Weights};
+use crate::model::graph::{CompiledGraph, NetworkGraph, Precision, Weights};
 use crate::model::{Corner, Network};
 use crate::power::{calib, MultiChipPower};
 use crate::workload::Image;
@@ -172,6 +172,7 @@ pub struct SessionBuilder {
     specs: Vec<SessionLayerSpec>,
     graph: Option<CompiledGraph>,
     weights: Option<Vec<Weights>>,
+    precision: Option<Vec<Precision>>,
     fault: Option<FaultPlan>,
     preflight: Preflight,
     deferred_err: Option<YodannError>,
@@ -197,6 +198,7 @@ impl SessionBuilder {
             specs: Vec::new(),
             graph: None,
             weights: None,
+            precision: None,
             fault: None,
             preflight: Preflight::Off,
             deferred_err: None,
@@ -257,6 +259,23 @@ impl SessionBuilder {
     /// [`SessionBuilder::build`] into typed errors.
     pub fn weights(mut self, weights: Vec<Weights>) -> SessionBuilder {
         self.weights = Some(weights);
+        self
+    }
+
+    /// Override every conv layer's [`Precision`] in layer (step) order:
+    /// [`Precision::Binary`] layers run on the session engine's XNOR
+    /// companion (binarized ±1 activations, 1 raster plane instead of
+    /// 12), [`Precision::MultiBit`] layers on the engine as configured —
+    /// the per-layer knob behind BWN-stem / BNN-trunk mixed-precision
+    /// networks. Arity is validated at [`SessionBuilder::build`]
+    /// ([`YodannError::PrecisionArity`]). Graphs built with
+    /// [`NetworkBuilder::conv_with_precision`] carry their precision
+    /// already; this override replaces it wholesale.
+    ///
+    /// [`NetworkBuilder::conv_with_precision`]:
+    ///     crate::model::NetworkBuilder::conv_with_precision
+    pub fn precision(mut self, precision: Vec<Precision>) -> SessionBuilder {
+        self.precision = Some(precision);
         self
     }
 
@@ -425,6 +444,17 @@ impl SessionBuilder {
                 }
                 c.kernels = Arc::clone(&w.kernels);
                 c.scale_bias = Arc::clone(&w.scale_bias);
+            }
+        }
+        if let Some(ps) = &self.precision {
+            if ps.len() != plan.convs.len() {
+                return Err(YodannError::PrecisionArity {
+                    given: ps.len(),
+                    layers: plan.convs.len(),
+                });
+            }
+            for (c, p) in plan.convs.iter_mut().zip(ps) {
+                c.precision = *p;
             }
         }
         Ok(plan)
@@ -665,6 +695,23 @@ impl Yodann {
     /// Operating corner the telemetry is currently priced at.
     pub fn corner(&self) -> Corner {
         lock_pricing(&self.pricing).corner
+    }
+
+    /// Fraction of conv layers this session runs on the binary
+    /// (XNOR) datapath — [`Precision::Binary`] layers plus everything
+    /// when the main engine itself is an XNOR kind (binary engines run
+    /// every layer binary). The serve governor blends its core-power
+    /// pricing between the BWN and derived XNOR models by this
+    /// fraction.
+    pub fn binary_layer_fraction(&self) -> f64 {
+        if self.plan.convs.is_empty() {
+            return 0.0;
+        }
+        if self.engine.is_binary() {
+            return 1.0;
+        }
+        let n = self.plan.convs.iter().filter(|c| c.precision == Precision::Binary).count();
+        n as f64 / self.plan.convs.len() as f64
     }
 
     /// The whole-session power envelope frames are currently priced

@@ -47,6 +47,7 @@ impl LayerWorkload {
             kernels: &self.kernels,
             packed,
             raster: None,
+            binary: None,
             scale_bias: &self.scale_bias,
         }
     }

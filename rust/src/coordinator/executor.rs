@@ -29,8 +29,8 @@ use std::sync::{Arc, Mutex};
 
 use super::blocks::{check_width_geometry, plan_layer, tile_row_skip, LayerWorkload};
 use crate::engine::{
-    BitplaneRaster, BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput, Functional,
-    FunctionalSimd, LayerData, PackedKernels,
+    BinaryRaster, BitplaneRaster, BlockPlan, ConvEngine, CycleAccurate, EngineKind, EngineOutput,
+    Functional, FunctionalSimd, LayerData, PackedKernels, Xnor, XnorSimd,
 };
 use crate::fixedpoint::{scale_bias, Q7_9};
 use crate::hw::{ChipConfig, ChipStats};
@@ -86,6 +86,9 @@ pub fn run_layer_engine(
         EngineKind::FunctionalSimdScalar => {
             run_layer_with(wl, cfg, opts, FunctionalSimd::forced_scalar)
         }
+        EngineKind::Xnor => run_layer_with(wl, cfg, opts, Xnor::new),
+        EngineKind::XnorSimd => run_layer_with(wl, cfg, opts, XnorSimd::new),
+        EngineKind::XnorSimdScalar => run_layer_with(wl, cfg, opts, XnorSimd::forced_scalar),
     }
 }
 
@@ -125,8 +128,14 @@ where
         r.pack(&wl.input, wl.k, wl.zero_pad);
         r
     });
+    let binary = engine0.wants_binary_raster().then(|| {
+        let mut r = BinaryRaster::new();
+        r.pack(&wl.input, wl.k, wl.zero_pad);
+        r
+    });
     let mut data = wl.as_layer_data(packed.as_ref());
     data.raster = raster.as_ref();
+    data.binary = binary.as_ref();
 
     let results = run_plans(&data, plans, opts, &make, &mut engine0);
 
@@ -282,7 +291,9 @@ fn drain_queue<E: ConvEngine>(
 mod tests {
     use super::*;
     use crate::testkit::Gen;
-    use crate::workload::{random_image, reference_conv, BinaryKernels, ScaleBias};
+    use crate::workload::{
+        random_image, reference_conv, reference_xnor_conv, BinaryKernels, ScaleBias,
+    };
 
     fn wl(k: usize, n_in: usize, n_out: usize, h: usize, w: usize, seed: u64) -> LayerWorkload {
         let mut g = Gen::new(seed);
@@ -375,6 +386,23 @@ mod tests {
         let mut w = wl(5, 2, 3, 12, 3, 88); // w = 3 < k = 5
         w.zero_pad = false;
         run_layer(&w, &cfg, ExecOptions { workers: 1 });
+    }
+
+    #[test]
+    fn xnor_engines_match_the_sign_reference_through_the_executor() {
+        // Single input block (n_in = n_ch = 4), so the on-chip Q7.9 α/β
+        // path applies and the monolithic sign reference holds exactly —
+        // across the whole XNOR family, tiled and parallel.
+        let mut cfg = ChipConfig::tiny(4);
+        cfg.image_mem_rows = 16 * 4; // h_max = 16: forces row tiles at h = 20
+        for k in [1usize, 3, 5, 7] {
+            let w = wl(k, 4, 6, 20, 9, 12 + k as u64);
+            let want = reference_xnor_conv(&w.input, &w.kernels, &w.scale_bias, true);
+            for kind in EngineKind::XNOR {
+                let run = run_layer_engine(&w, &cfg, ExecOptions { workers: 3 }, kind);
+                assert_eq!(run.output, want, "engine {} k {k}", kind.name());
+            }
+        }
     }
 
     #[test]

@@ -68,11 +68,12 @@ use super::shard::{plan_layer_shards, shard_block_plans, ShardGrid, ShardPolicy}
 use crate::api::YodannError;
 use crate::fault::{FaultPlan, FaultReport, FaultSite};
 use crate::engine::{
-    BitplaneRaster, BlockPlan, ConvEngine, EngineKind, EngineOutput, LayerData, PackedKernels,
+    BinaryRaster, BitplaneRaster, BlockPlan, ConvEngine, EngineKind, EngineOutput, LayerData,
+    PackedKernels, BINARY_ONE,
 };
 use crate::fixedpoint::Q2_9;
 use crate::hw::{ChipConfig, ChipStats};
-use crate::model::graph::{compute_free_after, CompiledGraph, PlanConv, PlanStep};
+use crate::model::graph::{compute_free_after, CompiledGraph, PlanConv, PlanStep, Precision};
 use crate::model::Network;
 use crate::testkit::Gen;
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -204,7 +205,11 @@ impl SessionPlan {
         let mut weight_faults = FaultReport::default();
         let mut convs = Vec::with_capacity(cg.convs.len());
         for (li, conv) in cg.convs.into_iter().enumerate() {
-            let packed = if kind.wants_packed() {
+            // Binary layers always consume packed kernels, whatever the
+            // session's main engine wants: the XNOR companion engine a
+            // mixed-precision session routes them to has no materializing
+            // fallback path.
+            let packed = if kind.wants_packed() || conv.precision == Precision::Binary {
                 let mut pk = PackedKernels::pack(&conv.kernels);
                 if let Some(f) = fault.as_ref().filter(|f| f.injects_weights()) {
                     let mut flips = f.corrupt_weights(&mut pk, li as u64, 0);
@@ -261,6 +266,7 @@ pub(crate) fn chain_compiled(specs: &[SessionLayerSpec]) -> CompiledGraph {
             kernels: Arc::clone(&s.kernels),
             scale_bias: Arc::clone(&s.scale_bias),
             label: format!("conv{i}"),
+            precision: Precision::MultiBit,
         });
         steps.push(PlanStep::Conv { conv: i, src: slot, dst: next });
         step_labels.push(format!("conv{i}"));
@@ -293,16 +299,64 @@ pub(crate) fn chain_compiled(specs: &[SessionLayerSpec]) -> CompiledGraph {
     }
 }
 
+/// The engine kind that actually runs a layer: a [`Precision::Binary`]
+/// layer routes to the session kind's XNOR companion
+/// ([`EngineKind::binary_companion`] — SIMD dispatch preserved, e.g.
+/// `FunctionalSimd` → `XnorSimd`); multi-bit layers run the session
+/// kind as-is. A session whose main kind is already binary runs
+/// *every* layer binary (a binary kind is its own companion).
+fn effective_kind(kind: EngineKind, precision: Precision) -> EngineKind {
+    match precision {
+        Precision::Binary => kind.binary_companion(),
+        Precision::MultiBit => kind,
+    }
+}
+
+/// A worker's engine set for mixed-precision programs: the session's
+/// main engine plus the lazily built XNOR companion the first binary
+/// layer brings up. All-one-precision sessions never build the second
+/// engine.
+struct WorkerEngines {
+    cfg: ChipConfig,
+    kind: EngineKind,
+    main: Box<dyn ConvEngine>,
+    companion: Option<Box<dyn ConvEngine>>,
+}
+
+impl WorkerEngines {
+    fn new(cfg: ChipConfig, kind: EngineKind) -> WorkerEngines {
+        WorkerEngines { cfg, kind, main: kind.build(cfg), companion: None }
+    }
+
+    /// The engine a layer of `precision` runs on.
+    fn for_precision(&mut self, precision: Precision) -> &mut dyn ConvEngine {
+        let eff = effective_kind(self.kind, precision);
+        if eff == self.kind {
+            &mut *self.main
+        } else {
+            &mut **self.companion.get_or_insert_with(|| eff.build(self.cfg))
+        }
+    }
+
+    /// Rebuild everything after a panic left mid-frame garbage behind.
+    fn rebuild(&mut self) {
+        self.main = self.kind.build(self.cfg);
+        self.companion = None;
+    }
+}
+
 /// Owned, `Arc`-shared view of the layer currently being sharded across
 /// the pool: what a worker rebuilds a [`LayerData`] from. Activations
-/// (`input`, `raster`) are shared, never copied per shard.
+/// (`input`, `raster`, `binary`) are shared, never copied per shard.
 struct ShardLayer {
     k: usize,
     zero_pad: bool,
+    precision: Precision,
     input: Arc<Image>,
     kernels: Arc<BinaryKernels>,
     packed: Option<Arc<PackedKernels>>,
     raster: Option<Arc<BitplaneRaster>>,
+    binary: Option<Arc<BinaryRaster>>,
     scale_bias: Arc<ScaleBias>,
 }
 
@@ -315,6 +369,7 @@ impl ShardLayer {
             kernels: &self.kernels,
             packed: self.packed.as_deref(),
             raster: self.raster.as_deref(),
+            binary: self.binary.as_deref(),
             scale_bias: &self.scale_bias,
         }
     }
@@ -381,9 +436,11 @@ pub struct NetworkSession {
     respawns: u64,
     /// Caller-side scratch for the sharded schedule: the per-layer
     /// raster every shard reads (swapped out while a layer is in
-    /// flight, reclaimed through `Arc::try_unwrap` afterwards) and the
-    /// wide stitch accumulator.
+    /// flight, reclaimed through `Arc::try_unwrap` afterwards), its
+    /// single-plane twin for binary (XNOR) layers, and the wide stitch
+    /// accumulator.
     shard_raster: Option<BitplaneRaster>,
+    shard_binary: Option<BinaryRaster>,
     shard_acc: Vec<i64>,
 }
 
@@ -488,6 +545,7 @@ impl NetworkSession {
             shard_job: 0,
             respawns: 0,
             shard_raster: Some(BitplaneRaster::new()),
+            shard_binary: Some(BinaryRaster::new()),
             shard_acc: Vec::new(),
         })
     }
@@ -559,6 +617,12 @@ impl NetworkSession {
     /// renewed growth).
     pub fn shard_raster_reallocs(&self) -> u64 {
         self.shard_raster.as_ref().map_or(u64::MAX, |r| r.reallocs())
+    }
+
+    /// The binary-raster twin of [`Self::shard_raster_reallocs`], for
+    /// sessions whose sharded layers run in XNOR mode.
+    pub fn shard_binary_reallocs(&self) -> u64 {
+        self.shard_binary.as_ref().map_or(u64::MAX, |r| r.reallocs())
     }
 
     /// Run one frame through the whole network.
@@ -744,6 +808,19 @@ impl NetworkSession {
                     relu_inplace(&mut y);
                     Arc::new(y)
                 }
+                PlanStep::BatchNormThreshold { thresholds, src, .. } => {
+                    // Same steal-on-last-use discipline as ReLU: the
+                    // binarization mutates in place when this step owns
+                    // the map.
+                    let arc = if plan.free_after[si].contains(src) {
+                        slot_take(&mut slots, *src)
+                    } else {
+                        Arc::clone(slot_ref(&slots, *src))
+                    };
+                    let mut y = Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone());
+                    threshold_inplace(&mut y, thresholds);
+                    Arc::new(y)
+                }
                 PlanStep::MaxPool2 { src, .. } => {
                     Arc::new(maybe_maxpool2(slot_ref(&slots, *src)))
                 }
@@ -811,8 +888,11 @@ impl NetworkSession {
         // reusable scratch; every shard reads it through the Arc.
         // Packing happens *in place* so a panic mid-pack (e.g. the
         // Q2.9 range debug_assert) leaves the scratch owned by the
-        // session instead of dropped with the unwind.
-        let raster = if self.engine.wants_raster() {
+        // session instead of dropped with the unwind. Binary layers
+        // route to the session kind's XNOR companion, which reads the
+        // single-plane binary raster instead of the 12-plane one.
+        let eff = effective_kind(self.engine, spec.precision);
+        let raster = if eff.wants_raster() {
             let r = self.shard_raster.get_or_insert_with(BitplaneRaster::new);
             r.pack(&x, spec.k, spec.zero_pad);
             if let Some(f) = fault.filter(|f| f.injects_raster_faults()) {
@@ -832,14 +912,36 @@ impl NetworkSession {
         } else {
             None
         };
+        let binary = if eff.wants_binary_raster() {
+            let r = self.shard_binary.get_or_insert_with(BinaryRaster::new);
+            r.pack(&x, spec.k, spec.zero_pad);
+            if let Some(f) = fault.filter(|f| f.injects_raster_faults()) {
+                let halo_rows =
+                    halo_exchange_rows(grid, out_h, n_out, spec.k, r.padded_dims().0);
+                inject_binary_faults(
+                    f,
+                    r,
+                    |r| r.pack(&x, spec.k, spec.zero_pad),
+                    fidx,
+                    li,
+                    &halo_rows,
+                    report,
+                )?;
+            }
+            Some(Arc::new(std::mem::take(r)))
+        } else {
+            None
+        };
         let shards = plan_layer_shards(grid, out_h, n_out);
         let sl = Arc::new(ShardLayer {
             k: spec.k,
             zero_pad: spec.zero_pad,
+            precision: spec.precision,
             input: Arc::clone(&x),
             kernels: Arc::clone(&spec.kernels),
             packed: layer.packed.clone(),
             raster: raster.clone(),
+            binary: binary.clone(),
             scale_bias: Arc::clone(&spec.scale_bias),
         });
         self.shard_job += 1;
@@ -916,6 +1018,11 @@ impl NetworkSession {
                 self.shard_raster = Some(r);
             }
         }
+        if let Some(arc) = binary {
+            if let Ok(r) = Arc::try_unwrap(arc) {
+                self.shard_binary = Some(r);
+            }
+        }
         if let Some(e) = first_err {
             self.shard_acc = acc;
             return Err(YodannError::WorkerPanicked {
@@ -972,13 +1079,15 @@ fn worker_loop(
     tx_out: &Sender<Reply>,
     plan: &SessionPlan,
 ) {
-    let mut engine = kind.build(cfg);
+    let mut engines = WorkerEngines::new(cfg, kind);
     let mut acc: Vec<i64> = Vec::new();
     // Per-worker raster scratch for the per-frame schedule, repacked
     // once per (frame, layer) and reused across frames — steady-state
     // serving of same-geometry traffic allocates nothing here. (The
-    // sharded schedule shares one caller-side raster instead.)
+    // sharded schedule shares one caller-side raster instead.) Binary
+    // (XNOR) layers pack into the single-plane twin.
     let mut raster = BitplaneRaster::new();
+    let mut binary = BinaryRaster::new();
     loop {
         // Take the next task; holding the lock while idle is fine —
         // exactly one waiter is handed each task. A sibling that
@@ -1017,7 +1126,16 @@ fn worker_loop(
                     return;
                 }
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_frame_inner(&cfg, &mut *engine, plan, idx, frame, &mut acc, &mut raster)
+                    run_frame_inner(
+                        &cfg,
+                        &mut engines,
+                        plan,
+                        idx,
+                        frame,
+                        &mut acc,
+                        &mut raster,
+                        &mut binary,
+                    )
                 }))
                 .unwrap_or_else(|p| {
                     Err(YodannError::WorkerPanicked {
@@ -1028,9 +1146,10 @@ fn worker_loop(
                 });
                 if out.is_err() {
                     // Engine/scratch state may be mid-frame garbage.
-                    engine = kind.build(cfg);
+                    engines.rebuild();
                     acc = Vec::new();
                     raster = BitplaneRaster::new();
+                    binary = BinaryRaster::new();
                 }
                 if tx_out.send(Reply::Frame(idx, out)).is_err() {
                     break;
@@ -1039,6 +1158,7 @@ fn worker_loop(
             Task::Shard { job, shard, plans, layer } => {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let data = layer.as_layer_data();
+                    let engine = engines.for_precision(layer.precision);
                     plans.iter().map(|p| (*p, engine.run_plan(&data, p))).collect::<Vec<_>>()
                 }))
                 .map_err(panic_message);
@@ -1047,7 +1167,7 @@ fn worker_loop(
                 // Arc::try_unwrap once the last reply arrives.
                 drop(layer);
                 if out.is_err() {
-                    engine = kind.build(cfg);
+                    engines.rebuild();
                 }
                 if tx_out.send(Reply::Shard(job, shard, out)).is_err() {
                     break;
@@ -1125,20 +1245,61 @@ fn inject_raster_faults(
     Ok(())
 }
 
+/// The binary-raster twin of [`inject_raster_faults`], run on a freshly
+/// packed XNOR-mode raster: same seal → inject → verify → repack-once
+/// policy, same detect-twice refusal, same report accounting.
+fn inject_binary_faults(
+    f: &FaultPlan,
+    raster: &mut BinaryRaster,
+    mut repack: impl FnMut(&mut BinaryRaster),
+    fidx: usize,
+    li: usize,
+    halo_rows: &[usize],
+    report: &mut FaultReport,
+) -> Result<(), YodannError> {
+    let (frame, layer) = (fidx as u64, li as u64);
+    if f.detects() {
+        raster.seal();
+    }
+    let mut image_flips = f.corrupt_binary(raster, frame, layer, 0);
+    let mut halo_flips = f.corrupt_binary_halo(raster, halo_rows, frame, layer, 0);
+    if f.detects() && raster.verify().is_some() {
+        report.detected += 1;
+        report.retries += 1;
+        repack(raster);
+        raster.seal();
+        image_flips = f.corrupt_binary(raster, frame, layer, 1);
+        halo_flips = f.corrupt_binary_halo(raster, halo_rows, frame, layer, 1);
+        if raster.verify().is_some() {
+            let site = if halo_flips > 0 {
+                FaultSite::HaloExchange
+            } else {
+                FaultSite::ImageMemory
+            };
+            return Err(YodannError::FaultDetected { frame: Some(frame), layer: li, site });
+        }
+    }
+    report.image_flips += image_flips;
+    report.halo_flips += halo_flips;
+    Ok(())
+}
+
 /// Carry one frame through the step program on one engine: conv steps
 /// run raster pack (engines that want one) → plan → blocks → wide
 /// reduction (reusing `acc`) → final α/β; host-op interludes compute in
 /// place over the slot store. Identical numerics to `run_layer_engine`
 /// plus the host composition; the frame's activity ledger is merged
 /// across every block of every conv step.
+#[allow(clippy::too_many_arguments)] // the worker's whole scratch set, threaded explicitly
 fn run_frame_inner(
     cfg: &ChipConfig,
-    engine: &mut dyn ConvEngine,
+    engines: &mut WorkerEngines,
     plan: &SessionPlan,
     fidx: usize,
     frame: Image,
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
+    binary: &mut BinaryRaster,
 ) -> Result<TracedFrame, YodannError> {
     if let Some(f) = plan.fault.as_ref() {
         f.maybe_panic(fidx as u64);
@@ -1153,12 +1314,13 @@ fn run_frame_inner(
                 let x = slot_ref(&slots, *src);
                 run_conv_layer(
                     cfg,
-                    engine,
+                    engines,
                     *conv,
                     &plan.convs[*conv],
                     x,
                     acc,
                     raster,
+                    binary,
                     &mut stats,
                     plan.fault.as_ref(),
                     fidx,
@@ -1176,6 +1338,15 @@ fn run_frame_inner(
                     slot_ref(&slots, *src).clone()
                 };
                 relu_inplace(&mut y);
+                y
+            }
+            PlanStep::BatchNormThreshold { thresholds, src, .. } => {
+                let mut y = if plan.free_after[si].contains(src) {
+                    slot_take(&mut slots, *src)
+                } else {
+                    slot_ref(&slots, *src).clone()
+                };
+                threshold_inplace(&mut y, thresholds);
                 y
             }
             PlanStep::MaxPool2 { src, .. } => {
@@ -1212,18 +1383,20 @@ fn run_frame_inner(
 #[allow(clippy::too_many_arguments)] // the worker's whole scratch set, threaded explicitly
 fn run_conv_layer(
     cfg: &ChipConfig,
-    engine: &mut dyn ConvEngine,
+    engines: &mut WorkerEngines,
     li: usize,
     layer: &SessionLayer,
     x: &Image,
     acc: &mut Vec<i64>,
     raster: &mut BitplaneRaster,
+    binary: &mut BinaryRaster,
     stats: &mut ChipStats,
     fault: Option<&FaultPlan>,
     fidx: usize,
     report: &mut FaultReport,
 ) -> Result<Image, YodannError> {
     let spec = &layer.conv;
+    let engine = engines.for_precision(spec.precision);
     assert_eq!(
         x.c, spec.kernels.n_in,
         "layer {li}: frame has {} channels, kernels expect {}",
@@ -1257,6 +1430,23 @@ fn run_conv_layer(
             )?;
         }
     }
+    // Binary (XNOR) layers pack the single-plane raster instead —
+    // mutually exclusive with the 12-plane pack above per layer.
+    let wants_binary = engine.wants_binary_raster();
+    if wants_binary {
+        binary.pack(x, spec.k, spec.zero_pad);
+        if let Some(f) = fault.filter(|f| f.injects_raster_faults()) {
+            inject_binary_faults(
+                f,
+                binary,
+                |r| r.pack(x, spec.k, spec.zero_pad),
+                fidx,
+                li,
+                &[],
+                report,
+            )?;
+        }
+    }
     let data = LayerData {
         k: spec.k,
         zero_pad: spec.zero_pad,
@@ -1264,6 +1454,7 @@ fn run_conv_layer(
         kernels: &spec.kernels,
         packed: layer.packed.as_deref(),
         raster: wants_raster.then_some(&*raster),
+        binary: wants_binary.then_some(&*binary),
         scale_bias: &spec.scale_bias,
     };
     acc.clear();
@@ -1313,6 +1504,24 @@ fn take_output<T>(slots: &mut [Option<T>], s: usize) -> T {
 /// accelerator layers.
 fn relu_inplace(img: &mut Image) {
     img.data.iter_mut().for_each(|v| *v = (*v).max(0));
+}
+
+/// Batch-norm threshold binarization, the host interlude that feeds a
+/// binary (XNOR) trunk: per channel `c`, every sample becomes
+/// `±BINARY_ONE` by comparison against `thresholds[c]` (raw Q2.9) — the
+/// standard folding of batch-norm + sign into one comparison. The `>=`
+/// matches the XNOR engines' `binarize_q29` convention, so a following
+/// binary conv sees exactly the signs this step wrote.
+fn threshold_inplace(img: &mut Image, thresholds: &[i64]) {
+    assert_eq!(img.c, thresholds.len(), "threshold arity must match channels");
+    for c in 0..img.c {
+        let t = thresholds[c];
+        for y in 0..img.h {
+            for v in img.row_mut(c, y) {
+                *v = if *v >= t { BINARY_ONE } else { -BINARY_ONE };
+            }
+        }
+    }
 }
 
 /// The 2×2 max-pool interlude: identity when the map is smaller than
@@ -1444,7 +1653,12 @@ mod tests {
         ]
     }
 
-    fn manual_reference(specs: &[SessionLayerSpec], cfg: &ChipConfig, frame: &Image) -> Image {
+    fn manual_reference_on(
+        specs: &[SessionLayerSpec],
+        cfg: &ChipConfig,
+        frame: &Image,
+        kind: EngineKind,
+    ) -> Image {
         let mut x = frame.clone();
         for spec in specs {
             let wl = LayerWorkload {
@@ -1454,8 +1668,7 @@ mod tests {
                 kernels: (*spec.kernels).clone(),
                 scale_bias: (*spec.scale_bias).clone(),
             };
-            let run = run_layer_engine(&wl, cfg, ExecOptions { workers: 1 },
-                EngineKind::CycleAccurate);
+            let run = run_layer_engine(&wl, cfg, ExecOptions { workers: 1 }, kind);
             x = run.output;
             if spec.relu {
                 x.data.iter_mut().for_each(|v| *v = (*v).max(0));
@@ -1467,17 +1680,118 @@ mod tests {
         x
     }
 
+    fn manual_reference(specs: &[SessionLayerSpec], cfg: &ChipConfig, frame: &Image) -> Image {
+        manual_reference_on(specs, cfg, frame, EngineKind::CycleAccurate)
+    }
+
     #[test]
     fn session_matches_layerwise_executor_both_engines() {
+        // Multi-bit kinds only: the XNOR family computes a different
+        // (binarized) function and gets its own reference below.
         let cfg = ChipConfig::tiny(4);
         let specs = two_layer_specs(77);
         let mut g = Gen::new(5);
         let frame = synthetic_scene(&mut g, 3, 12, 12);
         let want = manual_reference(&specs, &cfg, &frame);
-        for kind in EngineKind::ALL {
+        for kind in EngineKind::MULTI_BIT {
             let mut sess = NetworkSession::new(cfg, kind, 2, specs.clone());
             let got = sess.run_frame(frame.clone());
             assert_eq!(got, want, "engine {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn xnor_session_matches_the_layerwise_xnor_executor() {
+        // A session on a binary kind runs every layer through the XNOR
+        // family and must be bit-identical to the layerwise executor on
+        // EngineKind::Xnor (the whole family agrees by construction).
+        let cfg = ChipConfig::tiny(4);
+        let specs = two_layer_specs(85);
+        let mut g = Gen::new(6);
+        let frame = synthetic_scene(&mut g, 3, 12, 12);
+        let want = manual_reference_on(&specs, &cfg, &frame, EngineKind::Xnor);
+        for kind in EngineKind::XNOR {
+            let mut sess = NetworkSession::new(cfg, kind, 2, specs.clone());
+            let got = sess.run_frame(frame.clone());
+            assert_eq!(got, want, "engine {}", kind.name());
+        }
+        // And a different function than the multi-bit reference: the
+        // binarization must actually bite on this workload.
+        assert_ne!(want, manual_reference(&specs, &cfg, &frame));
+    }
+
+    fn mixed_precision_compiled(seed: u64) -> CompiledGraph {
+        use crate::model::graph::{NetworkBuilder, Weights};
+        let mut g = Gen::new(seed);
+        let mut b = NetworkBuilder::new("mixed", 3);
+        let x = b.input();
+        // BWN stem → batch-norm threshold → XNOR trunk.
+        let stem = b.conv("stem", x, true, Weights::seeded(&mut g, 4, 3, 3));
+        let bin = b.batch_norm_threshold("bnt", stem, Arc::new(vec![0; 4]));
+        let trunk = b.conv_with_precision(
+            "trunk",
+            bin,
+            true,
+            Weights::seeded(&mut g, 4, 4, 3),
+            Precision::Binary,
+        );
+        match b.build(trunk).compile() {
+            Ok(cg) => cg,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    #[test]
+    fn mixed_precision_graph_routes_layers_by_precision() {
+        // A BWN stem + XNOR trunk session must compute: stem on the
+        // session's multi-bit engine, host thresholding to ±1, trunk on
+        // the XNOR companion — bit-identical across every multi-bit
+        // main kind and every policy.
+        let cfg = ChipConfig::tiny(4);
+        let mut g = Gen::new(41);
+        let frame = synthetic_scene(&mut g, 3, 10, 10);
+        // Manual reference: layerwise executor + host threshold.
+        let cg = mixed_precision_compiled(55);
+        let stem_wl = LayerWorkload {
+            k: 3,
+            zero_pad: true,
+            input: frame.clone(),
+            kernels: (*cg.convs[0].kernels).clone(),
+            scale_bias: (*cg.convs[0].scale_bias).clone(),
+        };
+        let mut mid =
+            run_layer_engine(&stem_wl, &cfg, ExecOptions { workers: 1 }, EngineKind::CycleAccurate)
+                .output;
+        threshold_inplace(&mut mid, &[0; 4]);
+        let trunk_wl = LayerWorkload {
+            k: 3,
+            zero_pad: true,
+            input: mid,
+            kernels: (*cg.convs[1].kernels).clone(),
+            scale_bias: (*cg.convs[1].scale_bias).clone(),
+        };
+        let want =
+            run_layer_engine(&trunk_wl, &cfg, ExecOptions { workers: 1 }, EngineKind::Xnor).output;
+        for kind in EngineKind::MULTI_BIT {
+            for policy in [ShardPolicy::PerFrame, ShardPolicy::RowBands(2)] {
+                let mut sess = match NetworkSession::spawn_plan(
+                    cfg,
+                    kind,
+                    2,
+                    policy,
+                    mixed_precision_compiled(55),
+                    None,
+                ) {
+                    Ok(s) => s,
+                    Err(e) => panic!("{e}"),
+                };
+                let out = sess.run_batch_traced(vec![frame.clone()]);
+                let got = match &out[0] {
+                    Ok(t) => &t.output,
+                    Err(e) => panic!("engine {} policy {policy}: {e}", kind.name()),
+                };
+                assert_eq!(*got, want, "engine {} policy {policy}", kind.name());
+            }
         }
     }
 

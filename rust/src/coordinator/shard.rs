@@ -38,7 +38,9 @@
 
 use super::blocks::{check_plan_geometry, check_width_geometry, plan_block_range, LayerWorkload};
 use super::executor::{finalize_output, reduce_block, run_plans, ExecOptions, LayerRun};
-use crate::engine::{BitplaneRaster, BlockPlan, ConvEngine, EngineKind, PackedKernels};
+use crate::engine::{
+    BinaryRaster, BitplaneRaster, BlockPlan, ConvEngine, EngineKind, PackedKernels,
+};
 use crate::hw::{ChipConfig, ChipStats};
 
 /// A `stripes × out_groups` shard grid: output rows are split into
@@ -137,6 +139,23 @@ impl ShardPolicy {
             }
         }
     }
+
+    /// Representative spellings [`ShardPolicy::parse`] accepts — every
+    /// fixed token plus one exemplar of each parameterized form. The
+    /// Display/parse round-trip proptest pins that all of these (and
+    /// every Display form) stay parseable.
+    pub const ACCEPTED: [&'static str; 10] = [
+        "per-frame",
+        "frame",
+        "auto",
+        "row-bands",
+        "bands",
+        "rows",
+        "row-bands:3",
+        "per-shard:2x2",
+        "4x2",
+        "4",
+    ];
 }
 
 impl std::fmt::Display for ShardPolicy {
@@ -277,8 +296,14 @@ pub fn run_layer_sharded(
         r.pack(&wl.input, wl.k, wl.zero_pad);
         r
     });
+    let binary = kind.wants_binary_raster().then(|| {
+        let mut r = BinaryRaster::new();
+        r.pack(&wl.input, wl.k, wl.zero_pad);
+        r
+    });
     let mut data = wl.as_layer_data(packed.as_ref());
     data.raster = raster.as_ref();
+    data.binary = binary.as_ref();
 
     // The executor's worker pool returns results in `plans` order, so
     // `shard_of[i]` re-associates `results[i]` with its chip.

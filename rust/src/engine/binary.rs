@@ -1,0 +1,482 @@
+//! Layer-resident **1-bit** activation rasters for the binary-activation
+//! (BNN / XNOR) datapath.
+//!
+//! YodaNN binarizes weights only; its successors (XNORBIN, ChewBaccaNN —
+//! PAPERS.md) binarize activations too, so a pixel needs **one** stored
+//! bit instead of the 12 offset-binary planes of
+//! [`super::BitplaneRaster`]. [`BinaryRaster`] is that raster: per
+//! (channel, padded row) a single u64-packed plane row — bit set ⇔ the
+//! activation's sign is +1 — which is ~12× less activation traffic and
+//! SCM occupancy than the multi-bit raster for the same feature map.
+//!
+//! The contract deliberately mirrors [`super::BitplaneRaster`] so every
+//! consumer of the multi-bit raster (shard planner, row-band schedule,
+//! fault injection, per-worker scratch reuse) works unchanged:
+//!
+//! * same padded geometry (`pw = w + k − 1` zero-padded, `ph` likewise),
+//!   with the convolution halo **pre-baked**: a zero-padding pixel has
+//!   value 0, and the sign convention `sign(x) = +1 ⇔ x ≥ 0` makes halo
+//!   bits *set*;
+//! * one **guard word** per plane row, so two-word window extracts never
+//!   branch on the row end (the SIMD engine's +1-word loads stay
+//!   in-bounds);
+//! * reusable scratch: `pack_view` overwrites in place and only
+//!   allocates on growth ([`Self::reallocs`] is pinned by tests);
+//! * [`Self::seal`]/[`Self::verify`] row checksums and
+//!   [`Self::flip_word_bit`]/[`Self::row_word_range`], so the fault
+//!   injector treats the binary image bank exactly like the multi-bit
+//!   one.
+//!
+//! **Sign convention.** A raw Q2.9 activation `x` binarizes to
+//! `+1 ⇔ x ≥ 0` (the deterministic BinaryConnect sign, matching
+//! [`crate::fixedpoint::binarize_det`]), carried downstream as raw
+//! `±512` (±1.0 in Q2.9) so binary feature maps remain legal Q2.9
+//! images. [`binarize_q29`] is the single source of truth; the naive
+//! reference conv, this raster and both XNOR engines all go through it.
+
+use crate::fixedpoint::Q2_9;
+use crate::workload::Image;
+
+use super::raster::mix64;
+
+/// Raw Q2.9 value of binary +1 (1.0): what a set raster bit stands for.
+pub const BINARY_ONE: i64 = 512;
+
+/// Binarize a raw Q2.9 activation by sign: `+512 ⇔ x ≥ 0`, else `−512`.
+/// Zero (and therefore the zero-padding halo) binarizes to +1, exactly
+/// like the deterministic BinaryConnect sign on weights.
+#[inline]
+pub const fn binarize_q29(x: i64) -> i64 {
+    if x >= 0 {
+        BINARY_ONE
+    } else {
+        -BINARY_ONE
+    }
+}
+
+/// A packed 1-bit sign raster of one image view (a full layer input or
+/// one block's tile), with the convolution halo pre-baked. Reusable
+/// scratch: `pack_view` overwrites in place and only allocates when it
+/// must grow.
+#[derive(Debug, Default)]
+pub struct BinaryRaster {
+    k: usize,
+    channels: usize,
+    /// Padded width (w + k − 1 when zero-padded, w otherwise).
+    pw: usize,
+    /// Padded height per channel.
+    ph: usize,
+    /// u64 words per plane row, including one guard word.
+    stride: usize,
+    /// Sign-plane words: `[(c·ph + y)] · stride`.
+    words: Vec<u64>,
+    reallocs: u64,
+    /// Per padded-row checksums, filled by [`Self::seal`].
+    row_chk: Vec<u64>,
+    /// Whether `row_chk` matches the current `words` contents.
+    sealed: bool,
+}
+
+impl BinaryRaster {
+    /// Empty raster scratch (packs lazily on first use).
+    pub fn new() -> BinaryRaster {
+        BinaryRaster::default()
+    }
+
+    /// Pack a full image (all channels, all rows) — the layer-resident
+    /// form shared by every block of a layer.
+    pub fn pack(&mut self, img: &Image, k: usize, zero_pad: bool) {
+        self.pack_view(img, k, zero_pad, 0, img.c, 0, img.h);
+    }
+
+    /// Pack a sub-view of `img`: channels `c0..c0+c_len`, rows
+    /// `y0..y0+y_len`. Rows outside the view read as zero-padding halo
+    /// (sign +1) even where the image has data — the same per-tile
+    /// semantics as [`super::BitplaneRaster::pack_view`].
+    #[allow(clippy::too_many_arguments)] // raw view geometry, mirrors BlockPlan fields
+    pub fn pack_view(
+        &mut self,
+        img: &Image,
+        k: usize,
+        zero_pad: bool,
+        c0: usize,
+        c_len: usize,
+        y0: usize,
+        y_len: usize,
+    ) {
+        assert!((1..=7).contains(&k), "kernel size {k} unsupported");
+        assert!(c0 + c_len <= img.c && y0 + y_len <= img.h, "view outside image");
+        let halo = if zero_pad { k - 1 } else { 0 };
+        let offset = if zero_pad { (k - 1) / 2 } else { 0 };
+        let pw = img.w + halo;
+        let ph = y_len + halo;
+        let stride = pw.div_ceil(64) + 1; // +1 guard word: branch-free extracts
+        self.k = k;
+        self.channels = c_len;
+        self.pw = pw;
+        self.ph = ph;
+        self.stride = stride;
+        self.sealed = false;
+        let word_len = c_len * ph * stride;
+        if word_len > self.words.capacity() {
+            self.reallocs += 1;
+        }
+        self.words.clear();
+        self.words.resize(word_len, 0);
+
+        for c in 0..c_len {
+            for py in 0..ph {
+                let row = c * ph + py;
+                let words = &mut self.words[row * stride..(row + 1) * stride];
+                // Padded row py holds view row py − offset; outside the
+                // view it is all halo (value 0 → sign +1 → bits set).
+                if py < offset || py >= offset + y_len {
+                    Self::fill_halo_row(words, pw);
+                    continue;
+                }
+                let src = img.row(c0 + c, y0 + py - offset);
+                for pc in 0..pw {
+                    let plus = if (offset..offset + img.w).contains(&pc) {
+                        let px = src[pc - offset];
+                        debug_assert!(
+                            Q2_9.contains(px),
+                            "activation {px} outside Q2.9 at packed col {pc}"
+                        );
+                        px >= 0
+                    } else {
+                        true // halo pixel: value 0 → sign +1
+                    };
+                    if plus {
+                        words[pc >> 6] |= 1u64 << (pc & 63);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write one all-halo padded row: sign bits set across `pw` columns
+    /// (halo value 0 binarizes to +1), guard word clear.
+    fn fill_halo_row(words: &mut [u64], pw: usize) {
+        for wi in 0..pw >> 6 {
+            words[wi] = !0u64;
+        }
+        if pw & 63 != 0 {
+            words[pw >> 6] = (1u64 << (pw & 63)) - 1;
+        }
+    }
+
+    /// Assemble the k²-bit sign window for output position (y, x) of
+    /// packed channel `c`: window bit `dy·k + dx` ⇔ padded column
+    /// `x + dx` of padded row `y + dy` — the same bit order as
+    /// [`super::PackedKernels::word`], so the XNOR dot is one
+    /// `XOR` + `POPCNT` per (window, output channel).
+    #[inline]
+    pub fn window(&self, c: usize, y: usize, x: usize) -> u64 {
+        let k = self.k;
+        debug_assert!(c < self.channels, "channel {c} outside raster ({})", self.channels);
+        debug_assert!(y + k <= self.ph && x + k <= self.pw, "window ({y},{x}) outside raster");
+        let mask = (1u64 << k) - 1;
+        let wi = x >> 6;
+        let sh = (x & 63) as u32;
+        let mut out = 0u64;
+        for dy in 0..k {
+            let p = (c * self.ph + y + dy) * self.stride + wi;
+            let lo = self.words[p] >> sh;
+            let bits = if sh == 0 { lo } else { lo | (self.words[p + 1] << (64 - sh)) };
+            out |= (bits & mask) << (dy * k);
+        }
+        out
+    }
+
+    /// Raw geometry + buffer view for engines that re-implement the
+    /// window extract with wider loads. The guard word per plane row is
+    /// part of the contract: `words[p + 1]` is always in bounds for any
+    /// in-window extract position `p`.
+    #[inline]
+    pub(crate) fn raw_parts(&self) -> BinaryParts<'_> {
+        BinaryParts {
+            k: self.k,
+            ph: self.ph,
+            pw: self.pw,
+            stride: self.stride,
+            words: &self.words,
+        }
+    }
+
+    /// Kernel size this raster was packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Channels packed into this raster.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Padded (height, width) per channel.
+    pub fn padded_dims(&self) -> (usize, usize) {
+        (self.ph, self.pw)
+    }
+
+    /// Number of `pack`/`pack_view` calls that had to grow a buffer —
+    /// steady-state serving of same-geometry frames keeps this constant.
+    pub fn reallocs(&self) -> u64 {
+        self.reallocs
+    }
+
+    /// Activation words this raster occupies (guard words included) —
+    /// the binary image bank's footprint, ~12× below the multi-bit
+    /// raster's for the same view. The XNOR power model prices I/O and
+    /// SCM occupancy from this.
+    pub fn words_total(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Checksum every padded row's sign words, arming [`Self::verify`] —
+    /// the parity a latch-based binary image bank would carry.
+    pub fn seal(&mut self) {
+        let rows = self.channels * self.ph;
+        let span = self.stride;
+        self.row_chk.clear();
+        self.row_chk.resize(rows, 0);
+        for r in 0..rows {
+            let mut h = mix64(r as u64 ^ 0xB1A5);
+            for &w in &self.words[r * span..(r + 1) * span] {
+                h = mix64(h ^ w);
+            }
+            self.row_chk[r] = h;
+        }
+        self.sealed = true;
+    }
+
+    /// First padded row whose sign words no longer match the sealed
+    /// checksum, or `None` if the raster is clean (or never sealed).
+    pub fn verify(&self) -> Option<usize> {
+        if !self.sealed {
+            return None;
+        }
+        let span = self.stride;
+        for (r, &chk) in self.row_chk.iter().enumerate() {
+            let mut h = mix64(r as u64 ^ 0xB1A5);
+            for &w in &self.words[r * span..(r + 1) * span] {
+                h = mix64(h ^ w);
+            }
+            if h != chk {
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Total sign words currently packed (the fault injector's address
+    /// space for binary image-memory upsets).
+    pub(crate) fn words_len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Flip one bit of one sign word — a single-event upset in the
+    /// binary image bank. In a 1-bit raster a single flipped bit is a
+    /// full sign inversion of that pixel, which is what makes BNN
+    /// datapaths so sensitive to near-threshold upsets.
+    pub(crate) fn flip_word_bit(&mut self, wi: usize, bit: u32) {
+        self.words[wi] ^= 1u64 << bit;
+    }
+
+    /// Word range holding padded row `py` of packed channel `c` — the
+    /// row a halo exchange would retransmit.
+    pub(crate) fn row_word_range(&self, c: usize, py: usize) -> std::ops::Range<usize> {
+        let base = (c * self.ph + py) * self.stride;
+        base..base + self.stride
+    }
+}
+
+/// Borrowed raw view of a packed binary raster (geometry + sign words),
+/// exposed crate-internally so the XNOR SIMD engine can run the
+/// identical window extract with vector loads.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BinaryParts<'a> {
+    pub k: usize,
+    pub ph: usize,
+    pub pw: usize,
+    pub stride: usize,
+    /// Sign words: `[(c·ph + y)] · stride`, one guard word per row.
+    pub words: &'a [u64],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::random_image;
+
+    /// Naive window oracle: binarize straight from the image with the
+    /// same halo semantics and compare bit by bit.
+    fn naive_window(
+        img: &Image,
+        k: usize,
+        zero_pad: bool,
+        c: usize,
+        y: usize,
+        x: usize,
+    ) -> u64 {
+        let offset = if zero_pad { ((k - 1) / 2) as isize } else { 0 };
+        let mut out = 0u64;
+        for dy in 0..k {
+            for dx in 0..k {
+                let iy = y as isize + dy as isize - offset;
+                let ix = x as isize + dx as isize - offset;
+                let px = if (0..img.h as isize).contains(&iy) && (0..img.w as isize).contains(&ix)
+                {
+                    img.at(c, iy as usize, ix as usize)
+                } else {
+                    0
+                };
+                if binarize_q29(px) == BINARY_ONE {
+                    out |= 1u64 << (dy * k + dx);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn window_matches_naive_binarization_every_kernel_size() {
+        let mut g = Gen::new(17);
+        for k in 1..=7usize {
+            for zp in [true, false] {
+                if !zp && k > 1 {
+                    continue;
+                }
+                let img = random_image(&mut g, 2, 9, 8, 0.4);
+                let mut r = BinaryRaster::new();
+                r.pack(&img, k, zp);
+                let (out_h, out_w) =
+                    if zp { (img.h, img.w) } else { (img.h + 1 - k, img.w + 1 - k) };
+                for c in 0..img.c {
+                    for y in 0..out_h {
+                        for x in 0..out_w {
+                            assert_eq!(
+                                r.window(c, y, x),
+                                naive_window(&img, k, zp, c, y, x),
+                                "k={k} zp={zp} c={c} y={y} x={x}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_boundary_windows_match_naive() {
+        // Widths whose windows straddle u64 word boundaries — the
+        // shift-pair extract's edge cases, guard word included.
+        let mut g = Gen::new(19);
+        for w in [63usize, 64, 65, 66, 127, 130] {
+            let img = random_image(&mut g, 1, 4, w, 0.3);
+            let mut r = BinaryRaster::new();
+            r.pack(&img, 3, true);
+            for y in 0..img.h {
+                for x in 0..img.w {
+                    assert_eq!(
+                        r.window(0, y, x),
+                        naive_window(&img, 3, true, 0, y, x),
+                        "w={w} y={y} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn view_rows_outside_tile_read_as_halo() {
+        // Packing rows 2..5 of an 8-row image must behave exactly like
+        // packing a standalone image holding only those rows — the same
+        // tile semantics as BitplaneRaster.
+        let mut g = Gen::new(23);
+        let img = random_image(&mut g, 2, 8, 7, 0.3);
+        let mut crop = Image::zeros(2, 3, 7);
+        for c in 0..2 {
+            for y in 0..3 {
+                crop.row_mut(c, y).copy_from_slice(img.row(c, 2 + y));
+            }
+        }
+        let mut via_view = BinaryRaster::new();
+        via_view.pack_view(&img, 3, true, 0, 2, 2, 3);
+        let mut via_crop = BinaryRaster::new();
+        via_crop.pack(&crop, 3, true);
+        for c in 0..2 {
+            for y in 0..3 {
+                for x in 0..7 {
+                    assert_eq!(
+                        via_view.window(c, y, x),
+                        via_crop.window(c, y, x),
+                        "c={c} y={y} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repacking_same_geometry_never_reallocates() {
+        let mut g = Gen::new(29);
+        let img = random_image(&mut g, 3, 10, 9, 0.1);
+        let mut r = BinaryRaster::new();
+        r.pack(&img, 3, true);
+        let after_first = r.reallocs();
+        for _ in 0..5 {
+            let frame = random_image(&mut g, 3, 10, 9, 0.1);
+            r.pack(&frame, 3, true);
+        }
+        assert_eq!(r.reallocs(), after_first, "steady-state pack must not allocate");
+        let big = random_image(&mut g, 3, 20, 9, 0.1);
+        r.pack(&big, 3, true);
+        assert_eq!(r.reallocs(), after_first + 1);
+        r.pack(&big, 3, true);
+        assert_eq!(r.reallocs(), after_first + 1);
+    }
+
+    #[test]
+    fn seal_detects_a_single_flipped_bit_and_repack_clears_it() {
+        let mut g = Gen::new(31);
+        let img = random_image(&mut g, 2, 6, 5, 0.2);
+        let mut r = BinaryRaster::new();
+        r.pack(&img, 3, true);
+        r.seal();
+        assert_eq!(r.verify(), None, "freshly sealed raster must be clean");
+        r.flip_word_bit(0, 7);
+        assert!(r.verify().is_some(), "flip must trip the row checksum");
+        r.pack(&img, 3, true);
+        assert_eq!(r.verify(), None);
+        r.seal();
+        assert_eq!(r.verify(), None);
+        let range = r.row_word_range(1, 0);
+        assert!(range.end <= r.words_len());
+    }
+
+    #[test]
+    fn binary_raster_is_about_12x_smaller_than_bitplanes() {
+        // The headline of the XNOR generation: same view, 1 plane word
+        // per (channel, padded row) instead of 12.
+        let mut g = Gen::new(37);
+        let img = random_image(&mut g, 4, 16, 16, 0.2);
+        let mut bin = BinaryRaster::new();
+        bin.pack(&img, 3, true);
+        let mut multi = super::super::BitplaneRaster::new();
+        multi.pack(&img, 3, true);
+        // Identical padded geometry, exactly PLANES× fewer plane words
+        // (and the multi-bit raster additionally carries prefix sums the
+        // binary path never needs).
+        assert_eq!(multi.padded_dims(), bin.padded_dims());
+        assert_eq!(bin.words_total() * super::super::raster::PLANES, multi.words_len());
+    }
+
+    #[test]
+    fn binarize_convention_is_sign_with_zero_positive() {
+        assert_eq!(binarize_q29(0), BINARY_ONE);
+        assert_eq!(binarize_q29(2047), BINARY_ONE);
+        assert_eq!(binarize_q29(-1), -BINARY_ONE);
+        assert_eq!(binarize_q29(-2048), -BINARY_ONE);
+    }
+}

@@ -463,6 +463,7 @@ impl ConvEngine for Functional {
             kernels: &job.kernels,
             packed: None,
             raster: None,
+            binary: None,
             scale_bias: &job.scale_bias,
         };
         let plan =

@@ -66,15 +66,19 @@
 //! The arithmetic stays exact — fields are disjoint, each holds at most
 //! k² bits — so outputs remain bit-identical to the chip.
 
+pub mod binary;
 pub mod cycle;
 pub mod functional;
 pub mod raster;
 pub mod simd;
+pub mod xnor;
 
+pub use binary::{binarize_q29, BinaryRaster, BINARY_ONE};
 pub use cycle::CycleAccurate;
 pub use functional::{Functional, PackedKernels};
 pub use raster::BitplaneRaster;
 pub use simd::FunctionalSimd;
+pub use xnor::{Xnor, XnorSimd};
 
 use crate::hw::{BlockJob, ChipConfig, ChipStats};
 use crate::workload::{BinaryKernels, Image, ScaleBias};
@@ -146,6 +150,12 @@ pub struct LayerData<'a> {
     /// consume rasters fall back to packing a block-local tile view
     /// into their own scratch when this is `None`.
     pub raster: Option<&'a BitplaneRaster>,
+    /// Layer-resident 1-bit sign raster of `input`, if the caller
+    /// packed one — the binary-activation counterpart of `raster`,
+    /// consumed by the XNOR engine family. Same fallback contract:
+    /// engines pack a block-local tile view into their own scratch when
+    /// this is `None`.
+    pub binary: Option<&'a BinaryRaster>,
     /// Full per-output-channel scale/bias.
     pub scale_bias: &'a ScaleBias,
 }
@@ -181,6 +191,14 @@ pub trait ConvEngine {
         false
     }
 
+    /// Whether this engine consumes [`LayerData::binary`] — the 1-bit
+    /// sign raster of the binary-activation datapath. Mutually exclusive
+    /// with [`Self::wants_raster`] in practice: an engine binarizes its
+    /// activations or it doesn't.
+    fn wants_binary_raster(&self) -> bool {
+        false
+    }
+
     /// Execute one materialized block job.
     fn run_block(&mut self, job: &BlockJob) -> EngineOutput;
 
@@ -207,6 +225,10 @@ impl ConvEngine for Box<dyn ConvEngine> {
 
     fn wants_raster(&self) -> bool {
         (**self).wants_raster()
+    }
+
+    fn wants_binary_raster(&self) -> bool {
+        (**self).wants_binary_raster()
     }
 
     fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
@@ -273,18 +295,48 @@ pub enum EngineKind {
     /// kept in the matrix so the fallback is conformance-tested on
     /// SIMD-capable hosts too.
     FunctionalSimdScalar,
+    /// Binary-activation XNOR+popcount datapath, scalar reference —
+    /// see [`xnor::Xnor`]. Binarizes its input activations by sign, so
+    /// it is **not** bit-identical to the multi-bit engines; its oracle
+    /// is [`crate::workload::reference_xnor_conv`].
+    Xnor,
+    /// [`xnor::XnorSimd`]: the XNOR datapath with the output-channel
+    /// dot vectorized (same runtime AVX2/NEON dispatch as
+    /// [`simd::FunctionalSimd`]).
+    XnorSimd,
+    /// [`xnor::XnorSimd`] pinned to its portable scalar loop — the
+    /// fallback, conformance-tested on SIMD-capable hosts too.
+    XnorSimdScalar,
 }
 
 impl EngineKind {
     /// Every engine kind, in report order — one axis of the
     /// engine × shard conformance matrix (`rust/tests/conformance.rs`).
-    pub const ALL: [EngineKind; 5] = [
+    pub const ALL: [EngineKind; 8] = [
+        EngineKind::CycleAccurate,
+        EngineKind::Functional,
+        EngineKind::FunctionalPerWindow,
+        EngineKind::FunctionalSimd,
+        EngineKind::FunctionalSimdScalar,
+        EngineKind::Xnor,
+        EngineKind::XnorSimd,
+        EngineKind::XnorSimdScalar,
+    ];
+
+    /// The multi-bit (BWN) engine kinds: bit-identical to each other and
+    /// to the chip's Q2.9 datapath.
+    pub const MULTI_BIT: [EngineKind; 5] = [
         EngineKind::CycleAccurate,
         EngineKind::Functional,
         EngineKind::FunctionalPerWindow,
         EngineKind::FunctionalSimd,
         EngineKind::FunctionalSimdScalar,
     ];
+
+    /// The binary-activation (BNN) engine kinds: bit-identical to each
+    /// other and to the naive sign/threshold reference.
+    pub const XNOR: [EngineKind; 3] =
+        [EngineKind::Xnor, EngineKind::XnorSimd, EngineKind::XnorSimdScalar];
 
     /// Whether engines of this kind consume [`LayerData::packed`] — the
     /// static mirror of [`ConvEngine::wants_packed`], for callers that
@@ -303,6 +355,32 @@ impl EngineKind {
         )
     }
 
+    /// Whether engines of this kind consume [`LayerData::binary`] — the
+    /// static mirror of [`ConvEngine::wants_binary_raster`].
+    pub fn wants_binary_raster(self) -> bool {
+        self.is_binary()
+    }
+
+    /// Whether this kind binarizes its input activations (the BNN
+    /// datapath) — such engines follow the sign reference, not the
+    /// multi-bit chip arithmetic.
+    pub fn is_binary(self) -> bool {
+        matches!(self, EngineKind::Xnor | EngineKind::XnorSimd | EngineKind::XnorSimdScalar)
+    }
+
+    /// The XNOR engine a mixed-precision session pairs with this kind
+    /// for its `Precision::Binary` layers: the same dispatch tier (SIMD
+    /// stays SIMD, forced-scalar stays forced-scalar), so one session
+    /// never mixes vector and fallback paths across precisions.
+    pub fn binary_companion(self) -> EngineKind {
+        match self {
+            EngineKind::FunctionalSimd => EngineKind::XnorSimd,
+            EngineKind::FunctionalSimdScalar => EngineKind::XnorSimdScalar,
+            k if k.is_binary() => k,
+            _ => EngineKind::Xnor,
+        }
+    }
+
     /// Engine name as printed in reports.
     pub fn name(self) -> &'static str {
         match self {
@@ -311,6 +389,9 @@ impl EngineKind {
             EngineKind::FunctionalPerWindow => "functional-pr1",
             EngineKind::FunctionalSimd => "functional-simd",
             EngineKind::FunctionalSimdScalar => "functional-simd-scalar",
+            EngineKind::Xnor => "xnor",
+            EngineKind::XnorSimd => "xnor-simd",
+            EngineKind::XnorSimdScalar => "xnor-simd-scalar",
         }
     }
 
@@ -333,6 +414,10 @@ impl EngineKind {
         "simd",
         "functional-simd-scalar",
         "simd-scalar",
+        "xnor",
+        "bnn",
+        "xnor-simd",
+        "xnor-simd-scalar",
     ];
 
     /// Parse a CLI spelling, case-insensitively.
@@ -343,6 +428,9 @@ impl EngineKind {
             "functional-pr1" | "per-window" | "pr1" => Some(EngineKind::FunctionalPerWindow),
             "functional-simd" | "simd" => Some(EngineKind::FunctionalSimd),
             "functional-simd-scalar" | "simd-scalar" => Some(EngineKind::FunctionalSimdScalar),
+            "xnor" | "bnn" => Some(EngineKind::Xnor),
+            "xnor-simd" => Some(EngineKind::XnorSimd),
+            "xnor-simd-scalar" => Some(EngineKind::XnorSimdScalar),
             _ => None,
         }
     }
@@ -355,6 +443,9 @@ impl EngineKind {
             EngineKind::FunctionalPerWindow => Box::new(Functional::per_window()),
             EngineKind::FunctionalSimd => Box::new(FunctionalSimd::new()),
             EngineKind::FunctionalSimdScalar => Box::new(FunctionalSimd::forced_scalar()),
+            EngineKind::Xnor => Box::new(Xnor::new()),
+            EngineKind::XnorSimd => Box::new(XnorSimd::new()),
+            EngineKind::XnorSimdScalar => Box::new(XnorSimd::forced_scalar()),
         }
     }
 }
@@ -378,11 +469,45 @@ mod tests {
         );
         assert_eq!(EngineKind::parse("simd"), Some(EngineKind::FunctionalSimd));
         assert_eq!(EngineKind::parse("simd-scalar"), Some(EngineKind::FunctionalSimdScalar));
+        assert_eq!(EngineKind::parse("xnor"), Some(EngineKind::Xnor));
+        assert_eq!(EngineKind::parse("bnn"), Some(EngineKind::Xnor));
+        assert_eq!(EngineKind::parse("xnor-simd"), Some(EngineKind::XnorSimd));
+        assert_eq!(EngineKind::parse("xnor-simd-scalar"), Some(EngineKind::XnorSimdScalar));
         assert_eq!(EngineKind::parse("nope"), None);
         assert_eq!(EngineKind::Functional.name(), "functional");
         assert_eq!(EngineKind::FunctionalPerWindow.name(), "functional-pr1");
         assert_eq!(EngineKind::FunctionalSimd.name(), "functional-simd");
         assert_eq!(EngineKind::FunctionalSimdScalar.name(), "functional-simd-scalar");
+        assert_eq!(EngineKind::Xnor.name(), "xnor");
+        assert_eq!(EngineKind::XnorSimd.name(), "xnor-simd");
+        assert_eq!(EngineKind::XnorSimdScalar.name(), "xnor-simd-scalar");
+    }
+
+    #[test]
+    fn precision_families_partition_all() {
+        // MULTI_BIT and XNOR are the two conformance families: disjoint,
+        // and together exactly ALL (in ALL's order).
+        let mut union: Vec<EngineKind> = EngineKind::MULTI_BIT.to_vec();
+        union.extend(EngineKind::XNOR);
+        assert_eq!(union, EngineKind::ALL.to_vec());
+        for kind in EngineKind::MULTI_BIT {
+            assert!(!kind.is_binary(), "{} in MULTI_BIT but is_binary", kind.name());
+        }
+        for kind in EngineKind::XNOR {
+            assert!(kind.is_binary(), "{} in XNOR but not is_binary", kind.name());
+            assert_eq!(kind.binary_companion(), kind, "binary kinds are their own companion");
+        }
+        // Companions stay within the same dispatch tier.
+        assert_eq!(EngineKind::FunctionalSimd.binary_companion(), EngineKind::XnorSimd);
+        assert_eq!(
+            EngineKind::FunctionalSimdScalar.binary_companion(),
+            EngineKind::XnorSimdScalar
+        );
+        assert_eq!(EngineKind::Functional.binary_companion(), EngineKind::Xnor);
+        assert_eq!(EngineKind::CycleAccurate.binary_companion(), EngineKind::Xnor);
+        for kind in EngineKind::ALL {
+            assert!(kind.binary_companion().is_binary());
+        }
     }
 
     #[test]
@@ -437,6 +562,12 @@ mod tests {
             let e = kind.build(cfg);
             assert_eq!(kind.wants_packed(), e.wants_packed(), "{}", kind.name());
             assert_eq!(kind.wants_raster(), e.wants_raster(), "{}", kind.name());
+            assert_eq!(kind.wants_binary_raster(), e.wants_binary_raster(), "{}", kind.name());
+            assert!(
+                !(kind.wants_raster() && kind.wants_binary_raster()),
+                "{} wants both rasters",
+                kind.name()
+            );
         }
     }
 
@@ -453,6 +584,7 @@ mod tests {
             kernels: &kernels,
             packed: None,
             raster: None,
+            binary: None,
             scale_bias: &sb,
         };
         let plan = BlockPlan::whole(3, true, 4, 3, 6);
@@ -475,6 +607,7 @@ mod tests {
             kernels: &kernels,
             packed: None,
             raster: None,
+            binary: None,
             scale_bias: &sb,
         };
         let plan = BlockPlan {

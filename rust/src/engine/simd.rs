@@ -38,9 +38,11 @@ use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
 use crate::hw::{BlockJob, ChipStats};
 use crate::workload::Image;
 
-/// Lane ISA for the vector inner loops, decided once per engine.
+/// Lane ISA for the vector inner loops, decided once per engine. Shared
+/// with the XNOR engine family ([`super::xnor`]), which dispatches the
+/// same way.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Isa {
+pub(crate) enum Isa {
     /// Portable scalar loops — the forced fallback, and the default on
     /// architectures without a vector path.
     Scalar,
@@ -60,7 +62,7 @@ fn env_forces_scalar() -> bool {
 
 impl Isa {
     #[allow(unreachable_code)] // arch-dependent tail after cfg'd returns
-    fn detect(force_scalar: bool) -> Isa {
+    pub(crate) fn detect(force_scalar: bool) -> Isa {
         if force_scalar || env_forces_scalar() {
             return Isa::Scalar;
         }
@@ -77,7 +79,7 @@ impl Isa {
         Isa::Scalar
     }
 
-    fn name(self) -> &'static str {
+    pub(crate) fn name(self) -> &'static str {
         match self {
             Isa::Scalar => "scalar",
             #[cfg(target_arch = "x86_64")]
@@ -657,6 +659,7 @@ impl ConvEngine for FunctionalSimd {
             kernels: &job.kernels,
             packed: None,
             raster: None,
+            binary: None,
             scale_bias: &job.scale_bias,
         };
         let plan =

@@ -1,0 +1,664 @@
+//! The XNOR engine family: binary-activation (BNN) convolution as pure
+//! XNOR + popcount, the datapath of YodaNN's successors (XNORBIN,
+//! ChewBaccaNN — PAPERS.md).
+//!
+//! With both weights and activations in {−1, +1}, a window's dot product
+//! collapses: encode the k² activation signs as one window word `A`
+//! ([`BinaryRaster::window`], bit set ⇔ +1) and the kernel as the plain
+//! packed word `P` ([`PackedKernels::word`], same bit order). Every
+//! agreeing bit contributes +1, every disagreement −1, so with
+//! `d = pc((A ⊕ P) ∧ mask)` disagreements:
+//!
+//! ```text
+//! Σ_j a_j·w_j = (k² − d) − d = k² − 2·pc(A ⊕ P)
+//! ```
+//!
+//! — one XOR and one POPCNT per (window, output channel), no bitplanes,
+//! no window sums. Carried back into the chip's arithmetic as raw Q2.9
+//! (binary ±1 is raw ±512 — [`BINARY_ONE`]), the accumulation order is
+//! byte-for-byte the multi-bit datapath's: per-input-channel Q7.9
+//! saturating add, then the Scale-Bias resize to Q2.9. That keeps every
+//! downstream consumer (host ops, reduction, range analysis) unchanged,
+//! and makes the engines bit-identical to the naive sign reference
+//! ([`crate::workload::reference_xnor_conv`]) by exact-integer
+//! construction.
+//!
+//! Two engines share one scalar hot loop:
+//!
+//! * [`Xnor`] — the scalar reference (engine name `xnor`).
+//! * [`XnorSimd`] — the same loop with the output-channel dot
+//!   vectorized, dispatching through the exact [`Isa`] runtime detection
+//!   the multi-bit SIMD engine uses (AVX2 4 channels / NEON 2 channels
+//!   per lane op, portable scalar fallback, `YODANN_FORCE_SCALAR`
+//!   honored, [`XnorSimd::forced_scalar`] pinned in the conformance
+//!   matrix as engine name `xnor-simd-scalar`).
+//!
+//! The kernel words come from the **same** [`PackedKernels`] the
+//! multi-bit engines share — the replicated form masked to its first
+//! field is the plain word, so one pack per layer/session serves every
+//! engine kind, mixed-precision sessions included.
+
+use super::binary::{BinaryParts, BinaryRaster, BINARY_ONE};
+use super::functional::PackedKernels;
+use super::simd::Isa;
+use super::{BlockPlan, ConvEngine, EngineOutput, LayerData};
+use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+use crate::hw::{BlockJob, ChipStats};
+use crate::workload::Image;
+
+/// The scalar XNOR+popcount engine — the family's reference. Holds
+/// reusable accumulator and binary-raster scratch so a worker thread
+/// allocates nothing per block in steady state.
+#[derive(Debug, Default)]
+pub struct Xnor {
+    accs: Vec<i64>,
+    raster: BinaryRaster,
+}
+
+impl Xnor {
+    /// New engine with empty scratch.
+    pub fn new() -> Xnor {
+        Xnor::default()
+    }
+
+    /// Binary-raster scratch packs that had to grow a buffer
+    /// (steady-state serving keeps this constant).
+    pub fn raster_reallocs(&self) -> u64 {
+        self.raster.reallocs()
+    }
+}
+
+/// The XNOR engine with the output-channel dot vectorized — same
+/// runtime [`Isa`] dispatch as [`super::FunctionalSimd`], bit-identical
+/// to [`Xnor`] on every path (exact integer arithmetic throughout).
+#[derive(Debug)]
+pub struct XnorSimd {
+    accs: Vec<i64>,
+    raster: BinaryRaster,
+    isa: Isa,
+    forced_scalar: bool,
+}
+
+impl Default for XnorSimd {
+    fn default() -> XnorSimd {
+        XnorSimd::new()
+    }
+}
+
+impl XnorSimd {
+    /// New engine with the best lane ISA the host offers (honours
+    /// `YODANN_FORCE_SCALAR`).
+    pub fn new() -> XnorSimd {
+        XnorSimd::with(false)
+    }
+
+    /// New engine pinned to the portable scalar loop regardless of host
+    /// features — conformance-tested alongside the vector variant.
+    pub fn forced_scalar() -> XnorSimd {
+        XnorSimd::with(true)
+    }
+
+    fn with(forced_scalar: bool) -> XnorSimd {
+        XnorSimd {
+            accs: Vec::new(),
+            raster: BinaryRaster::new(),
+            isa: Isa::detect(forced_scalar),
+            forced_scalar,
+        }
+    }
+
+    /// The lane ISA this engine dispatches to: `"avx2"`, `"neon"` or
+    /// `"scalar"`.
+    pub fn isa_name(&self) -> &'static str {
+        self.isa.name()
+    }
+}
+
+/// Tile output shape of a plan (mirrors `Functional::out_dims`).
+fn out_dims(layer: &LayerData<'_>, plan: &BlockPlan) -> (usize, usize) {
+    let (k, w, tile_h) = (layer.k, layer.input.w, plan.tile_h);
+    if !layer.zero_pad {
+        assert!(tile_h >= k && w >= k, "tile {tile_h}x{w} smaller than kernel {k} (valid mode)");
+    }
+    if layer.zero_pad {
+        (tile_h, w)
+    } else {
+        (tile_h + 1 - k, w + 1 - k)
+    }
+}
+
+/// The shared plan prologue: resolve packed kernels and the binary
+/// raster (the caller's layer-resident one, or scratch packed from the
+/// plan's tile view), then run `body` against raster coordinates.
+fn run_with_raster<F>(
+    scratch: &mut BinaryRaster,
+    layer: &LayerData<'_>,
+    plan: &BlockPlan,
+    body: F,
+) -> EngineOutput
+where
+    F: FnOnce(&BinaryRaster, usize, usize, &PackedKernels, &mut Image),
+{
+    let k = layer.k;
+    let kk = k * k;
+    let (out_h, out_w) = out_dims(layer, plan);
+    let local;
+    let packed: &PackedKernels = match layer.packed {
+        Some(p) => {
+            debug_assert_eq!(p.k, k);
+            p
+        }
+        None => {
+            local = PackedKernels::pack(layer.kernels);
+            &local
+        }
+    };
+    // (c_base, row0) map plan-local (channel, window row) into raster
+    // coordinates, exactly like the multi-bit engines.
+    let (raster, c_base, row0): (&BinaryRaster, usize, usize) = match layer.binary {
+        Some(r) => {
+            debug_assert_eq!(r.k(), k);
+            (r, plan.in_base, plan.clip0)
+        }
+        None => {
+            scratch.pack_view(
+                layer.input,
+                k,
+                layer.zero_pad,
+                plan.in_base,
+                plan.in_len,
+                plan.clip0,
+                plan.tile_h,
+            );
+            (&*scratch, 0, 0)
+        }
+    };
+    let mut out = Image::zeros(plan.out_len, out_h, out_w);
+    body(raster, c_base, row0, packed, &mut out);
+    let stats = ChipStats {
+        useful_ops: 2 * kk as u64
+            * (plan.in_len * plan.out_len) as u64
+            * (out_h * out_w) as u64,
+        ..Default::default()
+    };
+    EngineOutput { output: out, stats }
+}
+
+/// The portable scalar hot loop, shared by [`Xnor`] and [`XnorSimd`]'s
+/// fallback so the reference and the dispatch tail are one body of code.
+#[allow(clippy::too_many_arguments)] // one flat hot-loop context, mirrors the vector paths
+fn conv_scalar(
+    raster: &BinaryRaster,
+    c_base: usize,
+    row0: usize,
+    layer: &LayerData<'_>,
+    plan: &BlockPlan,
+    packed: &PackedKernels,
+    identity: bool,
+    out: &mut Image,
+    accs: &mut [i64],
+) {
+    let kk = (layer.k * layer.k) as i64;
+    let mask = (1u64 << (layer.k * layer.k)) - 1;
+    let (out_h, out_w) = (out.h, out.w);
+    for y in 0..out_h {
+        for x in 0..out_w {
+            accs.iter_mut().for_each(|a| *a = 0);
+            for i in 0..plan.in_len {
+                let a = raster.window(c_base + i, row0 + y, x);
+                let reps = packed.rep_slice(plan.in_base + i, plan.out_base, plan.out_len);
+                for (o, acc) in accs.iter_mut().enumerate() {
+                    // rep masked to its first field is the plain kernel
+                    // word P; d disagreements ⇒ dot = k² − 2d.
+                    let d = ((a ^ reps[o]) & mask).count_ones() as i64;
+                    let sop = BINARY_ONE * (kk - 2 * d);
+                    *acc = sat_add(Q7_9, *acc, sop);
+                }
+            }
+            for (o, &acc) in accs.iter().enumerate() {
+                let (alpha, beta) = if identity {
+                    (512, 0)
+                } else {
+                    (
+                        layer.scale_bias.alpha[plan.out_base + o],
+                        layer.scale_bias.beta[plan.out_base + o],
+                    )
+                };
+                *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+            }
+        }
+    }
+}
+
+/// Window extract straight from [`BinaryParts`] — the vector paths'
+/// scalar prologue (the per-window extract is one plane row deep, so
+/// only the output-channel dot is worth lanes).
+#[inline]
+#[cfg_attr(not(any(target_arch = "x86_64", target_arch = "aarch64")), allow(dead_code))]
+fn window_from_parts(p: &BinaryParts<'_>, c: usize, y: usize, x: usize) -> u64 {
+    let k = p.k;
+    let mask = (1u64 << k) - 1;
+    let wi = x >> 6;
+    let sh = (x & 63) as u32;
+    let mut out = 0u64;
+    for dy in 0..k {
+        let idx = (c * p.ph + y + dy) * p.stride + wi;
+        let lo = p.words[idx] >> sh;
+        let bits = if sh == 0 { lo } else { lo | (p.words[idx + 1] << (64 - sh)) };
+        out |= (bits & mask) << (dy * k);
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::super::binary::{BinaryParts, BINARY_ONE};
+    use super::super::functional::PackedKernels;
+    use super::super::{BlockPlan, LayerData};
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    use crate::workload::Image;
+
+    /// Per-64-bit-lane popcount (AVX2 has no `VPOPCNTQ`): the same
+    /// nibble-LUT + `PSADBW` scheme as the multi-bit SIMD engine.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// The AVX2 hot loop: same iteration order and saturation points as
+    /// the scalar path, with the XNOR dot evaluated 4 output channels
+    /// per lane op.
+    #[allow(clippy::too_many_arguments)] // one flat hot-loop context
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn conv(
+        parts: BinaryParts<'_>,
+        c_base: usize,
+        row0: usize,
+        layer: &LayerData<'_>,
+        plan: &BlockPlan,
+        packed: &PackedKernels,
+        identity: bool,
+        out: &mut Image,
+        accs: &mut [i64],
+    ) {
+        let kk = (parts.k * parts.k) as i64;
+        let mask = (1u64 << (parts.k * parts.k)) - 1;
+        let maskv = _mm256_set1_epi64x(mask as i64);
+        let (out_h, out_w) = (out.h, out.w);
+        let n_out = plan.out_len;
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                for i in 0..plan.in_len {
+                    let a = super::window_from_parts(&parts, c_base + i, row0 + y, x);
+                    let av = _mm256_set1_epi64x(a as i64);
+                    let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                    let mut o = 0usize;
+                    while o + 4 <= n_out {
+                        let repv = _mm256_loadu_si256(reps.as_ptr().add(o) as *const __m256i);
+                        let d = popcnt_epi64(_mm256_and_si256(
+                            _mm256_xor_si256(av, repv),
+                            maskv,
+                        ));
+                        let mut dd = [0i64; 4];
+                        _mm256_storeu_si256(dd.as_mut_ptr() as *mut __m256i, d);
+                        for (l, &dl) in dd.iter().enumerate() {
+                            let sop = BINARY_ONE * (kk - 2 * dl);
+                            accs[o + l] = sat_add(Q7_9, accs[o + l], sop);
+                        }
+                        o += 4;
+                    }
+                    while o < n_out {
+                        let d = ((a ^ reps[o]) & mask).count_ones() as i64;
+                        let sop = BINARY_ONE * (kk - 2 * d);
+                        accs[o] = sat_add(Q7_9, accs[o], sop);
+                        o += 1;
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::super::binary::{BinaryParts, BINARY_ONE};
+    use super::super::functional::PackedKernels;
+    use super::super::{BlockPlan, LayerData};
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    use crate::workload::Image;
+
+    /// Per-64-bit-lane popcount: `CNT` + widening pairwise adds, the
+    /// same scheme as the multi-bit SIMD engine.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn popcnt_u64x2(v: uint64x2_t) -> uint64x2_t {
+        vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v)))))
+    }
+
+    /// The NEON hot loop: same iteration order and saturation points as
+    /// the scalar path, XNOR dot 2 output channels per lane op.
+    #[allow(clippy::too_many_arguments)] // one flat hot-loop context
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn conv(
+        parts: BinaryParts<'_>,
+        c_base: usize,
+        row0: usize,
+        layer: &LayerData<'_>,
+        plan: &BlockPlan,
+        packed: &PackedKernels,
+        identity: bool,
+        out: &mut Image,
+        accs: &mut [i64],
+    ) {
+        let kk = (parts.k * parts.k) as i64;
+        let mask = (1u64 << (parts.k * parts.k)) - 1;
+        let maskv = vdupq_n_u64(mask);
+        let (out_h, out_w) = (out.h, out.w);
+        let n_out = plan.out_len;
+        for y in 0..out_h {
+            for x in 0..out_w {
+                accs.iter_mut().for_each(|a| *a = 0);
+                for i in 0..plan.in_len {
+                    let a = super::window_from_parts(&parts, c_base + i, row0 + y, x);
+                    let av = vdupq_n_u64(a);
+                    let reps = packed.rep_slice(plan.in_base + i, plan.out_base, n_out);
+                    let mut o = 0usize;
+                    while o + 2 <= n_out {
+                        let repv = vld1q_u64(reps.as_ptr().add(o));
+                        let d = popcnt_u64x2(vandq_u64(veorq_u64(av, repv), maskv));
+                        let dd = [
+                            vgetq_lane_u64::<0>(d) as i64,
+                            vgetq_lane_u64::<1>(d) as i64,
+                        ];
+                        for (l, &dl) in dd.iter().enumerate() {
+                            let sop = BINARY_ONE * (kk - 2 * dl);
+                            accs[o + l] = sat_add(Q7_9, accs[o + l], sop);
+                        }
+                        o += 2;
+                    }
+                    while o < n_out {
+                        let d = ((a ^ reps[o]) & mask).count_ones() as i64;
+                        let sop = BINARY_ONE * (kk - 2 * d);
+                        accs[o] = sat_add(Q7_9, accs[o], sop);
+                        o += 1;
+                    }
+                }
+                for (o, &acc) in accs.iter().enumerate() {
+                    let (alpha, beta) = if identity {
+                        (512, 0)
+                    } else {
+                        (
+                            layer.scale_bias.alpha[plan.out_base + o],
+                            layer.scale_bias.beta[plan.out_base + o],
+                        )
+                    };
+                    *out.at_mut(o, y, x) = scale_bias(acc, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+impl ConvEngine for Xnor {
+    fn name(&self) -> &'static str {
+        "xnor"
+    }
+
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    fn wants_binary_raster(&self) -> bool {
+        true
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        let layer = LayerData {
+            k: job.k,
+            zero_pad: job.zero_pad,
+            input: &job.image,
+            kernels: &job.kernels,
+            packed: None,
+            raster: None,
+            binary: None,
+            scale_bias: &job.scale_bias,
+        };
+        let plan =
+            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
+        self.run_plan(&layer, &plan)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let identity = plan.in_blocks > 1;
+        let Xnor { accs, raster: scratch } = self;
+        accs.clear();
+        accs.resize(plan.out_len, 0);
+        run_with_raster(scratch, layer, plan, |raster, c_base, row0, packed, out| {
+            conv_scalar(raster, c_base, row0, layer, plan, packed, identity, out, accs);
+        })
+    }
+}
+
+impl ConvEngine for XnorSimd {
+    fn name(&self) -> &'static str {
+        if self.forced_scalar {
+            "xnor-simd-scalar"
+        } else {
+            "xnor-simd"
+        }
+    }
+
+    fn wants_packed(&self) -> bool {
+        true
+    }
+
+    fn wants_binary_raster(&self) -> bool {
+        true
+    }
+
+    fn run_block(&mut self, job: &BlockJob) -> EngineOutput {
+        let layer = LayerData {
+            k: job.k,
+            zero_pad: job.zero_pad,
+            input: &job.image,
+            kernels: &job.kernels,
+            packed: None,
+            raster: None,
+            binary: None,
+            scale_bias: &job.scale_bias,
+        };
+        let plan =
+            BlockPlan::whole(job.k, job.zero_pad, job.kernels.n_out, job.image.c, job.image.h);
+        self.run_plan(&layer, &plan)
+    }
+
+    fn run_plan(&mut self, layer: &LayerData<'_>, plan: &BlockPlan) -> EngineOutput {
+        let identity = plan.in_blocks > 1;
+        let isa = self.isa;
+        let XnorSimd { accs, raster: scratch, .. } = self;
+        accs.clear();
+        accs.resize(plan.out_len, 0);
+        run_with_raster(scratch, layer, plan, |raster, c_base, row0, packed, out| match isa {
+            Isa::Scalar => {
+                conv_scalar(raster, c_base, row0, layer, plan, packed, identity, out, accs)
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                // SAFETY: Isa::Avx2 is only selected after
+                // is_x86_feature_detected!("avx2") returned true.
+                unsafe {
+                    avx2::conv(
+                        raster.raw_parts(),
+                        c_base,
+                        row0,
+                        layer,
+                        plan,
+                        packed,
+                        identity,
+                        out,
+                        accs,
+                    )
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                // SAFETY: NEON is mandatory on aarch64.
+                unsafe {
+                    neon::conv(
+                        raster.raw_parts(),
+                        c_base,
+                        row0,
+                        layer,
+                        plan,
+                        packed,
+                        identity,
+                        out,
+                        accs,
+                    )
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Gen;
+    use crate::workload::{random_image, reference_xnor_conv, BinaryKernels, ScaleBias};
+
+    fn job(
+        k: usize,
+        n_in: usize,
+        n_out: usize,
+        h: usize,
+        w: usize,
+        zp: bool,
+        amp: f64,
+        seed: u64,
+    ) -> BlockJob {
+        let mut g = Gen::new(seed);
+        BlockJob {
+            k,
+            zero_pad: zp,
+            image: random_image(&mut g, n_in, h, w, amp),
+            kernels: BinaryKernels::random(&mut g, n_out, n_in, k),
+            scale_bias: ScaleBias::random(&mut g, n_out),
+        }
+    }
+
+    #[test]
+    fn matches_sign_reference_every_kernel_size() {
+        // n_out = 6 exercises both the vector dot (4-lane / 2-lane) and
+        // its scalar tail on every ISA.
+        for k in 1..=7usize {
+            for zp in [true, false] {
+                if !zp && k == 1 {
+                    continue;
+                }
+                let j = job(k, 3, 6, 11, 9, zp, 0.5, 600 + k as u64);
+                let want = reference_xnor_conv(&j.image, &j.kernels, &j.scale_bias, zp);
+                assert_eq!(Xnor::new().run_block(&j).output, want, "k={k} zp={zp} scalar");
+                assert_eq!(XnorSimd::new().run_block(&j).output, want, "k={k} zp={zp} vector");
+                assert_eq!(
+                    XnorSimd::forced_scalar().run_block(&j).output,
+                    want,
+                    "k={k} zp={zp} forced-scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn word_boundary_windows_match() {
+        for w in [63usize, 64, 65, 66, 127, 130] {
+            let j = job(3, 2, 5, 6, w, true, 0.3, 950 + w as u64);
+            let want = reference_xnor_conv(&j.image, &j.kernels, &j.scale_bias, true);
+            assert_eq!(Xnor::new().run_block(&j).output, want, "w={w} scalar");
+            assert_eq!(XnorSimd::new().run_block(&j).output, want, "w={w} vector");
+        }
+    }
+
+    #[test]
+    fn saturating_regime_matches() {
+        // Many channels of all-plus kernels over an all-positive image:
+        // every channel dot is +512·k², so the Q7.9 accumulator
+        // saturates and the per-input-channel saturation order must
+        // agree exactly with the reference.
+        let mut g = Gen::new(87);
+        let image = random_image(&mut g, 24, 8, 8, 0.02);
+        let kernels = BinaryKernels::all_plus(9, 24, 3);
+        let sb = ScaleBias::random(&mut g, 9);
+        let j = BlockJob {
+            k: 3,
+            zero_pad: true,
+            image: image.clone(),
+            kernels: kernels.clone(),
+            scale_bias: sb.clone(),
+        };
+        let want = reference_xnor_conv(&image, &kernels, &sb, true);
+        assert_eq!(Xnor::new().run_block(&j).output, want);
+        assert_eq!(XnorSimd::new().run_block(&j).output, want);
+        assert_eq!(XnorSimd::forced_scalar().run_block(&j).output, want);
+    }
+
+    #[test]
+    fn names_and_isa_report() {
+        assert_eq!(Xnor::new().name(), "xnor");
+        assert_eq!(XnorSimd::new().name(), "xnor-simd");
+        let s = XnorSimd::forced_scalar();
+        assert_eq!(s.name(), "xnor-simd-scalar");
+        assert_eq!(s.isa_name(), "scalar");
+    }
+
+    #[test]
+    fn scratch_is_reused_across_blocks() {
+        let mut e = Xnor::new();
+        let a = job(3, 2, 6, 8, 8, true, 0.3, 1);
+        let b = job(5, 3, 2, 9, 9, false, 0.3, 2);
+        let ra1 = e.run_block(&a).output;
+        let rb = e.run_block(&b).output;
+        let ra2 = e.run_block(&a).output;
+        assert_eq!(ra1, ra2);
+        assert_eq!(rb, reference_xnor_conv(&b.image, &b.kernels, &b.scale_bias, false));
+        e.run_block(&a);
+        let warm = e.raster_reallocs();
+        for seed in 0..4 {
+            e.run_block(&job(3, 2, 6, 8, 8, true, 0.3, 100 + seed));
+        }
+        assert_eq!(e.raster_reallocs(), warm, "steady-state blocks must not allocate");
+    }
+
+    #[test]
+    fn useful_ops_follow_eq7() {
+        let j = job(3, 2, 4, 6, 5, true, 0.3, 3);
+        let s = Xnor::new().run_block(&j).stats;
+        assert_eq!(s.useful_ops, 2 * 9 * (2 * 4) as u64 * (6 * 5) as u64);
+        assert_eq!(s.cycles.total(), 0); // no ledger
+    }
+}

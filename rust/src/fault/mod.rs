@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::engine::raster::mix64;
-use crate::engine::{BitplaneRaster, PackedKernels};
+use crate::engine::{BinaryRaster, BitplaneRaster, PackedKernels};
 use crate::model::Corner;
 use crate::power::CorePowerModel;
 use crate::testkit::Gen;
@@ -381,6 +381,70 @@ impl FaultPlan {
         flips
     }
 
+    /// Flip image-memory bits across a binary (XNOR-mode) raster's plane
+    /// words — same per-word Bernoulli model as [`Self::corrupt_raster`],
+    /// and the same deterministic site stream, so a binary layer at the
+    /// same (frame, layer, attempt) draws the same pattern a multi-bit
+    /// layer would (a layer is one or the other, never both). Returns
+    /// the number of flips.
+    pub(crate) fn corrupt_binary(
+        &self,
+        raster: &mut BinaryRaster,
+        frame: u64,
+        layer: u64,
+        attempt: u32,
+    ) -> u32 {
+        if !self.image {
+            return 0;
+        }
+        let p = (64.0 * self.attempt_ber(attempt)).min(1.0);
+        if p <= 0.0 {
+            return 0;
+        }
+        let mut g = self.site_gen(TAG_IMAGE, frame, layer, attempt);
+        let mut flips = 0u32;
+        for wi in 0..raster.words_len() {
+            if g.unit_f64() < p {
+                raster.flip_word_bit(wi, g.below(64) as u32);
+                flips += 1;
+            }
+        }
+        flips
+    }
+
+    /// Flip bits in a binary raster's halo-exchange rows (padded row
+    /// indices in `rows`, every channel) — the binary-mode twin of
+    /// [`Self::corrupt_halo`]. Returns the number of flips.
+    pub(crate) fn corrupt_binary_halo(
+        &self,
+        raster: &mut BinaryRaster,
+        rows: &[usize],
+        frame: u64,
+        layer: u64,
+        attempt: u32,
+    ) -> u32 {
+        if !self.halo || rows.is_empty() {
+            return 0;
+        }
+        let p = (64.0 * self.attempt_ber(attempt)).min(1.0);
+        if p <= 0.0 {
+            return 0;
+        }
+        let mut g = self.site_gen(TAG_HALO, frame, layer, attempt);
+        let mut flips = 0u32;
+        for c in 0..raster.channels() {
+            for &py in rows {
+                for wi in raster.row_word_range(c, py) {
+                    if g.unit_f64() < p {
+                        raster.flip_word_bit(wi, g.below(64) as u32);
+                        flips += 1;
+                    }
+                }
+            }
+        }
+        flips
+    }
+
     /// Flip weight bits across the packed filter bank (one Bernoulli per
     /// (out, in) pair over its k² bits). Returns the number of flips.
     pub(crate) fn corrupt_weights(&self, pk: &mut PackedKernels, layer: u64, attempt: u32) -> u32 {
@@ -517,6 +581,47 @@ mod tests {
         let wflips = plan.corrupt_weights(&mut pk, 0, 0);
         assert_eq!(wflips as usize, pk.n_out * pk.n_in);
         assert!(!pk.verify());
+    }
+
+    #[test]
+    fn binary_raster_corruption_is_seeded_and_detected() {
+        let mut g = Gen::new(31);
+        let img = random_image(&mut g, 3, 8, 8, 0.2);
+        let plan = FaultPlan::seeded(5).ber(0.02);
+        let mut a = BinaryRaster::new();
+        let mut b = BinaryRaster::new();
+        a.pack(&img, 3, true);
+        b.pack(&img, 3, true);
+        a.seal();
+        b.seal();
+        let fa = plan.corrupt_binary(&mut a, 7, 1, 0);
+        let fb = plan.clone().corrupt_binary(&mut b, 7, 1, 0);
+        assert_eq!(fa, fb, "same seed must flip the same binary words");
+        assert!(fa > 0, "2% word BER over a packed binary raster should flip something");
+        for y in 0..6 {
+            for x in 0..6 {
+                assert_eq!(a.window(0, y, x), b.window(0, y, x));
+            }
+        }
+        assert!(a.verify().is_some(), "seal/verify must notice the flips");
+        // Saturated rate hits every word, halo corruption stays row-scoped.
+        let mut c = BinaryRaster::new();
+        c.pack(&img, 3, true);
+        let every = FaultPlan::seeded(9).ber(1.0).corrupt_binary(&mut c, 0, 0, 0);
+        assert_eq!(every as usize, c.words_len(), "p=1 must flip every word once");
+        let mut h = BinaryRaster::new();
+        h.pack(&img, 3, true);
+        h.seal();
+        let hf = FaultPlan::seeded(9).ber(1.0).corrupt_binary_halo(&mut h, &[2, 3], 0, 0, 0);
+        assert!(hf > 0 && (hf as usize) < h.words_len());
+        assert!(h.verify().is_some());
+        // Disabled plan leaves a sealed binary raster verifiable.
+        let mut d = BinaryRaster::new();
+        d.pack(&img, 3, true);
+        d.seal();
+        assert_eq!(FaultPlan::disabled().corrupt_binary(&mut d, 0, 0, 0), 0);
+        assert_eq!(FaultPlan::disabled().corrupt_binary_halo(&mut d, &[1], 0, 0, 0), 0);
+        assert_eq!(d.verify(), None);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! yodann info                         chip/calibration summary + headlines
 //! yodann table <1|2|4|5>              regenerate a paper table (vs paper)
 //! yodann table 3 --net <id>           per-layer Table III for one network
+//! yodann table xnor                   accelerator-generation table (BWN vs XNOR mode)
 //! yodann run --net <id> [--v 0.6]     evaluate a network at a corner
 //! yodann simulate [--k 3 ...]         run one block on the cycle simulator
 //! yodann golden [--seed N]            simulator vs PJRT golden model
@@ -29,7 +30,7 @@ use yodann::coordinator::{metrics::sim_metrics, SessionLayerSpec, ShardGrid, Sha
 use yodann::engine::EngineKind;
 use yodann::fault::{bit_error_rate, FaultPlan, LiveBer};
 use yodann::hw::{BlockJob, Chip, ChipConfig, EnergyModel};
-use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph};
+use yodann::model::{evaluate_network, networks, Corner, Network, NetworkGraph, Precision};
 use yodann::power::{ArchId, CorePowerModel};
 use yodann::report::{
     figures, paper,
@@ -43,7 +44,7 @@ use yodann::workload::{random_image, synthetic_scene, BinaryKernels, Image, Scal
 const VALUE_KEYS: &[&str] = &[
     "net", "v", "k", "n-in", "n-out", "h", "w", "seed", "points", "workers", "arch", "frames",
     "engine", "scale", "shards", "bands", "corner", "scenario", "budget-mw", "slo-ms", "tick-ms",
-    "v-start", "depth",
+    "v-start", "depth", "precision",
 ];
 
 fn main() {
@@ -89,6 +90,8 @@ fn print_help() {
          \x20 info                        chip configuration + headline metrics vs paper\n\
          \x20 table <1|2|4|5>             regenerate a paper table with paper deltas\n\
          \x20 table 3 --net <id>          per-layer Table III rows for one network\n\
+         \x20 table xnor                  accelerator-generation comparison: YodaNN BWN\n\
+         \x20                             vs the derived XNOR (binary-activation) mode\n\
          \x20 run --net <id> [--v 0.6]    evaluate a network at an operating corner\n\
          \x20 simulate [--k 3 --n-in 32 --n-out 64 --h 16 --w 16 --v 0.6] [--valid]\n\
          \x20                             run one block on the cycle-accurate simulator\n\
@@ -96,12 +99,21 @@ fn print_help() {
          \x20 figure <2|6|11|12|13>       regenerate a paper figure's data series\n\
          \x20 sweep [--points 13] [--arch yodann|q29|bin8]  voltage sweep\n\
          \x20 throughput [--net scene-labeling] [--frames 8]\n\
-         \x20            [--engine both|all|functional|functional-pr1|simd|simd-scalar|cycle]\n\
+         \x20            [--engine both|all|xnor-all|functional|functional-pr1|simd|\n\
+         \x20             simd-scalar|cycle|xnor|xnor-simd|xnor-simd-scalar]\n\
+         \x20            [--precision multi-bit|binary|p1,p2,...]\n\
          \x20            [--workers N] [--scale 0.25] [--seed 42] [--shards NxM] [--bands N]\n\
          \x20                             batch synthetic frames through a NetworkSession\n\
          \x20                             and report frames/s per engine (A/B + equality;\n\
-         \x20                             'all' adds the PR-1 per-window baseline and the\n\
-         \x20                             SIMD engine in vector + forced-scalar form).\n\
+         \x20                             'all' adds the PR-1 per-window baseline, the\n\
+         \x20                             SIMD engine in vector + forced-scalar form and\n\
+         \x20                             the XNOR binary-activation family; 'xnor-all'\n\
+         \x20                             runs just the XNOR family; bit-identity is\n\
+         \x20                             checked within each precision family).\n\
+         \x20                             --precision overrides the per-layer precision\n\
+         \x20                             knob: one spelling broadcasts, a comma list\n\
+         \x20                             assigns layer by layer (binary layers run on\n\
+         \x20                             the engine's XNOR companion).\n\
          \x20                             --bands N runs every engine again under the\n\
          \x20                             within-frame row-band schedule (N bands, 0 = one\n\
          \x20                             per worker), checks bit-identity against the\n\
@@ -157,8 +169,10 @@ fn print_help() {
          \x20                             budget was violated. Same seed => identical\n\
          \x20                             corner trace and output digest (no wall clock\n\
          \x20                             in the control law).\n\
-         \x20 networks                    list the networks of Tables III–V and flag\n\
-         \x20                             which are runnable (chain/graph) vs\n\
+         \x20 networks                    list the networks of Tables III–V, their\n\
+         \x20                             precision modes (runnable models take the\n\
+         \x20                             per-layer multi-bit/binary knob) and whether\n\
+         \x20                             they are runnable (chain/graph) vs\n\
          \x20                             descriptor-only"
     );
 }
@@ -220,7 +234,7 @@ fn cmd_info() -> Result<(), String> {
 }
 
 fn cmd_table(args: &Args) -> Result<(), String> {
-    let which = args.positional.first().ok_or("table number required (1..5)")?;
+    let which = args.positional.first().ok_or("table number required (1..5, or xnor)")?;
     let t = match which.as_str() {
         "1" => tables::table1(),
         "2" => tables::table2(),
@@ -231,7 +245,8 @@ fn cmd_table(args: &Args) -> Result<(), String> {
         }
         "4" => tables::table45(Corner::energy_optimal()),
         "5" => tables::table45(Corner::throughput_optimal()),
-        other => return Err(format!("unknown table {other}")),
+        "xnor" => tables::xnor_generation_table(),
+        other => return Err(format!("unknown table {other} (1..5 or xnor)")),
     };
     println!("{}", t.render());
     Ok(())
@@ -457,10 +472,14 @@ enum NetModel {
 
 /// Batch synthetic frames through the serving facade (`yodann::api::Yodann`)
 /// on one or both engines: the end-to-end throughput A/B. With more than one
-/// engine selected (`--engine both`, or `--engine all` which adds the
-/// PR-1 per-window functional baseline and the SIMD engine in vector +
-/// forced-scalar form) every engine's outputs are also
-/// checked for bit-identity against the first. With `--shards NxM`
+/// engine selected (`--engine both`; `--engine all` which adds the
+/// PR-1 per-window functional baseline, the SIMD engine in vector +
+/// forced-scalar form and the XNOR binary-activation family; or
+/// `--engine xnor-all` for just the XNOR family) every engine's outputs
+/// are checked for bit-identity against the first *of its precision
+/// family* — XNOR engines follow the sign reference, not the Q2.9
+/// datapath. `--precision` overrides the per-layer precision knob
+/// (broadcast or comma list). With `--shards NxM`
 /// every engine additionally runs the multi-chip per-shard schedule on
 /// that grid, and with `--bands N` the within-frame row-band schedule;
 /// in both cases bit-identity against the per-frame run is enforced and
@@ -499,21 +518,44 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         "both" => vec![EngineKind::Functional, EngineKind::CycleAccurate],
         // The full A/B field: the raster functional engine, the PR-1
         // per-window packing baseline, the SIMD engine (runtime-detected
-        // vector path and forced-scalar control), plus the cycle
-        // simulator for reference.
-        "all" => vec![
-            EngineKind::Functional,
-            EngineKind::FunctionalPerWindow,
-            EngineKind::FunctionalSimd,
-            EngineKind::FunctionalSimdScalar,
-            EngineKind::CycleAccurate,
-        ],
+        // vector path and forced-scalar control), the cycle simulator
+        // for reference, plus the binary-activation XNOR family.
+        // Bit-identity is only checked within a precision family —
+        // XNOR engines binarize their inputs, so their outputs follow
+        // the sign reference, not the Q2.9 datapath.
+        "all" => {
+            let mut v = vec![
+                EngineKind::Functional,
+                EngineKind::FunctionalPerWindow,
+                EngineKind::FunctionalSimd,
+                EngineKind::FunctionalSimdScalar,
+                EngineKind::CycleAccurate,
+            ];
+            v.extend(EngineKind::XNOR);
+            v
+        }
+        "xnor-all" => EngineKind::XNOR.to_vec(),
         other => vec![EngineKind::parse(other).ok_or_else(|| {
             format!(
-                "{} (or the multi-engine spellings: both, all)",
+                "{} (or the multi-engine spellings: both, all, xnor-all)",
                 YodannError::UnknownEngine { given: other.to_string() }
             )
         })?],
+    };
+    // Per-layer precision override: one spelling broadcasts to every
+    // conv layer, a comma list assigns layer by layer (arity checked
+    // against the compiled plan at build).
+    let precision: Option<Vec<Precision>> = match args.options.get("precision") {
+        None => None,
+        Some(s) => Some(
+            s.split(',')
+                .map(|t| {
+                    Precision::parse(t).ok_or_else(|| {
+                        format!("--precision '{t}' (accepted: {})", Precision::ACCEPTED.join(", "))
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        ),
     };
 
     // Chain networks run the historical spec path (byte-identical);
@@ -544,12 +586,27 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
     let w = ((net.img.1 as f64 * scale).round() as usize).max(16);
     let mut g = Gen::new(seed ^ 0xF00D);
     let frames: Vec<Image> = (0..n_frames).map(|_| synthetic_scene(&mut g, c0, h, w)).collect();
+    // One --precision spelling broadcasts across the chain; a comma
+    // list must match the conv count (checked again at build).
+    let precision = precision.map(|ps| if ps.len() == 1 { vec![ps[0]; n_convs] } else { ps });
 
     println!(
         "{} ({} conv layers, {model_note}, seeded binary weights), {} frames of {}x{}x{}, {} \
          workers:",
         net.name, n_convs, n_frames, c0, h, w, workers
     );
+    let any_binary = kinds.iter().any(|k| k.is_binary())
+        || precision.as_ref().is_some_and(|ps| ps.contains(&Precision::Binary));
+    if any_binary {
+        use yodann::power::xnor::{activation_words, ACTIVATION_PLANES_BWN, ACTIVATION_PLANES_XNOR};
+        let bwn = activation_words(c0, h, w, first_k, first_pad, ACTIVATION_PLANES_BWN);
+        let xn = activation_words(c0, h, w, first_k, first_pad, ACTIVATION_PLANES_XNOR);
+        println!(
+            "  binary activations in play: layer-1 residency {xn} words (XNOR) vs {bwn} (BWN), \
+             {}x less traffic",
+            bwn / xn
+        );
+    }
     let cfg = ChipConfig::yodann();
     // Clamp the requested grid to layer 1's output space: axes beyond
     // it can never materialize as chips, and the printed envelope plus
@@ -592,6 +649,10 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             .workers(workers)
             .shard_policy(policy)
             .max_in_flight(n_frames);
+        let b = match &precision {
+            Some(ps) => b.precision(ps.clone()),
+            None => b,
+        };
         let b = match &model {
             NetModel::Chain(specs) => b.layers(specs.clone()),
             NetModel::Graph(g) => b.graph(g),
@@ -713,9 +774,18 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
         }
         runs.push((kind, out, dt));
     }
-    if runs.len() > 1 {
-        let (ka, oa, ta) = &runs[0];
-        for (kb, ob, tb) in &runs[1..] {
+    // Equality is a per-family contract: multi-bit engines follow the
+    // chip's Q2.9 arithmetic, XNOR engines the binarized sign
+    // reference — identical within a family, intentionally different
+    // across.
+    for binary in [false, true] {
+        let fam: Vec<&(EngineKind, Vec<Image>, f64)> =
+            runs.iter().filter(|(k, _, _)| k.is_binary() == binary).collect();
+        if fam.len() < 2 {
+            continue;
+        }
+        let (ka, oa, ta) = fam[0];
+        for (kb, ob, tb) in &fam[1..] {
             if oa != ob {
                 return Err(format!(
                     "engine outputs diverge: {} vs {} — this is a bug",
@@ -725,7 +795,10 @@ fn cmd_throughput(args: &Args) -> Result<(), String> {
             }
             println!("  {} speedup over {}: {:.1}x", ka.name(), kb.name(), tb / ta);
         }
-        println!("  outputs bit-identical across engines");
+        println!(
+            "  outputs bit-identical across {} engines",
+            if binary { "xnor" } else { "multi-bit" }
+        );
     }
     if !merged_records.is_empty() {
         // The schema gate first: a bogus record set (zero cycles, NaN
@@ -1302,17 +1375,34 @@ fn exec_kind(n: &Network) -> &'static str {
     }
 }
 
+/// Precision modes a listed network can run under. Runnable models
+/// (chain or graph) take the per-layer [`Precision`] knob, so they list
+/// every mode in [`Precision::ALL`] — a new precision variant lands in
+/// this column by construction. Descriptor-only rows evaluate through
+/// the analytic BWN model only.
+fn precision_modes(n: &Network) -> String {
+    if networks::is_simple_chain(n) || networks::has_graph(n.id) {
+        Precision::ALL.map(|p| p.name()).join("+")
+    } else {
+        Precision::MultiBit.name().to_string()
+    }
+}
+
 fn cmd_networks() -> Result<(), String> {
-    println!("{:<14} {:<14} {:>10} {:>8}  {:<16}", "id", "name", "img", "GOp", "exec");
+    println!(
+        "{:<14} {:<14} {:>10} {:>8}  {:<18} {:<16}",
+        "id", "name", "img", "GOp", "precision", "exec"
+    );
     let mut nets = networks::all_networks();
     nets.push(networks::scene_labeling());
     for n in &nets {
         println!(
-            "{:<14} {:<14} {:>10} {:>8.2}  {:<16}",
+            "{:<14} {:<14} {:>10} {:>8.2}  {:<18} {:<16}",
             n.id,
             n.name,
             format!("{}x{}", n.img.0, n.img.1),
             n.conv_ops() as f64 / 1e9,
+            precision_modes(n),
             exec_kind(n)
         );
     }

@@ -85,6 +85,70 @@ impl Weights {
     }
 }
 
+/// Per-layer activation precision — the BinarEye-style energy–accuracy
+/// knob. [`Precision::MultiBit`] is classic YodaNN: 12-bit Q2.9
+/// activations through the bitplane raster and the multi-bit engine
+/// family. [`Precision::Binary`] is XNOR mode (XNORBIN / ChewBaccaNN):
+/// the layer's *input* activations are binarized to ±1.0 (sign
+/// convention `x ≥ 0 ⇒ +1`) and the conv runs on an
+/// [`crate::engine::EngineKind`] from the XNOR family against the
+/// 1-bit [`crate::engine::BinaryRaster`] — ~12× fewer activation words
+/// moved per (channel, row). One graph can mix both, e.g. a multi-bit
+/// stem in front of a binary trunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// 12-bit Q2.9 activations (YodaNN BWN mode) — the default.
+    #[default]
+    MultiBit,
+    /// 1-bit ±1 activations (XNOR/BNN mode).
+    Binary,
+}
+
+impl Precision {
+    /// Canonical spelling ([`std::fmt::Display`] echoes it).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::MultiBit => "multi-bit",
+            Precision::Binary => "binary",
+        }
+    }
+
+    /// Parse a CLI/config spelling. Accepted: `multi-bit`/`multibit`/
+    /// `bwn` and `binary`/`bnn`/`xnor`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "multi-bit" | "multibit" | "bwn" => Some(Precision::MultiBit),
+            "binary" | "bnn" | "xnor" => Some(Precision::Binary),
+            _ => None,
+        }
+    }
+
+    /// Every spelling [`Precision::parse`] accepts (drift-pinned by the
+    /// round-trip proptest).
+    pub const ACCEPTED: [&'static str; 6] =
+        ["multi-bit", "multibit", "bwn", "binary", "bnn", "xnor"];
+
+    /// Every precision, in listing order (`yodann networks` builds its
+    /// modes column from this, so a new precision shows up there by
+    /// construction).
+    pub const ALL: [Precision; 2] = [Precision::MultiBit, Precision::Binary];
+
+    /// Short column tag for listings (`B` = multi-bit/BWN, `X` = binary/
+    /// XNOR).
+    pub fn tag(self) -> char {
+        match self {
+            Precision::MultiBit => 'B',
+            Precision::Binary => 'X',
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.name())
+    }
+}
+
 /// Handle to a node of the graph being built (opaque; only valid for
 /// the [`NetworkBuilder`] that issued it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +169,9 @@ pub enum GraphOp {
         zero_pad: bool,
         /// Kernels and scale/bias.
         weights: Weights,
+        /// Activation precision of this layer's *input* (the per-layer
+        /// BWN/BNN knob).
+        precision: Precision,
     },
     /// Quantized ReLU (`max(0, ·)` on raw Q2.9), on the host.
     Relu,
@@ -121,6 +188,17 @@ pub enum GraphOp {
     Add,
     /// Channel-wise concatenation of ≥ 2 branches.
     Concat,
+    /// Batch-norm + sign lowered to a per-channel threshold (the
+    /// standard BNN trick): `out = +1.0 if x ≥ threshold[c] else −1.0`
+    /// in raw Q2.9 (±512), on the host. The natural producer of a
+    /// [`Precision::Binary`] conv's input — its output is already a
+    /// legal binarized Q2.9 image, so the next layer's 1-bit raster
+    /// pack is lossless.
+    BatchNormThreshold {
+        /// Per-channel raw Q2.9 thresholds, arity-checked against the
+        /// source's channel count at [`NetworkGraph::compile`].
+        thresholds: Arc<Vec<i64>>,
+    },
 }
 
 /// One node: its operation, label (used in error messages) and inputs.
@@ -178,9 +256,36 @@ impl NetworkBuilder {
         NodeId(self.nodes.len() - 1)
     }
 
-    /// Add a convolution node (`k` comes from `weights.kernels.k`).
+    /// Add a convolution node (`k` comes from `weights.kernels.k`),
+    /// multi-bit activations (the default precision).
     pub fn conv(&mut self, label: &str, src: NodeId, zero_pad: bool, weights: Weights) -> NodeId {
-        self.push(label.to_string(), GraphOp::Conv { zero_pad, weights }, vec![src])
+        self.conv_with_precision(label, src, zero_pad, weights, Precision::MultiBit)
+    }
+
+    /// Add a convolution node with an explicit activation
+    /// [`Precision`] — [`Precision::Binary`] makes this an XNOR layer
+    /// (its input is binarized to ±1 before the dot product).
+    pub fn conv_with_precision(
+        &mut self,
+        label: &str,
+        src: NodeId,
+        zero_pad: bool,
+        weights: Weights,
+        precision: Precision,
+    ) -> NodeId {
+        self.push(label.to_string(), GraphOp::Conv { zero_pad, weights, precision }, vec![src])
+    }
+
+    /// Add a batch-norm-threshold node: per-channel `sign(x − t[c])`
+    /// emitting ±1.0 (raw ±512). Threshold arity is checked against
+    /// the source's channels at [`NetworkGraph::compile`].
+    pub fn batch_norm_threshold(
+        &mut self,
+        label: &str,
+        src: NodeId,
+        thresholds: Arc<Vec<i64>>,
+    ) -> NodeId {
+        self.push(label.to_string(), GraphOp::BatchNormThreshold { thresholds }, vec![src])
     }
 
     /// Add a quantized-ReLU node.
@@ -331,6 +436,17 @@ impl NetworkGraph {
                     weights.kernels.n_out
                 }
                 GraphOp::Relu | GraphOp::MaxPool2 | GraphOp::Subsample2 => out_c[n.inputs[0].0],
+                GraphOp::BatchNormThreshold { thresholds } => {
+                    let src_c = out_c[n.inputs[0].0];
+                    if thresholds.len() != src_c {
+                        return Err(YodannError::ThresholdArity {
+                            thresholds: thresholds.len(),
+                            channels: src_c,
+                        }
+                        .at_node(&n.label));
+                    }
+                    src_c
+                }
                 GraphOp::Add => {
                     if n.inputs.len() < 2 {
                         return Err(YodannError::GraphArity {
@@ -390,12 +506,13 @@ impl NetworkGraph {
             let srcs: Vec<usize> = n.inputs.iter().map(|id| id.0).collect();
             let step = match &n.op {
                 GraphOp::Input { .. } => unreachable!("checked in pass 1"),
-                GraphOp::Conv { zero_pad, weights } => {
+                GraphOp::Conv { zero_pad, weights, precision } => {
                     convs.push(PlanConv {
                         k: weights.kernels.k,
                         zero_pad: *zero_pad,
                         kernels: Arc::clone(&weights.kernels),
                         scale_bias: Arc::clone(&weights.scale_bias),
+                        precision: *precision,
                         label: n.label.clone(),
                     });
                     PlanStep::Conv { conv: convs.len() - 1, src: srcs[0], dst: i }
@@ -405,6 +522,11 @@ impl NetworkGraph {
                 GraphOp::Subsample2 => PlanStep::Subsample2 { src: srcs[0], dst: i },
                 GraphOp::Add => PlanStep::Add { srcs, dst: i },
                 GraphOp::Concat => PlanStep::Concat { srcs, dst: i },
+                GraphOp::BatchNormThreshold { thresholds } => PlanStep::BatchNormThreshold {
+                    thresholds: Arc::clone(thresholds),
+                    src: srcs[0],
+                    dst: i,
+                },
             };
             steps.push(step);
             step_labels.push(n.label.clone());
@@ -441,6 +563,8 @@ pub struct PlanConv {
     pub kernels: Arc<BinaryKernels>,
     /// Per-output-channel scale/bias, shared.
     pub scale_bias: Arc<ScaleBias>,
+    /// Activation precision of this layer's input (BWN vs XNOR mode).
+    pub precision: Precision,
     /// Originating graph-node label (diagnostics).
     pub label: String,
 }
@@ -494,6 +618,17 @@ pub enum PlanStep {
         /// Output slot.
         dst: usize,
     },
+    /// Batch-norm + sign threshold interlude: per-channel
+    /// `x ≥ t[c] ? +512 : −512` (host arithmetic, shape-preserving).
+    BatchNormThreshold {
+        /// Per-channel raw Q2.9 thresholds (arity == src channels,
+        /// validated at compile).
+        thresholds: Arc<Vec<i64>>,
+        /// Input slot.
+        src: usize,
+        /// Output slot.
+        dst: usize,
+    },
 }
 
 impl PlanStep {
@@ -505,7 +640,8 @@ impl PlanStep {
             | PlanStep::MaxPool2 { dst, .. }
             | PlanStep::Subsample2 { dst, .. }
             | PlanStep::Add { dst, .. }
-            | PlanStep::Concat { dst, .. } => *dst,
+            | PlanStep::Concat { dst, .. }
+            | PlanStep::BatchNormThreshold { dst, .. } => *dst,
         }
     }
 
@@ -515,7 +651,8 @@ impl PlanStep {
             PlanStep::Conv { src, .. }
             | PlanStep::Relu { src, .. }
             | PlanStep::MaxPool2 { src, .. }
-            | PlanStep::Subsample2 { src, .. } => vec![*src],
+            | PlanStep::Subsample2 { src, .. }
+            | PlanStep::BatchNormThreshold { src, .. } => vec![*src],
             PlanStep::Add { srcs, .. } | PlanStep::Concat { srcs, .. } => srcs.clone(),
         }
     }
@@ -621,7 +758,9 @@ impl CompiledGraph {
                         if pc.zero_pad { (sh, sw) } else { (sh - pc.k + 1, sw - pc.k + 1) };
                     (pc.kernels.n_out, oh, ow)
                 }
-                PlanStep::Relu { src, .. } => get(&shapes, *src),
+                PlanStep::Relu { src, .. } | PlanStep::BatchNormThreshold { src, .. } => {
+                    get(&shapes, *src)
+                }
                 PlanStep::MaxPool2 { src, .. } => {
                     let (sc, sh, sw) = get(&shapes, *src);
                     if sh >= 2 && sw >= 2 {
@@ -806,6 +945,63 @@ mod tests {
                 if node == "join"),
             "{e}"
         );
+    }
+
+    #[test]
+    fn precision_knob_and_threshold_lower_into_the_plan() {
+        let mut g = Gen::new(9);
+        let mut b = NetworkBuilder::new("bnn", 3);
+        let x = b.input();
+        // BWN stem → batch-norm threshold → XNOR trunk.
+        let stem = b.conv("stem", x, true, Weights::seeded(&mut g, 8, 3, 3));
+        let bin = b.batch_norm_threshold("bnt", stem, Arc::new(vec![0; 8]));
+        let trunk = b.conv_with_precision(
+            "trunk",
+            bin,
+            true,
+            Weights::seeded(&mut g, 8, 8, 3),
+            Precision::Binary,
+        );
+        let plan = b.build(trunk).compile().unwrap();
+        assert_eq!(plan.convs[0].precision, Precision::MultiBit);
+        assert_eq!(plan.convs[1].precision, Precision::Binary);
+        // The threshold step is shape-preserving and slot-typed.
+        assert_eq!(plan.walk_shapes(3, 12, 10).unwrap(), (8, 12, 10));
+        let bnt = &plan.steps[1];
+        assert!(matches!(bnt, PlanStep::BatchNormThreshold { .. }));
+        assert_eq!(bnt.srcs(), vec![bnt.dst() - 1]);
+    }
+
+    #[test]
+    fn threshold_arity_is_validated_at_the_node() {
+        let mut g = Gen::new(10);
+        let mut b = NetworkBuilder::new("badt", 3);
+        let x = b.input();
+        let c = b.conv("c", x, true, Weights::seeded(&mut g, 8, 3, 3));
+        let t = b.batch_norm_threshold("bnt", c, Arc::new(vec![0; 5])); // 5 != 8
+        let e = b.build(t).compile().unwrap_err();
+        assert!(
+            matches!(&e, YodannError::AtNode { node, inner }
+                if node == "bnt"
+                    && matches!(**inner, YodannError::ThresholdArity { thresholds: 5, channels: 8 })),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn precision_parse_round_trips_and_covers_accepted() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+            assert_eq!(p.to_string(), p.name());
+        }
+        for s in Precision::ACCEPTED {
+            let p = Precision::parse(s).unwrap_or_else(|| panic!("ACCEPTED spelling {s:?}"));
+            assert!(Precision::ALL.contains(&p), "{s:?} parses outside ALL");
+        }
+        assert_eq!(Precision::parse("xnor"), Some(Precision::Binary));
+        assert_eq!(Precision::parse("bwn"), Some(Precision::MultiBit));
+        assert_eq!(Precision::parse("ternary"), None);
+        assert_eq!(Precision::default(), Precision::MultiBit);
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod layer;
 pub mod networks;
 
 pub use efficiency::{evaluate_layer, evaluate_network, Corner, LayerEval, NetworkEval};
-pub use graph::{CompiledGraph, NetworkBuilder, NetworkGraph, Weights};
+pub use graph::{CompiledGraph, NetworkBuilder, NetworkGraph, Precision, Weights};
 pub use layer::{ops_per_layer, ConvLayer, KernelMode, Layer};
 pub use networks::{all_networks, network, Network};

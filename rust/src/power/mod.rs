@@ -17,6 +17,11 @@
 //! * [`multichip`] — aggregate power envelope and halo border-exchange
 //!   accounting for sharded multi-chip grids
 //!   ([`crate::coordinator::shard`]).
+//! * [`xnor`] — the derived XNOR-mode (binary-activation) operating
+//!   point: SCM occupancy / activation traffic at 1 bitplane instead of
+//!   12, SoP at XNOR+popcount cost, per-op energy per V/f corner — the
+//!   accelerator-generation comparison against XNORBIN/ChewBaccaNN-class
+//!   successors.
 //! * [`area`] — per-unit gate-equivalent areas (Fig. 6, floorplan §IV-B).
 //! * [`calib`] — every constant, each annotated with the table/figure it
 //!   anchors to.
@@ -27,9 +32,11 @@ pub mod core;
 pub mod io;
 pub mod multichip;
 pub mod vf;
+pub mod xnor;
 
 pub use self::core::{ArchId, CorePowerModel, PowerBreakdown};
 pub use area::{area_breakdown, metric_area_mge, AreaBreakdown};
 pub use io::IoPowerModel;
 pub use multichip::{halo_exchange_words, MultiChipPower};
 pub use vf::VfCurve;
+pub use xnor::{GenerationPoint, XnorPowerModel};

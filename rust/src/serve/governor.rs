@@ -17,7 +17,7 @@
 
 use crate::api::{Yodann, YodannError};
 use crate::model::Corner;
-use crate::power::CorePowerModel;
+use crate::power::{CorePowerModel, XnorPowerModel};
 
 /// What the governor optimizes for.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -125,6 +125,10 @@ pub struct Governor {
     mode: GovernorMode,
     cfg: GovernorConfig,
     model: CorePowerModel,
+    /// Derived XNOR pricing plus the session's binary-layer fraction;
+    /// `None` when no layer runs the binary datapath (or the
+    /// architecture has no binary-weight calibration to derive from).
+    xnor: Option<(XnorPowerModel, f64)>,
     chips: usize,
     k: usize,
     v: f64,
@@ -142,10 +146,14 @@ impl Governor {
         let corner = session.corner();
         let model = CorePowerModel::new(corner.arch);
         model.vf.try_freq(cfg.v_start)?;
+        let frac = session.binary_layer_fraction();
+        let xnor = (frac > 0.0 && corner.arch.binary_weights())
+            .then(|| (XnorPowerModel::new(corner.arch), frac));
         Ok(Governor {
             mode,
             cfg,
             model,
+            xnor,
             chips: session.envelope_chips(),
             k: session.envelope_kernel(),
             v: cfg.v_start,
@@ -183,10 +191,26 @@ impl Governor {
     /// Modeled core power (W) of the session at supply `v` and
     /// utilization `util`: the envelope mode over the envelope chips,
     /// derated by the paper's workload activity factor
-    /// ([`CorePowerModel::p_real`]). `v` is clamped to the curve.
+    /// ([`CorePowerModel::p_real`]). Sessions whose layers run the
+    /// binary (XNOR) datapath blend toward the derived
+    /// [`XnorPowerModel`] pricing by their binary-layer fraction, so
+    /// the governor holds a power budget against what a mixed-precision
+    /// chain actually burns. `v` is clamped to the curve.
     pub fn core_power_w(&self, v: f64, util: f64) -> f64 {
         let v = self.model.vf.step_supply(v, 0.0);
-        self.chips as f64 * self.model.p_core(v, self.k) * CorePowerModel::p_real(util.clamp(0.0, 1.0))
+        let base = self.chips as f64
+            * self.model.p_core(v, self.k)
+            * CorePowerModel::p_real(util.clamp(0.0, 1.0));
+        match &self.xnor {
+            // First-order: the XNOR structural reductions (memory /12,
+            // SoP /9.6) apply as the slot-7 power ratio at this corner,
+            // weighted by how many layers run binary.
+            Some((m, frac)) => {
+                let ratio = m.p_core_slot7(v) / self.model.p_core_slot7(v);
+                base * ((1.0 - frac) + frac * ratio)
+            }
+            None => base,
+        }
     }
 
     /// Aggregate peak service rate (Op/s) at supply `v` — the queue
@@ -343,6 +367,38 @@ mod tests {
         .unwrap();
         assert_eq!(tight.tick(&obs).unwrap(), GovernorAction::Hold);
         assert!((tight.supply() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xnor_sessions_price_under_the_bwn_envelope() {
+        // The same one-layer chain on the binary datapath must report
+        // strictly less core power at every corner — the governor's
+        // budget headroom is what mixed-precision serving buys.
+        let bwn = session();
+        let mut g = Gen::new(9);
+        let layer = SessionLayerSpec {
+            k: 3,
+            zero_pad: true,
+            kernels: Arc::new(BinaryKernels::random(&mut g, 2, 2, 3)),
+            scale_bias: Arc::new(ScaleBias::identity(2)),
+            relu: false,
+            maxpool2: false,
+        };
+        let xnor = SessionBuilder::new()
+            .layers(vec![layer])
+            .workers(1)
+            .precision(vec![crate::model::Precision::Binary])
+            .build()
+            .unwrap();
+        assert_eq!(bwn.binary_layer_fraction(), 0.0);
+        assert_eq!(xnor.binary_layer_fraction(), 1.0);
+        let mode = GovernorMode::PowerBudget { watts: 1.0 };
+        let gb = Governor::new(&bwn, mode, GovernorConfig::default()).unwrap();
+        let gx = Governor::new(&xnor, mode, GovernorConfig::default()).unwrap();
+        for v in [0.6, 0.9, 1.2] {
+            let (pb, px) = (gb.core_power_w(v, 1.0), gx.core_power_w(v, 1.0));
+            assert!(px < pb, "xnor {px} vs bwn {pb} at {v} V");
+        }
     }
 
     #[test]

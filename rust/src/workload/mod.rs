@@ -246,6 +246,55 @@ pub fn reference_conv(
     out
 }
 
+/// Reference XNOR (binary-activation) convolution: every window sample is
+/// binarized to ±1.0 (raw ±512, sign convention `x ≥ 0 ⇒ +1`, so the
+/// zero-pad halo binarizes to **+1**) before the binary-weight dot, then
+/// accumulated with the same per-input-channel Q7.9 saturation and
+/// scale/bias epilogue as [`reference_conv`]. This is the oracle the XNOR
+/// engine family (`engine::xnor`) must match bit-for-bit; the ±512
+/// convention itself is pinned against `engine::binary::binarize_q29` by a
+/// test there (workload deliberately does not depend on `engine`).
+pub fn reference_xnor_conv(
+    img: &Image,
+    kernels: &BinaryKernels,
+    sb: &ScaleBias,
+    zero_pad: bool,
+) -> Image {
+    use crate::fixedpoint::{sat_add, scale_bias, Q7_9};
+    assert_eq!(img.c, kernels.n_in);
+    let k = kernels.k;
+    let (out_h, out_w) =
+        if zero_pad { (img.h, img.w) } else { (img.h - k + 1, img.w - k + 1) };
+    let half = (k - 1) / 2;
+    let mut out = Image::zeros(kernels.n_out, out_h, out_w);
+    for o in 0..kernels.n_out {
+        for y in 0..out_h {
+            for x in 0..out_w {
+                let mut acc: i64 = 0;
+                for i in 0..img.c {
+                    let mut sop: i64 = 0;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let (yy, xx) = if zero_pad {
+                                (y as isize + dy as isize - half as isize,
+                                 x as isize + dx as isize - half as isize)
+                            } else {
+                                ((y + dy) as isize, (x + dx) as isize)
+                            };
+                            let px = img.at_padded(i, yy, xx);
+                            let a = if px >= 0 { 512 } else { -512 };
+                            sop += if kernels.bit(o, i, dy, dx) { a } else { -a };
+                        }
+                    }
+                    acc = sat_add(Q7_9, acc, sop);
+                }
+                *out.at_mut(o, y, x) = scale_bias(acc, sb.alpha[o], sb.beta[o]);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,5 +392,41 @@ mod tests {
         let kernels = BinaryKernels::all_plus(1, c, 1);
         let out = reference_conv(&img, &kernels, &ScaleBias::identity(1), true);
         assert_eq!(out.at(0, 0, 0), 2047); // saturated to Q2.9 max
+    }
+
+    #[test]
+    fn reference_xnor_conv_ignores_magnitudes() {
+        // XNOR conv only sees signs: two images with equal sign patterns but
+        // different magnitudes produce identical outputs.
+        let mut gen = Gen::new(11);
+        let a = random_image(&mut gen, 2, 7, 9, 0.8);
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v = if *v >= 0 { 3 } else { -1500 };
+        }
+        let kernels = BinaryKernels::random(&mut gen, 3, 2, 3);
+        let sb = ScaleBias::random(&mut gen, 3);
+        for zp in [false, true] {
+            assert_eq!(
+                reference_xnor_conv(&a, &kernels, &sb, zp),
+                reference_xnor_conv(&b, &kernels, &sb, zp)
+            );
+        }
+    }
+
+    #[test]
+    fn reference_xnor_conv_all_plus_counts_agreements() {
+        // 1 channel, 3×3 all-plus kernel, zero-pad: every sample (including
+        // the halo, which binarizes to +1) contributes +1.0, so each output
+        // is k² = 9.0 → Q2.9 saturates at 2047 after identity scale? No:
+        // 9.0 = raw 4608 exceeds Q2.9 max 2047 → truncate/saturate to 2047.
+        let img = Image::zeros(1, 3, 3); // zeros binarize to +1
+        let kernels = BinaryKernels::all_plus(1, 1, 3);
+        let out = reference_xnor_conv(&img, &kernels, &ScaleBias::identity(1), true);
+        assert_eq!(out.at(0, 1, 1), 2047);
+        // With α = 1/8 (raw 64): 9.0·0.125 = 1.125 → raw 576.
+        let sb = ScaleBias { alpha: vec![64], beta: vec![0] };
+        let out = reference_xnor_conv(&img, &kernels, &sb, true);
+        assert_eq!(out.at(0, 1, 1), 576);
     }
 }

@@ -12,7 +12,9 @@
 //!   zero-pad on/off, non-square images, channel counts straddling the
 //!   input/output block limits, **thin images with h < k**, thin
 //!   vertical tiles, saturating amplitudes — asserting all engine kinds
-//!   × sharded/unsharded agree bit-for-bit;
+//!   × sharded/unsharded agree bit-for-bit within each precision family
+//!   (the multi-bit Q2.9 kinds among themselves, the binary-activation
+//!   XNOR kinds among themselves);
 //! * the Table-III networks: every chain network runs through the
 //!   serving facade (`yodann::api::Yodann`) under every `ShardPolicy`,
 //!   and every network's first conv row (AlexNet's 6×6 split included)
@@ -72,7 +74,8 @@ fn facade_batch(
 #[test]
 fn prop_engine_shard_matrix_is_bit_identical() {
     // ~100 randomized layers, every engine kind, each also sharded on a
-    // random grid: all six paths must produce the same image.
+    // random grid: every path in a precision family must produce the
+    // same image.
     property("engine x shard conformance", 0xC04F02, 100, |g| {
         let mut cfg = ChipConfig::tiny(4);
         cfg.image_mem_rows = 4 * g.range(8, 20); // h_max 8..20: thin tiles for k = 5, 7
@@ -99,16 +102,19 @@ fn prop_engine_shard_matrix_is_bit_identical() {
             "k={k} pad={zero_pad} {n_in}->{n_out} {h}x{w} amp={amplitude} \
              workers={workers} grid={grid}"
         );
-        let mut first: Option<Image> = None;
+        // Cross-engine equality holds within each family: the multi-bit
+        // kinds compute the chip's Q2.9 function, the binary kinds its
+        // sign/XNOR counterpart. Sharded-vs-plain holds for every kind.
+        let mut first: [Option<Image>; 2] = [None, None];
         for kind in EngineKind::ALL {
             let plain = run_layer_engine(&wl, &cfg, ExecOptions { workers }, kind).output;
             let sharded =
                 run_layer_sharded(&wl, &cfg, ExecOptions { workers }, kind, grid).run.output;
             assert_eq!(plain, sharded, "sharded {} diverges ({ctx})", kind.name());
-            match &first {
-                None => first = Some(plain),
+            match &first[kind.is_binary() as usize] {
+                None => first[kind.is_binary() as usize] = Some(plain),
                 Some(f) => {
-                    assert_eq!(&plain, f, "{} diverges from cycle-accurate ({ctx})", kind.name())
+                    assert_eq!(&plain, f, "{} diverges from its family ({ctx})", kind.name())
                 }
             }
         }
@@ -182,9 +188,16 @@ fn table_iii_network_sessions_conform_across_policies() {
                 functional_outs.push((kind, want.unwrap()));
             }
         }
-        let (ka, oa) = &functional_outs[0];
-        for (kb, ob) in &functional_outs[1..] {
-            assert_eq!(oa, ob, "{} vs {} diverge on {}", ka.name(), kb.name(), net.id);
+        // Full-chain engine equality is a per-family claim: the XNOR
+        // kinds binarize every activation, so they agree with each other
+        // but not with the Q2.9 functional family.
+        for binary in [false, true] {
+            let fam: Vec<_> =
+                functional_outs.iter().filter(|(k, _)| k.is_binary() == binary).collect();
+            let (ka, oa) = fam[0];
+            for (kb, ob) in &fam[1..] {
+                assert_eq!(oa, ob, "{} vs {} diverge on {}", ka.name(), kb.name(), net.id);
+            }
         }
     }
     assert!(chains >= 5, "only {chains} Table-III chains exercised — matrix too thin");
@@ -464,10 +477,29 @@ fn residual_add_graph_matches_naive_host_composition() {
     let p = ref_conv(&cfg, &wp, true, &frame);
     let want = ref_relu(ref_add_sat(&m, &p));
 
-    for kind in EngineKind::ALL {
+    for kind in EngineKind::MULTI_BIT {
         for policy in GRAPH_POLICIES {
             let got = graph_facade_run(cfg, kind, 3, policy, &graph, &frame);
             assert_eq!(got, want, "{} under {policy}", kind.name());
+        }
+    }
+    // The binary family computes the BNN version of the block (sign
+    // activations at every conv): not the Q2.9 composition above, but
+    // the three XNOR engines must agree under every policy.
+    assert_xnor_family_agrees(cfg, &graph, &frame);
+}
+
+/// All three binary-activation engines produce one bit-identical image
+/// on a graph, invariant under every shard policy.
+fn assert_xnor_family_agrees(cfg: ChipConfig, graph: &NetworkGraph, frame: &Image) {
+    let mut want: Option<Image> = None;
+    for kind in EngineKind::XNOR {
+        for policy in GRAPH_POLICIES {
+            let got = graph_facade_run(cfg, kind, 3, policy, graph, frame);
+            match &want {
+                None => want = Some(got),
+                Some(w) => assert_eq!(&got, w, "{} under {policy}", kind.name()),
+            }
         }
     }
 }
@@ -510,12 +542,13 @@ fn branch_concat_graph_matches_naive_host_composition() {
         }
     }
 
-    for kind in EngineKind::ALL {
+    for kind in EngineKind::MULTI_BIT {
         for policy in GRAPH_POLICIES {
             let got = graph_facade_run(cfg, kind, 3, policy, &graph, &frame);
             assert_eq!(got, want, "{} under {policy}", kind.name());
         }
     }
+    assert_xnor_family_agrees(cfg, &graph, &frame);
 }
 
 #[test]
@@ -534,12 +567,13 @@ fn alexnet_and_resnet18_graphs_run_bit_identically_across_engines_and_policies()
     for (id, graph, (h, w)) in cases {
         let mut g = Gen::new(0xE2E ^ h as u64);
         let frame = synthetic_scene(&mut g, 3, h, w);
-        let mut want: Option<Image> = None;
+        // Bit-identity is per engine family (Q2.9 vs sign activations).
+        let mut want: [Option<Image>; 2] = [None, None];
         for kind in EngineKind::ALL {
             for policy in GRAPH_POLICIES {
                 let got = graph_facade_run(cfg, kind, 3, policy, &graph, &frame);
-                match &want {
-                    None => want = Some(got),
+                match &want[kind.is_binary() as usize] {
+                    None => want[kind.is_binary() as usize] = Some(got),
                     Some(wnt) => {
                         assert_eq!(&got, wnt, "{id} on {} under {policy}", kind.name())
                     }

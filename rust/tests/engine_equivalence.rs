@@ -73,10 +73,13 @@ fn prop_engines_identical_on_random_blocked_tiled_layers() {
             cyc.output, fun.output,
             "k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} amp={amplitude}"
         );
-        // Every other kind — the PR-1 per-window baseline and both SIMD
-        // paths (runtime-dispatched vector, forced-scalar) — against the
-        // cycle-accurate reference.
-        for kind in EngineKind::ALL {
+        // Every other multi-bit kind — the PR-1 per-window baseline and
+        // both SIMD paths (runtime-dispatched vector, forced-scalar) —
+        // against the cycle-accurate reference. The binary-activation
+        // family computes a different (sign) function, so it conforms
+        // within itself instead: all three XNOR engines bit-identical on
+        // the same workload, any geometry.
+        for kind in EngineKind::MULTI_BIT {
             if matches!(kind, EngineKind::CycleAccurate | EngineKind::Functional) {
                 continue;
             }
@@ -86,6 +89,17 @@ fn prop_engines_identical_on_random_blocked_tiled_layers() {
                 alt.output,
                 "{} diverges: k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} w={w} \
                  amp={amplitude}",
+                kind.name()
+            );
+        }
+        let xnor = run_layer_engine(&wl, &cfg, ExecOptions { workers }, EngineKind::Xnor);
+        for kind in [EngineKind::XnorSimd, EngineKind::XnorSimdScalar] {
+            let alt = run_layer_engine(&wl, &cfg, ExecOptions { workers }, kind);
+            assert_eq!(
+                xnor.output,
+                alt.output,
+                "{} diverges from xnor: k={k} n_in={n_in} n_out={n_out} pad={zero_pad} h={h} \
+                 w={w} amp={amplitude}",
                 kind.name()
             );
         }
@@ -186,7 +200,7 @@ fn session_batch_equals_layerwise_executor() {
         })
         .collect();
 
-    for kind in EngineKind::ALL {
+    let session_batch = |kind: EngineKind| -> Vec<Image> {
         let mut sess = SessionBuilder::new()
             .chip(cfg)
             .layers(specs.clone())
@@ -195,13 +209,17 @@ fn session_batch_equals_layerwise_executor() {
             .max_in_flight(frames.len())
             .build()
             .expect("two-layer chain is valid");
-        let batch: Vec<Image> = sess
-            .run_batch(frames.clone())
-            .expect("batch runs")
-            .into_iter()
-            .map(|r| r.output)
-            .collect();
-        assert_eq!(batch, reference, "engine {}", kind.name());
+        sess.run_batch(frames.clone()).expect("batch runs").into_iter().map(|r| r.output).collect()
+    };
+    for kind in EngineKind::MULTI_BIT {
+        assert_eq!(session_batch(kind), reference, "engine {}", kind.name());
+    }
+    // The binary family runs the same chain as a BNN (sign activations):
+    // different numbers than the Q2.9 reference by design, but the three
+    // XNOR engines must agree with each other batch-for-batch.
+    let xnor_reference = session_batch(EngineKind::Xnor);
+    for kind in [EngineKind::XnorSimd, EngineKind::XnorSimdScalar] {
+        assert_eq!(session_batch(kind), xnor_reference, "engine {}", kind.name());
     }
 }
 

@@ -96,10 +96,17 @@ fn disabled_injection_is_bit_identical_for_every_engine_and_policy() {
     // must leave every engine × policy exactly on the uninstrumented
     // numbers.
     let fs = frames(3, 50);
+    // One uninstrumented reference per engine family: the multi-bit
+    // kinds are bit-identical to `functional`, the binary-activation
+    // kinds to `xnor` (a different function of the same weights).
     let mut reference =
         session(EngineKind::Functional, ShardPolicy::PerFrame, FaultPlan::disabled()).unwrap();
-    let want = outputs(&run_serial(&mut reference, &fs));
+    let want_multibit = outputs(&run_serial(&mut reference, &fs));
+    let mut reference =
+        session(EngineKind::Xnor, ShardPolicy::PerFrame, FaultPlan::disabled()).unwrap();
+    let want_binary = outputs(&run_serial(&mut reference, &fs));
     for kind in EngineKind::ALL {
+        let want = if kind.is_binary() { &want_binary } else { &want_multibit };
         for policy in policies() {
             let mut sess = session(kind, policy, FaultPlan::disabled()).unwrap();
             let got = run_serial(&mut sess, &fs);

@@ -11,7 +11,9 @@ use yodann::engine::raster::{BitplaneRaster, OFFSET, PLANES};
 use yodann::engine::{ConvEngine, CycleAccurate, EngineKind, Functional};
 use yodann::hw::{BlockJob, ChipConfig};
 use yodann::testkit::{property, Gen};
-use yodann::workload::{random_image, reference_conv, BinaryKernels, Image, ScaleBias};
+use yodann::workload::{
+    random_image, reference_conv, reference_xnor_conv, BinaryKernels, Image, ScaleBias,
+};
 
 /// The PR-1 inner loop as the oracle: pack one window's 12 offset-binary
 /// plane words (and Σu) straight from the image, bit by bit.
@@ -165,7 +167,20 @@ fn k5_k7_tiles_thinner_than_the_halo_stay_correct() {
             scale_bias: ScaleBias::random(&mut g, 5),
         };
         let want = reference_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
-        for kind in EngineKind::ALL {
+        for kind in EngineKind::MULTI_BIT {
+            let run = run_layer_engine(&wl, &cfg, ExecOptions { workers: 2 }, kind);
+            assert_eq!(
+                run.output,
+                want,
+                "k={k} h_max={h_max} h={h} engine {}",
+                kind.name()
+            );
+        }
+        // The binary family against its own sign reference on the same
+        // thin tiles (n_in = 3 ≤ n_ch keeps the single-block Q7.9
+        // accumulation order of the monolithic reference).
+        let want = reference_xnor_conv(&wl.input, &wl.kernels, &wl.scale_bias, true);
+        for kind in EngineKind::XNOR {
             let run = run_layer_engine(&wl, &cfg, ExecOptions { workers: 2 }, kind);
             assert_eq!(
                 run.output,

@@ -1,0 +1,279 @@
+//! The BNN subsystem's acceptance gates (ISSUE 10): fuzzed XNOR
+//! conformance — seeded geometries × kernel sizes {1, 2, 3, 5, 7} ×
+//! shard policies × every binary engine (and the multi-bit engines'
+//! binary companions, reached through the per-layer `Precision` knob) —
+//! bit-identical to the naive sign reference through the serving
+//! facade's submit/poll surface; a mixed-precision BWN-stem → BNN-trunk
+//! chain served end-to-end against a host-composed reference, with the
+//! activation-traffic reduction the 1-plane sign raster buys; the
+//! CLI-spelling round-trips for `EngineKind`, `ShardPolicy` and
+//! `Precision`; and the near-threshold bit-error-rate curve the fault
+//! sweeps price binary corners with.
+
+use std::sync::Arc;
+
+use yodann::api::SessionBuilder;
+use yodann::coordinator::{SessionLayerSpec, ShardGrid, ShardPolicy};
+use yodann::engine::EngineKind;
+use yodann::fault::{self, FaultPlan};
+use yodann::hw::ChipConfig;
+use yodann::model::{Corner, Precision};
+use yodann::power::xnor::{activation_words, ACTIVATION_PLANES_BWN, ACTIVATION_PLANES_XNOR};
+use yodann::power::{ArchId, CorePowerModel};
+use yodann::testkit::{property, Gen};
+use yodann::workload::{
+    random_image, reference_conv, reference_xnor_conv, BinaryKernels, Image, ScaleBias,
+};
+
+#[test]
+fn prop_xnor_sessions_match_the_sign_reference_under_every_schedule() {
+    // The central conformance property: ANY random single-block geometry
+    // (n_in ≤ n_ch keeps the monolithic reference's Q7.9 accumulation
+    // order exact), any kernel size, any shard policy, any binary
+    // engine — whether selected directly or routed as a multi-bit
+    // engine's companion via `Precision::Binary` — serves frames
+    // bit-identical to the naive sign reference.
+    property("session xnor == sign reference", 0x0B1A5, 40, |g| {
+        let k = *g.choose(&[1usize, 2, 3, 5, 7]);
+        let n_ch = g.range(2, 6);
+        let cfg = ChipConfig::tiny(n_ch);
+        let n_in = g.range(1, n_ch); // single input block
+        let n_out = g.range(1, 2 * n_ch); // straddles the output block limit
+        let zero_pad = g.bool() || k == 1; // valid k=1 is identical to padded
+        let h = g.range(k.max(2), 14);
+        let w = g.range(k.max(2), 10);
+        let amplitude = *g.choose(&[0.05, 0.4]);
+        let image = random_image(g, n_in, h, w, amplitude);
+        let kernels = BinaryKernels::random(g, n_out, n_in, k);
+        let sb = ScaleBias::random(g, n_out);
+        let want = reference_xnor_conv(&image, &kernels, &sb, zero_pad);
+        let policy = match g.range(0, 3) {
+            0 => ShardPolicy::PerFrame,
+            1 => ShardPolicy::Auto,
+            2 => ShardPolicy::RowBands(g.range(1, 3)),
+            _ => ShardPolicy::PerShard(ShardGrid::new(g.range(1, 3), g.range(1, 2))),
+        };
+        let workers = g.range(1, 3);
+        let spec = SessionLayerSpec {
+            k,
+            zero_pad,
+            kernels: Arc::new(kernels),
+            scale_bias: Arc::new(sb),
+            relu: false,
+            maxpool2: false,
+        };
+        let (kind, precision) = if g.bool() {
+            (*g.choose(&EngineKind::XNOR), None)
+        } else {
+            // The companion route: a multi-bit main engine whose only
+            // layer is binary runs that layer on `kind.binary_companion()`.
+            (*g.choose(&EngineKind::MULTI_BIT), Some(vec![Precision::Binary]))
+        };
+        let ctx = format!(
+            "k={k} kind={} policy={policy} {n_in}->{n_out} {h}x{w} pad={zero_pad} \
+             amp={amplitude} workers={workers} companion={}",
+            kind.name(),
+            precision.is_some(),
+        );
+        let mut builder = SessionBuilder::new()
+            .chip(cfg)
+            .layers(vec![spec])
+            .engine(kind)
+            .workers(workers)
+            .shard_policy(policy)
+            .fault_plan(FaultPlan::disabled());
+        if let Some(ps) = precision {
+            builder = builder.precision(ps);
+        }
+        let mut sess = builder.build().unwrap_or_else(|e| panic!("build ({ctx}): {e}"));
+        // Through the non-blocking surface on purpose: poll to
+        // completion, then redeem.
+        let mut ticket = sess.submit(image).expect("frame admits");
+        while !ticket.poll() {
+            std::thread::yield_now();
+        }
+        let got = ticket.wait().expect("frame computes").output;
+        assert_eq!(got, want, "{ctx}");
+    });
+}
+
+#[test]
+fn mixed_precision_chain_serves_end_to_end_and_cuts_activation_traffic() {
+    // The acceptance chain: a multi-bit BWN stem feeding a binary BNN
+    // trunk, served through submit/poll, bit-identical to the
+    // host-composed reference (Q2.9 conv for the stem, the sign
+    // reference for each trunk layer) — and the trunk's activation
+    // traffic shrinks 12× per layer, 1 sign plane vs 12 offset-binary
+    // bitplanes.
+    let cfg = ChipConfig::tiny(8);
+    let mut g = Gen::new(0x317D);
+    let (h, w) = (10usize, 9usize);
+    let mut mk = |n_out: usize, n_in: usize| SessionLayerSpec {
+        k: 3,
+        zero_pad: true,
+        kernels: Arc::new(BinaryKernels::random(&mut g, n_out, n_in, 3)),
+        scale_bias: Arc::new(ScaleBias::random(&mut g, n_out)),
+        relu: false,
+        maxpool2: false,
+    };
+    let specs = vec![mk(8, 3), mk(8, 8), mk(6, 8)];
+    let frames: Vec<Image> = (0..3).map(|_| random_image(&mut g, 3, h, w, 0.3)).collect();
+    let precision = vec![Precision::MultiBit, Precision::Binary, Precision::Binary];
+
+    let serve = |kind: EngineKind, ps: Option<Vec<Precision>>| -> (f64, Vec<Image>) {
+        let mut builder = SessionBuilder::new()
+            .chip(cfg)
+            .layers(specs.clone())
+            .engine(kind)
+            .workers(2)
+            .max_in_flight(frames.len())
+            .fault_plan(FaultPlan::disabled());
+        if let Some(ps) = ps {
+            builder = builder.precision(ps);
+        }
+        let mut sess = builder.build().expect("mixed-precision chain builds");
+        let frac = sess.binary_layer_fraction();
+        let mut tickets: Vec<_> =
+            frames.iter().map(|f| sess.submit(f.clone()).expect("admits")).collect();
+        while !tickets.iter_mut().all(|t| t.poll()) {
+            std::thread::yield_now();
+        }
+        (frac, tickets.into_iter().map(|t| t.wait().expect("computes").output).collect())
+    };
+
+    let (frac_bwn, bwn) = serve(EngineKind::FunctionalSimd, None);
+    let (frac_mixed, mixed) = serve(EngineKind::FunctionalSimd, Some(precision.clone()));
+    assert_eq!(frac_bwn, 0.0);
+    assert!((frac_mixed - 2.0 / 3.0).abs() < 1e-12, "fraction {frac_mixed}");
+
+    for (i, (f, got)) in frames.iter().zip(&mixed).enumerate() {
+        let s0 = reference_conv(f, &specs[0].kernels, &specs[0].scale_bias, true);
+        let s1 = reference_xnor_conv(&s0, &specs[1].kernels, &specs[1].scale_bias, true);
+        let want = reference_xnor_conv(&s1, &specs[2].kernels, &specs[2].scale_bias, true);
+        assert_eq!(*got, want, "frame {i}");
+    }
+    assert_ne!(mixed, bwn, "the binary trunk must change the numbers");
+
+    // Companion routing is engine-agnostic: the scalar functional main
+    // engine must binarize the same layers to the same bits as the SIMD
+    // one (Xnor vs XnorSimd companions).
+    let (_, mixed_scalar) = serve(EngineKind::Functional, Some(precision.clone()));
+    assert_eq!(mixed_scalar, mixed);
+
+    // The reported traffic: per conv layer, input activation words at
+    // that layer's precision.
+    let per_layer = |p: Precision, c: usize| {
+        let planes = match p {
+            Precision::MultiBit => ACTIVATION_PLANES_BWN,
+            Precision::Binary => ACTIVATION_PLANES_XNOR,
+        };
+        activation_words(c, h, w, 3, true, planes)
+    };
+    let chans = [3usize, 8, 8]; // each layer's input channels
+    let all_bwn: usize = chans.iter().map(|&c| per_layer(Precision::MultiBit, c)).sum();
+    let mixed_words: usize = chans.iter().zip(&precision).map(|(&c, &p)| per_layer(p, c)).sum();
+    assert!(mixed_words < all_bwn, "{mixed_words} !< {all_bwn}");
+    assert_eq!(
+        per_layer(Precision::MultiBit, 8),
+        12 * per_layer(Precision::Binary, 8),
+        "one binary trunk layer moves 12x fewer words"
+    );
+}
+
+#[test]
+fn accepted_spellings_parse_and_canonical_names_round_trip() {
+    // Drift pins: every spelling each ACCEPTED list advertises parses,
+    // every canonical name/Display form re-parses to the same value —
+    // so `--engine`, `--shards` and `--precision` error messages can
+    // echo the lists verbatim.
+    for s in EngineKind::ACCEPTED {
+        let kind = EngineKind::parse(s)
+            .unwrap_or_else(|| panic!("accepted engine spelling {s:?} must parse"));
+        assert!(EngineKind::ALL.contains(&kind), "{s} parses outside ALL");
+        assert_eq!(EngineKind::parse(&s.to_uppercase()), Some(kind), "case-insensitive {s}");
+    }
+    for kind in EngineKind::ALL {
+        assert_eq!(EngineKind::parse(kind.name()), Some(kind), "{}", kind.name());
+        assert!(EngineKind::ACCEPTED.contains(&kind.name()), "{} not accepted", kind.name());
+    }
+    // The binary family's aliases specifically.
+    assert_eq!(EngineKind::parse("bnn"), Some(EngineKind::Xnor));
+    assert_eq!(EngineKind::parse("xnor-simd"), Some(EngineKind::XnorSimd));
+    assert_eq!(EngineKind::parse("xnor-simd-scalar"), Some(EngineKind::XnorSimdScalar));
+
+    for s in ShardPolicy::ACCEPTED {
+        let p = ShardPolicy::parse(s)
+            .unwrap_or_else(|| panic!("accepted shard spelling {s:?} must parse"));
+        assert_eq!(ShardPolicy::parse(&p.to_string()), Some(p), "{s} display re-parses");
+    }
+    for s in Precision::ACCEPTED {
+        let p = Precision::parse(s)
+            .unwrap_or_else(|| panic!("accepted precision spelling {s:?} must parse"));
+        assert!(Precision::ALL.contains(&p), "{s} parses outside ALL");
+        assert_eq!(Precision::parse(p.name()), Some(p), "{s} name re-parses");
+        assert_eq!(p.to_string(), p.name(), "Display echoes the canonical name");
+    }
+}
+
+#[test]
+fn prop_shard_policy_display_parse_round_trips() {
+    // Beyond the fixed ACCEPTED spellings: every constructible policy —
+    // including `row-bands:N` for arbitrary N and `per-shard:NxM` grids
+    // — survives a Display → parse round trip.
+    property("shard policy display/parse", 0x5A4D, 200, |g| {
+        let p = match g.range(0, 3) {
+            0 => ShardPolicy::PerFrame,
+            1 => ShardPolicy::Auto,
+            2 => ShardPolicy::RowBands(g.range(0, 64)),
+            _ => ShardPolicy::PerShard(ShardGrid::new(g.range(1, 40), g.range(1, 40))),
+        };
+        assert_eq!(ShardPolicy::parse(&p.to_string()), Some(p), "{p}");
+    });
+}
+
+#[test]
+fn bit_error_rate_is_monotone_in_supply_and_matches_the_fitted_curve() {
+    // The near-threshold contract behind `yodann faults`: raising the
+    // supply never raises the memory upset rate, `fault::bit_error_rate`
+    // is exactly the architecture's fitted curve at the corner's
+    // voltage, and off-range corners saturate instead of panicking.
+    let arches = [ArchId::Bin8, ArchId::Bin16, ArchId::Bin32Fixed, ArchId::Bin32Multi];
+    for arch in arches {
+        let vf = CorePowerModel::new(arch).vf;
+        let steps = 64;
+        let mut prev = f64::INFINITY;
+        for i in 0..=steps {
+            let v = vf.vmin + (vf.vmax - vf.vmin) * i as f64 / steps as f64;
+            let ber = fault::bit_error_rate(Corner { arch, v });
+            assert!(ber == vf.bit_error_rate(v), "{arch:?} v={v}: corner/curve drift");
+            assert!(ber > 0.0 && ber <= 1e-2, "{arch:?} v={v}: {ber} out of range");
+            assert!(ber <= prev, "{arch:?}: BER rose {prev} -> {ber} at v={v}");
+            prev = ber;
+        }
+        // The nominal rail sits at the 1e-9 baseline; the serve/fault
+        // pricing corners evaluate the same curve.
+        assert!((vf.bit_error_rate(vf.vmax) - 1e-9).abs() < 1e-15);
+        for v in [0.6, 0.8, 1.0, 1.2] {
+            assert!(fault::bit_error_rate(Corner { arch, v }) == vf.bit_error_rate(v));
+        }
+        // Below the fitted threshold the margin clamps to zero: a
+        // constant saturated rate, never a panic, never above the cap.
+        let floor = vf.bit_error_rate(vf.vt);
+        assert!(vf.bit_error_rate(0.0) == floor);
+        assert!(vf.bit_error_rate(-1.0) == floor);
+        assert!(floor <= 1e-2);
+        // Far above the rail clamps to the nominal baseline.
+        assert!(vf.bit_error_rate(10.0) == 1e-9);
+    }
+    property("BER non-increasing in V", 0x0BE4, 300, |g| {
+        let arch = *g.choose(&arches);
+        let vf = CorePowerModel::new(arch).vf;
+        let a = g.f64_in(0.0, 1.5);
+        let b = g.f64_in(0.0, 1.5);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(
+            vf.bit_error_rate(lo) >= vf.bit_error_rate(hi),
+            "{arch:?}: BER({lo}) < BER({hi})"
+        );
+    });
+}
